@@ -1,0 +1,146 @@
+"""Subprocess worker for multi-device benchmarks (8 forced host devices).
+
+Invoked by common.run_multidevice with a JSON payload:
+  {"bench": <name>, ...params}
+Prints one JSON line with results.
+"""
+import json
+import sys
+import time
+
+
+def _timeit(fn, *args, warmup=2, reps=5):
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def bench_exchange_only(p):
+    """ZeroComputeEngine analog (paper §4.4): the gradient-exchange +
+    fused-agg-opt pipeline with fwd/bwd replaced by a no-op — pure PS
+    throughput. Returns us/exchange for the requested strategy and the
+    per-step exchanged bytes."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import ARCHS, TrainConfig, reduced
+    from repro.core import PHubEngine
+    from repro.core.chunking import flatten_groups, unflatten_groups
+    from repro.core.exchange import exchange_group, flat_rank
+
+    data_size = p["data_size"]
+    mesh = jax.make_mesh((data_size, 1), ("data", "model"))
+    cfg = reduced(ARCHS[p.get("arch", "llama3.2-1b")],
+                  d_model=p.get("d_model", 256))
+    tc = TrainConfig(strategy=p["strategy"],
+                     chunk_size_bytes=p.get("chunk_kb", 32) * 1024)
+    eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
+    params, opt = eng.init_state(jax.random.PRNGKey(0))
+    cp = eng.chunk_plan
+
+    def exchange_only(params, opt):
+        def local(params, opt):
+            grads = jax.tree.map(lambda x: x * 1e-4, params)  # stand-in push
+            if tc.strategy == "hierarchical":
+                rank = jax.lax.axis_index("data")
+            else:
+                rank = flat_rank(eng.data_axes, eng.axis_sizes)
+
+            def inner(grads, params, opt, rank):
+                fg = flatten_groups(cp, grads)
+                fp = flatten_groups(cp, params)
+                new_p, new_m = {}, {}
+                for g in cp.groups:
+                    key = str(g.dtype)
+                    p2, m2 = exchange_group(
+                        tc.strategy, eng.ctx, fg[key], fp[key],
+                        opt[key].reshape(-1), eng._update_fn(g.dtype), rank)
+                    new_p[key] = p2
+                    new_m[key] = m2.reshape(opt[key].shape)
+                return unflatten_groups(cp, new_p, eng.params_shapes), new_m
+
+            specs = eng.plan.specs()
+            S = eng.ctx.n_shards(tc.strategy)
+            m_spec = {str(g.dtype): (P("model", None, None) if S > 1
+                                     else P("model", None))
+                      for g in cp.groups}
+            return jax.shard_map(
+                inner, mesh=jax.sharding.get_abstract_mesh(),
+                in_specs=(specs, specs, m_spec, P()),
+                out_specs=(specs, m_spec),
+                axis_names={"model"}, check_vma=False)(grads, params, opt,
+                                                       rank)
+
+        manual = eng.plan.manual_specs(eng.data_axes)
+        S = eng.ctx.n_shards(tc.strategy)
+        m_outer = {str(g.dtype): (P(None, "data", None) if S > 1
+                                  else P(None, None)) for g in cp.groups}
+        return jax.shard_map(local, mesh=mesh, in_specs=(manual, m_outer),
+                             out_specs=(manual, m_outer),
+                             axis_names={"data"}, check_vma=False)(params, opt)
+
+    step = jax.jit(exchange_only)
+    us = _timeit(step, params, opt)
+    total = cp.total_bytes()
+    return {"us": us, "model_bytes": total,
+            "exchanges_per_s": 1e6 / us}
+
+
+def bench_train_step(p):
+    """Full train step wall time for a reduced arch on a (data, model) mesh."""
+    import jax
+    from repro.configs import ARCHS, TrainConfig, reduced
+    from repro.core import PHubEngine
+    from repro.data import SyntheticTokens
+
+    mesh = jax.make_mesh((p["data_size"], p.get("model_size", 1)),
+                         ("data", "model"))
+    cfg = reduced(ARCHS[p.get("arch", "llama3.2-1b")],
+                  d_model=p.get("d_model", 256))
+    tc = TrainConfig(strategy=p["strategy"],
+                     chunk_size_bytes=p.get("chunk_kb", 32) * 1024,
+                     loss_chunk=p.get("seq", 128))
+    eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
+    params, opt = eng.init_state(jax.random.PRNGKey(0))
+    data = SyntheticTokens(cfg, p.get("batch", 8), p.get("seq", 128), seed=0)
+    batch = data.device_batch(0, mesh=mesh)
+    shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in batch.items()}
+    step = eng.make_train_step(shapes)
+
+    def run(params, opt):
+        return step(params, opt, batch)
+
+    # donation prevents naive re-timing; rebuild state per reliable rep
+    import time as _t
+    ts = []
+    for _ in range(p.get("reps", 3) + 1):
+        t0 = _t.perf_counter()
+        params, opt, m = step(params, opt, batch)
+        jax.block_until_ready(m["loss"])
+        ts.append(_t.perf_counter() - t0)
+    ts = sorted(ts[1:])
+    us = ts[len(ts) // 2] * 1e6
+    return {"us": us, "loss": float(m["loss"]),
+            "tokens_per_s": p.get("batch", 8) * p.get("seq", 128) / (us / 1e6)}
+
+
+BENCHES = {"exchange_only": bench_exchange_only,
+           "train_step": bench_train_step}
+
+
+def main():
+    payload = json.loads(sys.argv[1])
+    out = BENCHES[payload["bench"]](payload)
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

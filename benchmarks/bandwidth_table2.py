@@ -1,0 +1,31 @@
+"""Table 2: minimum PS-side bandwidth (Gbps) to hide communication, for the
+paper's model zoo under the four PS configurations of Fig 4."""
+from __future__ import annotations
+
+from .common import Row
+from repro.configs.phub_paper import PAPER_MODELS
+from repro.core.cost_model import min_bandwidth_bits
+
+# paper Table 2 reference values (Gbps) for sanity deltas
+PAPER_TABLE2 = {
+    ("RN269", "CS"): 31, ("RN269", "NCS"): 17,
+    ("AN", "CS"): 308, ("AN", "NCS"): 176,
+    ("GN", "CS"): 10, ("I3", "CS"): 11,
+}
+
+
+def run() -> list[Row]:
+    rows = []
+    for abbr in ("AN", "GN", "I3", "RN269"):
+        m = PAPER_MODELS[abbr]
+        vals = {}
+        for config in ("CC", "CS", "NCC", "NCS"):
+            gbps = min_bandwidth_bits(config, m.model_bytes,
+                                      m.time_per_batch_s, 8) / 1e9
+            vals[config] = gbps
+        derived = " ".join(f"{c}={v:.0f}Gbps" for c, v in vals.items())
+        ref = PAPER_TABLE2.get((abbr, "CS"))
+        if ref:
+            derived += f" paper_CS={ref} ratio={vals['CS']/ref:.2f}"
+        rows.append(Row(f"table2/{abbr}", 0.0, derived))
+    return rows

@@ -1,0 +1,55 @@
+"""Fig 20: PHub (1-round central PS) vs collective all-reduce schemes.
+
+Paper: collectives lose because (a) every interface moves ~2x the data
+(reduce-scatter + all-gather), and (b) they need log(N)/multi-round
+schedules. Analytic per-interface bytes + rounds for model size M, N
+workers, plus the measured ICI bytes of allreduce vs sharded_ps train
+steps from the dry-run artifacts.
+"""
+from __future__ import annotations
+
+import math
+
+from .common import Row, load_dryrun
+
+
+def per_interface_bytes(scheme: str, M: float, N: int) -> tuple[float, int]:
+    """(bytes through the busiest interface, rounds)."""
+    if scheme == "central_ps":            # PHub: push M up, pull M down
+        return 2 * M, 1
+    if scheme == "ring_allreduce":        # 2M(N-1)/N, 2(N-1) rounds
+        return 2 * M * (N - 1) / N, 2 * (N - 1)
+    if scheme == "halving_doubling":      # 2M(N-1)/N, 2 log2 N rounds
+        return 2 * M * (N - 1) / N, 2 * int(math.log2(N))
+    raise ValueError(scheme)
+
+
+def run() -> list[Row]:
+    rows = []
+    M = 97 * 2**20                        # ResNet-50
+    for N in (8, 16):
+        c, cr = per_interface_bytes("central_ps", M, N)
+        r, rr = per_interface_bytes("ring_allreduce", M, N)
+        h, hr = per_interface_bytes("halving_doubling", M, N)
+        rows.append(Row(
+            f"comm_schemes/N{N}", 0.0,
+            f"ps={c/2**20:.0f}MiB/1rd ring={r/2**20:.0f}MiB/{rr}rd "
+            f"hd={h/2**20:.0f}MiB/{hr}rd worker_side_ps={c/2**20:.0f}MiB"))
+
+    recs = load_dryrun(lambda r: r.get("mesh") == "16x16"
+                       and r.get("shape") == "train_4k"
+                       and r.get("status") == "ok"
+                       and "__it" not in r.get("tag", ""))
+    by = {(r["arch"], r["strategy"]): r for r in recs}
+    for arch in sorted({a for a, _ in by}):
+        ar = by.get((arch, "allreduce"))
+        ps = by.get((arch, "sharded_ps"))
+        if ar and ps:
+            ab = ar["probe"]["ici"] if "probe" in ar else \
+                ar["collectives"]["ici_bytes"]
+            pb = ps["probe"]["ici"] if "probe" in ps else \
+                ps["collectives"]["ici_bytes"]
+            rows.append(Row(f"comm_schemes/dryrun/{arch}", 0.0,
+                            f"allreduce_ici={ab:.3e} phub_ici={pb:.3e} "
+                            f"ratio={ab/max(pb,1):.2f}"))
+    return rows

@@ -1,0 +1,65 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(ROOT, "results")
+
+
+def timeit(fn, *args, warmup: int = 2, reps: int = 5) -> float:
+    """Median wall time (us) of fn(*args) with block_until_ready."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def run_multidevice(payload: dict, n_devices: int = 8,
+                    timeout: int = 1200) -> dict:
+    """Run benchmarks/_mdworker.py in a subprocess with forced devices."""
+    env = {**os.environ,
+           "XLA_FLAGS": f"--xla_force_host_platform_device_count={n_devices}",
+           "PYTHONPATH": os.path.join(ROOT, "src")}
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "benchmarks", "_mdworker.py"),
+         json.dumps(payload)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    if proc.returncode != 0:
+        raise RuntimeError(f"mdworker failed: {proc.stderr[-2000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def load_dryrun(tag_filter=None) -> list[dict]:
+    d = os.path.join(RESULTS, "dryrun")
+    out = []
+    if not os.path.isdir(d):
+        return out
+    for f in sorted(os.listdir(d)):
+        if not f.endswith(".json"):
+            continue
+        with open(os.path.join(d, f)) as fh:
+            rec = json.load(fh)
+        if tag_filter is None or tag_filter(rec):
+            out.append(rec)
+    return out
+
+
+class Row:
+    """One CSV row: name, us_per_call, derived."""
+
+    def __init__(self, name: str, us: float, derived: str):
+        self.name, self.us, self.derived = name, us, derived
+
+    def print(self):
+        print(f"{self.name},{self.us:.1f},{self.derived}")

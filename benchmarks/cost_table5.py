@@ -1,0 +1,21 @@
+"""Table 5: throughput per dollar — 100GbE sharded baseline vs 25GbE PHub
+deployments at 1:1 / 2:1 / 3:1 oversubscription (ResNet-50, future-GPU
+scenario). Paper: PHub 2:1 gives ~25% better throughput/$."""
+from __future__ import annotations
+
+from .common import Row
+from repro.core.cost_model import throughput_per_dollar
+
+T = 1400.0          # ResNet-50 samples/s for a 4x future-GPU worker
+HIER_OVERHEAD = 0.98  # paper includes 2% for cross-rack aggregation
+
+
+def run() -> list[Row]:
+    base = throughput_per_dollar(T, phub=False, oversub=1.0)
+    rows = [Row("table5/100Gb_sharded_1to1", 0.0, f"tput_per_$1k={base:.2f}")]
+    for oversub, k in ((1.0, 44), (2.0, 65), (3.0, 76)):
+        v = throughput_per_dollar(T * HIER_OVERHEAD, phub=True,
+                                  oversub=oversub, workers_per_phub=k)
+        rows.append(Row(f"table5/25Gb_PHub_{int(oversub)}to1", 0.0,
+                        f"tput_per_$1k={v:.2f} vs_base={v/base:.3f}x"))
+    return rows

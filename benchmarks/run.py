@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus section markers).
+  tall_vs_wide        Fig 7  / §4.5   tall vs wide aggregation
+  caching             Table 4          fused vs cache-bypassed agg+opt
+  overhead_breakdown  Fig 5 / Fig 14   progressive training overheads
+  chunk_size          Fig 16           key-chunk size sweep
+  zero_compute        Fig 15           exchange-only scaling (ZeroCompute)
+  bandwidth_table2    Table 2 / Fig 4  minimum-bandwidth bounds
+  hierarchical        Fig 19 / §3.4    cross-rack reduction
+  comm_schemes        Fig 20           PS vs collective schemes
+  cost_table5         Table 5          throughput per dollar
+  key_balance         §3.2.4           LPT chunk->core load balance
+  roofline            §Roofline        per (arch x shape) terms from dry-run
+
+Run all: PYTHONPATH=src python -m benchmarks.run
+Subset:  PYTHONPATH=src python -m benchmarks.run tall_vs_wide roofline
+"""
+import sys
+import time
+import traceback
+
+MODULES = ["bandwidth_table2", "cost_table5", "comm_schemes", "hierarchical",
+           "key_balance",
+           "tall_vs_wide", "caching", "overhead_breakdown", "roofline",
+           "chunk_size", "zero_compute"]
+
+
+def main() -> None:
+    names = sys.argv[1:] or MODULES
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for row in mod.run():
+                row.print()
+            print(f"# {name} done in {time.time()-t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(name)
+            print(f"# {name} FAILED: {e}")
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""§3.2.2 / §4.5 "Tall vs. Wide Parallelism".
+
+Paper: tall aggregation (one core owns a chunk end-to-end, aggregation and
+optimizer fused, zero cross-thread synchronization) beats MXNet's wide
+scheme (all threads gang up per key; aggregate-all barrier, then a separate
+optimize-all pass) by ~20x. The thread-synchronization component of that
+result is an x86-threading artifact with no TPU analog (XLA has no
+dispatcher threads); what survives the translation (DESIGN.md §2) is the
+*structure*:
+
+  wide = two serialized whole-model passes with a barrier between
+         aggregation and optimization (separate XLA executables, like
+         MXNet's separate agg/opt thread pools),
+  tall = every chunk flows receive->aggregate->optimize independently in
+         one fused pass (one executable; elementwise chain fuses so each
+         element crosses memory once, which is exactly the agg_opt kernel's
+         VMEM contract).
+
+Reported: wall time + XLA-counted bytes for both, on an 8-worker x 24 MiB
+gradient aggregation + Nesterov update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Row, timeit
+
+W = 8                      # workers
+N = 768 * 8192             # fp32 model elements (~24 MiB)
+
+
+@jax.jit
+def _wide_aggregate(G):
+    return G.sum(0) / W
+
+
+@jax.jit
+def _wide_optimize(p, g, m, lr=0.01, mu=0.9):
+    m2 = mu * m + g
+    return p - lr * (g + mu * m2), m2
+
+
+def _wide(p, G, m):
+    g = _wide_aggregate(G)          # barrier: materialized intermediate
+    return _wide_optimize(p, g, m)
+
+
+@jax.jit
+def _tall(p, G, m, lr=0.01, mu=0.9):
+    g = G.sum(0) / W                # fuses into the elementwise chain
+    m2 = mu * m + g
+    return p - lr * (g + mu * m2), m2
+
+
+def run() -> list[Row]:
+    key = jax.random.PRNGKey(0)
+    p = jax.random.normal(key, (N,))
+    G = jax.random.normal(jax.random.fold_in(key, 1), (W, N)) * 1e-3
+    m = jnp.zeros((N,))
+
+    us_w = timeit(_wide, p, G, m)
+    us_t = timeit(_tall, p, G, m)
+
+    bw = (float(_wide_aggregate.lower(G).compile().cost_analysis()
+                .get("bytes accessed", 0))
+          + float(_wide_optimize.lower(p, _wide_aggregate(G), m).compile()
+                  .cost_analysis().get("bytes accessed", 0)))
+    bt = float(_tall.lower(p, G, m).compile().cost_analysis()
+               .get("bytes accessed", 0))
+
+    pw, mw = _wide(p, G, m)
+    pt, mt = _tall(p, G, m)
+    err = float(jnp.abs(pw - pt).max())
+    return [
+        Row("tall_vs_wide/wide_us", us_w, f"bytes={bw:.3e} (2 passes)"),
+        Row("tall_vs_wide/tall_us", us_t, f"bytes={bt:.3e} (fused)"),
+        Row("tall_vs_wide/speedup", 0.0,
+            f"tall={us_w/us_t:.2f}x bytes_saved={(1-bt/bw)*100:.0f}%"),
+        Row("tall_vs_wide/max_err", 0.0, f"{err:.2e}"),
+    ]

@@ -1,0 +1,31 @@
+"""Fig 15: exchange-only scaling with infinitely fast compute
+(ZeroComputeEngine).
+
+Paper: PBox scales linearly to 8 workers and beats colocated-sharded
+baselines up to 40x; PShard is ~2x below PBox. Here: per-strategy
+exchanges/s at data-parallel sizes 2/4/8 on the real exchange pipeline.
+centralized_ps reproduces the incast collapse; sharded_ps (PHub) holds
+throughput flat as workers are added.
+"""
+from __future__ import annotations
+
+from .common import Row, run_multidevice
+
+STRATEGIES = ["sharded_ps", "allreduce", "centralized_ps"]
+
+
+def run() -> list[Row]:
+    rows = []
+    rates = {}
+    for strat in STRATEGIES:
+        for ds in (2, 4, 8):
+            r = run_multidevice({"bench": "exchange_only", "strategy": strat,
+                                 "data_size": ds, "d_model": 320})
+            rates[(strat, ds)] = r["exchanges_per_s"]
+            rows.append(Row(f"zero_compute/{strat}/w{ds}", r["us"],
+                            f"exchanges_per_s={r['exchanges_per_s']:.1f} "
+                            f"model_bytes={r['model_bytes']}"))
+    adv = rates[("sharded_ps", 8)] / max(rates[("centralized_ps", 8)], 1e-9)
+    rows.append(Row("zero_compute/phub_vs_centralized_8w", 0.0,
+                    f"{adv:.2f}x"))
+    return rows

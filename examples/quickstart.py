@@ -1,0 +1,61 @@
+"""Quickstart: provision a PHub service, train a reduced Llama for a few
+steps on the synthetic pipeline, checkpoint, and decode a few tokens.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, TrainConfig, reduced  # noqa: E402
+from repro.core import PHubConnectionManager  # noqa: E402
+from repro.data import SyntheticTokens  # noqa: E402
+from repro.checkpoint import save_checkpoint  # noqa: E402
+
+
+def main():
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=128)
+    tc = TrainConfig(strategy="sharded_ps", lr=5e-2, loss_chunk=64)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    # PHub service API (§3.1): CreateService -> ConnectService -> InitService
+    cm = PHubConnectionManager()
+    handle = cm.create_service("quickstart", cfg, tc, mesh)
+    engine = cm.connect_service(handle)
+    params, opt = cm.init_service(handle, jax.random.PRNGKey(0))
+    print(f"arch={cfg.arch_id} (reduced) params="
+          f"{sum(x.size for x in jax.tree.leaves(params))/1e6:.2f}M "
+          f"strategy={tc.strategy} chunk={tc.chunk_size_bytes//1024}KB")
+
+    data = SyntheticTokens(cfg, batch=8, seq_len=64, seed=0)
+    for step in range(20):
+        batch = data.device_batch(step)
+        # PushPull: fused push(grads) + pull(params) == one train step
+        params, opt, metrics = cm.push_pull(handle, params, opt, batch)
+        if step % 5 == 0 or step == 19:
+            print(f"step {step:3d}  loss {float(metrics['loss']):.4f}")
+
+    path = save_checkpoint("/tmp/phub_quickstart", 20,
+                           {"params": params, "opt": opt})
+    print(f"checkpoint -> {path}")
+
+    # decode a few tokens greedily from a prompt
+    prompt = data.device_batch(0)["tokens"][:2, :16]
+    prefill_step = engine.make_prefill_step(16, max_new_tokens=8)
+    serve_step = engine.make_serve_step()
+    logits, cache = prefill_step(params, prompt)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for _ in range(7):
+        logits, cache = serve_step(params, cache, tok)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    print("generated:", jnp.concatenate(out, 1).tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end training driver: a ~100M-parameter Llama-family model trained
+for a few hundred steps on the synthetic pipeline with the PHub exchange.
+
+Default (--preset 100m --steps 300) is sized for a real accelerator; on the
+CPU container use --preset 25m --steps 120 (a few minutes) — the loss curve
+and all PHub machinery are identical.
+
+Run:  PYTHONPATH=src python examples/train_100m.py --preset 25m --steps 120
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.configs import ARCHS, TrainConfig  # noqa: E402
+from repro.core import PHubEngine  # noqa: E402
+from repro.data import SyntheticTokens  # noqa: E402
+from repro.checkpoint import save_checkpoint  # noqa: E402
+
+PRESETS = {
+    # ~100M params: 10 layers x d768 + tied 32k vocab
+    "100m": dict(n_layers=10, d_model=768, n_heads=12, n_kv_heads=4,
+                 head_dim=64, d_ff=2304, vocab_size=32000, batch=8, seq=512),
+    # ~25M params: CPU-friendly
+    "25m": dict(n_layers=6, d_model=384, n_heads=6, n_kv_heads=2,
+                head_dim=64, d_ff=1152, vocab_size=16384, batch=8, seq=128),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="25m", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--strategy", default="sharded_ps")
+    ap.add_argument("--lr", type=float, default=3e-2)
+    ap.add_argument("--checkpoint-dir", default="/tmp/phub_100m")
+    args = ap.parse_args()
+
+    p = dict(PRESETS[args.preset])
+    batch, seq = p.pop("batch"), p.pop("seq")
+    cfg = dataclasses.replace(ARCHS["llama3.2-1b"], arch_id=f"llama-{args.preset}",
+                              tie_embeddings=True, **p)
+    print(f"model: {cfg.n_params()/1e6:.1f}M params, batch={batch} seq={seq}")
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tc = TrainConfig(strategy=args.strategy, lr=args.lr,
+                     loss_chunk=min(512, seq))
+    eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
+    params, opt = eng.init_state(jax.random.PRNGKey(0))
+    data = SyntheticTokens(cfg, batch, seq, seed=0)
+    shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in data.batch_at(0).items()}
+    step = eng.make_train_step(shapes)
+
+    t0 = time.time()
+    ema = None
+    for i in range(args.steps):
+        params, opt, m = step(params, opt, data.device_batch(i))
+        loss = float(m["loss"])
+        ema = loss if ema is None else 0.9 * ema + 0.1 * loss
+        if i % 10 == 0 or i == args.steps - 1:
+            tput = batch * seq * (i + 1) / (time.time() - t0)
+            print(f"step {i:4d}  loss {loss:.4f}  ema {ema:.4f} "
+                  f"({tput:,.0f} tok/s)")
+    save_checkpoint(args.checkpoint_dir, args.steps,
+                    {"params": params, "opt": opt})
+    print(f"done in {time.time()-t0:.0f}s; checkpoint -> "
+          f"{args.checkpoint_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Render the §Roofline markdown table from results/roofline.json."""
+import json
+import sys
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main(path="results/roofline.json"):
+    rows = json.load(open(path))
+    rows.sort(key=lambda r: (r["arch"], ORDER.index(r["shape"])))
+    print("| arch | shape | strategy | compute s | memory s | collective s |"
+          " dominant | useful | GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['strategy']} | "
+              f"{r['t_compute_s']:.3f} | {r['t_memory_s']:.3f} | "
+              f"{r['t_collective_s']:.3f} | **{r['dominant']}** | "
+              f"{r['useful_compute_ratio']:.2f} | "
+              f"{r['mem_gib_per_device']:.1f} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,5 @@
+"""PHub-JAX: pod-scale parameter-exchange framework.
+
+Reproduction of "Parameter Hub" (SoCC 2018) — see DESIGN.md.
+"""
+__version__ = "1.0.0"

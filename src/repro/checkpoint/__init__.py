@@ -1,0 +1,1 @@
+from .checkpointer import save_checkpoint, load_checkpoint, latest_step

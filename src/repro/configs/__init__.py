@@ -1,0 +1,3 @@
+from .base import ModelConfig, TrainConfig, InputShape, reduced
+from .registry import ARCHS, get_arch
+from .shapes import SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K, applicable

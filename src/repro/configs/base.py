@@ -1,0 +1,172 @@
+"""Configuration dataclasses for PHub-JAX.
+
+A ``ModelConfig`` fully describes one architecture from the assigned pool;
+``TrainConfig`` describes the optimization + parameter-exchange setup (the
+paper's subject); ``InputShape`` describes one of the assigned workload shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                       # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                      # attention query heads (0 for attn-free)
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    dense_residual: bool = False      # arctic: dense MLP in parallel with MoE
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # --- SSM / RWKV ---
+    ssm_state: int = 0                # mamba state size N (hybrid)
+    rwkv_decay_lora: int = 64         # low-rank dim for data-dependent decay
+
+    # --- attention variants ---
+    sliding_window: int = 0           # 0 = full attention
+    global_layer_every: int = 0       # hybrid: every k-th layer uses full attn
+
+    # --- misc ---
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"           # activation dtype
+    param_dtype: str = "float32"      # parameter storage dtype
+
+    # --- modality frontend (stubbed per brief: embeddings arrive precomputed) ---
+    frontend: Optional[str] = None    # None | "audio" | "vision"
+    frontend_tokens: int = 0          # patches / frames prepended to the sequence
+
+    source: str = ""                  # citation for the config
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if decode state is o(seq): SSM / hybrid / sliding-window."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def n_params(self) -> int:
+        """Total parameter count (analytic)."""
+        d, ff, L, V = self.d_model, self.d_ff, self.n_layers, self.vocab_size
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.family == "ssm":                        # rwkv6: time-mix + channel-mix
+            per_layer = 4 * d * d + d * self.rwkv_decay_lora * 2 + 3 * d * ff // 2 + 2 * d
+            per_layer = 4 * d * d + 2 * d * self.rwkv_decay_lora + 2 * d * ff + 2 * d
+        else:
+            nh, kv, hd = self.n_heads, self.n_kv_heads, self.hd
+            attn = d * nh * hd + 2 * d * kv * hd + nh * hd * d
+            if self.family == "hybrid":
+                dssm = nh * hd
+                attn += d * 2 * dssm + 2 * d * self.ssm_state + dssm + dssm * d
+            if self.n_experts:
+                mlp = self.n_experts * 3 * d * ff + d * self.n_experts
+                if self.dense_residual:
+                    mlp += 3 * d * ff
+            else:
+                mlp = 3 * d * ff
+            per_layer = attn + mlp + 2 * d
+        return emb + L * per_layer + d
+
+    def n_active_params(self) -> int:
+        """Parameters touched per token (MoE: top-k of experts)."""
+        if not self.n_experts:
+            return self.n_params()
+        d, ff, L = self.d_model, self.d_ff, self.n_layers
+        dense_total = self.n_params() - L * self.n_experts * 3 * d * ff
+        return dense_total + L * self.top_k * 3 * d * ff
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                         # "train" | "prefill" | "decode"
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Optimization + parameter-exchange (PHub) configuration."""
+    optimizer: str = "nesterov"       # nesterov (paper's) | sgd | adam
+    lr: float = 1e-2
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0
+
+    # --- PHub exchange (the paper's contribution) ---
+    strategy: str = "sharded_ps"      # allreduce | sharded_ps | centralized_ps | hierarchical
+    chunk_size_bytes: int = 32 * 1024 # paper default: 32 KB (§3.2.3)
+    fused_agg_opt: bool = True        # tall aggregation: fuse aggregate+optimize (§3.2.2)
+    use_pallas: bool = False          # use the Pallas agg_opt kernel (TPU target)
+
+    # --- sharding scheme ---
+    seq_sharding: bool = True         # sequence-parallel activations over
+                                      # 'model' (disable for MoE: §Perf it.4)
+    dp_over_model: bool = False       # replicate weights over 'model' and
+                                      # shard batch over it instead (small
+                                      # attn-free archs: kills per-layer TP
+                                      # collectives; §Perf iteration 3)
+
+    # --- inference layout (prefill/serve) ---
+    infer_param_layout: str = "tp"    # tp | replicated (seq-parallel prefill
+                                      # with replicated weights; small archs)
+
+    # --- memory policy ---
+    microbatch: int = 1               # gradient-accumulation steps per
+                                      # exchange (activations shrink 1/k;
+                                      # one PHub exchange per global batch)
+    remat: bool = True                # activation checkpointing on blocks
+    loss_chunk: int = 1024            # chunked cross-entropy block (tokens)
+    scan_unroll: int = 1              # layer-scan unroll (cost probes use L)
+
+    seed: int = 0
+
+
+def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 256,
+            n_experts: int = 4) -> ModelConfig:
+    """A reduced same-family variant for CPU smoke tests (per brief:
+    <=2 layers, d_model<=512, <=4 experts)."""
+    nh = max(2, min(cfg.n_heads, 4)) if cfg.n_heads else 0
+    kv = max(1, min(cfg.n_kv_heads, 2)) if cfg.n_kv_heads else 0
+    hd = d_model // nh if nh else 64
+    return dataclasses.replace(
+        cfg,
+        n_layers=layers,
+        d_model=d_model,
+        n_heads=nh,
+        n_kv_heads=kv,
+        head_dim=hd,
+        d_ff=d_model * 3,
+        vocab_size=min(cfg.vocab_size, 512),
+        n_experts=min(cfg.n_experts, n_experts) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        rwkv_decay_lora=16,
+        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else 0,
+        frontend_tokens=min(cfg.frontend_tokens, 16) if cfg.frontend_tokens else 0,
+        param_dtype="float32",
+    )

@@ -1,0 +1,12 @@
+"""internvl2-2b [vlm] — InternLM2 language backbone [arXiv:2404.16821].
+The InternViT vision encoder + projector are stubs per brief:
+input_specs() supplies precomputed patch embeddings (frontend_tokens)."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="internvl2-2b", family="vlm",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab_size=92553,
+    frontend="vision", frontend_tokens=256,
+    source="arXiv:2404.16821",
+)

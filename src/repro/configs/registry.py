@@ -1,0 +1,20 @@
+"""Architecture registry: --arch <id> -> ModelConfig."""
+from __future__ import annotations
+
+from .base import ModelConfig
+from . import (llama3_2_1b, h2o_danube3_4b, minitron_8b, musicgen_medium,
+               grok1_314b, arctic_480b, rwkv6_3b, granite3_8b, internvl2_2b,
+               hymba_1_5b)
+
+ARCHS: dict[str, ModelConfig] = {
+    m.CONFIG.arch_id: m.CONFIG
+    for m in (llama3_2_1b, h2o_danube3_4b, minitron_8b, musicgen_medium,
+              grok1_314b, arctic_480b, rwkv6_3b, granite3_8b, internvl2_2b,
+              hymba_1_5b)
+}
+
+
+def get_arch(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch_id]

@@ -1,0 +1,22 @@
+"""Assigned input shapes and (arch x shape) applicability rules."""
+from __future__ import annotations
+
+from .base import InputShape, ModelConfig
+
+TRAIN_4K = InputShape("train_4k", seq_len=4_096, global_batch=256, kind="train")
+PREFILL_32K = InputShape("prefill_32k", seq_len=32_768, global_batch=32, kind="prefill")
+DECODE_32K = InputShape("decode_32k", seq_len=32_768, global_batch=128, kind="decode")
+LONG_500K = InputShape("long_500k", seq_len=524_288, global_batch=1, kind="decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """Whether (arch, shape) must lower; else a reason for the recorded skip.
+
+    Per brief: ``long_500k`` requires sub-quadratic attention -- skipped for
+    pure full-attention architectures (recorded in DESIGN.md / roofline table).
+    """
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full attention is quadratic; no SWA/SSM variant for this arch"
+    return True, ""

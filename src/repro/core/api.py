@@ -1,0 +1,86 @@
+"""The PHub service API (§3.1): multi-tenant rendezvous + namespaces.
+
+PHub is *multi-tenant*: several training jobs share one rack-scale PS,
+isolated by namespace + nonce. In the JAX runtime this maps to a registry
+of engines keyed by (namespace, nonce): CreateService provisions an engine
+for a job, ConnectService rendezvouses a worker group onto it, and
+Push/Pull/PushPull are the train-step entry points (PushPull — the fused
+push-wait-pull — is the default train_step; it is exactly the
+reduce-scatter + all-gather pair emitted by the exchange stage).
+"""
+from __future__ import annotations
+
+import dataclasses
+import secrets
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+
+from ..configs.base import ModelConfig, TrainConfig
+from .engine import PHubEngine
+
+
+@dataclass
+class ServiceHandle:
+    namespace: str
+    nonce: str
+
+
+@dataclass
+class _Service:
+    engine: PHubEngine
+    nonce: str
+    connected: int = 0
+    steps: dict = field(default_factory=dict)
+
+
+class PHubConnectionManager:
+    """In-process stand-in for the rack's connection manager."""
+
+    def __init__(self):
+        self._services: dict[str, _Service] = {}
+
+    # -- PHub::CreateService -------------------------------------------------
+    def create_service(self, namespace: str, cfg: ModelConfig,
+                       tc: TrainConfig, mesh) -> ServiceHandle:
+        if namespace in self._services:
+            raise ValueError(f"namespace {namespace!r} already exists")
+        nonce = secrets.token_hex(8)
+        self._services[namespace] = _Service(
+            engine=PHubEngine(cfg=cfg, tc=tc, mesh=mesh), nonce=nonce)
+        return ServiceHandle(namespace=namespace, nonce=nonce)
+
+    def _auth(self, handle: ServiceHandle) -> _Service:
+        svc = self._services.get(handle.namespace)
+        if svc is None or svc.nonce != handle.nonce:
+            raise PermissionError("bad namespace/nonce")
+        return svc
+
+    # -- PHub::ConnectService ------------------------------------------------
+    def connect_service(self, handle: ServiceHandle) -> PHubEngine:
+        svc = self._auth(handle)
+        svc.connected += 1
+        return svc.engine
+
+    # -- PHub::InitService ---------------------------------------------------
+    def init_service(self, handle: ServiceHandle, key: jax.Array):
+        """Allocate receive/merge buffers (params + owner-shard momentum)."""
+        svc = self._auth(handle)
+        return svc.engine.init_state(key)
+
+    # -- PHub::PushPull (fused) ---------------------------------------------
+    def push_pull(self, handle: ServiceHandle, params, opt, batch,
+                  batch_shapes=None):
+        """One fused push(gradients)+pull(new params) = one train step."""
+        svc = self._auth(handle)
+        shapes = batch_shapes or {
+            k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
+        key = tuple(sorted((k, tuple(v.shape)) for k, v in shapes.items()))
+        if key not in svc.steps:
+            svc.steps[key] = svc.engine.make_train_step(shapes)
+        return svc.steps[key](params, opt, batch)
+
+    def destroy_service(self, handle: ServiceHandle):
+        self._auth(handle)
+        del self._services[handle.namespace]

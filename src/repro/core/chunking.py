@@ -1,0 +1,109 @@
+"""Fine-grained key chunking (§3.2.3).
+
+PHub splits each key (layer) into fixed-size chunks — 32 KB by default —
+and maps every chunk to one owner (core/NIC there; data-shard here). We
+realize this as: flatten each dtype group of the gradient pytree into one
+vector, pad to ``n_shards * chunk`` granularity, and view it as a
+(n_shards, shard_len) matrix whose row i is the contiguous run of chunks
+owned by shard i. Flattening is local (no data movement); chunk boundaries
+drive the fused agg+opt kernel grid.
+
+``keys`` here are the *local* leaf blocks: the tensor-model-parallel slice
+of each parameter on this device. Replicated leaves appear in full in
+every shard's group (their update is identical everywhere).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class GroupPlan:
+    dtype: Any                    # np.dtype of this group
+    paths: tuple[str, ...]        # leaf paths (sorted) in concat order
+    shapes: tuple[tuple[int, ...], ...]   # local leaf shapes
+    sizes: tuple[int, ...]
+    total: int                    # unpadded element count
+    padded: int                   # total padded to n_shards * shard_len
+    shard_len: int                # elements per shard (multiple of chunk_elems)
+    chunk_elems: int
+    n_shards: int
+
+    @property
+    def chunks_per_shard(self) -> int:
+        return self.shard_len // self.chunk_elems
+
+
+@dataclass(frozen=True)
+class ChunkPlan:
+    groups: tuple[GroupPlan, ...]
+    chunk_bytes: int
+    n_shards: int
+
+    def total_bytes(self) -> int:
+        return sum(g.total * np.dtype(g.dtype).itemsize for g in self.groups)
+
+
+def _leaf_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+
+
+def build_plan(tree, *, chunk_bytes: int, n_shards: int) -> ChunkPlan:
+    """tree: pytree of arrays *or* ShapeDtypeStructs (local shapes)."""
+    by_dtype: dict[Any, list[tuple[str, tuple[int, ...]]]] = {}
+    for path, leaf in _leaf_paths(tree):
+        dt = np.dtype(leaf.dtype)
+        by_dtype.setdefault(dt, []).append((path, tuple(leaf.shape)))
+    groups = []
+    for dt in sorted(by_dtype, key=str):
+        entries = sorted(by_dtype[dt])
+        paths = tuple(p for p, _ in entries)
+        shapes = tuple(s for _, s in entries)
+        sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+        total = int(sum(sizes))
+        ce = max(chunk_bytes // dt.itemsize, 1)
+        stride = n_shards * ce
+        padded = -(-max(total, 1) // stride) * stride
+        groups.append(GroupPlan(dtype=dt, paths=paths, shapes=shapes,
+                                sizes=sizes, total=total, padded=padded,
+                                shard_len=padded // n_shards, chunk_elems=ce,
+                                n_shards=n_shards))
+    return ChunkPlan(groups=tuple(groups), chunk_bytes=chunk_bytes,
+                     n_shards=n_shards)
+
+
+def flatten_groups(plan: ChunkPlan, tree) -> dict[str, jax.Array]:
+    """Local ravel+concat per dtype group -> {dtype_str: (padded,) vector}."""
+    leaves = dict(_leaf_paths(tree))
+    out = {}
+    for g in plan.groups:
+        parts = [leaves[p].reshape(-1) for p in g.paths]
+        flat = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+        out[str(g.dtype)] = jnp.pad(flat, (0, g.padded - g.total))
+    return out
+
+
+def unflatten_groups(plan: ChunkPlan, flats: dict[str, jax.Array], like):
+    """Inverse of flatten_groups; `like` supplies the pytree structure."""
+    leaves = {}
+    for g in plan.groups:
+        flat = flats[str(g.dtype)][:g.total]
+        off = 0
+        for path, shape, size in zip(g.paths, g.shapes, g.sizes):
+            leaves[path] = flat[off:off + size].reshape(shape)
+            off += size
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    vals = [leaves[jax.tree_util.keystr(kp)] for kp, _ in flat_like[0]]
+    return jax.tree_util.tree_unflatten(flat_like[1], vals)
+
+
+def shard_matrix(plan_group: GroupPlan, flat: jax.Array) -> jax.Array:
+    """(padded,) -> (n_shards, shard_len): row i = chunks owned by shard i."""
+    return flat.reshape(plan_group.n_shards, plan_group.shard_len)

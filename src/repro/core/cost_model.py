@@ -1,0 +1,114 @@
+"""Analytical models from the paper.
+
+1. §2.3.1 / Fig. 4: minimum per-host bandwidth to hide communication for
+   each PS configuration (Table 2 reproduction).
+2. §3.4: the hierarchical-reduction benefit condition.
+3. §4.9 / Table 5: rack-scale throughput-per-dollar model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+# ---------------------------------------------------------------- §2.3.1
+
+def min_bandwidth_bits(config: str, model_bytes: float, compute_s: float,
+                       n_workers: int) -> float:
+    """Fig. 4 bottom row: minimum per-machine bidirectional bandwidth
+    (bits/s) to fully hide parameter exchange behind compute."""
+    M = model_bytes * 8.0
+    N = n_workers
+    T = compute_s
+    if config == "CC":          # colocated centralized
+        return 2 * M * (N - 1) / N / T * 2
+    if config == "CS":          # colocated sharded (each host: worker + 1/N PS)
+        return 2 * M * (N - 1) / N / T * 2
+    if config == "NCC":         # non-colocated centralized (PS-side, worst link)
+        return 2 * M * N / T
+    if config == "NCS":         # non-colocated sharded (per PS shard)
+        return 2 * M / T
+    raise ValueError(config)
+
+
+# ---------------------------------------------------------------- §3.4
+
+@dataclass(frozen=True)
+class RackTopology:
+    n_workers_per_rack: int      # N
+    n_racks: int                 # r
+    bw_worker: float             # B_wkr  (bytes/s)
+    bw_pbox: float               # B_pbox (bytes/s)
+    bw_core: float               # B_core (bytes/s, oversubscribed core)
+
+
+def hierarchical_beneficial(t: RackTopology, ring: bool = True) -> bool:
+    """Paper §3.4 condition: cross-rack flat transfer time exceeds the
+    two-level reduction cost."""
+    N, r = t.n_workers_per_rack, t.n_racks
+    b_bn = min((r - 1) * t.bw_pbox, t.bw_core)
+    lhs = max((N - 1) / b_bn, 1.0 / (N * t.bw_worker))
+    C = (r - 1) / (r * b_bn) if ring else (N - 1) / (N * b_bn)
+    rhs = max(1.0 / t.bw_pbox, N / t.bw_worker) + C
+    return lhs > rhs
+
+
+def cross_rack_bytes(model_bytes: float, n_workers_per_rack: int,
+                     n_racks: int, hierarchical: bool) -> float:
+    """Cross-rack traffic per rack per iteration (the 1/N claim)."""
+    if n_racks <= 1:
+        return 0.0
+    if hierarchical:
+        # only the PBoxes exchange: ring all-reduce of one model copy
+        return 2.0 * model_bytes * (n_racks - 1) / n_racks
+    # flat sharded PS: every worker exchanges with every remote shard
+    w = n_workers_per_rack
+    remote_frac = (n_racks - 1) / n_racks
+    return 2.0 * model_bytes * w * remote_frac
+
+
+# ---------------------------------------------------------------- §4.9
+
+@dataclass(frozen=True)
+class CostInputs:
+    worker_base: float = 4117.0          # W  (Supermicro worker, no GPUs)
+    gpu: float = 699.0                   # G
+    gpus_per_worker: int = 4
+    phub_base: float = 8407.0            # H
+    nic_fast: float = 795.0              # 100 GbE ConnectX-4
+    nic_slow: float = 260.0              # 25 GbE ConnectX-4 Lx
+    nic_phub_port: float = 162.5         # per 25 GbE port, 20 ports
+    cable_fast: float = 94.0
+    cable_slow: float = 31.25            # breakout per port
+    switch: float = 21077.0              # Arista 7060CX-32S
+    switch_ports: int = 32
+
+
+def amortized_network(n: CostInputs, nic: float, cable: float, *,
+                      oversub: float, breakout: int = 1) -> float:
+    """Paper §4.9: A = (N + S + C) + F (4S + 2C).
+
+    S = ToR per-port cost (shared `breakout` ways for 25 GbE hosts on a
+    100 GbE port); F = fraction of aggregation/core ports a worker needs
+    (1 at full bisection, 1/oversub with a 2:1/3:1 oversubscribed ToR).
+    """
+    s = n.switch / n.switch_ports / breakout
+    F = 1.0 / max(oversub, 1.0)
+    return (nic + s + cable) + F * (4 * s + 2 * cable)
+
+
+def throughput_per_dollar(throughput: float, *, phub: bool, oversub: float,
+                          workers_per_phub: int = 44,
+                          n: CostInputs = CostInputs()) -> float:
+    """Paper Table 5: samples/s per $1000 of per-worker capital."""
+    if phub:
+        A = amortized_network(n, n.nic_slow, n.cable_slow, oversub=oversub,
+                              breakout=4)
+        # PHub node: base + 20 x 25GbE ports + their network share,
+        # amortized over the workers it serves (K = worker:PHub ratio)
+        P = n.phub_base + 20 * n.nic_phub_port + 20 * A
+        worker_cost = (n.worker_base + n.gpus_per_worker * n.gpu + A
+                       + P / workers_per_phub)
+    else:
+        A = amortized_network(n, n.nic_fast, n.cable_fast, oversub=1.0)
+        worker_cost = n.worker_base + n.gpus_per_worker * n.gpu + A
+    return throughput / (worker_cost / 1000.0)

@@ -1,0 +1,422 @@
+"""PHubEngine: builds jit-ready train/prefill/serve steps for one
+(architecture, mesh, exchange-strategy) triple.
+
+Train step structure (see DESIGN.md §5):
+
+  outer shard_map — manual over data(+pod), auto over model
+    ├─ fwd/bwd (value_and_grad of chunked-CE loss)  → *local* gradients,
+    │  exactly the per-worker stream PHub's PS receives
+    └─ exchange stage
+       ├─ fsdp_stream: grads arrived reduce-scattered inside the backward
+       │  scan (Pull/Push transposition); local fused update only
+       └─ chunk strategies: inner shard_map (manual over model) flattens
+          the local TP slice of every leaf into the 32 KB-chunk domain and
+          runs core/exchange.py's collective schedule + fused agg+opt
+
+Shardy-compatibility: collective ops over outer manual axes are legal
+inside the nested (model-manual) shard_map, but ``axis_index`` over an
+outer axis is not — device ranks are therefore computed in the outer scope
+and passed into the inner computation as values.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import cached_property, partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, TrainConfig
+from ..models import (init as model_init, forward, prefill, init_cache,
+                      lm_head_weight, chunked_cross_entropy)
+from . import chunking
+from .exchange import ExchangeContext, exchange_group, flat_rank
+from .sharding import ShardingPlan, plan_params, local_shapes, make_gather_fn
+
+
+class _MeshScopedJit:
+    """Wrap a jitted fn so tracing/lowering happens under the engine's mesh
+    (with_sharding_constraint with bare PartitionSpecs needs a context mesh
+    outside shard_map)."""
+
+    def __init__(self, fn, mesh):
+        self._fn = fn
+        self._mesh = mesh
+
+    def __call__(self, *a, **k):
+        with jax.set_mesh(self._mesh):
+            return self._fn(*a, **k)
+
+    def lower(self, *a, **k):
+        with jax.set_mesh(self._mesh):
+            return self._fn.lower(*a, **k)
+
+
+def _nesterov_vec(lr: float, momentum: float):
+    def upd(p, g, m):
+        g32 = g.astype(m.dtype)
+        m2 = momentum * m + g32
+        p2 = p - (lr * (g32 + momentum * m2)).astype(p.dtype)
+        return p2, m2
+    return upd
+
+
+def _pallas_vec(lr: float, momentum: float, chunk_elems: int):
+    from ..kernels.agg_opt.ops import fused_agg_opt
+    def upd(p, g, m):
+        return fused_agg_opt(p, g, m, lr=lr, momentum=momentum,
+                             chunk_elems=chunk_elems)
+    return upd
+
+
+@dataclass
+class PHubEngine:
+    cfg: ModelConfig
+    tc: TrainConfig
+    mesh: Mesh
+
+    def __post_init__(self):
+        self.axis_sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        self.data_axes = tuple(a for a in self.mesh.axis_names
+                               if a in ("pod", "data"))
+        # dp_over_model: 'model' joins the worker axes — weights replicated,
+        # batch sharded over it, exchange reduces over it (§Perf iteration 3)
+        self.exchange_axes = (self.data_axes + ("model",)
+                              if self.tc.dp_over_model else self.data_axes)
+        self.ctx = ExchangeContext(data_axes=self.exchange_axes,
+                                   axis_sizes=self.axis_sizes)
+        layout = "fsdp" if self.tc.strategy == "fsdp_stream" else "replicated"
+        self.params_shapes = jax.eval_shape(
+            lambda k: model_init(self.cfg, k),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        plan_sizes = dict(self.axis_sizes)
+        if self.tc.dp_over_model:
+            plan_sizes["model"] = 1       # replicate weights over 'model'
+        self.plan = plan_params(self.params_shapes,
+                                mesh_axes=self.mesh.axis_names,
+                                axis_sizes=plan_sizes, layout=layout)
+        self.local_param_shapes = local_shapes(self.params_shapes, self.plan,
+                                               plan_sizes)
+        self.mo_eff = plan_sizes.get("model", 1)
+        if self.tc.strategy != "fsdp_stream":
+            self.chunk_plan = chunking.build_plan(
+                self.local_param_shapes,
+                chunk_bytes=self.tc.chunk_size_bytes,
+                n_shards=max(self.ctx.n_shards(self.tc.strategy), 1))
+        else:
+            self.chunk_plan = None
+
+    # ------------------------------------------------------------------ state
+
+    def param_shardings(self):
+        return self.plan.shardings(self.mesh)
+
+    def infer_param_shardings(self):
+        """Parameter layout for prefill/serve. 'replicated' keeps weights
+        unsharded so a sequence-parallel prefill never round-trips
+        activations through model-axis all-reduces (§Perf iteration 1) —
+        right for small archs; TP stays right for the multi-hundred-GB ones."""
+        if self.tc.infer_param_layout == "replicated":
+            return jax.tree.map(
+                lambda s: NamedSharding(self.mesh, P(*([None] * len(s.shape)))),
+                self.params_shapes,
+                is_leaf=lambda t: isinstance(t, jax.ShapeDtypeStruct))
+        return self.plan.shardings(self.mesh)
+
+    def opt_state_shapes(self):
+        """Momentum layout depends on the strategy (see DESIGN.md §5)."""
+        if self.tc.strategy == "fsdp_stream":
+            return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                                self.params_shapes)
+        mo = self.mo_eff
+        out = {}
+        for g in self.chunk_plan.groups:
+            S = self.ctx.n_shards(self.tc.strategy)
+            Lr = self.ctx.state_len(self.tc.strategy, g.padded)
+            if S > 1:
+                out[str(g.dtype)] = jax.ShapeDtypeStruct((mo, S, Lr), g.dtype)
+            else:
+                out[str(g.dtype)] = jax.ShapeDtypeStruct((mo, g.padded), g.dtype)
+        return out
+
+    def opt_state_shardings(self):
+        if self.tc.strategy == "fsdp_stream":
+            return self.plan.shardings(self.mesh)
+        S = self.ctx.n_shards(self.tc.strategy)
+        mspec = "model" if self.mo_eff > 1 else None
+        if S > 1:
+            shard_axes = (self.exchange_axes
+                          if self.tc.strategy == "sharded_ps" else ("data",))
+            ax = shard_axes[0] if len(shard_axes) == 1 else shard_axes
+            spec = P(mspec, ax, None)
+        else:
+            spec = P(mspec, None)
+        return {str(g.dtype): NamedSharding(self.mesh, spec)
+                for g in self.chunk_plan.groups}
+
+    def init_state(self, key: jax.Array):
+        """Materialize (params, opt_state) with the planned shardings."""
+        pspecs = self.param_shardings()
+        params = jax.jit(lambda k: model_init(self.cfg, k),
+                         out_shardings=pspecs)(key)
+        oshapes = self.opt_state_shapes()
+        oshards = self.opt_state_shardings()
+        opt = jax.tree.map(
+            lambda s, sh: jax.device_put(jnp.zeros(s.shape, s.dtype), sh),
+            oshapes, oshards,
+            is_leaf=lambda t: isinstance(t, jax.ShapeDtypeStruct))
+        return params, opt
+
+    # ------------------------------------------------------------ update fns
+
+    def _update_fn(self, dtype):
+        if self.tc.optimizer != "nesterov":
+            # chunk-domain exchange supports the paper's optimizer; Adam is
+            # available through the fsdp_stream path (tree-level update).
+            pass
+        if self.tc.use_pallas and self.tc.fused_agg_opt:
+            ce = max(self.tc.chunk_size_bytes // np.dtype(dtype).itemsize, 1)
+            return _pallas_vec(self.tc.lr, self.tc.momentum, ce)
+        return _nesterov_vec(self.tc.lr, self.tc.momentum)
+
+    # ------------------------------------------------------------ train step
+
+    def make_train_step(self, batch_shapes: dict[str, jax.ShapeDtypeStruct]):
+        cfg, tc = self.cfg, self.tc
+        mesh = self.mesh
+        manual_axes = set(self.exchange_axes)
+        pl = self.plan
+        gather = make_gather_fn(pl, self.params_shapes)
+        mo = self.axis_sizes.get("model", 1)
+        T = batch_shapes["tokens"].shape[1] + (cfg.frontend_tokens if cfg.frontend else 0)
+        seq_axis = "model" if (mo > 1 and T % mo == 0 and T > 1
+                               and tc.seq_sharding
+                               and not tc.dp_over_model) else None
+
+        def loss_fn(params, batch):
+            extra = batch.get("extra_embeds")
+            out = forward(cfg, params, batch["tokens"], extra_embeds=extra,
+                          gather=gather, remat=tc.remat,
+                          use_kernels=tc.use_pallas, seq_shard_axis=seq_axis,
+                          unroll=tc.scan_unroll)
+            if gather is None:
+                lw = lm_head_weight(cfg, params)
+            elif cfg.tie_embeddings:
+                lw = gather("embed", params["embed"]).T
+            else:
+                lw = gather("lm_head", params["lm_head"])
+            labels = batch["labels"]
+            if extra is not None:
+                B, F = labels.shape[0], extra.shape[1]
+                labels = jnp.concatenate(
+                    [jnp.full((B, F), -1, labels.dtype), labels], axis=1)
+            loss = chunked_cross_entropy(out["x"], lw, labels,
+                                         chunk=tc.loss_chunk)
+            return loss + cfg.router_aux_weight * out["aux"], loss
+
+        def exchange_stage(grads, params, opt):
+            if tc.strategy == "fsdp_stream":
+                N = self.ctx.n_workers
+                fdims = pl.fsdp_dims()
+                upd = _nesterov_vec(tc.lr, tc.momentum)
+
+                def leaf_update(p, g, m, fd):
+                    if fd is None:                        # replicated leaf
+                        g = jax.lax.psum(g, self.data_axes)
+                    g = g / N
+                    p2, m2 = upd(p.reshape(-1), g.reshape(-1), m.reshape(-1))
+                    return p2.reshape(p.shape), m2.reshape(m.shape)
+
+                out = jax.tree.map(leaf_update, params, grads, opt, fdims)
+                new_p = jax.tree.map(lambda t: t[0], out,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+                new_m = jax.tree.map(lambda t: t[1], out,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+                return new_p, new_m
+
+            cp = self.chunk_plan
+            # Shardy forbids axis_index over outer axes inside the nested
+            # manual computation: compute the shard rank here (outer scope).
+            if tc.strategy == "hierarchical":
+                rank = jax.lax.axis_index("data")
+            else:
+                rank = flat_rank(self.exchange_axes, self.axis_sizes)
+
+            def inner(grads, params, opt, rank):
+                flats_g = chunking.flatten_groups(cp, grads)
+                flats_p = chunking.flatten_groups(cp, params)
+                new_p, new_m = {}, {}
+                for g in cp.groups:
+                    key = str(g.dtype)
+                    mloc = opt[key].reshape(-1)
+                    p2, m2 = exchange_group(
+                        tc.strategy, self.ctx, flats_g[key], flats_p[key],
+                        mloc, self._update_fn(g.dtype), rank)
+                    new_p[key] = p2
+                    new_m[key] = m2.reshape(opt[key].shape)
+                return (chunking.unflatten_groups(cp, new_p, self.params_shapes),
+                        new_m)
+
+            inner_in_p = pl.specs()           # full specs: model dims manual now
+            S = self.ctx.n_shards(tc.strategy)
+            mspec = "model" if self.mo_eff > 1 else None
+            m_spec = {str(g.dtype): (P(mspec, None, None) if S > 1
+                                     else P(mspec, None))
+                      for g in cp.groups}
+            if tc.dp_over_model:
+                # 'model' is already manual in the outer shard_map and the
+                # params are fully local — no nested shard_map needed
+                return inner(grads, params, opt, rank)
+            return jax.shard_map(
+                inner, mesh=jax.sharding.get_abstract_mesh(),
+                in_specs=(inner_in_p, inner_in_p, m_spec, P()),
+                out_specs=(inner_in_p, m_spec),
+                axis_names={"model"}, check_vma=False)(grads, params, opt, rank)
+
+        def local_step(params, opt, batch):
+            if tc.microbatch > 1:
+                k = tc.microbatch
+
+                def split(v):
+                    B = v.shape[0]
+                    return v.reshape(k, B // k, *v.shape[1:])
+
+                mb = {kk: split(v) for kk, v in batch.items()}
+
+                def acc_fn(carry, mbatch):
+                    (tot, loss), grads = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, mbatch)
+                    tot_a, loss_a, g_a = carry
+                    g_a = jax.tree.map(lambda a, g: a + g / k, g_a, grads)
+                    return (tot_a + tot / k, loss_a + loss / k, g_a), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32
+                                        if p.dtype == jnp.bfloat16
+                                        else p.dtype), params)
+                (tot, loss, grads), _ = jax.lax.scan(
+                    acc_fn, (jnp.zeros((), jnp.float32),
+                             jnp.zeros((), jnp.float32), zeros), mb)
+                grads = jax.tree.map(lambda g, pp: g.astype(pp.dtype),
+                                     grads, params)
+            else:
+                (tot, loss), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            new_p, new_m = exchange_stage(grads, params, opt)
+            metrics = {"loss": jax.lax.pmean(loss, self.exchange_axes),
+                       "total_loss": jax.lax.pmean(tot, self.exchange_axes)}
+            return new_p, new_m, metrics
+
+        manual_p = pl.manual_specs(self.exchange_axes)
+        bx = (self.exchange_axes if len(self.exchange_axes) > 1
+              else self.exchange_axes[0])
+        batch_spec = {k: P(bx, *([None] * (len(v.shape) - 1)))
+                      for k, v in batch_shapes.items()}
+        if tc.strategy == "fsdp_stream":
+            m_outer = manual_p
+        else:
+            S = self.ctx.n_shards(tc.strategy)
+            if S > 1:
+                ax = (self.exchange_axes if tc.strategy == "sharded_ps"
+                      else ("data",))
+                ax = ax[0] if len(ax) == 1 else ax
+                m_outer = {str(g.dtype): P(None, ax, None)
+                           for g in self.chunk_plan.groups}
+            else:
+                m_outer = {str(g.dtype): P(None, None)
+                           for g in self.chunk_plan.groups}
+
+        step = jax.shard_map(
+            local_step, mesh=mesh,
+            in_specs=(manual_p, m_outer, batch_spec),
+            out_specs=(manual_p, m_outer, P()),
+            axis_names=manual_axes, check_vma=False)
+        return jax.jit(step, donate_argnums=(0, 1))
+
+    def _batch_axes(self):
+        return (self.data_axes[0] if len(self.data_axes) == 1
+                else self.data_axes)
+
+    # ------------------------------------------------------------ serve step
+
+    def make_serve_step(self):
+        """Decode: one token against the cache. Pure auto-GSPMD jit."""
+        cfg = self.cfg
+
+        tc = self.tc
+
+        def serve_step(params, cache, tokens):
+            out = forward(cfg, params, tokens, cache=cache, remat=False,
+                          unroll=tc.scan_unroll)
+            logits = (out["x"][:, -1].astype(jnp.float32)
+                      @ lm_head_weight(cfg, params).astype(jnp.float32))
+            return logits, out["cache"]
+        return _MeshScopedJit(jax.jit(serve_step, donate_argnums=(1,)),
+                              self.mesh)
+
+    def make_prefill_step(self, seq_len: int, max_new_tokens: int = 0):
+        cfg = self.cfg
+        mo = self.axis_sizes.get("model", 1)
+        T = seq_len + (cfg.frontend_tokens if cfg.frontend else 0)
+        seq_axis = "model" if (mo > 1 and T % mo == 0) else None
+
+        tc = self.tc
+
+        def prefill_step(params, tokens, extra_embeds=None):
+            out = prefill(cfg, params, tokens, extra_embeds=extra_embeds,
+                          remat=True, seq_shard_axis=seq_axis,
+                          unroll=tc.scan_unroll,
+                          max_new_tokens=max_new_tokens)
+            logits = (out["x"][:, -1].astype(jnp.float32)
+                      @ lm_head_weight(cfg, params).astype(jnp.float32))
+            return logits, out["cache"]
+        return _MeshScopedJit(jax.jit(prefill_step), self.mesh)
+
+    # ------------------------------------------------------------- shardings
+
+    def batch_shardings(self, batch_shapes):
+        ax = self._batch_axes()
+        da = int(np.prod([self.axis_sizes[a] for a in self.data_axes]))
+        if self.tc.dp_over_model:
+            da *= self.axis_sizes.get("model", 1)
+            ax = (ax if isinstance(ax, tuple) else (ax,)) + ("model",)
+
+        def spec(v):
+            if v.shape and v.shape[0] % da == 0 and v.shape[0] >= da:
+                return P(ax, *([None] * (len(v.shape) - 1)))
+            return P(*([None] * len(v.shape)))
+        return {k: NamedSharding(self.mesh, spec(v))
+                for k, v in batch_shapes.items()}
+
+    def _exchange_worker_axes(self):
+        return self.exchange_axes
+
+    def cache_shardings(self, batch: int, seq_len: int):
+        """Decode-cache shardings: batch over data axes where divisible,
+        kv-heads over model where divisible."""
+        cfg = self.cfg
+        cache = jax.eval_shape(partial(init_cache, cfg, batch, seq_len))
+        da = int(np.prod([self.axis_sizes[a] for a in self.data_axes]))
+        mo = self.axis_sizes.get("model", 1)
+        ax = self._batch_axes()
+
+        def spec_for(path, leaf):
+            if leaf.ndim == 0:
+                return P()
+            entries = [None] * leaf.ndim
+            if leaf.ndim >= 2 and leaf.shape[1] % da == 0 and leaf.shape[1] >= da:
+                entries[1] = ax                      # batch dim (after L)
+            name = path
+            if "'k'" in path or "'v'" in path:
+                if leaf.shape[3] % mo == 0:
+                    entries[3] = "model"             # kv heads
+            return P(*entries)
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+        specs = [spec_for(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+        return jax.tree_util.tree_unflatten(
+            treedef, [NamedSharding(self.mesh, s) for s in specs])

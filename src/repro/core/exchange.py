@@ -1,0 +1,117 @@
+"""Exchange strategies — the PS configurations of Fig. 4 mapped to collective
+schedules over the mesh's data/pod axes (see DESIGN.md §2/§5).
+
+Every strategy consumes the *local, unreduced* gradient vector of one dtype
+group (flattened chunk domain, already padded to n_shards * shard_len) and
+returns the updated parameter vector. ``update_fn(p, g, m) -> (p', m')`` is
+the fused aggregation+optimization step (§3.2.2), applied to exactly the
+chunks this shard owns.
+
+Strategies:
+- allreduce        — colocated-sharded baseline (ring all-reduce; every
+                     worker aggregates and optimizes the full model).
+- sharded_ps       — PHub: chunk-balanced reduce-scatter; each shard owns
+                     1/S of the chunks, runs fused agg+opt on them, and the
+                     updated chunks are all-gathered (fused PushPull).
+                     Spans all data axes flat (cross-pod traffic scales
+                     with S when multi-pod).
+- hierarchical     — PHub rack deployment (§3.4): reduce-scatter *within*
+                     the pod, then a cross-pod all-reduce on the owner
+                     shard only (1/N cross-pod bytes), optimize, all-gather
+                     within the pod.
+- centralized_ps   — NCC emulation: every shard's gradients converge on
+                     rank 0 (traffic incast); on SPMD hardware the compute
+                     cannot be centralized, so this reproduces the *traffic*
+                     pattern only (recorded in DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+UpdateFn = Callable[[jax.Array, jax.Array, jax.Array], tuple[jax.Array, jax.Array]]
+
+STRATEGIES = ("allreduce", "sharded_ps", "centralized_ps", "hierarchical",
+              "fsdp_stream")
+
+
+def flat_rank(axes: Sequence[str], sizes: dict[str, int]) -> jax.Array:
+    """Flattened device index over ``axes``. Must be called where those axes
+    are manual-bound (the outer shard_map) — Shardy forbids axis_index on an
+    outer axis inside a nested manual computation, so the engine computes
+    ranks outside and passes them in."""
+    rank = jnp.zeros((), jnp.int32)
+    for a in axes:
+        rank = rank * sizes[a] + jax.lax.axis_index(a)
+    return rank
+
+
+@dataclass(frozen=True)
+class ExchangeContext:
+    data_axes: tuple[str, ...]          # outer-to-inner, e.g. ("pod", "data")
+    axis_sizes: dict[str, int]
+
+    @property
+    def n_workers(self) -> int:
+        return int(np.prod([self.axis_sizes[a] for a in self.data_axes]))
+
+    def n_shards(self, strategy: str) -> int:
+        """Rows of the chunk shard-matrix for this strategy."""
+        if strategy == "hierarchical":
+            return self.axis_sizes["data"]          # in-pod shards only
+        if strategy in ("sharded_ps",):
+            return self.n_workers                   # flat across pods
+        return 1                                    # full-vector strategies
+
+    def state_len(self, strategy: str, padded: int) -> int:
+        """Local momentum length per (model-rank, shard)."""
+        return padded // self.n_shards(strategy)
+
+
+def exchange_group(strategy: str, ctx: ExchangeContext, g: jax.Array,
+                   p: jax.Array, m: jax.Array, update_fn: UpdateFn,
+                   rank: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """g, p: (padded,) local vectors; m: (state_len,); rank: this device's
+    flat index over the strategy's shard axes (computed in the outer scope).
+    Returns (p', m')."""
+    axes = ctx.data_axes
+    N = ctx.n_workers
+
+    if strategy == "allreduce":
+        ga = jax.lax.psum(g, axes) / N
+        return update_fn(p, ga, m)
+
+    if strategy == "sharded_ps":
+        S = ctx.n_shards(strategy)
+        L = g.size // S
+        gsh = jax.lax.psum_scatter(g.reshape(S, L), axes,
+                                   scatter_dimension=0, tiled=False) / N
+        psh = jax.lax.dynamic_slice(p, (rank * L,), (L,))
+        p2, m2 = update_fn(psh, gsh, m)
+        return jax.lax.all_gather(p2, axes, tiled=True), m2
+
+    if strategy == "hierarchical":
+        S = ctx.axis_sizes["data"]
+        L = g.size // S
+        gsh = jax.lax.psum_scatter(g.reshape(S, L), "data",
+                                   scatter_dimension=0, tiled=False)
+        if "pod" in axes:
+            gsh = jax.lax.psum(gsh, "pod")          # cross-rack on 1/S only
+        gsh = gsh / N
+        psh = jax.lax.dynamic_slice(p, (rank * L,), (L,))
+        p2, m2 = update_fn(psh, gsh, m)
+        return jax.lax.all_gather(p2, "data", tiled=True), m2
+
+    if strategy == "centralized_ps":
+        allg = jax.lax.all_gather(g, axes, tiled=False)      # (N, padded) incast
+        ga = allg.sum(axis=0) / N
+        p2, m2 = update_fn(p, ga, m)
+        # "broadcast from the PS": only rank 0's copy is authoritative
+        p2 = jax.lax.psum(jnp.where(rank == 0, p2, jnp.zeros_like(p2)), axes)
+        return p2, m2
+
+    raise ValueError(f"unknown strategy {strategy!r}")

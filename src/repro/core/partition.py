@@ -1,0 +1,46 @@
+"""Balanced chunk->shard assignment (§3.2.4).
+
+PHub balances chunk load across cores/queue pairs/interfaces with a
+4/3-approximation set-partition algorithm. LPT (Longest Processing Time
+greedy) is that algorithm: sort items descending, place each in the
+currently-lightest bin — Graham's bound gives 4/3 - 1/(3m) of optimal
+makespan.
+
+On the TPU datapath the flattened-concat representation makes per-shard
+byte balance exact by construction (see DESIGN.md §7), so LPT is used where
+discreteness survives: assigning heterogeneous *keys* (pytree leaves /
+dtype groups) to shards for the centralized-PS emulation, for benchmark
+reproduction of the paper's load-balance study, and for host-side sharded
+checkpoint writers.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Sequence
+
+
+def lpt_partition(costs: Sequence[int], n_bins: int) -> list[int]:
+    """Return bin id per item. Greedy LPT: 4/3-approx of optimal makespan."""
+    order = sorted(range(len(costs)), key=lambda i: -costs[i])
+    heap = [(0, b) for b in range(n_bins)]
+    heapq.heapify(heap)
+    assign = [0] * len(costs)
+    for i in order:
+        load, b = heapq.heappop(heap)
+        assign[i] = b
+        heapq.heappush(heap, (load + costs[i], b))
+    return assign
+
+
+def bin_loads(costs: Sequence[int], assign: Sequence[int], n_bins: int) -> list[int]:
+    loads = [0] * n_bins
+    for c, b in zip(costs, assign):
+        loads[b] += c
+    return loads
+
+
+def makespan_ratio(costs: Sequence[int], assign: Sequence[int], n_bins: int) -> float:
+    """max bin load / perfect-balance load (1.0 = perfectly balanced)."""
+    loads = bin_loads(costs, assign, n_bins)
+    ideal = max(sum(costs) / n_bins, 1e-12)
+    return max(loads) / ideal

@@ -1,0 +1,182 @@
+"""Sharding planner: maps every parameter leaf to mesh axes.
+
+Two storage layouts:
+
+- ``replicated`` (paper-faithful, Design B): params replicated over the
+  data/pod axes (every worker holds the full model, as PHub's workers do),
+  tensor-parallel over ``model``. Gradients leave the backward pass
+  *unreduced per data shard* — exactly the stream PHub's workers push.
+- ``fsdp`` (beyond-paper, Design A): params additionally sharded over
+  ``data`` on a second dimension; each layer is all-gathered (Pull) inside
+  the scan and the autodiff transpose reduce-scatters gradients (Push)
+  *during* the backward scan — PHub's streaming aggregation made structural.
+
+Divisibility is checked per-dim; anything that doesn't divide evenly is
+replicated (device_put forbids uneven shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+# leaf-name -> candidate shard dim for the model axis, indexed from the END
+# of the shape (block leaves carry a leading layer dim).  -1 = last dim.
+_COL = {"wq", "wk", "wv", "w1", "w3", "ck", "cr", "w_r", "w_k", "w_v", "w_g",
+        "w_in", "w_gate", "wa", "wb", "moe_w1", "moe_w3", "lm_head"}
+_ROW = {"wo", "w2", "cv", "w_o", "w_out", "moe_w2"}
+_MIN_SHARD_ELEMS = 1 << 16          # replicate tiny leaves
+
+
+def _leaf_name(path: str) -> str:
+    import re
+    keys = re.findall(r"\['([^']+)'\]", path)
+    return keys[-1] if keys else path
+
+
+@dataclass(frozen=True)
+class LeafPlan:
+    spec: P                         # full storage spec (model [+ fsdp] dims)
+    model_dim: Optional[int]        # dim sharded over 'model' (absolute index)
+    fsdp_dim: Optional[int]         # dim sharded over 'data' (absolute index)
+
+
+@dataclass(frozen=True)
+class ShardingPlan:
+    mesh_axes: tuple[str, ...]      # e.g. ("data","model") or ("pod","data","model")
+    layout: str                     # "replicated" | "fsdp"
+    leaves: dict                    # path -> LeafPlan
+    treedef: Any
+
+    @property
+    def data_axes(self) -> tuple[str, ...]:
+        return tuple(a for a in self.mesh_axes if a in ("pod", "data"))
+
+    @property
+    def model_axis(self) -> str:
+        return "model"
+
+    def specs(self):
+        return self._map(lambda lp: lp.spec)
+
+    def manual_specs(self, manual_axes: tuple[str, ...]):
+        def keep(lp: LeafPlan):
+            entries = []
+            for e in lp.spec:
+                if e in manual_axes:
+                    entries.append(e)
+                elif isinstance(e, tuple):
+                    kept = tuple(a for a in e if a in manual_axes)
+                    entries.append(kept[0] if len(kept) == 1 else (kept or None))
+                else:
+                    entries.append(None)
+            return P(*entries)
+        return self._map(keep)
+
+    def shardings(self, mesh: Mesh):
+        return self._map(lambda lp: NamedSharding(mesh, lp.spec))
+
+    def fsdp_dims(self):
+        return self._map(lambda lp: lp.fsdp_dim)
+
+    def _map(self, fn):
+        return jax.tree_util.tree_unflatten(
+            self.treedef, [fn(self.leaves[p]) for p in self._order])
+
+
+def plan_params(params_shapes, *, mesh_axes: tuple[str, ...],
+                axis_sizes: dict[str, int], layout: str = "replicated"
+                ) -> ShardingPlan:
+    """params_shapes: pytree of arrays or ShapeDtypeStructs."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    mo = axis_sizes.get("model", 1)
+    da = axis_sizes.get("data", 1)
+    leaves: dict[str, LeafPlan] = {}
+    order = []
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        order.append(path)
+        name = _leaf_name(path)
+        shape = tuple(leaf.shape)
+        size = int(np.prod(shape)) if shape else 1
+        stacked = path.startswith("['blocks']")
+        lead = 1 if stacked else 0            # scan dim is never sharded
+
+        model_dim = None
+        if mo > 1 and size >= _MIN_SHARD_ELEMS and len(shape) > lead:
+            if name == "embed":
+                for cand in (0, 1):
+                    if shape[cand] % mo == 0:
+                        model_dim = cand
+                        break
+            elif name in _COL and shape[-1] % mo == 0:
+                model_dim = len(shape) - 1
+            elif name in _ROW and len(shape) - 2 >= lead and shape[-2] % mo == 0:
+                model_dim = len(shape) - 2
+
+        fsdp_dim = None
+        if layout == "fsdp" and da > 1 and size >= _MIN_SHARD_ELEMS:
+            # largest remaining dim divisible by the data axis
+            cands = [i for i in range(lead, len(shape))
+                     if i != model_dim and shape[i] % da == 0]
+            if cands:
+                fsdp_dim = max(cands, key=lambda i: shape[i])
+
+        entries: list = [None] * len(shape)
+        if model_dim is not None:
+            entries[model_dim] = "model"
+        if fsdp_dim is not None:
+            entries[fsdp_dim] = "data"
+        leaves[path] = LeafPlan(spec=P(*entries), model_dim=model_dim,
+                                fsdp_dim=fsdp_dim)
+    plan = ShardingPlan(mesh_axes=tuple(mesh_axes), layout=layout,
+                        leaves=leaves, treedef=treedef)
+    object.__setattr__(plan, "_order", order)
+    return plan
+
+
+def local_shapes(params_shapes, plan: ShardingPlan,
+                 axis_sizes: dict[str, int]):
+    """Per-device leaf shapes under the plan (model+fsdp dims divided)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    out = []
+    for kp, leaf in flat:
+        lp = plan.leaves[jax.tree_util.keystr(kp)]
+        shape = list(leaf.shape)
+        if lp.model_dim is not None:
+            shape[lp.model_dim] //= axis_sizes.get("model", 1)
+        if lp.fsdp_dim is not None:
+            shape[lp.fsdp_dim] //= axis_sizes.get("data", 1)
+        out.append(jax.ShapeDtypeStruct(tuple(shape), leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def make_gather_fn(plan: ShardingPlan, params_template):
+    """PHub Pull for the fsdp layout: all-gather each scanned layer slice
+    over 'data'. Returns None for the replicated layout (no Pull needed).
+
+    The returned fn has signature gather(section, subtree) where section is
+    "embed" | "blocks" | ... — for blocks the leading layer dim has been
+    consumed by scan, so recorded dims shift down by one.
+    """
+    if plan.layout != "fsdp":
+        return None
+    dims = plan.fsdp_dims()
+
+    def gather(section: str, subtree):
+        sub_dims = dims[section]
+        shift = 1 if section == "blocks" else 0     # scan consumed layer dim
+
+        def g(dim, leaf):
+            if dim is None:
+                return leaf
+            return jax.lax.all_gather(leaf, "data", axis=dim - shift, tiled=True)
+        return jax.tree_util.tree_map(g, sub_dims, subtree,
+                                      is_leaf=lambda x: x is None)
+    return gather

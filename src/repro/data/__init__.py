@@ -1,0 +1,1 @@
+from .synthetic import SyntheticTokens, make_batch_specs

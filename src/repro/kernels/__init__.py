@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (each package:
+kernel.py with pl.pallas_call + BlockSpec, ops.py jit wrapper, ref.py
+pure-jnp oracle; validated with interpret=True on CPU):
+
+  agg_opt/      fused tall aggregation + Nesterov update (§3.2.2) — the
+                paper's central gradient-processing optimization
+  swa_attn/     sliding-window flash attention (danube/hymba, long_500k)
+  rwkv_scan/    RWKV6 chunked linear-attention scan (VMEM-resident state)
+  decode_attn/  single-token GQA decode over a ring-buffer KV cache
+"""

@@ -1,0 +1,70 @@
+"""Fused tall-aggregation + Nesterov-SGD Pallas kernel (§3.2.2).
+
+PHub's central insight for the gradient-processing pipeline: one core owns a
+32 KB chunk end-to-end — aggregate the workers' gradients for that chunk and
+immediately run the optimizer on it while it is cache-resident, with zero
+cross-thread synchronization. The TPU adaptation: one *grid step* owns one
+chunk — the chunk is staged into VMEM once, aggregation (sum over the worker
+axis) and the Nesterov update happen in-register, and each of p/m/g crosses
+HBM exactly once. The cache-bypassing alternative the paper measures
+(Table 4) corresponds to separate aggregate and optimize kernels, each
+re-reading the chunk from HBM (see benchmarks/caching.py).
+
+Layout: vectors are reshaped to (n_chunks, chunk_elems) with chunk_elems a
+multiple of 128 (lane width); each grid step processes one (1, chunk_elems)
+block.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _agg_opt_body(p_ref, g_ref, m_ref, po_ref, mo_ref, *, lr, momentum,
+                  n_workers):
+    g = g_ref[...].astype(jnp.float32)
+    if g.ndim == 3:                      # (W, 1, ce): aggregate workers
+        g = g.sum(axis=0) / n_workers
+    m = m_ref[...].astype(jnp.float32)
+    m2 = momentum * m + g
+    p2 = p_ref[...].astype(jnp.float32) - lr * (g + momentum * m2)
+    po_ref[...] = p2.astype(po_ref.dtype)
+    mo_ref[...] = m2.astype(mo_ref.dtype)
+
+
+def agg_opt_chunks(p: jax.Array, g: jax.Array, m: jax.Array, *, lr: float,
+                   momentum: float, interpret: bool = False) -> tuple:
+    """p, m: (nc, ce); g: (nc, ce) pre-aggregated. Returns (p', m')."""
+    nc, ce = p.shape
+    spec = pl.BlockSpec((1, ce), lambda i: (i, 0))
+    return pl.pallas_call(
+        partial(_agg_opt_body, lr=lr, momentum=momentum, n_workers=1),
+        grid=(nc,),
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype),
+                   jax.ShapeDtypeStruct(m.shape, m.dtype)],
+        interpret=interpret,
+    )(p, g, m)
+
+
+def multi_agg_opt_chunks(p: jax.Array, g: jax.Array, m: jax.Array, *,
+                         lr: float, momentum: float,
+                         interpret: bool = False) -> tuple:
+    """Tall aggregation over workers: g is (W, nc, ce) — one grid step sums
+    one chunk across all workers and optimizes it in the same VMEM pass."""
+    W, nc, ce = g.shape
+    spec = pl.BlockSpec((1, ce), lambda i: (i, 0))
+    gspec = pl.BlockSpec((W, 1, ce), lambda i: (0, i, 0))
+    return pl.pallas_call(
+        partial(_agg_opt_body, lr=lr, momentum=momentum, n_workers=W),
+        grid=(nc,),
+        in_specs=[spec, gspec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype),
+                   jax.ShapeDtypeStruct(m.shape, m.dtype)],
+        interpret=interpret,
+    )(p, g, m)

@@ -1,0 +1,60 @@
+"""jit'd public wrappers for the fused agg+opt kernel.
+
+``interpret`` defaults to True off-TPU so the same call sites work in CPU
+tests and on real hardware.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import agg_opt_chunks, multi_agg_opt_chunks
+
+_LANE = 128
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_chunks(v: jax.Array, chunk_elems: int):
+    n = v.size
+    ce = max(_LANE, (chunk_elems // _LANE) * _LANE)
+    padded = -(-n // ce) * ce
+    return v.reshape(-1)[:n], jnp.pad(v.reshape(-1), (0, padded - n)) \
+        .reshape(padded // ce, ce), ce, n
+
+
+@partial(jax.jit, static_argnames=("lr", "momentum", "chunk_elems",
+                                   "interpret"))
+def fused_agg_opt(p: jax.Array, g: jax.Array, m: jax.Array, *, lr: float,
+                  momentum: float, chunk_elems: int = 8192,
+                  interpret: bool | None = None):
+    """Flat fused Nesterov update. p/g/m: (n,). Returns (p', m')."""
+    interpret = _default_interpret() if interpret is None else interpret
+    _, pc, ce, n = _to_chunks(p, chunk_elems)
+    _, gc, _, _ = _to_chunks(g, chunk_elems)
+    _, mc, _, _ = _to_chunks(m, chunk_elems)
+    p2, m2 = agg_opt_chunks(pc, gc, mc, lr=lr, momentum=momentum,
+                            interpret=interpret)
+    return p2.reshape(-1)[:n], m2.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("lr", "momentum", "chunk_elems",
+                                   "interpret"))
+def fused_multi_agg_opt(p: jax.Array, g: jax.Array, m: jax.Array, *,
+                        lr: float, momentum: float, chunk_elems: int = 8192,
+                        interpret: bool | None = None):
+    """Tall aggregation: g is (W, n) worker gradients; aggregation and the
+    optimizer run in one VMEM pass per chunk."""
+    interpret = _default_interpret() if interpret is None else interpret
+    W, n = g.shape
+    _, pc, ce, _ = _to_chunks(p, chunk_elems)
+    nc = pc.shape[0]
+    gc = jnp.pad(g, ((0, 0), (0, nc * ce - n))).reshape(W, nc, ce)
+    _, mc, _, _ = _to_chunks(m, chunk_elems)
+    p2, m2 = multi_agg_opt_chunks(pc, gc, mc, lr=lr, momentum=momentum,
+                                  interpret=interpret)
+    return p2.reshape(-1)[:n], m2.reshape(-1)[:n]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused agg+opt kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def agg_opt_ref(p, g, m, *, lr: float, momentum: float, n_workers: int = 1):
+    """g: (..., n) or (W, ..., n) when aggregating workers."""
+    g = g.astype(jnp.float32)
+    if g.ndim == p.ndim + 1:
+        g = g.sum(axis=0) / n_workers
+    m32 = m.astype(jnp.float32)
+    m2 = momentum * m32 + g
+    p2 = p.astype(jnp.float32) - lr * (g + momentum * m2)
+    return p2.astype(p.dtype), m2.astype(m.dtype)

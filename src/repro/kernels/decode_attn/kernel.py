@@ -1,0 +1,86 @@
+"""Single-token GQA decode attention over a ring-buffer KV cache.
+
+The serving hot loop: one query token per sequence attends to a cache of
+up to 512K entries. Slots carry their global positions (-1 = empty), so
+sliding-window eviction and ring rotation need no special handling — the
+mask is computed from the position block, exactly like the model's
+blockwise oracle.
+
+Grid: (batch, kv_head, n_cache_blocks); the G = nh/kv query heads of one KV
+head are processed together as a (G, hd) tile; online-softmax state lives
+in VMEM scratch across cache blocks.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_body(q_ref, k_ref, v_ref, pos_ref, qpos_ref, o_ref,
+                 m_scr, l_scr, acc_scr, *, scale, window, bs, n_blocks):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    kp = pos_ref[0]                                      # (bs,)
+    qp = qpos_ref[0, 0]
+
+    s = q @ k.T                                          # (G, bs)
+    valid = (kp >= 0) & (kp <= qp)
+    valid = valid & jnp.where(window > 0, kp > qp - window, True)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]                                  # (G, 1)
+    m_new = jnp.maximum(m_prev[:, 0], s.max(axis=-1))[:, None]
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)[:, None]
+    acc_scr[...] = acc_scr[...] * corr + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _final():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k, v, pos, q_pos, *, window: int,
+                            bs: int = 512, interpret: bool = False,
+                            scale: float | None = None):
+    """q: (B, kv, G, hd); k/v: (B, S, kv, hd); pos: (B, S) int32;
+    q_pos: (B, 1) int32. S % bs == 0 (ops.py pads with -1 slots).
+    Returns (B, kv, G, hd)."""
+    B, kv, G, hd = q.shape
+    S = k.shape[1]
+    nb = S // bs
+    scale = hd ** -0.5 if scale is None else scale
+    qspec = pl.BlockSpec((1, 1, G, hd), lambda b, h, j: (b, h, 0, 0))
+    kspec = pl.BlockSpec((1, bs, 1, hd), lambda b, h, j: (b, j, h, 0))
+    pspec = pl.BlockSpec((1, bs), lambda b, h, j: (b, j))
+    qpspec = pl.BlockSpec((1, 1), lambda b, h, j: (b, 0))
+    return pl.pallas_call(
+        partial(_decode_body, scale=scale, window=window, bs=bs, n_blocks=nb),
+        grid=(B, kv, nb),
+        in_specs=[qspec, kspec, kspec, pspec, qpspec],
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, pos, q_pos)

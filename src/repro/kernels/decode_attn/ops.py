@@ -1,0 +1,41 @@
+"""jit'd wrapper: model layout -> kernel layout, lane/block padding."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_kernel
+
+_LANE = 128
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("window", "bs", "interpret"))
+def decode_attention(q, k, v, pos, q_pos, *, window: int = 0, bs: int = 512,
+                     interpret: bool | None = None):
+    """q: (B, 1, nh, hd) single decode token; k/v: (B, S, kv, hd) cache;
+    pos: (B, S) slot positions (-1 empty); q_pos: (B,) or (B, 1).
+    Returns (B, 1, nh, hd)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    B, _, nh, hd = q.shape
+    S, kv = k.shape[1], k.shape[2]
+    G = nh // kv
+    hdp = -(-hd // _LANE) * _LANE
+    bs = min(bs, max(128, S))
+    Sp = -(-S // bs) * bs
+
+    qk = jnp.pad(q[:, 0].reshape(B, kv, G, hd),
+                 ((0, 0), (0, 0), (0, 0), (0, hdp - hd)))
+    kk = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, hdp - hd)))
+    vk = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, hdp - hd)))
+    pk = jnp.pad(pos, ((0, 0), (0, Sp - S)), constant_values=-1)
+    qp = q_pos.reshape(B, 1).astype(jnp.int32)
+
+    o = decode_attention_kernel(qk, kk, vk, pk, qp, window=window, bs=bs,
+                                interpret=interpret, scale=hd ** -0.5)
+    return o[..., :hd].reshape(B, 1, nh, hd)

@@ -1,0 +1,15 @@
+"""Oracle: the model's blockwise attention at T=1 with a position-tagged cache."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...models.attention import blockwise_attention
+
+
+def decode_attention_ref(q, k, v, pos, q_pos, *, window: int):
+    """Kernel layout: q (B, kv, G, hd); k/v (B, S, kv, hd); pos (B, S);
+    q_pos (B, 1). Returns (B, kv, G, hd)."""
+    B, kv, G, hd = q.shape
+    qb = q.reshape(B, 1, kv * G, hd)         # (B, T=1, nh, hd)
+    out = blockwise_attention(qb, k, v, q_pos=q_pos, k_pos=pos, window=window)
+    return out.reshape(B, kv, G, hd)

@@ -1,0 +1,25 @@
+"""Oracle: the model's sequential RWKV6 recurrence, vmapped to the kernel's
+(BH, T, hd) layout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...models.rwkv import rwkv_recurrence
+
+
+def rwkv_scan_ref(r, k, v, w, u, state=None):
+    """r/k/v/w: (BH, T, hd); u: (BH, 1, hd).
+    Returns (y (BH, T, hd), final state (BH, hd, hd) fp32)."""
+    BH, T, hd = r.shape
+    if state is None:
+        state = jnp.zeros((BH, hd, hd), jnp.float32)
+
+    def one(r_, k_, v_, w_, u_, s_):
+        y, s = rwkv_recurrence(r_[None, :, None], k_[None, :, None],
+                               v_[None, :, None], w_[None, :, None],
+                               u_, s_[None, None])
+        return y[0, :, 0], s[0, 0]
+
+    y, s = jax.vmap(one)(r, k, v, w, u, state)
+    return y, s.astype(jnp.float32)

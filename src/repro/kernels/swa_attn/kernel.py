@@ -1,0 +1,102 @@
+"""Flash-style sliding-window GQA attention Pallas kernel.
+
+Grid: (batch, q_heads, n_q_blocks, n_kv_blocks), with the KV-block axis
+innermost and sequential — online-softmax running max / denominator / output
+accumulator live in VMEM scratch across KV steps and are finalized on the
+last step. Blocks fully outside the causal/sliding window are skipped with
+``pl.when`` (they still occupy grid steps; the index-map keeps their loads
+cheap).
+
+GQA is handled by indexing the KV head as h // (nh // kv) in the BlockSpec
+index maps — no KV replication in HBM.
+
+head_dim is padded to a lane multiple (128) by the ops.py wrapper.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _swa_body(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+              scale, window, bq, bk, n_kv):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    # block-level skip: entirely above the diagonal or left of the window
+    first_q = iq * bq
+    last_q = first_q + bq - 1
+    first_k = ik * bk
+    last_k = first_k + bk - 1
+    in_causal = first_k <= last_q
+    in_window = (window <= 0) | (last_k > first_q - window)
+
+    @pl.when(in_causal & in_window)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = q @ k.T                                          # (bq, bk)
+        mask = k_pos <= q_pos
+        if True:  # sliding window (window==0 disables via the predicate)
+            mask = mask & jnp.where(window > 0,
+                                    k_pos > q_pos - window, True)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]                                  # (bq, 1)
+        m_new = jnp.maximum(m_prev[:, 0], s.max(axis=-1))[:, None]
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)[:, None]
+        acc_scr[...] = acc_scr[...] * corr + p @ v
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def swa_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         window: int, scale: float, bq: int = 256,
+                         bk: int = 256, interpret: bool = False) -> jax.Array:
+    """q: (B, nh, T, hd); k, v: (B, kv, T, hd). T % bq == 0 required
+    (ops.py pads). Returns (B, nh, T, hd)."""
+    B, nh, T, hd = q.shape
+    kv = k.shape[1]
+    G = nh // kv
+    bq, bk = min(bq, T), min(bk, T)
+    nq, nk = T // bq, T // bk
+
+    grid = (B, nh, nq, nk)
+    qspec = pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0))
+    kspec = pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0))
+    ospec = pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0))
+
+    return pl.pallas_call(
+        partial(_swa_body, scale=scale, window=window, bq=bq, bk=bk,
+                n_kv=nk),
+        grid=grid,
+        in_specs=[qspec, kspec, kspec],
+        out_specs=ospec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,41 @@
+"""jit'd wrapper: pads head_dim to the 128 lane width and T to block size."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import swa_attention_kernel
+
+_LANE = 128
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("window", "bq", "bk", "interpret"))
+def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int = 0,
+                  bq: int = 256, bk: int = 256,
+                  interpret: bool | None = None) -> jax.Array:
+    """Causal (sliding-window) GQA attention.
+    q: (B, T, nh, hd); k/v: (B, T, kv, hd). Returns (B, T, nh, hd)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    B, T, nh, hd = q.shape
+    scale = hd ** -0.5
+    hdp = -(-hd // _LANE) * _LANE
+    bq = min(bq, max(16, T))
+    bk = min(bk, max(16, T))
+    Tp = -(-T // max(bq, bk)) * max(bq, bk)
+
+    def prep(x):
+        x = jnp.moveaxis(x, 1, 2)                       # (B, H, T, hd)
+        return jnp.pad(x, ((0, 0), (0, 0), (0, Tp - T), (0, hdp - hd)))
+
+    o = swa_attention_kernel(prep(q), prep(k), prep(v), window=window,
+                             scale=scale, bq=bq, bk=bk, interpret=interpret)
+    # padded key rows give q@k = 0 scores at positions beyond T, but those
+    # rows are masked out by causality only for q < T... they are k_pos > q_pos
+    # hence masked; padded q rows are discarded here.
+    return jnp.moveaxis(o, 2, 1)[:, :T, :, :hd]

@@ -1,0 +1,17 @@
+"""Oracle for the SWA flash kernel: the model's blockwise attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...models.attention import blockwise_attention
+
+
+def swa_attention_ref(q, k, v, *, window: int):
+    """q: (B, nh, T, hd); k/v: (B, kv, T, hd) — kernel layout."""
+    B, nh, T, hd = q.shape
+    qb = jnp.moveaxis(q, 1, 2)           # (B, T, nh, hd)
+    kb = jnp.moveaxis(k, 1, 2)
+    vb = jnp.moveaxis(v, 1, 2)
+    pos = jnp.arange(T, dtype=jnp.int32)
+    out = blockwise_attention(qb, kb, vb, q_pos=pos, k_pos=pos, window=window)
+    return jnp.moveaxis(out, 2, 1)

@@ -1,0 +1,255 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) lowers + compiles.
+
+For each requested combination this script builds the full production step
+(train_step via the PHub engine for train shapes; prefill/serve steps for
+inference shapes), lowers it against ShapeDtypeStruct inputs (no
+allocation), compiles it, and records:
+
+  - compiled.memory_analysis()  (per-device bytes — proves it fits)
+  - compiled.cost_analysis()    (FLOPs / bytes for the roofline)
+  - collective traffic parsed from the optimized HLO (utils/hlo.py)
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>__<strategy>.json;
+benchmarks/roofline.py turns them into the EXPERIMENTS.md tables.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k [--multi-pod] [--strategy sharded_ps] [--all]
+"""
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+
+from ..configs import ARCHS, SHAPES, TrainConfig, applicable  # noqa: E402
+from ..configs.base import InputShape, ModelConfig            # noqa: E402
+from ..core import PHubEngine                                 # noqa: E402
+from ..data.synthetic import make_batch_specs                 # noqa: E402
+from ..models import init_cache                               # noqa: E402
+from ..utils.hlo import parse_collectives, summarize_collectives  # noqa: E402
+from .mesh import make_production_mesh                        # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        out[k] = int(getattr(mem, k, 0) or 0)
+    out["total_bytes_per_device"] = (out["argument_size_in_bytes"]
+                                     + out["temp_size_in_bytes"]
+                                     - out["alias_size_in_bytes"]
+                                     + out["output_size_in_bytes"])
+    return out
+
+
+def _lower_step(cfg: ModelConfig, shape: InputShape, mesh, strategy: str,
+                scan_unroll: int = 1, infer_layout: str = "tp",
+                dp_over_model: bool = False, seq_sharding: bool = True,
+                microbatch: int = 1):
+    """Build + lower the production step for one (arch, shape)."""
+    tc = TrainConfig(strategy=strategy, scan_unroll=scan_unroll,
+                     infer_param_layout=infer_layout,
+                     dp_over_model=dp_over_model, seq_sharding=seq_sharding,
+                     microbatch=microbatch)
+    eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
+    if shape.kind == "train":
+        specs = make_batch_specs(cfg, shape)
+        step = eng.make_train_step(specs)
+        args = (_with_sharding(eng.params_shapes, eng.param_shardings()),
+                _with_sharding(eng.opt_state_shapes(),
+                               eng.opt_state_shardings()),
+                _with_sharding(specs, eng.batch_shardings(specs)))
+        return step.lower(*args)
+    if shape.kind == "prefill":
+        specs = make_batch_specs(cfg, shape)
+        step = eng.make_prefill_step(shape.seq_len)
+        bshard = eng.batch_shardings(specs)
+        kwargs = {}
+        if "extra_embeds" in specs:
+            kwargs["extra_embeds"] = _one(specs["extra_embeds"],
+                                          bshard["extra_embeds"])
+        return step.lower(
+            _with_sharding(eng.params_shapes, eng.infer_param_shardings()),
+            _one(specs["tokens"], bshard["tokens"]), **kwargs)
+    # decode
+    step = eng.make_serve_step()
+    B = shape.global_batch
+    cache_shapes = jax.eval_shape(lambda: init_cache(cfg, B, shape.seq_len))
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return step.lower(
+        _with_sharding(eng.params_shapes, eng.infer_param_shardings()),
+        _with_sharding(cache_shapes, eng.cache_shardings(B, shape.seq_len)),
+        _one(tok, eng.batch_shardings({"tokens": tok})["tokens"]))
+
+
+def _probe_costs(cfg: ModelConfig, shape: InputShape, mesh, strategy: str,
+                 pod_stride: int, infer_layout: str = "tp",
+                 dp_over_model: bool = False, seq_sharding: bool = True,
+                 microbatch: int = 1) -> dict:
+    """Two-point unrolled probe: XLA's cost analysis counts a scanned layer
+    body once regardless of trip count, so we compile fully-unrolled L=1 and
+    L=2 variants and extrapolate additive metrics to the real depth:
+    m(L) ~= m(1) + (m(2) - m(1)) * (L - 1)."""
+    import dataclasses as dc
+    points = {}
+    for L in (1, 2):
+        c = dc.replace(cfg, n_layers=L)
+        compiled = _lower_step(c, shape, mesh, strategy, scan_unroll=L,
+                               infer_layout=infer_layout,
+                               dp_over_model=dp_over_model,
+                               seq_sharding=seq_sharding,
+                               microbatch=microbatch).compile()
+        cost = dict(compiled.cost_analysis() or {})
+        colls = summarize_collectives(parse_collectives(
+            compiled.as_text(), pod_stride=pod_stride))
+        points[L] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "ici": colls["ici_bytes"], "dcn": colls["dcn_bytes"],
+        }
+    L = cfg.n_layers
+    out = {}
+    for k in ("flops", "bytes", "ici", "dcn"):
+        d = points[2][k] - points[1][k]
+        out[k] = points[1][k] + d * (L - 1)
+        out[f"{k}_per_layer"] = d
+        out[f"{k}_L1"] = points[1][k]
+    return out
+
+
+def dryrun_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
+               strategy: str, save: bool = True, verbose: bool = True,
+               probe: bool = True, infer_layout: str = "tp",
+               dp_over_model: bool = False, seq_sharding: bool = True,
+               microbatch: int = 1, tag_suffix: str = "") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    tag = f"{cfg.arch_id}__{shape.name}__{mesh_name}__{strategy}{tag_suffix}"
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        rec = {"tag": tag, "status": "skipped", "reason": reason}
+        if verbose:
+            print(f"[dryrun] SKIP {tag}: {reason}")
+        return rec
+
+    t0 = time.time()
+    lowered = _lower_step(cfg, shape, mesh, strategy,
+                          infer_layout=infer_layout,
+                          dp_over_model=dp_over_model,
+                          seq_sharding=seq_sharding, microbatch=microbatch)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = _mem_dict(compiled.memory_analysis())
+    cost = dict(compiled.cost_analysis() or {})
+    cost = {k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float)) and k in
+            ("flops", "bytes accessed", "bytes accessed output",
+             "optimal_seconds", "utilization operand 0")}
+    pod_stride = 256 if multi_pod else 0
+    colls = parse_collectives(compiled.as_text(), pod_stride=pod_stride)
+    csum = summarize_collectives(colls)
+
+    rec = {
+        "tag": tag, "status": "ok", "arch": cfg.arch_id, "shape": shape.name,
+        "mesh": mesh_name, "strategy": strategy,
+        "kind": shape.kind,
+        "n_params": cfg.n_params(), "n_active_params": cfg.n_active_params(),
+        "tokens_per_step": (shape.global_batch if shape.kind == "decode"
+                            else shape.global_batch * shape.seq_len),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem, "cost": cost, "collectives": csum,
+    }
+    if probe:
+        # trip-count-corrected metrics (scan bodies are counted once by
+        # XLA's cost analysis — see _probe_costs)
+        rec["probe"] = _probe_costs(cfg, shape, mesh, strategy, pod_stride,
+                                    infer_layout=infer_layout,
+                                    dp_over_model=dp_over_model,
+                                    seq_sharding=seq_sharding,
+                                    microbatch=microbatch)
+    if verbose:
+        pr = rec.get("probe", {})
+        print(f"[dryrun] OK {tag}: {mem['total_bytes_per_device']/2**30:.2f} "
+              f"GiB/device, flops/dev {pr.get('flops', cost.get('flops', 0)):.3e}, "
+              f"hbm {pr.get('bytes', 0)/2**30:.1f} GiB, "
+              f"ici {pr.get('ici', csum['ici_bytes'])/2**30:.3f} GiB, "
+              f"dcn {pr.get('dcn', csum['dcn_bytes'])/2**30:.3f} GiB "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        with open(os.path.join(RESULTS_DIR, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def _one(sds, sharding):
+    return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sharding)
+
+
+def _with_sharding(shapes, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings,
+        is_leaf=lambda t: isinstance(t, jax.ShapeDtypeStruct))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None,
+                    choices=sorted(ARCHS), help="repeatable")
+    ap.add_argument("--shape", action="append", default=None,
+                    choices=sorted(SHAPES))
+    ap.add_argument("--strategy", default="sharded_ps")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) for the chosen mesh(es)")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = args.arch or (sorted(ARCHS) if args.all else ["llama3.2-1b"])
+    shapes = args.shape or (sorted(SHAPES) if args.all else ["train_4k"])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for mp in meshes:
+        for a in archs:
+            for sname in shapes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                tag = f"{a}__{sname}__{mesh_name}__{args.strategy}"
+                path = os.path.join(RESULTS_DIR, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[dryrun] cached {tag}")
+                    continue
+                try:
+                    dryrun_one(ARCHS[a], SHAPES[sname], multi_pod=mp,
+                               strategy=args.strategy)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    failures.append((tag, str(e)))
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for t, e in failures:
+            print("  ", t, e[:200])
+        raise SystemExit(1)
+    print("[dryrun] all requested combinations lowered + compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state. The dry-run entry point forces
+512 host platform devices *before* any jax import; real deployments get the
+same topology from the TPU runtime.
+
+Topology mapping (DESIGN.md §2):
+- ``data``  — in-pod axis used for gradient exchange (rack-internal, full
+  bisection via ICI); PHub's worker<->PS links.
+- ``model`` — tensor-parallel axis (intra-host analog).
+- ``pod``   — cross-pod axis (oversubscribed DCN); PHub's cross-rack core.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(4, 2), axes=("data", "model")) -> jax.sharding.Mesh:
+    """Small mesh for CPU multi-device tests (8 forced host devices)."""
+    return jax.make_mesh(shape, axes)

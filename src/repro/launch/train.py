@@ -1,0 +1,99 @@
+"""Training launcher (runnable entry point).
+
+On CPU this drives reduced configs end-to-end (see examples/); on a real
+TPU slice the same flags select the full architectures. The PHub engine is
+provisioned through the multi-tenant service API.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
+      --steps 50 --batch 8 --seq 128 --strategy sharded_ps [--devices 8]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family variant (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=5e-3)
+    ap.add_argument("--strategy", default="sharded_ps")
+    ap.add_argument("--chunk-kb", type=int, default=32)
+    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (CPU testing); 0 = as-is")
+    ap.add_argument("--mesh", default="",
+                    help="e.g. 4x2 => (data=4, model=2); default 1x1")
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+    import jax
+    import jax.numpy as jnp
+    from ..configs import ARCHS, TrainConfig, reduced
+    from ..core import PHubConnectionManager
+    from ..data import SyntheticTokens
+    from ..checkpoint import save_checkpoint
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = reduced(cfg)
+    if args.mesh:
+        shp = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("pod", "data", "model")[-len(shp):]
+    else:
+        shp, axes = (1, 1), ("data", "model")
+    mesh = jax.make_mesh(shp, axes)
+    tc = TrainConfig(strategy=args.strategy, lr=args.lr,
+                     chunk_size_bytes=args.chunk_kb * 1024,
+                     use_pallas=args.use_pallas,
+                     loss_chunk=min(1024, args.seq))
+
+    cm = PHubConnectionManager()
+    handle = cm.create_service("train-job", cfg, tc, mesh)
+    engine = cm.connect_service(handle)
+    params, opt = cm.init_service(handle, jax.random.PRNGKey(tc.seed))
+
+    data = SyntheticTokens(cfg, args.batch, args.seq, seed=tc.seed)
+    shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in data.batch_at(0).items()}
+
+    print(f"[train] arch={cfg.arch_id} params={cfg.n_params()/1e6:.1f}M "
+          f"mesh={dict(zip(axes, shp))} strategy={tc.strategy}")
+    losses = []
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = data.device_batch(step, mesh=mesh,
+                                  data_axes=engine.data_axes or ("data",))
+        params, opt, metrics = cm.push_pull(handle, params, opt, batch,
+                                            batch_shapes=shapes)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % args.log_every == 0:
+            dt = time.time() - t0
+            tput = args.batch * args.seq * (step + 1) / dt
+            print(f"[train] step {step:4d} loss {loss:.4f} "
+                  f"({tput:,.0f} tok/s)")
+        if (args.checkpoint_dir and args.checkpoint_every
+                and (step + 1) % args.checkpoint_every == 0):
+            save_checkpoint(args.checkpoint_dir, step + 1,
+                            {"params": params, "opt": opt})
+    print(f"[train] done: first-5 mean {sum(losses[:5])/5:.4f} -> "
+          f"last-5 mean {sum(losses[-5:])/5:.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

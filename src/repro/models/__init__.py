@@ -1,0 +1,4 @@
+from .model import (init, forward, prefill, init_cache, lm_head_weight,
+                    layer_windows, cache_capacity)
+from .loss import chunked_cross_entropy
+from .attention import blockwise_attention

@@ -1,0 +1,77 @@
+"""Blockwise (memory-efficient, flash-style) GQA attention in pure jnp.
+
+One implementation serves training, prefill, and decode: an online-softmax
+scan over KV blocks. Masks are computed from *global token positions*, so a
+ring-buffer sliding-window cache (slots carry their positions; -1 = empty)
+needs no special casing. The Pallas ``swa_attn`` kernel implements the same
+contract for the TPU hot path; this function is its oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        q_pos: jax.Array, k_pos: jax.Array,
+                        window, block_kv: int = 1024) -> jax.Array:
+    """Causal (sliding-window) GQA attention.
+
+    q: (B, Tq, nh, hd);  k, v: (B, Tk, kv, hd);  nh % kv == 0.
+    q_pos: (B, Tq) or (Tq,) int32 global positions of queries.
+    k_pos: (B, Tk) or (Tk,) int32 global positions of keys; -1 marks an
+      empty/invalid cache slot.
+    window: 0 (or traced 0) = full causal; w > 0 attends to (p-w, p].
+    """
+    B, Tq, nh, hd = q.shape
+    Tk, kv = k.shape[1], k.shape[2]
+    G = nh // kv
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None, :], (B, Tq))
+    if k_pos.ndim == 1:
+        k_pos = jnp.broadcast_to(k_pos[None, :], (B, Tk))
+    window = jnp.asarray(window, jnp.int32)
+
+    # pad KV to a block multiple with invalid slots
+    nblk = max(1, -(-Tk // block_kv))
+    pad = nblk * block_kv - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+
+    scale = hd ** -0.5
+    qh = (q.reshape(B, Tq, kv, G, hd) * scale).astype(jnp.float32)
+    kb = k.reshape(B, nblk, block_kv, kv, hd)
+    vb = v.reshape(B, nblk, block_kv, kv, hd)
+    pb = k_pos.reshape(B, nblk, block_kv)
+
+    # scan blocks: carry in fp32
+    m0 = jnp.full((B, Tq, kv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Tq, kv, G), jnp.float32)
+    a0 = jnp.zeros((B, Tq, kv, G, hd), jnp.float32)
+
+    def scan_body(carry, i):
+        blk = (kb[:, i], vb[:, i], pb[:, i])
+        m, l, acc = carry
+        s = jnp.einsum("btkgh,bskh->btkgs", qh, blk[0].astype(jnp.float32))
+        pc = blk[2]
+        valid = (pc >= 0)[:, None, None, None, :]
+        causal = pc[:, None, :] <= q_pos[:, :, None]
+        inwin = jnp.where(window > 0,
+                          pc[:, None, :] > q_pos[:, :, None] - window, True)
+        mask = valid & (causal & inwin)[:, :, None, None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "btkgs,bskh->btkgh", p, blk[1].astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(scan_body, (m0, l0, a0), jnp.arange(nblk))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Tq, nh, hd).astype(q.dtype)

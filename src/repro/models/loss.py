@@ -1,0 +1,42 @@
+"""Chunked cross-entropy: bounds live logits to (B, chunk, V).
+
+The LM head is applied inside a scan over sequence chunks so the full
+(B, T, V) logits tensor never materializes — essential for the 128k-256k
+vocabularies in the pool.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_cross_entropy(x: jax.Array, lm_w: jax.Array, labels: jax.Array,
+                          *, chunk: int = 1024) -> jax.Array:
+    """x: (B, T, d) hidden states; lm_w: (d, V); labels: (B, T) int32.
+
+    Returns mean token NLL (fp32 scalar). Positions with label < 0 are
+    masked out (modality-frontend prefix tokens).
+    """
+    B, T, d = x.shape
+    chunk = min(chunk, T)
+    n = -(-T // chunk)
+    pad = n * chunk - T
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    xc = x.reshape(B, n, chunk, d).swapaxes(0, 1)         # (n, B, c, d)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)       # (n, B, c)
+
+    def body(acc, xs):
+        xb, lb = xs
+        logits = (xb @ lm_w).astype(jnp.float32)          # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, jnp.maximum(lb, 0)[..., None],
+                                 axis=-1)[..., 0]
+        mask = (lb >= 0).astype(jnp.float32)
+        nll, cnt = acc
+        return (nll + ((lse - ll) * mask).sum(), cnt + mask.sum()), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        jax.checkpoint(body), (jnp.zeros((), jnp.float32),) * 2, (xc, lc))
+    return nll / jnp.maximum(cnt, 1.0)

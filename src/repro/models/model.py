@@ -1,0 +1,468 @@
+"""Composable decoder model: init + forward for every assigned family.
+
+Structure
+---------
+- Parameters are **stacked over layers** (leading L axis) and the stack is
+  consumed by ``lax.scan`` — constant-size HLO regardless of depth.
+- ``gather`` (optional) is the PHub **Pull**: a callable applied to each
+  layer slice inside the scan body to all-gather FSDP-sharded weights over
+  the manual ``data`` axis. Its autodiff transpose is the **Push**
+  (reduce-scatter of gradients) — see ``core/exchange.py``.
+- Decode uses a ring-buffer KV cache whose slots carry global positions
+  (-1 = empty), so sliding-window eviction needs no special handling.
+- Per-layer attention windows ride the scan as an xs array, so hybrids
+  (Hymba: SWA + periodic global layers) stay a single stacked scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .attention import blockwise_attention
+from .layers import rms_norm, apply_rope, swiglu, dense_init
+from .moe import moe_mlp
+from . import rwkv as rwkv_mod
+from .ssm import ssm_branch
+
+# Hymba global-attention layers decode against a capped cache (StreamingLLM-
+# style) when the context exceeds this; see DESIGN.md §4.
+GLOBAL_DECODE_CAP = 32_768
+
+
+# --------------------------------------------------------------------------
+# layer-window schedule
+# --------------------------------------------------------------------------
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer attention window (0 = full causal attention)."""
+    w = np.full((cfg.n_layers,), cfg.sliding_window, np.int32)
+    if cfg.global_layer_every:
+        w[::cfg.global_layer_every] = 0
+        w[-1] = 0                                   # Hymba: last layer global
+    return w
+
+
+def cache_capacity(cfg: ModelConfig, seq_len: int) -> int:
+    """KV-cache slots per layer for decode at context ``seq_len``."""
+    if cfg.attn_free:
+        return 0
+    wins = layer_windows(cfg)
+    if (wins == 0).any():                           # some layer needs full context
+        cap = seq_len if cfg.global_layer_every == 0 else min(seq_len, GLOBAL_DECODE_CAP)
+    else:
+        cap = min(seq_len, int(wins.max()))
+    return max(cap, 1)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, key: jax.Array) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    d, ff, L, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab_size
+    nh, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    keys = iter(jax.random.split(key, 64))
+    nk = lambda: next(keys)
+
+    def stack(shape, fan_in=None):
+        return dense_init(nk(), (L, *shape), dt, fan_in=fan_in or shape[0])
+
+    blocks: dict[str, jax.Array] = {}
+    if cfg.family == "ssm":                         # RWKV6
+        blocks.update(
+            ln1=jnp.ones((L, d), dt), ln2=jnp.ones((L, d), dt),
+            ln_x=jnp.ones((L, d), dt),
+            **{f"mu_{s}": jnp.full((L, d), 0.5, dt) for s in "rkvgw"},
+            mu_ck=jnp.full((L, d), 0.5, dt), mu_cr=jnp.full((L, d), 0.5, dt),
+            w_r=stack((d, d)), w_k=stack((d, d)), w_v=stack((d, d)),
+            w_g=stack((d, d)), w_o=stack((d, d)),
+            wa=stack((d, cfg.rwkv_decay_lora)),
+            wb=dense_init(nk(), (L, cfg.rwkv_decay_lora, d), dt,
+                          fan_in=cfg.rwkv_decay_lora) * 0.01,
+            w0=jnp.full((L, d), -6.0, dt) +
+               jnp.linspace(0.0, 1.5, d, dtype=jnp.float32).astype(dt)[None, :],
+            u=dense_init(nk(), (L, nh, hd), dt, fan_in=hd),
+            ck=stack((d, ff)), cv=stack((ff, d), fan_in=ff), cr=stack((d, d)),
+        )
+    else:
+        blocks.update(
+            ln1=jnp.ones((L, d), dt), ln2=jnp.ones((L, d), dt),
+            wq=stack((d, nh * hd)), wk=stack((d, kv * hd)),
+            wv=stack((d, kv * hd)), wo=stack((nh * hd, d), fan_in=nh * hd),
+        )
+        if cfg.n_experts:
+            blocks.update(
+                router=stack((d, cfg.n_experts)),
+                moe_w1=dense_init(nk(), (L, cfg.n_experts, d, ff), dt, fan_in=d),
+                moe_w3=dense_init(nk(), (L, cfg.n_experts, d, ff), dt, fan_in=d),
+                moe_w2=dense_init(nk(), (L, cfg.n_experts, ff, d), dt, fan_in=ff),
+            )
+        if cfg.n_experts == 0 or cfg.dense_residual:
+            blocks.update(w1=stack((d, ff)), w3=stack((d, ff)),
+                          w2=stack((ff, d), fan_in=ff))
+        if cfg.family == "hybrid":
+            dssm, N = nh * hd, cfg.ssm_state
+            blocks.update(
+                ln_attn=jnp.ones((L, dssm), dt), ln_ssm=jnp.ones((L, dssm), dt),
+                w_in=stack((d, dssm)), w_gate=stack((d, dssm)),
+                w_dt=stack((d, nh)), dt_bias=jnp.zeros((L, nh), dt),
+                a_log=jnp.zeros((L, nh), dt) +
+                      jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)).astype(dt)[None, :],
+                w_B=stack((d, N)), w_C=stack((d, N)),
+                w_out=dense_init(nk(), (L, dssm, d), dt, fan_in=dssm),
+            )
+
+    params = {
+        "embed": dense_init(nk(), (V, d), dt, fan_in=d),
+        "blocks": blocks,
+        "final_norm": jnp.ones((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(nk(), (d, V), dt)
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16) -> dict:
+    """Decode cache for a context of ``seq_len`` tokens (ring buffers)."""
+    L, nh, kv, hd, d = (cfg.n_layers, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                        cfg.d_model)
+    cache: dict[str, Any] = {"next": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        cache.update(
+            S=jnp.zeros((L, batch, nh, hd, hd), dtype),
+            x_prev_att=jnp.zeros((L, batch, 1, d), dtype),
+            x_prev_ffn=jnp.zeros((L, batch, 1, d), dtype),
+        )
+        return cache
+    C = cache_capacity(cfg, seq_len)
+    cache.update(
+        k=jnp.zeros((L, batch, C, kv, hd), dtype),
+        v=jnp.zeros((L, batch, C, kv, hd), dtype),
+        pos=jnp.full((L, batch, C), -1, jnp.int32),
+    )
+    if cfg.family == "hybrid":
+        cache["ssm_S"] = jnp.zeros((L, batch, nh, cfg.ssm_state, hd), dtype)
+    return cache
+
+
+# --------------------------------------------------------------------------
+# block applications
+# --------------------------------------------------------------------------
+
+def _attend(cfg: ModelConfig, bp: dict, x: jax.Array, window, q_pos, layer_cache):
+    """Attention sub-block; returns (out, new_layer_cache_kv)."""
+    B, T, d = x.shape
+    nh, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ bp["wq"]).reshape(B, T, nh, hd)
+    k = (x @ bp["wk"]).reshape(B, T, kv, hd)
+    v = (x @ bp["wv"]).reshape(B, T, kv, hd)
+    q = apply_rope(q, q_pos, cfg.rope_theta)
+    k = apply_rope(k, q_pos, cfg.rope_theta)
+
+    new_cache = None
+    if layer_cache is None:                         # training / prefill compute
+        k_all, v_all, k_pos = k, v, q_pos
+    else:                                           # decode: ring insert
+        ck, cv, cpos = layer_cache
+        C = ck.shape[1]
+        slot = q_pos[0] % C                         # T == 1 at decode
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(
+            cpos, jnp.broadcast_to(q_pos[None, :], (B, 1)), (0, slot))
+        k_all, v_all, k_pos = ck, cv, cpos
+        new_cache = (ck, cv, cpos)
+
+    out = blockwise_attention(q, k_all, v_all, q_pos=q_pos, k_pos=k_pos,
+                              window=window)
+    return out.reshape(B, T, nh * hd) @ bp["wo"], new_cache
+
+
+def _mlp(cfg: ModelConfig, bp: dict, x: jax.Array):
+    """MLP / MoE sub-block; returns (out, aux_loss)."""
+    B, T, d = x.shape
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_experts:
+        y, aux = moe_mlp(x.reshape(B * T, d), bp["router"], bp["moe_w1"],
+                         bp["moe_w3"], bp["moe_w2"], top_k=cfg.top_k,
+                         capacity_factor=cfg.capacity_factor)
+        y = y.reshape(B, T, d)
+        if cfg.dense_residual:
+            y = y + swiglu(x, bp["w1"], bp["w3"], bp["w2"])
+    else:
+        y = swiglu(x, bp["w1"], bp["w3"], bp["w2"])
+    return y, aux
+
+
+def _block(cfg: ModelConfig, bp: dict, x: jax.Array, window, q_pos,
+           layer_cache, use_kernels: bool):
+    """One decoder block. Returns (x, new_layer_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":                                    # RWKV6
+        S, xa, xf = layer_cache if layer_cache is not None else (None, None, None)
+        B = x.shape[0]
+        if S is None:
+            S = jnp.zeros((B, cfg.n_heads, cfg.hd, cfg.hd), x.dtype)
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        y, S = rwkv_mod.time_mix(bp, h, cfg, S, x_prev=xa, use_kernel=use_kernels)
+        new_xa = h[:, -1:, :] if layer_cache is not None else None
+        x = x + y
+        h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        x = x + rwkv_mod.channel_mix(bp, h, x_prev=xf)
+        new_xf = h[:, -1:, :] if layer_cache is not None else None
+        new_cache = (S, new_xa, new_xf) if layer_cache is not None else None
+        return x, new_cache, aux
+
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    if cfg.family == "hybrid":
+        kv_cache = None if layer_cache is None else layer_cache[:3]
+        a, new_kv = _attend(cfg, bp, h, window, q_pos, kv_cache)
+        Sprev = (layer_cache[3] if layer_cache is not None else
+                 jnp.zeros((x.shape[0], cfg.n_heads, cfg.ssm_state, cfg.hd), x.dtype))
+        s, Snew = ssm_branch(bp, h, cfg, Sprev)
+        a = rms_norm(a, bp["ln_attn"], cfg.norm_eps)
+        s = rms_norm(s, bp["ln_ssm"], cfg.norm_eps)
+        x = x + 0.5 * (a + s)                                  # parallel-head fusion
+        new_cache = None if layer_cache is None else (*new_kv, Snew)
+    else:
+        a, new_cache = _attend(cfg, bp, h, window, q_pos, layer_cache)
+        x = x + a
+    h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    y, aux = _mlp(cfg, bp, h)
+    return x + y, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _unrolled(body_fn, x, xs, n_layers):
+    """Python-loop equivalent of lax.scan(body_fn, x, xs) over layers."""
+    ys = []
+    for i in range(n_layers):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        x, y = body_fn(x, xi)
+        ys.append(y)
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    return x, stacked[0], stacked[1]
+
+
+def _layer_cache_xs(cfg: ModelConfig, cache: Optional[dict]):
+    if cache is None:
+        return None
+    if cfg.family == "ssm":
+        return (cache["S"], cache["x_prev_att"], cache["x_prev_ffn"])
+    if cfg.family == "hybrid":
+        return (cache["k"], cache["v"], cache["pos"], cache["ssm_S"])
+    return (cache["k"], cache["v"], cache["pos"])
+
+
+def _cache_from_ys(cfg: ModelConfig, cache: dict, ys, n_new: int) -> dict:
+    new = dict(cache)
+    if cfg.family == "ssm":
+        new.update(S=ys[0], x_prev_att=ys[1], x_prev_ffn=ys[2])
+    elif cfg.family == "hybrid":
+        new.update(k=ys[0], v=ys[1], pos=ys[2], ssm_S=ys[3])
+    else:
+        new.update(k=ys[0], v=ys[1], pos=ys[2])
+    new["next"] = cache["next"] + n_new
+    return new
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+            extra_embeds: Optional[jax.Array] = None,
+            cache: Optional[dict] = None,
+            gather: Optional[Callable] = None,
+            remat: bool = True,
+            use_kernels: bool = False,
+            seq_shard_axis: Optional[str] = None,
+            unroll: int = 1) -> dict:
+    """Run the decoder stack.
+
+    tokens: (B, T) int32. extra_embeds: (B, F, d) modality-frontend stub
+    embeddings prepended to the sequence (audio frames / vision patches).
+    cache: decode cache (mutated functionally). gather: PHub Pull applied to
+    each scanned layer slice. Returns {"x", "aux", "cache"} — ``x`` is the
+    final-normed hidden state; the LM head is applied by the loss / serving
+    code (chunked CE over the vocab).
+    """
+    emb = params["embed"]
+    if gather is not None:
+        emb = gather("embed", emb)
+    x = jnp.take(emb, tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    B, T, _ = x.shape
+
+    pos0 = cache["next"] if cache is not None else jnp.zeros((), jnp.int32)
+    q_pos = pos0 + jnp.arange(T, dtype=jnp.int32)
+
+    windows = jnp.asarray(layer_windows(cfg)) if not cfg.attn_free else \
+        jnp.zeros((cfg.n_layers,), jnp.int32)
+    cache_xs = _layer_cache_xs(cfg, cache)
+
+    def constrain(x):
+        if seq_shard_axis is not None and x.shape[1] > 1:
+            from jax.sharding import PartitionSpec as P
+            x = jax.lax.with_sharding_constraint(
+                x, P(None, seq_shard_axis, None))
+        return x
+
+    act_dtype = jnp.dtype(cfg.dtype)
+
+    def body(x, xs):
+        bp, window, lc = xs
+        if gather is not None:
+            bp = gather("blocks", bp)
+        x, new_lc, aux = _block(cfg, bp, x, window, q_pos, lc, use_kernels)
+        x = constrain(x.astype(act_dtype))
+        return x, (new_lc, aux)
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x = constrain(x)
+    xs = (params["blocks"], windows, cache_xs)
+    if unroll >= cfg.n_layers:
+        # fully unrolled python loop (cost probes; avoids scan entirely)
+        x, cache_ys, auxs = _unrolled(body_fn, x, xs, cfg.n_layers)
+    else:
+        x, (cache_ys, auxs) = jax.lax.scan(body_fn, x, xs,
+                                           unroll=min(unroll, cfg.n_layers))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    out = {"x": x, "aux": auxs.mean()}
+    if cache is not None:
+        out["cache"] = _cache_from_ys(cfg, cache, cache_ys, T)
+    return out
+
+
+def lm_head_weight(cfg: ModelConfig, params: dict) -> jax.Array:
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+# --------------------------------------------------------------------------
+# prefill: run full forward, then materialize a ring cache from the K/V tail
+# --------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+            cache_dtype=jnp.bfloat16, gather: Optional[Callable] = None,
+            remat: bool = True, extra_embeds=None,
+            seq_shard_axis: Optional[str] = None, unroll: int = 1,
+            max_new_tokens: int = 0) -> dict:
+    """Process a prompt and return {"x", "aux", "cache"} ready for decode.
+
+    max_new_tokens reserves ring slots for the decode phase so full-attention
+    models do not evict prompt tokens while generating."""
+    B, T = tokens.shape[0], tokens.shape[1] + (
+        extra_embeds.shape[1] if extra_embeds is not None else 0)
+    cache = init_cache(cfg, B, T + max_new_tokens, dtype=cache_dtype)
+    # run with cache=None (pure compute) then fill the cache by re-running
+    # K/V projections on the tail tokens only would re-read weights; instead
+    # forward-with-cache at T>1 is supported directly for prefill:
+    out = _prefill_forward(cfg, params, tokens, cache, gather=gather,
+                           remat=remat, extra_embeds=extra_embeds,
+                           seq_shard_axis=seq_shard_axis, unroll=unroll)
+    return out
+
+
+def _prefill_forward(cfg, params, tokens, cache, *, gather, remat,
+                     extra_embeds, seq_shard_axis, unroll: int = 1):
+    """forward() variant that also fills the ring cache (T may exceed C)."""
+    emb = params["embed"]
+    if gather is not None:
+        emb = gather("embed", emb)
+    x = jnp.take(emb, tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    B, T, _ = x.shape
+    q_pos = jnp.arange(T, dtype=jnp.int32)
+    windows = jnp.asarray(layer_windows(cfg)) if not cfg.attn_free else \
+        jnp.zeros((cfg.n_layers,), jnp.int32)
+
+    def constrain(x):
+        if seq_shard_axis is not None and x.shape[1] > 1:
+            from jax.sharding import PartitionSpec as P
+            x = jax.lax.with_sharding_constraint(x, P(None, seq_shard_axis, None))
+        return x
+
+    def constrain_heads(x):
+        # keep per-head tensors sequence-sharded so only the (small GQA)
+        # K/V heads are gathered for attention, not full activations
+        # (§Perf iteration 1c)
+        if seq_shard_axis is not None and x.shape[1] > 1:
+            from jax.sharding import PartitionSpec as P
+            x = jax.lax.with_sharding_constraint(
+                x, P(None, seq_shard_axis, None, None))
+        return x
+
+    act_dtype = jnp.dtype(cfg.dtype)
+
+    def body(x, xs):
+        bp, window, lc = xs
+        if gather is not None:
+            bp = gather("blocks", bp)
+        if cfg.family == "ssm":
+            x, new_lc, aux = _block(cfg, bp, x, window, q_pos, lc, False)
+            return constrain(x.astype(act_dtype)), (new_lc, aux)
+        # attention families: compute full, then write ring tail
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        nh, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        q = apply_rope((h @ bp["wq"]).reshape(B, T, nh, hd), q_pos, cfg.rope_theta)
+        k = apply_rope((h @ bp["wk"]).reshape(B, T, kv, hd), q_pos, cfg.rope_theta)
+        v = (h @ bp["wv"]).reshape(B, T, kv, hd)
+        q = constrain_heads(q)
+        a = blockwise_attention(q, k, v, q_pos=q_pos, k_pos=q_pos, window=window)
+        a = constrain_heads(a)
+        a = a.reshape(B, T, nh * hd) @ bp["wo"]
+        ck, cv, cpos = lc[0], lc[1], lc[2]
+        C = ck.shape[1]
+        # ring-fill from the last min(T, C) tokens: slot(p) = p % C.
+        # Implemented as contiguous tail slice + roll — a reversed-index
+        # gather on the (possibly seq-sharded) K/V forces GSPMD to fully
+        # replicate the tensor (§Perf iteration 1), while slice+roll lowers
+        # to cheap collective-permutes.
+        slots = jnp.arange(C)
+        if T >= C:
+            shift = (T - C) % C
+            tail_k = jax.lax.dynamic_slice_in_dim(k, T - C, C, axis=1)
+            tail_v = jax.lax.dynamic_slice_in_dim(v, T - C, C, axis=1)
+            ck = jnp.roll(tail_k, shift, axis=1).astype(ck.dtype)
+            cv = jnp.roll(tail_v, shift, axis=1).astype(cv.dtype)
+            src = T - 1 - ((T - 1 - slots) % C)
+            cpos = jnp.broadcast_to(src[None, :], (B, C)).astype(jnp.int32)
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, 0, 0))
+            cpos = jnp.broadcast_to(
+                jnp.where(slots < T, slots, -1)[None, :], (B, C)).astype(jnp.int32)
+        if cfg.family == "hybrid":
+            h2 = h
+            s, Snew = ssm_branch(bp, h2, cfg, lc[3].astype(jnp.float32))
+            a = rms_norm(a, bp["ln_attn"], cfg.norm_eps)
+            s = rms_norm(s, bp["ln_ssm"], cfg.norm_eps)
+            x = x + 0.5 * (a + s)
+            new_lc = (ck, cv, cpos, Snew.astype(lc[3].dtype))
+        else:
+            x = x + a
+            new_lc = (ck, cv, cpos)
+        h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        y, aux = _mlp(cfg, bp, h)
+        return constrain((x + y).astype(act_dtype)), (new_lc, aux)
+
+    body_fn = jax.checkpoint(body) if remat else body
+    xs = (params["blocks"], windows, _layer_cache_xs(cfg, cache))
+    x = constrain(x)
+    if unroll >= cfg.n_layers:
+        x, cache_ys, auxs = _unrolled(body_fn, x, xs, cfg.n_layers)
+    else:
+        x, (cache_ys, auxs) = jax.lax.scan(body_fn, x, xs,
+                                           unroll=min(unroll, cfg.n_layers))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return {"x": x, "aux": auxs.mean(),
+            "cache": _cache_from_ys(cfg, cache, cache_ys, T)}

@@ -1,0 +1,143 @@
+"""RWKV6 ("Finch") blocks: linear-attention time-mix with *data-dependent
+per-channel decay* (the Finch signature, arXiv:2404.05892) + channel-mix.
+
+Simplifications recorded in DESIGN.md: token-shift uses learned static lerp
+coefficients (Finch additionally makes the shift data-dependent via LoRA);
+the decay LoRA (w0 + tanh(x Wa) Wb) *is* data-dependent as in the paper.
+
+The recurrence per head (state S in R^{hd x hd}):
+    y_t = r_t @ (diag(u) . (k_t v_t^T) + S_t)
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T
+with w_t = exp(-exp(w0 + tanh(x_t Wa) Wb)) in (0, 1).
+
+``rwkv_mix`` is the pure-jnp oracle; the Pallas ``rwkv_scan`` kernel
+implements the chunked form of the same recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+
+def token_shift(x: jax.Array, mu: jax.Array, x_prev: jax.Array | None = None) -> jax.Array:
+    """lerp(x_t, x_{t-1}, mu). x: (B, T, d). x_prev: (B, 1, d) carry for decode."""
+    if x_prev is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([x_prev, x], axis=1)[:, :-1] if x.shape[1] > 1 else x_prev
+    return x + mu * (prev - x)
+
+
+def rwkv_recurrence(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                    u: jax.Array, state: jax.Array
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Sequential scan oracle.
+
+    r/k/v: (B, T, H, hd); w: (B, T, H, hd) decay in (0,1); u: (H, hd) bonus;
+    state: (B, H, hd, hd)  [k-dim x v-dim].
+    Returns (y (B, T, H, hd), new_state).
+    """
+    B, T, H, hd = r.shape
+    rt = jnp.moveaxis(r, 1, 0).astype(jnp.float32)
+    kt = jnp.moveaxis(k, 1, 0).astype(jnp.float32)
+    vt = jnp.moveaxis(v, 1, 0).astype(jnp.float32)
+    wt = jnp.moveaxis(w, 1, 0).astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def step(S, xs):
+        r_, k_, v_, w_ = xs                                   # (B, H, hd)
+        kv = k_[..., :, None] * v_[..., None, :]              # (B, H, hd, hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_, uf[None, :, :, None] * kv + S)
+        S = w_[..., :, None] * S + kv
+        return S, y
+
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), (rt, kt, vt, wt))
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), state.astype(r.dtype)
+
+
+def rwkv_chunked(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                 u: jax.Array, state: jax.Array, *, ct: int = 64
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Chunked linear-attention form of the RWKV6 recurrence — identical
+    math to kernels/rwkv_scan (see its docstring for the factorization),
+    vectorized over (B, H). Turns the T-step sequential scan into T/ct
+    chunk steps of (ct x hd) matmuls: state crosses the scan boundary ct
+    times fewer (§Perf iteration 2).
+
+    r/k/v/w: (B, T, H, hd); u: (H, hd); state: (B, H, hd, hd).
+    """
+    B, T, H, hd = r.shape
+    nc = T // ct
+    f32 = lambda x: x.astype(jnp.float32)
+    rc = f32(r).reshape(B, nc, ct, H, hd).transpose(1, 0, 2, 3, 4)
+    kc = f32(k).reshape(B, nc, ct, H, hd).transpose(1, 0, 2, 3, 4)
+    vc = f32(v).reshape(B, nc, ct, H, hd).transpose(1, 0, 2, 3, 4)
+    wc = f32(w).reshape(B, nc, ct, H, hd).transpose(1, 0, 2, 3, 4)
+    uf = f32(u)
+    ii = jnp.arange(ct)
+    strict_lower = (ii[:, None] > ii[None, :]).astype(jnp.float32)
+
+    def chunk(S, xs):
+        r_, k_, v_, w_ = xs                                  # (B, ct, H, hd)
+        a = jnp.cumprod(w_, axis=1)
+        a_prev = jnp.concatenate(
+            [jnp.ones((B, 1, H, hd), jnp.float32), a[:, :-1]], axis=1)
+        rq = r_ * a_prev
+        kd = k_ / a
+        att = jnp.einsum("bihd,bjhd->bhij", rq, kd) * strict_lower
+        diag = jnp.sum(r_ * (uf * k_), axis=-1)              # (B, ct, H)
+        y = (jnp.einsum("bhij,bjhd->bihd", att, v_)
+             + jnp.einsum("bihk,bhkv->bihv", rq, S)
+             + diag[..., None] * v_)
+        a_last = a[:, -1]                                    # (B, H, hd)
+        S = (a_last[..., None] * S
+             + jnp.einsum("bjhk,bjhv->bhkv", kd * a_last[:, None], v_))
+        return S, y
+
+    state, ys = jax.lax.scan(chunk, f32(state), (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, H, hd)
+    return y.astype(r.dtype), state.astype(r.dtype)
+
+
+def time_mix(p: dict, x: jax.Array, cfg, state: jax.Array,
+             x_prev: jax.Array | None = None, use_kernel: bool = False
+             ) -> tuple[jax.Array, jax.Array]:
+    """RWKV6 attention replacement. x: (B, T, d)."""
+    B, T, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    xr = token_shift(x, p["mu_r"], x_prev)
+    xk = token_shift(x, p["mu_k"], x_prev)
+    xv = token_shift(x, p["mu_v"], x_prev)
+    xg = token_shift(x, p["mu_g"], x_prev)
+    xw = token_shift(x, p["mu_w"], x_prev)
+
+    r = (xr @ p["w_r"]).reshape(B, T, H, hd)
+    k = (xk @ p["w_k"]).reshape(B, T, H, hd)
+    v = (xv @ p["w_v"]).reshape(B, T, H, hd)
+    g = jax.nn.silu(xg @ p["w_g"])
+    # data-dependent decay (Finch): w = exp(-exp(w0 + tanh(x Wa) Wb))
+    dd = jnp.tanh(xw.astype(jnp.float32) @ p["wa"].astype(jnp.float32))
+    dd = dd @ p["wb"].astype(jnp.float32)
+    logw = p["w0"].astype(jnp.float32) + dd                   # (B, T, d)
+    w = jnp.exp(-jnp.exp(logw)).reshape(B, T, H, hd)
+
+    if use_kernel:
+        from ..kernels.rwkv_scan.ops import rwkv_scan
+        y, state = rwkv_scan(r, k, v, w.astype(r.dtype), p["u"], state)
+    elif T % 64 == 0 and T > 1:
+        # chunked form (the Pallas kernel's math in jnp): same recurrence,
+        # T/64 sequential steps instead of T — see rwkv_chunked
+        y, state = rwkv_chunked(r, k, v, w.astype(r.dtype), p["u"], state)
+    else:
+        y, state = rwkv_recurrence(r, k, v, w.astype(r.dtype), p["u"], state)
+    y = rms_norm(y.reshape(B, T, d), p["ln_x"], cfg.norm_eps) * g
+    return y @ p["w_o"], state
+
+
+def channel_mix(p: dict, x: jax.Array, x_prev: jax.Array | None = None) -> jax.Array:
+    xk = token_shift(x, p["mu_ck"], x_prev)
+    xr = token_shift(x, p["mu_cr"], x_prev)
+    k = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    return jax.nn.sigmoid(xr @ p["cr"]) * (k @ p["cv"])

@@ -1,0 +1,50 @@
+"""Head-structured selective SSM (Mamba-2 style) for the Hymba hybrid block.
+
+Per head h with state S in R^{N x hd} (N = ssm_state):
+    dt_t  = softplus(x_t Wdt + b)          (per head)
+    S_t   = exp(dt_t * A_h) S_{t-1} + dt_t * B_t (x_t^h)^T
+    y_t^h = C_t @ S_t
+B_t, C_t in R^N are shared across heads (Mamba-2 convention); A_h < 0 scalar
+per head. The pure-jnp scan here is the oracle for any fused kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan(xh: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, state: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """xh: (B,T,H,hd); dt: (B,T,H); A: (H,); Bm/Cm: (B,T,N); state: (B,H,N,hd)."""
+    xt = jnp.moveaxis(xh, 1, 0).astype(jnp.float32)
+    dtt = jnp.moveaxis(dt, 1, 0).astype(jnp.float32)
+    Bt = jnp.moveaxis(Bm, 1, 0).astype(jnp.float32)
+    Ct = jnp.moveaxis(Cm, 1, 0).astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(S, xs):
+        x_, d_, b_, c_ = xs                              # (B,H,hd), (B,H), (B,N), (B,N)
+        decay = jnp.exp(d_ * Af[None, :])[..., None, None]      # (B,H,1,1)
+        upd = d_[..., None, None] * b_[:, None, :, None] * x_[:, :, None, :]
+        S = decay * S + upd                                      # (B,H,N,hd)
+        y = jnp.einsum("bn,bhnd->bhd", c_, S)
+        return S, y
+
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), (xt, dtt, Bt, Ct))
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype), state.astype(xh.dtype)
+
+
+def ssm_branch(p: dict, x: jax.Array, cfg, state: jax.Array
+               ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, T, d) -> (B, T, d), new_state (B, H, N, hd)."""
+    B, T, d = x.shape
+    H, hd, N = cfg.n_heads, cfg.hd, cfg.ssm_state
+    xs = (x @ p["w_in"]).reshape(B, T, H, hd)
+    z = jax.nn.silu(x @ p["w_gate"])                       # (B, T, H*hd)
+    dt = jax.nn.softplus(x @ p["w_dt"] + p["dt_bias"])     # (B, T, H)
+    A = -jnp.exp(p["a_log"])                               # (H,) negative
+    Bm = x @ p["w_B"]                                      # (B, T, N)
+    Cm = x @ p["w_C"]
+    y, state = ssm_scan(xs, dt, A, Bm, Cm, state)
+    y = y.reshape(B, T, H * hd) * z
+    return y @ p["w_out"], state

@@ -1,0 +1,3 @@
+from .sgd import nesterov_init, nesterov_update, sgd_update
+from .adam import adam_init, adam_update
+from .api import make_optimizer

@@ -1,0 +1,32 @@
+"""Adam (substrate; the paper's experiments use Nesterov SGD)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_init(params):
+    zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
+    return {"m": zeros(params), "v": zeros(params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, *, lr: float, b1: float = 0.9,
+                b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.0):
+    t = state["t"] + 1
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(m.dtype)
+        if weight_decay:
+            g = g + weight_decay * p.astype(m.dtype)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        return p - step.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    pick = lambda i: jax.tree.map(lambda t_: t_[i], out,
+                                  is_leaf=lambda t_: isinstance(t_, tuple))
+    return pick(0), {"m": pick(1), "v": pick(2), "t": t}

@@ -1,0 +1,37 @@
+"""SGD with Nesterov's accelerated gradient — the paper's optimizer (§4.2).
+
+Update (matching MXNet's nesterov momentum, which PHub reimplements):
+    m <- mu * m + g
+    p <- p - lr * (g + mu * m)
+
+These element-wise formulas are exactly what the fused ``agg_opt`` Pallas
+kernel applies per chunk; ``nesterov_update`` is its pytree-level oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def nesterov_init(params):
+    return {"m": jax.tree.map(jnp.zeros_like, params)}
+
+
+def nesterov_update(params, grads, state, *, lr: float, momentum: float = 0.9,
+                    weight_decay: float = 0.0):
+    def upd(p, g, m):
+        g = g.astype(m.dtype)
+        if weight_decay:
+            g = g + weight_decay * p.astype(m.dtype)
+        m_new = momentum * m + g
+        p_new = p - (lr * (g + momentum * m_new)).astype(p.dtype)
+        return p_new, m_new
+    out = jax.tree.map(upd, params, grads, state["m"])
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"m": new_m}
+
+
+def sgd_update(params, grads, state, *, lr: float, **_):
+    return jax.tree.map(lambda p, g: p - (lr * g).astype(p.dtype),
+                        params, grads), state

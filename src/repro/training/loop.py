@@ -1,0 +1,55 @@
+"""Reusable training loop over a PHubEngine."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+
+from ..checkpoint import save_checkpoint
+
+
+@dataclass
+class TrainState:
+    params: object
+    opt: object
+    step: int = 0
+    losses: list = field(default_factory=list)
+
+
+def fit(engine, state: TrainState, data, *, steps: int,
+        log_every: int = 10, log_fn: Callable[[str], None] = print,
+        checkpoint_dir: str = "", checkpoint_every: int = 0,
+        hooks: Optional[list[Callable[[TrainState, dict], None]]] = None
+        ) -> TrainState:
+    """Run ``steps`` PHub train steps from ``state``.
+
+    data: SyntheticTokens-like (device_batch(step, mesh, data_axes)).
+    hooks: callables (state, metrics) invoked every step.
+    """
+    batch0 = data.batch_at(state.step)
+    shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in batch0.items()}
+    step_fn = engine.make_train_step(shapes)
+    t0 = time.time()
+    tokens = 0
+    for i in range(state.step, state.step + steps):
+        batch = data.device_batch(i, mesh=engine.mesh,
+                                  data_axes=engine.data_axes or ("data",))
+        state.params, state.opt, metrics = step_fn(state.params, state.opt,
+                                                   batch)
+        loss = float(metrics["loss"])
+        state.losses.append(loss)
+        state.step = i + 1
+        tokens += batch0["tokens"].size
+        for h in hooks or ():
+            h(state, metrics)
+        if log_every and (i % log_every == 0 or i == state.step - 1):
+            log_fn(f"[fit] step {i:5d} loss {loss:.4f} "
+                   f"({tokens / (time.time() - t0):,.0f} tok/s)")
+        if (checkpoint_dir and checkpoint_every
+                and state.step % checkpoint_every == 0):
+            save_checkpoint(checkpoint_dir, state.step,
+                            {"params": state.params, "opt": state.opt})
+    return state

@@ -1,0 +1,1 @@
+from .hlo import parse_collectives, summarize_collectives, CollectiveStats

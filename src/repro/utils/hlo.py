@@ -1,0 +1,132 @@
+"""Collective-traffic extraction from compiled HLO text (§Roofline).
+
+``cost_analysis()`` does not expose collective bytes, so we parse the
+optimized HLO: every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op's result shape gives its payload, the replica groups
+give the ring size, and the device-id span classifies the op as in-pod
+(ICI) or cross-pod (DCN) for the two-tier bandwidth model.
+
+Per-device link-bytes conventions (ring algorithms):
+  all-reduce  (out N, group S): 2 * N * (S-1)/S
+  all-gather  (out N, group S): N * (S-1)/S
+  reduce-scatter (out N = shard, group S): N * (S-1)
+  all-to-all  (out N, group S): N * (S-1)/S
+  collective-permute (out N):   N
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\]"
+                             r"(?:T\(([0-9,]+)\))?")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    kind: str
+    payload_bytes: int        # result-shape bytes of one op instance
+    group_size: int
+    spans_pod: bool
+    count: int = 1
+
+    def link_bytes(self) -> float:
+        S = max(self.group_size, 1)
+        N = self.payload_bytes
+        if self.kind == "all-reduce":
+            return 2.0 * N * (S - 1) / S
+        if self.kind == "all-gather":
+            return N * (S - 1) / S
+        if self.kind == "reduce-scatter":
+            return float(N) * (S - 1)
+        if self.kind == "all-to-all":
+            return N * (S - 1) / S
+        return float(N)                    # collective-permute
+
+
+def _parse_groups(line: str, pod_stride: int):
+    """Returns (group_size, spans_pod)."""
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("},{")[0].strip("{}")
+        ids = [int(x) for x in first.split(",") if x]
+        size = len(ids)
+        spans = (pod_stride > 0 and
+                 len({i // pod_stride for i in ids}) > 1)
+        return size, spans
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        n_groups, group_size = int(m.group(1)), int(m.group(2))
+        reshape = [int(x) for x in m.group(3).split(",")]
+        trans = ([int(x) for x in m.group(4).split(",")]
+                 if m.group(4) else list(range(len(reshape))))
+        # reconstruct the first group's device ids
+        import numpy as np
+        ids = np.arange(int(np.prod(reshape))).reshape(reshape)
+        ids = ids.transpose(trans).reshape(n_groups, group_size)
+        first = ids[0]
+        spans = (pod_stride > 0 and
+                 len({int(i) // pod_stride for i in first}) > 1)
+        return group_size, spans
+    return 1, False
+
+
+def parse_collectives(hlo_text: str, *, pod_stride: int = 0
+                      ) -> list[CollectiveStats]:
+    """pod_stride: devices per pod (0 = single-pod mesh)."""
+    agg: dict[tuple, CollectiveStats] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str = m.group(1) or m.group(2)
+        kind = m.group(3)
+        payload = _shape_bytes(type_str)
+        size, spans = _parse_groups(line, pod_stride)
+        key = (kind, payload, size, spans)
+        if key in agg:
+            agg[key].count += 1
+        else:
+            agg[key] = CollectiveStats(kind=kind, payload_bytes=payload,
+                                       group_size=size, spans_pod=spans)
+    return list(agg.values())
+
+
+def summarize_collectives(stats: list[CollectiveStats]) -> dict:
+    out: dict = {"ici_bytes": 0.0, "dcn_bytes": 0.0, "by_kind": {}}
+    for s in stats:
+        total = s.link_bytes() * s.count
+        tier = "dcn_bytes" if s.spans_pod else "ici_bytes"
+        out[tier] += total
+        k = out["by_kind"].setdefault(
+            s.kind, {"count": 0, "link_bytes": 0.0, "payload_bytes": 0})
+        k["count"] += s.count
+        k["link_bytes"] += total
+        k["payload_bytes"] += s.payload_bytes * s.count
+    return out

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run against a single CPU device (the dry-run alone forces 512);
+# multi-device coverage runs in subprocesses (tests/test_exchange.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

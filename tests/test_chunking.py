@@ -1,0 +1,59 @@
+"""Property tests for fine-grained key chunking (§3.2.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chunking import (build_plan, flatten_groups, unflatten_groups,
+                                 shard_matrix)
+
+
+def _tree_strategy():
+    shapes = st.lists(
+        st.tuples(st.integers(1, 5), st.integers(1, 17)), min_size=1,
+        max_size=6)
+    dtypes = st.sampled_from(["float32", "bfloat16"])
+    return st.tuples(shapes, st.lists(dtypes, min_size=1, max_size=6))
+
+
+@settings(max_examples=25, deadline=None)
+@given(_tree_strategy(), st.integers(1, 4),
+       st.sampled_from([64, 256, 1024]))
+def test_flatten_roundtrip(tree_spec, n_shards, chunk_bytes):
+    shapes, dtypes = tree_spec
+    rng = np.random.default_rng(0)
+    tree = {f"k{i}": jnp.asarray(rng.normal(size=s).astype("float32"),
+                                 dtype=dtypes[i % len(dtypes)])
+            for i, s in enumerate(shapes)}
+    plan = build_plan(tree, chunk_bytes=chunk_bytes, n_shards=n_shards)
+    flats = flatten_groups(plan, tree)
+    for g in plan.groups:
+        f = flats[str(g.dtype)]
+        assert f.size == g.padded
+        assert g.padded % (n_shards * g.chunk_elems) == 0
+        mat = shard_matrix(g, f)
+        assert mat.shape == (n_shards, g.shard_len)
+    back = unflatten_groups(plan, flats, tree)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(tree[k]),
+                                      np.asarray(back[k]))
+
+
+def test_groups_split_by_dtype():
+    tree = {"a": jnp.zeros((4, 4), jnp.float32),
+            "b": jnp.zeros((3,), jnp.bfloat16),
+            "c": jnp.zeros((2, 2), jnp.float32)}
+    plan = build_plan(tree, chunk_bytes=64, n_shards=2)
+    assert len(plan.groups) == 2
+    f32 = next(g for g in plan.groups if str(g.dtype) == "float32")
+    assert set(f32.paths) == {"['a']", "['c']"}
+    assert plan.total_bytes() == 4 * 4 * 4 + 3 * 2 + 2 * 2 * 4
+
+
+def test_chunk_elems_respects_32kb_default():
+    tree = {"w": jnp.zeros((100000,), jnp.float32)}
+    plan = build_plan(tree, chunk_bytes=32 * 1024, n_shards=4)
+    (g,) = plan.groups
+    assert g.chunk_elems == 32 * 1024 // 4
+    assert g.chunks_per_shard >= 1

@@ -1,0 +1,79 @@
+"""Registry + assigned-architecture spec conformance."""
+import pytest
+
+from repro.configs import ARCHS, SHAPES, applicable, get_arch, reduced
+
+EXPECTED = {
+    "llama3.2-1b": dict(n_layers=16, d_model=2048, n_heads=32, n_kv_heads=8,
+                        d_ff=8192, vocab_size=128256, family="dense"),
+    "h2o-danube-3-4b": dict(n_layers=24, d_model=3840, n_heads=32,
+                            n_kv_heads=8, d_ff=10240, vocab_size=32000),
+    "minitron-8b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+                        d_ff=16384, vocab_size=256000),
+    "musicgen-medium": dict(n_layers=48, d_model=1536, n_heads=24,
+                            n_kv_heads=24, d_ff=6144, vocab_size=2048),
+    "grok-1-314b": dict(n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+                        d_ff=32768, vocab_size=131072, n_experts=8, top_k=2),
+    "arctic-480b": dict(n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+                        d_ff=4864, vocab_size=32000, n_experts=128, top_k=2,
+                        dense_residual=True),
+    "rwkv6-3b": dict(n_layers=32, d_model=2560, d_ff=8960,
+                     vocab_size=65536, family="ssm"),
+    "granite-3-8b": dict(n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8,
+                         d_ff=12800, vocab_size=49155),
+    "internvl2-2b": dict(n_layers=24, d_model=2048, n_heads=16, n_kv_heads=8,
+                         d_ff=8192, vocab_size=92553, family="vlm"),
+    "hymba-1.5b": dict(n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5,
+                       d_ff=5504, vocab_size=32001, ssm_state=16,
+                       family="hybrid"),
+}
+
+
+def test_all_ten_archs_registered():
+    assert sorted(ARCHS) == sorted(EXPECTED)
+
+
+@pytest.mark.parametrize("arch_id", sorted(EXPECTED))
+def test_arch_spec_matches_assignment(arch_id):
+    cfg = get_arch(arch_id)
+    for k, v in EXPECTED[arch_id].items():
+        assert getattr(cfg, k) == v, f"{arch_id}.{k}"
+    assert cfg.source
+
+
+PARAM_TARGETS = {  # billions, generous band around the advertised size
+    "llama3.2-1b": (1.0, 1.5), "h2o-danube-3-4b": (3.5, 4.5),
+    "minitron-8b": (7.5, 10.5), "musicgen-medium": (1.3, 2.3),
+    "grok-1-314b": (290, 340), "arctic-480b": (450, 500),
+    "rwkv6-3b": (2.3, 3.3), "granite-3-8b": (7.5, 9.0),
+    "internvl2-2b": (1.6, 2.4), "hymba-1.5b": (1.1, 1.8),
+}
+
+
+@pytest.mark.parametrize("arch_id", sorted(PARAM_TARGETS))
+def test_param_counts(arch_id):
+    lo, hi = PARAM_TARGETS[arch_id]
+    n = ARCHS[arch_id].n_params() / 1e9
+    assert lo <= n <= hi, f"{arch_id}: {n:.2f}B not in [{lo},{hi}]"
+
+
+def test_moe_active_params_below_total():
+    for a in ("grok-1-314b", "arctic-480b"):
+        cfg = ARCHS[a]
+        assert cfg.n_active_params() < cfg.n_params() / 2
+
+
+def test_long_500k_applicability():
+    runs = {a for a in ARCHS if applicable(ARCHS[a], SHAPES["long_500k"])[0]}
+    assert runs == {"h2o-danube-3-4b", "rwkv6-3b", "hymba-1.5b"}
+    # everything lowers for the other three shapes
+    for s in ("train_4k", "prefill_32k", "decode_32k"):
+        assert all(applicable(ARCHS[a], SHAPES[s])[0] for a in ARCHS)
+
+
+def test_reduced_variants_obey_brief():
+    for a, cfg in ARCHS.items():
+        r = reduced(cfg)
+        assert r.n_layers <= 2 and r.d_model <= 512
+        assert r.n_experts <= 4
+        assert r.family == cfg.family

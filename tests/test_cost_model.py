@@ -1,0 +1,64 @@
+"""Paper analytical models: Fig. 4 bandwidth bounds, §3.4 hierarchical
+condition, §4.9 throughput/$ (Table 5 reproduction is in benchmarks)."""
+import pytest
+
+from repro.core.cost_model import (min_bandwidth_bits, RackTopology,
+                                   hierarchical_beneficial, cross_rack_bytes,
+                                   throughput_per_dollar)
+from repro.configs.phub_paper import PAPER_MODELS
+
+
+def test_bandwidth_ordering():
+    """NCS needs the least per-shard bandwidth; NCC the most (Table 2)."""
+    m = PAPER_MODELS["RN269"]
+    args = (m.model_bytes, m.time_per_batch_s, 8)
+    assert min_bandwidth_bits("NCS", *args) < min_bandwidth_bits("CC", *args)
+    assert min_bandwidth_bits("CC", *args) < min_bandwidth_bits("NCC", *args)
+
+
+def test_table2_alexnet_magnitude():
+    """AlexNet CS bound should be in the hundreds of Gbps (paper: 308)."""
+    m = PAPER_MODELS["AN"]
+    gbps = min_bandwidth_bits("CS", m.model_bytes, m.time_per_batch_s, 8) / 1e9
+    assert 150 < gbps < 500
+
+
+def test_bandwidth_grows_with_workers():
+    m = PAPER_MODELS["RN50"]
+    b4 = min_bandwidth_bits("NCC", m.model_bytes, m.time_per_batch_s, 4)
+    b8 = min_bandwidth_bits("NCC", m.model_bytes, m.time_per_batch_s, 8)
+    assert b8 > b4
+
+
+def test_hierarchical_wins_on_oversubscribed_core():
+    # fat worker links + oversubscribed core: cross-rack flat transfer is
+    # the bottleneck -> two-level reduction pays off
+    slow_core = RackTopology(n_workers_per_rack=8, n_racks=4,
+                             bw_worker=12.5e9, bw_pbox=12.5e9,
+                             bw_core=1.25e9)
+    assert hierarchical_beneficial(slow_core)
+    # tiny rack + weak PBox + fat core: the extra round only adds latency
+    fat_core = RackTopology(n_workers_per_rack=2, n_racks=2,
+                            bw_worker=12.5e9, bw_pbox=1.25e9,
+                            bw_core=1e12)
+    assert not hierarchical_beneficial(fat_core)
+
+
+def test_cross_rack_traffic_reduction():
+    """Hierarchical reduction cuts cross-rack bytes by ~1/N (N workers/rack)."""
+    M = 100 * 2**20
+    flat = cross_rack_bytes(M, n_workers_per_rack=8, n_racks=4,
+                            hierarchical=False)
+    hier = cross_rack_bytes(M, n_workers_per_rack=8, n_racks=4,
+                            hierarchical=True)
+    assert flat / hier == pytest.approx(8, rel=0.05)
+
+
+def test_throughput_per_dollar_favors_phub():
+    """Paper Table 5: 25Gb PHub 2:1 beats 100Gb sharded at equal throughput
+    (the PHub row even carries a 2% hierarchical overhead)."""
+    base = throughput_per_dollar(338.0, phub=False, oversub=1.0)
+    phub = throughput_per_dollar(338.0 * 0.98, phub=True, oversub=2.0,
+                                 workers_per_phub=65)
+    assert phub > base
+    assert (phub - base) / base > 0.10

@@ -1,0 +1,54 @@
+"""HLO collective parser unit tests (roofline input integrity)."""
+import textwrap
+
+from repro.utils.hlo import (parse_collectives, summarize_collectives,
+                             CollectiveStats)
+
+SAMPLE = textwrap.dedent("""\
+    %ar = f32[16,1024]{1,0} all-reduce(f32[16,1024]{1,0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+    %ag = bf16[512,64]{1,0} all-gather(bf16[32,64]{1,0} %y), replica_groups=[2,16]<=[32], dimensions={0}
+    %rs = f32[64]{0} reduce-scatter(f32[1024]{0} %z), replica_groups={{0,256},{1,257}}, dimensions={0}, to_apply=%add
+    %cp = bf16[8,8]{1,0} collective-permute(bf16[8,8]{1,0} %w), source_target_pairs={{0,1},{1,0}}
+    %nothing = f32[4]{0} add(f32[4]{0} %a, f32[4]{0} %b)
+""")
+
+
+def test_parse_kinds_and_sizes():
+    stats = parse_collectives(SAMPLE, pod_stride=256)
+    kinds = {s.kind: s for s in stats}
+    assert set(kinds) == {"all-reduce", "all-gather", "reduce-scatter",
+                          "collective-permute"}
+    assert kinds["all-reduce"].payload_bytes == 16 * 1024 * 4
+    assert kinds["all-reduce"].group_size == 4
+    assert not kinds["all-reduce"].spans_pod
+    assert kinds["all-gather"].payload_bytes == 512 * 64 * 2
+    assert kinds["all-gather"].group_size == 16
+    assert kinds["reduce-scatter"].spans_pod       # {0,256} crosses pods
+    assert kinds["reduce-scatter"].group_size == 2
+
+
+def test_link_bytes_conventions():
+    ar = CollectiveStats("all-reduce", 1000, 4, False)
+    assert ar.link_bytes() == 2 * 1000 * 3 / 4
+    ag = CollectiveStats("all-gather", 1000, 4, False)
+    assert ag.link_bytes() == 1000 * 3 / 4
+    rs = CollectiveStats("reduce-scatter", 100, 4, False)
+    assert rs.link_bytes() == 300
+    cp = CollectiveStats("collective-permute", 64, 1, True)
+    assert cp.link_bytes() == 64
+
+
+def test_summary_tiers():
+    stats = parse_collectives(SAMPLE, pod_stride=256)
+    s = summarize_collectives(stats)
+    assert s["dcn_bytes"] > 0 and s["ici_bytes"] > 0
+    assert set(s["by_kind"]) == {"all-reduce", "all-gather", "reduce-scatter",
+                                 "collective-permute"}
+
+
+def test_iota_groups_transpose():
+    txt = ("%ag2 = f32[4]{0} all-gather(f32[2]{0} %v), "
+           "replica_groups=[256,2]<=[2,256]T(1,0), dimensions={0}\n")
+    (s,) = parse_collectives(txt, pod_stride=256)
+    # groups pair device i with i+256 -> spans pods
+    assert s.group_size == 2 and s.spans_pod

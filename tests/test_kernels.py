@@ -1,0 +1,163 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.agg_opt.ops import fused_agg_opt, fused_multi_agg_opt
+from repro.kernels.agg_opt.ref import agg_opt_ref
+from repro.kernels.swa_attn.ops import swa_attention
+from repro.kernels.swa_attn.ref import swa_attention_ref
+from repro.kernels.rwkv_scan.kernel import rwkv_scan_kernel
+from repro.kernels.rwkv_scan.ops import rwkv_scan
+from repro.kernels.rwkv_scan.ref import rwkv_scan_ref
+from repro.kernels.decode_attn.ops import decode_attention
+from repro.kernels.decode_attn.ref import decode_attention_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rnd(i, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.fold_in(KEY, i), shape) *
+            scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ agg_opt
+
+@pytest.mark.parametrize("n", [128, 8192, 20000, 65536 + 7])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_agg_opt_sweep(n, dtype):
+    p, g, m = rnd(1, (n,), dtype), rnd(2, (n,), dtype), rnd(3, (n,), dtype)
+    p2, m2 = fused_agg_opt(p, g, m, lr=0.05, momentum=0.9, chunk_elems=8192)
+    pr, mr = agg_opt_ref(p, g, m, lr=0.05, momentum=0.9)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(p2, np.float32),
+                               np.asarray(pr, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(m2, np.float32),
+                               np.asarray(mr, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("W", [1, 2, 8])
+def test_fused_multi_agg_opt_workers(W):
+    n = 5000
+    p, m = rnd(4, (n,)), rnd(5, (n,))
+    g = rnd(6, (W, n))
+    p2, m2 = fused_multi_agg_opt(p, g, m, lr=0.1, momentum=0.9,
+                                 chunk_elems=1024)
+    pr, mr = agg_opt_ref(p, g, m, lr=0.1, momentum=0.9, n_workers=W)
+    np.testing.assert_allclose(np.asarray(p2), np.asarray(pr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(mr), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(100, 9000), st.sampled_from([256, 1024, 8192]),
+       st.floats(0.0, 0.99))
+def test_fused_agg_opt_property(n, ce, momentum):
+    p, g, m = rnd(7, (n,)), rnd(8, (n,)), rnd(9, (n,))
+    p2, m2 = fused_agg_opt(p, g, m, lr=0.01, momentum=momentum,
+                           chunk_elems=ce)
+    pr, mr = agg_opt_ref(p, g, m, lr=0.01, momentum=momentum)
+    np.testing.assert_allclose(np.asarray(p2), np.asarray(pr), atol=1e-5)
+
+
+# ----------------------------------------------------------------- swa_attn
+
+@pytest.mark.parametrize("T,nh,kv,hd,window,bq", [
+    (128, 4, 2, 64, 0, 64),
+    (128, 4, 2, 64, 32, 32),
+    (128, 2, 2, 120, 48, 64),      # danube head_dim (lane padding)
+    (64, 8, 1, 32, 0, 32),         # MQA-style
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_attention_sweep(T, nh, kv, hd, window, bq, dtype):
+    B = 2
+    q = rnd(10, (B, T, nh, hd), dtype)
+    k = rnd(11, (B, T, kv, hd), dtype)
+    v = rnd(12, (B, T, kv, hd), dtype)
+    o = swa_attention(q, k, v, window=window, bq=bq, bk=bq)
+    ref = swa_attention_ref(jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2),
+                            jnp.moveaxis(v, 1, 2), window=window)
+    ref = jnp.moveaxis(ref, 2, 1)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+# ---------------------------------------------------------------- rwkv_scan
+
+@pytest.mark.parametrize("T,hd,ct", [(64, 64, 16), (128, 64, 64),
+                                     (96, 32, 32)])
+def test_rwkv_scan_kernel_sweep(T, hd, ct):
+    BH = 3
+    r, k, v = (rnd(i, (BH, T, hd), scale=0.5) for i in (20, 21, 22))
+    w = jnp.exp(-jnp.exp(rnd(23, (BH, T, hd), scale=0.5) - 2.0))
+    u = rnd(24, (BH, 1, hd), scale=0.5)
+    y, s = rwkv_scan_kernel(r, k, v, w, u, ct=ct, interpret=True)
+    yr, sr = rwkv_scan_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=2e-4)
+
+
+def test_rwkv_scan_strong_decay_stability():
+    """Adversarially strong decay (w -> 0.37^64 cumulative) stays finite."""
+    BH, T, hd = 1, 64, 32
+    r, k, v = (rnd(i, (BH, T, hd), scale=0.5) for i in (25, 26, 27))
+    w = jnp.full((BH, T, hd), jnp.exp(-1.0))       # aggressive decay
+    u = rnd(28, (BH, 1, hd))
+    y, s = rwkv_scan_kernel(r, k, v, w, u, ct=32, interpret=True)
+    yr, sr = rwkv_scan_ref(r, k, v, w, u)
+    assert np.isfinite(np.asarray(y)).all()
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-2)
+
+
+def test_rwkv_scan_model_layout_wrapper():
+    B, T, H, hd = 2, 64, 3, 32
+    r, k, v = (rnd(i, (B, T, H, hd), scale=0.5) for i in (30, 31, 32))
+    w = jnp.exp(-jnp.exp(rnd(33, (B, T, H, hd), scale=0.3) - 2.0))
+    u = rnd(34, (H, hd), scale=0.5)
+    state = jnp.zeros((B, H, hd, hd))
+    y, s = rwkv_scan(r, k, v, w, u, state, ct=16, interpret=True)
+    from repro.models.rwkv import rwkv_recurrence
+    yr, sr = rwkv_recurrence(r, k, v, w, u, state)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4)
+
+
+# -------------------------------------------------------------- decode_attn
+
+@pytest.mark.parametrize("S,nh,kv,hd,window", [
+    (256, 4, 2, 64, 0),
+    (300, 4, 2, 64, 100),          # non-multiple S, windowed
+    (512, 8, 8, 128, 0),           # MHA
+    (1024, 5, 5, 64, 256),         # musicgen/hymba-ish head counts
+])
+def test_decode_attention_sweep(S, nh, kv, hd, window):
+    B = 2
+    q = rnd(40, (B, 1, nh, hd))
+    k = rnd(41, (B, S, kv, hd))
+    v = rnd(42, (B, S, kv, hd))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    fill = int(S * 0.8)
+    pos = jnp.where(pos < fill, pos, -1)
+    qp = jnp.full((B,), fill, jnp.int32)
+    o = decode_attention(q, k, v, pos, qp, window=window, bs=128)
+    ref = decode_attention_ref(q[:, 0].reshape(B, kv, nh // kv, hd), k, v,
+                               pos, qp.reshape(B, 1), window=window)
+    np.testing.assert_allclose(np.asarray(o).reshape(B, kv, nh // kv, hd),
+                               np.asarray(ref), atol=3e-5)
+
+
+def test_decode_attention_ring_rotation():
+    B, S, nh, kv, hd = 1, 128, 2, 1, 32
+    q = rnd(50, (B, 1, nh, hd))
+    k = rnd(51, (B, S, kv, hd))
+    v = rnd(52, (B, S, kv, hd))
+    pos = jnp.arange(S, dtype=jnp.int32)[None]
+    qp = jnp.full((B,), S - 1, jnp.int32)
+    base = decode_attention(q, k, v, pos, qp, window=0, bs=64)
+    r = 37
+    rot = lambda x: jnp.roll(x, r, axis=1)
+    rotated = decode_attention(q, rot(k), rot(v), rot(pos), qp, window=0,
+                               bs=64)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(rotated),
+                               atol=1e-5)

@@ -1,0 +1,71 @@
+"""Chunked CE == full CE; synthetic pipeline determinism + learnability."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.data import SyntheticTokens
+from repro.models.loss import chunked_cross_entropy
+
+
+@pytest.mark.parametrize("T,chunk", [(64, 64), (64, 16), (60, 16), (5, 64)])
+def test_chunked_ce_matches_full(T, chunk):
+    key = jax.random.PRNGKey(0)
+    B, d, V = 3, 16, 50
+    x = jax.random.normal(key, (B, T, d))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d, V))
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (B, T), 0, V)
+    got = chunked_cross_entropy(x, w, labels, chunk=chunk)
+    logits = x @ w
+    logp = jax.nn.log_softmax(logits)
+    want = -jnp.take_along_axis(logp, labels[..., None], -1).mean()
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_chunked_ce_masks_negative_labels():
+    key = jax.random.PRNGKey(1)
+    B, T, d, V = 2, 8, 4, 11
+    x = jax.random.normal(key, (B, T, d))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d, V))
+    labels = jnp.arange(B * T, dtype=jnp.int32).reshape(B, T) % V
+    masked = labels.at[:, :4].set(-1)
+    got = chunked_cross_entropy(x, w, masked, chunk=4)
+    want = chunked_cross_entropy(x[:, 4:], w, labels[:, 4:], chunk=4)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_chunked_ce_grad_finite():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (2, 32, 8))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (8, 20))
+    labels = jnp.zeros((2, 32), jnp.int32)
+    g = jax.grad(lambda w_: chunked_cross_entropy(x, w_, labels, chunk=8))(w)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_synthetic_determinism_and_range():
+    cfg = reduced(ARCHS["llama3.2-1b"])
+    d1 = SyntheticTokens(cfg, 4, 32, seed=5).batch_at(7)
+    d2 = SyntheticTokens(cfg, 4, 32, seed=5).batch_at(7)
+    np.testing.assert_array_equal(d1["tokens"], d2["tokens"])
+    assert d1["tokens"].min() >= 0
+    assert d1["tokens"].max() < cfg.vocab_size
+    assert d1["tokens"].shape == (4, 32)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(d1["labels"][:, :-1], d1["tokens"][:, 1:])
+    d3 = SyntheticTokens(cfg, 4, 32, seed=5).batch_at(8)
+    assert (d3["tokens"] != d1["tokens"]).any()
+
+
+def test_synthetic_task_is_learnable_in_principle():
+    """Sequences are mostly affine progressions: given (start, stride) the
+    next token is determined 98% of the time — so loss can go well below
+    uniform."""
+    cfg = reduced(ARCHS["llama3.2-1b"])
+    b = SyntheticTokens(cfg, 64, 64, seed=0).batch_at(0)
+    tok = b["tokens"].astype(np.int64)
+    stride = (tok[:, 1] - tok[:, 0]) % cfg.vocab_size
+    pred = (tok[:, 1:-1] + stride[:, None]) % cfg.vocab_size
+    acc = (pred == tok[:, 2:]).mean()
+    assert acc > 0.9

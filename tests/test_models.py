@@ -1,0 +1,115 @@
+"""Per-arch smoke tests (deliverable f): reduced same-family variants run a
+forward AND a PHub train step on CPU; output shapes + no NaNs asserted."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, TrainConfig, reduced
+from repro.core import PHubEngine
+from repro.data import SyntheticTokens
+from repro.models import (init, forward, prefill, lm_head_weight,
+                          chunked_cross_entropy, layer_windows,
+                          cache_capacity)
+
+B, T = 2, 32
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def _batch_inputs(cfg):
+    tok = jnp.arange(B * T, dtype=jnp.int32).reshape(B, T) % cfg.vocab_size
+    extra = (jnp.ones((B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+             if cfg.frontend else None)
+    return tok, extra
+
+
+@pytest.mark.parametrize("arch_id", sorted(ARCHS))
+def test_forward_smoke(arch_id):
+    cfg = reduced(ARCHS[arch_id])
+    params = init(cfg, jax.random.PRNGKey(0))
+    tok, extra = _batch_inputs(cfg)
+    out = forward(cfg, params, tok, extra_embeds=extra, remat=False)
+    t_total = T + (cfg.frontend_tokens if cfg.frontend else 0)
+    assert out["x"].shape == (B, t_total, cfg.d_model)
+    assert not bool(jnp.isnan(out["x"]).any())
+    loss = chunked_cross_entropy(out["x"][:, -T:], lm_head_weight(cfg, params),
+                                 tok, chunk=16)
+    assert jnp.isfinite(loss)
+
+
+@pytest.mark.parametrize("arch_id", sorted(ARCHS))
+def test_train_step_smoke(arch_id, mesh11):
+    cfg = reduced(ARCHS[arch_id])
+    eng = PHubEngine(cfg=cfg, tc=TrainConfig(loss_chunk=16), mesh=mesh11)
+    params, opt = eng.init_state(jax.random.PRNGKey(0))
+    data = SyntheticTokens(cfg, B, T, seed=0)
+    batch = data.device_batch(0)
+    shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in batch.items()}
+    if cfg.frontend:
+        batch["extra_embeds"] = jnp.ones(
+            (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+        shapes["extra_embeds"] = jax.ShapeDtypeStruct(
+            batch["extra_embeds"].shape, batch["extra_embeds"].dtype)
+    step = eng.make_train_step(shapes)
+    import numpy as np
+    before = jax.tree.map(lambda a: np.asarray(a, np.float32), params)
+    p1, o1, metrics = step(params, opt, batch)    # donates params/opt
+    assert jnp.isfinite(metrics["loss"])
+    # params actually moved, and no NaNs anywhere
+    moved = jax.tree.map(
+        lambda a, b: bool((a != np.asarray(b, np.float32)).any()), before, p1)
+    assert any(jax.tree.leaves(moved))
+    assert not any(bool(jnp.isnan(l).any()) for l in jax.tree.leaves(p1)
+                   if jnp.issubdtype(l.dtype, jnp.floating))
+
+
+@pytest.mark.parametrize("arch_id", ["llama3.2-1b", "h2o-danube-3-4b",
+                                     "rwkv6-3b", "hymba-1.5b",
+                                     "musicgen-medium"])
+def test_prefill_decode_consistency(arch_id):
+    """Decoding token T after a prefill of length T must match the full
+    forward over T+1 tokens (exercises the ring cache end-to-end)."""
+    cfg = reduced(ARCHS[arch_id])
+    params = init(cfg, jax.random.PRNGKey(1))
+    tok = (jnp.arange(B * (T + 1), dtype=jnp.int32).reshape(B, T + 1)
+           % cfg.vocab_size)
+    full = forward(cfg, params, tok, remat=False)
+    pf = prefill(cfg, params, tok[:, :T], remat=False,
+                 cache_dtype=jnp.float32, max_new_tokens=1)
+    out = forward(cfg, params, tok[:, T:], cache=pf["cache"], remat=False)
+    want = full["x"][:, T]
+    got = out["x"][:, 0]
+    err = float(jnp.abs(want.astype(jnp.float32)
+                        - got.astype(jnp.float32)).max())
+    scale = float(jnp.abs(want).max()) + 1e-6
+    assert err / scale < 0.08, f"relative err {err/scale:.4f}"
+
+
+def test_windows_hymba():
+    cfg = ARCHS["hymba-1.5b"]
+    w = layer_windows(cfg)
+    assert w[0] == 0 and w[16] == 0 and w[-1] == 0      # global layers
+    assert (w[1:16] == cfg.sliding_window).all()
+    assert cache_capacity(cfg, 524_288) == 32_768       # StreamingLLM cap
+    assert cache_capacity(ARCHS["h2o-danube-3-4b"], 524_288) == 4096
+    assert cache_capacity(ARCHS["llama3.2-1b"], 32_768) == 32_768
+
+
+def test_sliding_window_limits_attention():
+    """With window w, logits at position t must not depend on tokens < t-w."""
+    import dataclasses
+    cfg = dataclasses.replace(reduced(ARCHS["h2o-danube-3-4b"]),
+                              sliding_window=8)
+    params = init(cfg, jax.random.PRNGKey(2))
+    tok = jnp.ones((1, 24), jnp.int32)
+    tok2 = tok.at[0, 2].set(5)                # outside window of position 23
+    x1 = forward(cfg, params, tok, remat=False)["x"][:, -1]
+    x2 = forward(cfg, params, tok2, remat=False)["x"][:, -1]
+    # single layer of attention: last position differs only through tokens in
+    # (15, 23]; with 2 layers receptive field is 2w, so use position 2 < 23-16
+    err = float(jnp.abs(x1.astype(jnp.float32) - x2.astype(jnp.float32)).max())
+    assert err < 1e-3, f"token outside receptive field leaked: {err}"

@@ -1,0 +1,42 @@
+"""LPT 4/3-approximation set partition (§3.2.4) property tests."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import lpt_partition, bin_loads, makespan_ratio
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(1, 10_000), min_size=1, max_size=200),
+       st.integers(1, 16))
+def test_lpt_is_complete_and_bounded(costs, n_bins):
+    assign = lpt_partition(costs, n_bins)
+    assert len(assign) == len(costs)
+    assert all(0 <= b < n_bins for b in assign)
+    loads = bin_loads(costs, assign, n_bins)
+    assert sum(loads) == sum(costs)
+    # Graham's bound: makespan <= (4/3 - 1/(3m)) * OPT, and OPT >= max(
+    #   mean load, max item)
+    opt_lb = max(sum(costs) / n_bins, max(costs))
+    assert max(loads) <= (4 / 3) * opt_lb + 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 12), st.integers(2, 8))
+def test_uniform_chunks_balance_perfectly(n_per_bin, n_bins):
+    """PHub's case: equal 32KB chunks — LPT gives perfect balance when the
+    count divides evenly (the TPU flattened-concat datapath relies on this:
+    see DESIGN.md §7)."""
+    costs = [32 * 1024] * (n_per_bin * n_bins)
+    assign = lpt_partition(costs, n_bins)
+    assert makespan_ratio(costs, assign, n_bins) == 1.0
+
+
+def test_pathological_keys_still_balanced():
+    """One huge FC-layer key next to many small conv keys (AlexNet-like)."""
+    costs = [150_000_000] + [300_000] * 60
+    assign = lpt_partition(costs, 8)
+    ratio = makespan_ratio(costs, assign, 8)
+    # the giant key dominates: LPT puts it alone; ratio is limited by the
+    # max-item lower bound, not by poor packing
+    loads = bin_loads(costs, assign, 8)
+    assert max(loads) == 150_000_000

@@ -1,0 +1,160 @@
+"""End-to-end behaviour tests for the PHub training/serving system."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, TrainConfig, reduced
+from repro.core import PHubConnectionManager, PHubEngine
+from repro.data import SyntheticTokens
+from repro.checkpoint import save_checkpoint, load_checkpoint, latest_step
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_training_reduces_loss(mesh11):
+    """~1M-param llama on the structured synthetic task: loss must drop."""
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=128)
+    tc = TrainConfig(lr=5e-2, loss_chunk=64)
+    eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh11)
+    params, opt = eng.init_state(jax.random.PRNGKey(0))
+    data = SyntheticTokens(cfg, batch=8, seq_len=64, seed=0)
+    shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in data.batch_at(0).items()}
+    step = eng.make_train_step(shapes)
+    losses = []
+    for i in range(40):
+        params, opt, m = step(params, opt, data.device_batch(i))
+        losses.append(float(m["loss"]))
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    assert last < first - 0.5, f"no learning: {first:.3f} -> {last:.3f}"
+
+
+def test_service_api_multitenancy(mesh11):
+    cm = PHubConnectionManager()
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    h1 = cm.create_service("job-a", cfg, TrainConfig(loss_chunk=32), mesh11)
+    h2 = cm.create_service("job-b", cfg, TrainConfig(loss_chunk=32), mesh11)
+    assert h1.nonce != h2.nonce
+
+    # bad nonce is rejected (paper: nonce-based isolation)
+    from repro.core.api import ServiceHandle
+    with pytest.raises(PermissionError):
+        cm.connect_service(ServiceHandle(namespace="job-a", nonce="forged"))
+
+    # duplicate namespace rejected
+    with pytest.raises(ValueError):
+        cm.create_service("job-a", cfg, TrainConfig(), mesh11)
+
+    # the fused PushPull trains job-a without touching job-b
+    params, opt = cm.init_service(h1, jax.random.PRNGKey(0))
+    data = SyntheticTokens(cfg, 4, 32, seed=1)
+    batch = data.device_batch(0)
+    p1, o1, metrics = cm.push_pull(h1, params, opt, batch)
+    assert jnp.isfinite(metrics["loss"])
+    cm.destroy_service(h2)
+    with pytest.raises(PermissionError):
+        cm.connect_service(h2)
+
+
+def test_checkpoint_roundtrip_and_resume(mesh11):
+    cfg = reduced(ARCHS["rwkv6-3b"], d_model=128)
+    tc = TrainConfig(lr=1e-2, loss_chunk=32)
+    eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh11)
+    params, opt = eng.init_state(jax.random.PRNGKey(0))
+    data = SyntheticTokens(cfg, 4, 32, seed=2)
+    shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in data.batch_at(0).items()}
+    step = eng.make_train_step(shapes)
+    for i in range(3):
+        params, opt, _ = step(params, opt, data.device_batch(i))
+
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 3, {"params": params, "opt": opt})
+        assert latest_step(d) == 3
+        got_step, tree = load_checkpoint(d)
+        assert got_step == 3
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(tree["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # resumed state continues training identically
+        p_direct, o_direct, m1 = step(params, opt, data.device_batch(3))
+        p_res = jax.tree.map(jnp.asarray, tree["params"])
+        o_res = jax.tree.map(jnp.asarray, tree["opt"])
+        p_resumed, o_resumed, m2 = step(p_res, o_res, data.device_batch(3))
+        assert float(m1["loss"]) == pytest.approx(float(m2["loss"]),
+                                                  abs=1e-5)
+
+
+def test_serving_pipeline(mesh11):
+    """Prefill + batched greedy decode runs and is deterministic."""
+    cfg = reduced(ARCHS["h2o-danube-3-4b"], d_model=128)
+    eng = PHubEngine(cfg=cfg, tc=TrainConfig(), mesh=mesh11)
+    params, _ = eng.init_state(jax.random.PRNGKey(0))
+    prompts = (jnp.arange(4 * 16, dtype=jnp.int32).reshape(4, 16)
+               % cfg.vocab_size)
+    prefill_step = eng.make_prefill_step(16, max_new_tokens=8)
+    serve_step = eng.make_serve_step()
+
+    def rollout():
+        logits, cache = prefill_step(params, prompts)
+        assert logits.shape == (4, cfg.vocab_size)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        toks = [tok]
+        for _ in range(4):
+            logits, cache_new = serve_step(params, dict(cache), tok)
+            cache = cache_new
+            assert not bool(jnp.isnan(logits).any())
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            toks.append(tok)
+        return jnp.concatenate(toks, 1)
+
+    run1 = rollout()
+    run2 = rollout()
+    np.testing.assert_array_equal(np.asarray(run1), np.asarray(run2))
+
+
+def test_chunk_size_does_not_change_semantics(mesh11):
+    """PHub §3.2.3: the chunk size is a performance knob — results must be
+    bit-comparable across chunk sizes."""
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    data = SyntheticTokens(cfg, 4, 32, seed=3)
+    batch = data.device_batch(0)
+    shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in batch.items()}
+    outs = []
+    for kb in (4, 32, 256):
+        tc = TrainConfig(chunk_size_bytes=kb * 1024, loss_chunk=32)
+        eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh11)
+        params, opt = eng.init_state(jax.random.PRNGKey(0))
+        p1, _, m = eng.make_train_step(shapes)(params, opt, batch)
+        outs.append((float(m["loss"]), p1))
+    for loss, p in outs[1:]:
+        assert loss == pytest.approx(outs[0][0], abs=1e-6)
+        for a, b in zip(jax.tree.leaves(outs[0][1]), jax.tree.leaves(p)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_fit_loop(mesh11):
+    """training.fit: reusable loop with hooks + checkpointing."""
+    from repro.training import fit, TrainState
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    eng = PHubEngine(cfg=cfg, tc=TrainConfig(lr=3e-2, loss_chunk=32),
+                     mesh=mesh11)
+    params, opt = eng.init_state(jax.random.PRNGKey(0))
+    data = SyntheticTokens(cfg, 4, 32, seed=9)
+    seen = []
+    with tempfile.TemporaryDirectory() as d:
+        st = fit(eng, TrainState(params=params, opt=opt), data, steps=6,
+                 log_every=0, checkpoint_dir=d, checkpoint_every=3,
+                 hooks=[lambda s, m: seen.append(s.step)])
+        assert st.step == 6 and len(st.losses) == 6
+        assert seen == [1, 2, 3, 4, 5, 6]
+        assert latest_step(d) == 6
