@@ -33,7 +33,8 @@ def bench_exchange_only(p):
     from repro.configs import ARCHS, TrainConfig, reduced
     from repro.core import PHubEngine
     from repro.core.chunking import flatten_groups, unflatten_groups
-    from repro.core.exchange import exchange_group, flat_rank
+    from repro.core.exchange import exchange_group
+    from repro.utils import compat
 
     data_size = p["data_size"]
     mesh = jax.make_mesh((data_size, 1), ("data", "model"))
@@ -48,10 +49,9 @@ def bench_exchange_only(p):
     def exchange_only(params, opt):
         def local(params, opt):
             grads = jax.tree.map(lambda x: x * 1e-4, params)  # stand-in push
-            if tc.strategy == "hierarchical":
-                rank = jax.lax.axis_index("data")
-            else:
-                rank = flat_rank(eng.data_axes, eng.axis_sizes)
+            rank_axes = (("data",) if tc.strategy == "hierarchical"
+                         else eng.data_axes)
+            rank = compat.manual_axis_rank(rank_axes, eng.axis_sizes, mesh)
 
             def inner(grads, params, opt, rank):
                 fg = flatten_groups(cp, grads)
@@ -71,20 +71,21 @@ def bench_exchange_only(p):
             m_spec = {str(g.dtype): (P("model", None, None) if S > 1
                                      else P("model", None))
                       for g in cp.groups}
-            return jax.shard_map(
-                inner, mesh=jax.sharding.get_abstract_mesh(),
+            return compat.shard_map(
+                inner, mesh=compat.current_mesh(mesh),
                 in_specs=(specs, specs, m_spec, P()),
                 out_specs=(specs, m_spec),
-                axis_names={"model"}, check_vma=False)(grads, params, opt,
-                                                       rank)
+                axis_names={"model"}, check_vma=False,
+                nested=True)(grads, params, opt, rank)
 
         manual = eng.plan.manual_specs(eng.data_axes)
         S = eng.ctx.n_shards(tc.strategy)
         m_outer = {str(g.dtype): (P(None, "data", None) if S > 1
                                   else P(None, None)) for g in cp.groups}
-        return jax.shard_map(local, mesh=mesh, in_specs=(manual, m_outer),
-                             out_specs=(manual, m_outer),
-                             axis_names={"data"}, check_vma=False)(params, opt)
+        return compat.shard_map(local, mesh=mesh, in_specs=(manual, m_outer),
+                                out_specs=(manual, m_outer),
+                                axis_names={"data"},
+                                check_vma=False)(params, opt)
 
     step = jax.jit(exchange_only)
     us = _timeit(step, params, opt)
@@ -106,7 +107,9 @@ def bench_train_step(p):
                   d_model=p.get("d_model", 256))
     tc = TrainConfig(strategy=p["strategy"],
                      chunk_size_bytes=p.get("chunk_kb", 32) * 1024,
-                     loss_chunk=p.get("seq", 128))
+                     loss_chunk=p.get("seq", 128),
+                     flat_residency=p.get("flat_residency", False),
+                     pipeline_windows=p.get("windows", 1))
     eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
     params, opt = eng.init_state(jax.random.PRNGKey(0))
     data = SyntheticTokens(cfg, p.get("batch", 8), p.get("seq", 128), seed=0)
@@ -132,8 +135,106 @@ def bench_train_step(p):
             "tokens_per_s": p.get("batch", 8) * p.get("seq", 128) / (us / 1e6)}
 
 
+def bench_pipeline_exchange(p):
+    """Windowed vs monolithic exchange on one flat dtype group (paper-style
+    model_bytes), full-manual over a 1-D worker mesh: the pure PS pipeline
+    with fwd/bwd replaced by a synthetic push.  windows=1 runs the
+    monolithic psum_scatter/all_gather schedule; windows>1 the ppermute
+    ring pipeline (DESIGN.md §8).
+
+    All window counts in ``windows_list`` are timed *interleaved within one
+    rep loop* so machine drift between variants cancels; returns the median
+    per variant.
+    """
+    import time as _t
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core.chunking import build_plan
+    from repro.core.exchange import ExchangeContext
+    from repro.core.pipeline import effective_windows, run_exchange
+    from repro.utils import compat
+
+    D = p["data_size"]
+    pods = p.get("pod_size", 0)
+    mo = p.get("model_size", 0)
+    if pods:                                   # rack config: pod x data
+        mesh = jax.make_mesh((pods, D), ("pod", "data"))
+        axes = ("pod", "data")
+        manual = {"pod", "data"}
+        sizes = {"pod": pods, "data": D}
+    elif mo:                                   # TP x DP deployment: every
+        mesh = jax.make_mesh((D, mo), ("data", "model"))   # device busy,
+        axes = ("data",)                       # exchange subgroups over data
+        manual = {"data", "model"}
+        sizes = {"data": D, "model": mo}
+    else:
+        mesh = jax.make_mesh((D,), ("data",))
+        axes = ("data",)
+        manual = {"data"}
+        sizes = {"data": D}
+    strategy = p.get("strategy", "sharded_ps")
+    windows_list = p.get("windows_list", [p.get("windows", 1)])
+    elems = p["elems"]
+    ctx = ExchangeContext(data_axes=axes,
+                          axis_sizes={a: sizes[a] for a in axes})
+    tree = {"w": jax.ShapeDtypeStruct((elems,), jnp.float32)}
+    plan = build_plan(tree, chunk_bytes=p.get("chunk_kb", 32) * 1024,
+                      n_shards=max(ctx.n_shards(strategy), 1))
+    (grp,) = plan.groups
+    lr, mu = 1e-2, 0.9
+
+    def upd(pv, gv, mv):
+        m2 = mu * mv + gv
+        return pv - lr * (gv + mu * m2), m2
+
+    # momentum is sharded over the strategy's shard axes: the in-pod data
+    # axis for hierarchical (replicated across pods), every worker axis for
+    # the flat strategies
+    m_axes = ("data",) if strategy == "hierarchical" else axes
+    m_spec = P(m_axes if len(m_axes) > 1 else m_axes[0])
+
+    def make_step(windows):
+        def local(pv, mv):
+            gv = pv * 1e-4
+            if strategy == "hierarchical":
+                rank = jax.lax.axis_index("data")
+            else:
+                rank = jnp.zeros((), jnp.int32)
+                for a in axes:
+                    rank = rank * sizes[a] + jax.lax.axis_index(a)
+            return run_exchange(strategy, ctx, gv, pv, mv, upd, rank, grp,
+                                windows)
+        return jax.jit(compat.shard_map(
+            local, mesh=mesh, in_specs=(P(), m_spec),
+            out_specs=(P(), m_spec), axis_names=manual,
+            check_vma=False))
+
+    steps = {w: make_step(w) for w in windows_list}
+    pv = jnp.asarray(np.random.default_rng(0).normal(
+        size=grp.padded).astype(np.float32))
+    mv = jnp.zeros((grp.padded,), jnp.float32)
+    for s in steps.values():                      # compile + warm
+        jax.block_until_ready(s(pv, mv))
+        jax.block_until_ready(s(pv, mv))
+    times = {w: [] for w in windows_list}
+    for _ in range(p.get("reps", 7)):
+        for w, s in steps.items():                # interleaved A/B
+            t0 = _t.perf_counter()
+            jax.block_until_ready(s(pv, mv))
+            times[w].append(_t.perf_counter() - t0)
+    out_us = {str(w): sorted(ts)[len(ts) // 2] * 1e6
+              for w, ts in times.items()}
+    return {"us_by_window": out_us, "model_bytes": grp.total * 4,
+            "eff_windows": {str(w): effective_windows(grp, w)
+                            for w in windows_list}}
+
+
 BENCHES = {"exchange_only": bench_exchange_only,
-           "train_step": bench_train_step}
+           "train_step": bench_train_step,
+           "pipeline_exchange": bench_pipeline_exchange}
 
 
 def main():

@@ -1,0 +1,66 @@
+"""Pipelined chunk-window exchange vs monolithic schedule (§3.2 overlap,
+DESIGN.md §8).
+
+Window-count sweep of the windowed ``lax.scan`` pipeline (ring
+reduce-scatter of window w in flight while window w−1 runs the fused
+agg+opt) against the monolithic psum_scatter → agg+opt → all_gather
+schedule, on 8 forced host devices across PS deployments:
+
+  2wx4tp   2 data workers x TP 4 — the engine's TP x DP shape; the ring
+           subgroups over the 2-worker data axis (every device busy)
+  4wx2tp   4 data workers x TP 2
+  8w       8 flat data workers
+
+All window variants of one configuration are timed interleaved inside a
+single subprocess so machine drift cancels (_mdworker.
+bench_pipeline_exchange).  Shapes follow the paper's Table 3 zoo:
+GoogleNet is 38 MB; the 19 MB shape is the same class model's
+half-precision gradient group (the engine exchanges dtype groups
+separately).
+
+Expected regime (recorded in DESIGN.md §8): at ring size 2 the ppermute
+ring moves half the bytes of the allreduce-lowered psum_scatter and the
+windowed pipeline beats the monolithic schedule; at ring size 8 the
+ring's (N−1)·L byte volume exceeds the fused collective's and the
+synchronous host backend cannot overlap the windows, so monolithic wins
+back — on hardware with async collectives the overlap regime extends
+upward.
+"""
+from __future__ import annotations
+
+from .common import Row, run_multidevice
+
+SHAPES = [
+    ("gn_bf16_group_19mb", 4 * (1 << 20) + 3 * (1 << 18)),  # 19 MB
+    ("gn_38mb", 9 * (1 << 20) + (1 << 19)),                 # 38 MB GoogleNet
+]
+WINDOWS = [1, 2, 4]
+DEPLOYMENTS = [("2wx4tp", {"data_size": 2, "model_size": 4}),
+               ("4wx2tp", {"data_size": 4, "model_size": 2}),
+               ("8w", {"data_size": 8})]
+
+
+def run() -> list[Row]:
+    rows = []
+    wins = 0
+    for dep_name, dep in DEPLOYMENTS:
+        for shape_name, elems in SHAPES:
+            r = run_multidevice(
+                {"bench": "pipeline_exchange", "strategy": "sharded_ps",
+                 "elems": elems, "windows_list": WINDOWS, "reps": 9, **dep},
+                n_devices=8)
+            base = r["us_by_window"]["1"]
+            for w in WINDOWS:
+                us = r["us_by_window"][str(w)]
+                speedup = base / us
+                if w > 1 and speedup > 1.0:
+                    wins += 1
+                rows.append(Row(
+                    f"pipeline_overlap/{dep_name}/{shape_name}/"
+                    f"win{r['eff_windows'][str(w)]}",
+                    us,
+                    f"speedup_vs_monolithic={speedup:.2f}x "
+                    f"model_bytes={r['model_bytes']}"))
+    rows.append(Row("pipeline_overlap/windowed_wins", 0.0,
+                    f"{wins} pipelined configs beat monolithic"))
+    return rows

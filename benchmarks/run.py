@@ -12,10 +12,13 @@ Prints ``name,us_per_call,derived`` CSV rows (plus section markers).
   cost_table5         Table 5          throughput per dollar
   key_balance         §3.2.4           LPT chunk->core load balance
   roofline            §Roofline        per (arch x shape) terms from dry-run
+  pipeline_overlap    §3.2 / D §8      windowed pipeline vs monolithic
 
 Run all: PYTHONPATH=src python -m benchmarks.run
 Subset:  PYTHONPATH=src python -m benchmarks.run tall_vs_wide roofline
+JSON:    PYTHONPATH=src python -m benchmarks.run --json out.json [modules]
 """
+import json
 import sys
 import time
 import traceback
@@ -23,24 +26,41 @@ import traceback
 MODULES = ["bandwidth_table2", "cost_table5", "comm_schemes", "hierarchical",
            "key_balance",
            "tall_vs_wide", "caching", "overhead_breakdown", "roofline",
-           "chunk_size", "zero_compute"]
+           "chunk_size", "zero_compute", "pipeline_overlap"]
 
 
 def main() -> None:
-    names = sys.argv[1:] or MODULES
+    args = sys.argv[1:]
+    json_out = None
+    if "--json" in args:
+        i = args.index("--json")
+        try:
+            json_out = args[i + 1]
+        except IndexError:
+            raise SystemExit("--json requires an output path")
+        args = args[:i] + args[i + 2:]
+    names = args or MODULES
     print("name,us_per_call,derived")
     failures = []
+    records = []
     for name in names:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             for row in mod.run():
                 row.print()
+                records.append({"bench": name, "name": row.name,
+                                "us_per_call": row.us,
+                                "derived": row.derived})
             print(f"# {name} done in {time.time()-t0:.1f}s")
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             failures.append(name)
             print(f"# {name} FAILED: {e}")
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump({"rows": records, "failed": failures}, f, indent=1)
+        print(f"# wrote {len(records)} rows to {json_out}")
     if failures:
         raise SystemExit(f"benchmarks failed: {failures}")
 

@@ -1,1 +1,2 @@
-from .checkpointer import save_checkpoint, load_checkpoint, latest_step
+from .checkpointer import (save_checkpoint, load_checkpoint, latest_step,
+                           restore_train_state)

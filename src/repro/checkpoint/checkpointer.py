@@ -5,6 +5,12 @@ string-keyed paths). Arrays are pulled to host (fully addressable values);
 sharded arrays are gathered per-leaf before save — adequate for the example
 scale; a production deployment would swap in a per-shard writer behind the
 same API.
+
+Flat-residency states (DESIGN.md §8) need no special casing on the save
+path — the store is a plain {dtype_str: array} dict.  ``restore_train_state``
+re-lays-out a loaded state onto an engine's planned shardings and converts
+between tree-state and flat-store checkpoints in either direction, so a
+training run can be resumed under a different residency mode.
 """
 from __future__ import annotations
 
@@ -73,3 +79,40 @@ def load_checkpoint(directory: str, step: int | None = None):
     path = os.path.join(directory, f"step_{step:08d}")
     data = np.load(os.path.join(path, "arrays.npz"))
     return step, _unflatten({k: data[k] for k in data.files})
+
+
+def _is_flat_store(params) -> bool:
+    """A flat store is {dtype_str: (mo, padded) array}; a tree state has
+    structured leaf names (embed/blocks/...)."""
+    if not isinstance(params, dict) or not params:
+        return False
+    return all(re.fullmatch(r"(bfloat16|float\d+|int\d+|uint\d+)", k)
+               and getattr(v, "ndim", 0) == 2 for k, v in params.items())
+
+
+def restore_train_state(directory: str, engine, step: int | None = None):
+    """Load a {"params", "opt"} checkpoint and place it with ``engine``'s
+    planned shardings.  Converts tree-state checkpoints into the flat store
+    (and vice versa) when the engine's residency mode differs from the one
+    that wrote the checkpoint.  Returns (step, params, opt)."""
+    step, tree = load_checkpoint(directory, step)
+    params, opt = tree["params"], tree["opt"]
+    flat_ckpt = _is_flat_store(params)
+    if engine.tc.flat_residency and not flat_ckpt:
+        params = engine.store_from_params(params)
+    elif engine.tc.flat_residency:
+        shards = engine.store_shardings()
+        params = {k: jax.device_put(np.asarray(v), shards[k])
+                  for k, v in params.items()}
+    elif flat_ckpt:
+        # params_from_store converts on host; hand it the loaded arrays
+        # directly (no device round trip)
+        params = engine.params_from_store(
+            {k: np.asarray(v) for k, v in params.items()})
+    else:
+        params = jax.tree.map(
+            lambda v, s: jax.device_put(np.asarray(v), s),
+            params, engine.param_shardings())
+    opt = jax.tree.map(lambda v, s: jax.device_put(np.asarray(v), s),
+                       opt, engine.opt_state_shardings())
+    return step, params, opt

@@ -123,6 +123,20 @@ class TrainConfig:
     fused_agg_opt: bool = True        # tall aggregation: fuse aggregate+optimize (§3.2.2)
     use_pallas: bool = False          # use the Pallas agg_opt kernel (TPU target)
 
+    # --- gradient processing pipeline (§3.2, DESIGN.md §8) ---
+    pipeline_windows: int = 1         # split each dtype group's chunk domain
+                                      # into this many windows: window w's
+                                      # ring reduce-scatter overlaps window
+                                      # w-1's fused agg+opt (1 = monolithic
+                                      # collectives, today's behavior);
+                                      # sharded_ps / hierarchical only
+    flat_residency: bool = False      # params live as flat chunk-domain
+                                      # vectors across steps: the forward
+                                      # pass consumes per-leaf slice views
+                                      # and the train step donates the flat
+                                      # store, eliminating the per-step
+                                      # flatten/unflatten round trip
+
     # --- sharding scheme ---
     seq_sharding: bool = True         # sequence-parallel activations over
                                       # 'model' (disable for MoE: §Perf it.4)

@@ -107,3 +107,150 @@ def unflatten_groups(plan: ChunkPlan, flats: dict[str, jax.Array], like):
 def shard_matrix(plan_group: GroupPlan, flat: jax.Array) -> jax.Array:
     """(padded,) -> (n_shards, shard_len): row i = chunks owned by shard i."""
     return flat.reshape(plan_group.n_shards, plan_group.shard_len)
+
+
+# ------------------------------------------------------- flat param residency
+
+@dataclass(frozen=True)
+class FlatParamStore:
+    """Static offset table giving parameters *persistent* flat chunk-domain
+    residency (DESIGN.md §8).
+
+    The store itself is a plain pytree ``{dtype_str: (mo, padded) array}``
+    whose row ``m`` is the concat-order flattening of model-rank *m*'s local
+    leaf blocks — exactly the vector ``flatten_groups`` used to rebuild
+    every step.  This class holds only the static layout: per-leaf offsets
+    into each row, local shapes, and the leaf dim sharded over 'model'.
+
+    ``to_tree`` reconstructs global parameter leaves as *slice views* of the
+    store (plus a per-leaf concat over model rows when mo > 1), so a train
+    step differentiated with respect to the store receives its gradient
+    already flat: the autodiff transpose of slice+reshape is a pad+add into
+    the flat cotangent, and the whole-model ``jnp.concatenate``/``jnp.pad``
+    round trip of flatten_groups/unflatten_groups disappears from the hot
+    path.
+
+    Leaves replicated over 'model' (model_dim None) are read from row 0
+    only; with mo > 1 the other rows' copies of those segments are dead
+    weight that never receives gradient and is never read — the same memory
+    the replicated layout always paid, without a cross-row reduction.
+    """
+    plan: ChunkPlan
+    mo: int                                     # model ranks (store rows)
+    offsets: dict                               # group_key -> (int, ...) per path
+    model_dims: dict                            # path -> Optional[int] (absolute)
+
+    def store_shapes(self) -> dict:
+        return {str(g.dtype): jax.ShapeDtypeStruct((self.mo, g.padded),
+                                                   g.dtype)
+                for g in self.plan.groups}
+
+    def from_tree(self, tree) -> dict:
+        """Global param tree -> {dtype_str: (mo, padded)} store (init /
+        checkpoint-restore path; runs once, not per step)."""
+        leaves = dict(_leaf_paths(tree))
+        out = {}
+        for g in self.plan.groups:
+            rows = []
+            for m in range(self.mo):
+                parts = []
+                for path, shape in zip(g.paths, g.shapes):
+                    leaf = leaves[path]
+                    md = self.model_dims.get(path)
+                    if md is not None and self.mo > 1:
+                        loc = shape[md]
+                        leaf = jax.lax.slice_in_dim(leaf, m * loc,
+                                                    (m + 1) * loc, axis=md)
+                    parts.append(leaf.reshape(-1))
+                flat = (jnp.concatenate(parts) if len(parts) > 1
+                        else parts[0])
+                rows.append(jnp.pad(flat, (0, g.padded - g.total)))
+            out[str(g.dtype)] = (jnp.stack(rows) if self.mo > 1
+                                 else rows[0][None])
+        return out
+
+    def to_tree(self, store: dict, like) -> dict:
+        """Store -> global param tree of slice views. ``like`` supplies the
+        pytree structure (params_shapes)."""
+        leaves = {}
+        for g in self.plan.groups:
+            rows = store[str(g.dtype)]
+            offs = self.offsets[str(g.dtype)]
+            for path, shape, size, off in zip(g.paths, g.shapes, g.sizes,
+                                              offs):
+                md = self.model_dims.get(path)
+                if md is not None and self.mo > 1:
+                    pieces = [rows[m, off:off + size].reshape(shape)
+                              for m in range(self.mo)]
+                    leaves[path] = jnp.concatenate(pieces, axis=md)
+                else:
+                    leaves[path] = rows[0, off:off + size].reshape(shape)
+        flat_like = jax.tree_util.tree_flatten_with_path(like)
+        vals = [leaves[jax.tree_util.keystr(kp)] for kp, _ in flat_like[0]]
+        return jax.tree_util.tree_unflatten(flat_like[1], vals)
+
+    def grad_from_tree(self, ct_tree) -> dict:
+        """Assemble the flat cotangent from per-leaf cotangents with an
+        in-place dynamic_update_slice chain (one write per element, no
+        concatenate — the assembly stays zero-copy-class in the lowered
+        step)."""
+        cts = dict(_leaf_paths(ct_tree))
+        out = {}
+        for g in self.plan.groups:
+            offs = self.offsets[str(g.dtype)]
+            rows = []
+            for m in range(self.mo):
+                row = jnp.zeros((g.padded,), g.dtype)
+                for path, shape, size, off in zip(g.paths, g.shapes,
+                                                  g.sizes, offs):
+                    ct = cts[path]
+                    md = self.model_dims.get(path)
+                    if md is not None and self.mo > 1:
+                        loc = shape[md]
+                        piece = jax.lax.slice_in_dim(ct, m * loc,
+                                                     (m + 1) * loc, axis=md)
+                    elif m > 0:
+                        continue        # replicated leaves live in row 0
+                    else:
+                        piece = ct
+                    row = jax.lax.dynamic_update_slice(
+                        row, piece.reshape(-1).astype(g.dtype), (off,))
+                rows.append(row)
+            out[str(g.dtype)] = (jnp.stack(rows) if self.mo > 1
+                                 else rows[0][None])
+        return out
+
+    def reader(self, like):
+        """to_tree with a custom VJP: the autodiff transpose of per-leaf
+        slicing is a chain of pad+adds — one full-store add per leaf —
+        which XLA does not fuse; the hand-written backward assembles the
+        flat cotangent in a single dynamic_update_slice pass instead
+        (DESIGN.md §8)."""
+
+        @jax.custom_vjp
+        def read(store):
+            return self.to_tree(store, like)
+
+        def fwd(store):
+            return self.to_tree(store, like), None
+
+        def bwd(_, ct_tree):
+            return (self.grad_from_tree(ct_tree),)
+
+        read.defvjp(fwd, bwd)
+        return read
+
+
+def build_store_layout(plan: ChunkPlan, model_dims: dict,
+                       mo: int) -> FlatParamStore:
+    """model_dims: leaf path -> dim sharded over 'model' (absolute index,
+    None for replicated leaves), as recorded by the sharding planner."""
+    offsets = {}
+    for g in plan.groups:
+        offs, off = [], 0
+        for size in g.sizes:
+            offs.append(off)
+            off += size
+        offsets[str(g.dtype)] = tuple(offs)
+    return FlatParamStore(plan=plan, mo=max(mo, 1), offsets=offsets,
+                          model_dims=dict(model_dims))

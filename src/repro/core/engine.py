@@ -1,6 +1,13 @@
 """PHubEngine: builds jit-ready train/prefill/serve steps for one
 (architecture, mesh, exchange-strategy) triple.
 
+Two hot-path modes ride on the same structure (DESIGN.md §8):
+``TrainConfig.flat_residency`` keeps parameters as persistent flat
+chunk-domain stores (the forward consumes slice views; no per-step
+flatten/unflatten), and ``TrainConfig.pipeline_windows > 1`` runs the
+windowed, overlapped exchange schedule of core/pipeline.py instead of the
+monolithic collectives.
+
 Train step structure (see DESIGN.md §5):
 
   outer shard_map — manual over data(+pod), auto over model
@@ -31,10 +38,12 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ModelConfig, TrainConfig
+from ..utils import compat
 from ..models import (init as model_init, forward, prefill, init_cache,
                       lm_head_weight, chunked_cross_entropy)
 from . import chunking
-from .exchange import ExchangeContext, exchange_group, flat_rank
+from .exchange import ExchangeContext
+from .pipeline import run_exchange
 from .sharding import ShardingPlan, plan_params, local_shapes, make_gather_fn
 
 
@@ -48,11 +57,11 @@ class _MeshScopedJit:
         self._mesh = mesh
 
     def __call__(self, *a, **k):
-        with jax.set_mesh(self._mesh):
+        with compat.set_mesh(self._mesh):
             return self._fn(*a, **k)
 
     def lower(self, *a, **k):
-        with jax.set_mesh(self._mesh):
+        with compat.set_mesh(self._mesh):
             return self._fn.lower(*a, **k)
 
 
@@ -80,6 +89,18 @@ class PHubEngine:
     mesh: Mesh
 
     def __post_init__(self):
+        from .exchange import STRATEGIES
+        if self.tc.strategy not in STRATEGIES:
+            raise ValueError(
+                f"unknown exchange strategy {self.tc.strategy!r}; "
+                f"expected one of {STRATEGIES}")
+        if self.tc.optimizer != "nesterov":
+            raise ValueError(
+                f"PHubEngine's chunk-domain exchange implements the paper's "
+                f"Nesterov optimizer only (momentum is a single flat buffer "
+                f"per dtype group); got optimizer={self.tc.optimizer!r}. "
+                f"Use optim.make_optimizer for tree-level sgd/adam updates "
+                f"outside the engine.")
         self.axis_sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
         self.data_axes = tuple(a for a in self.mesh.axis_names
                                if a in ("pod", "data"))
@@ -107,8 +128,17 @@ class PHubEngine:
                 self.local_param_shapes,
                 chunk_bytes=self.tc.chunk_size_bytes,
                 n_shards=max(self.ctx.n_shards(self.tc.strategy), 1))
+            mdims = {p: lp.model_dim for p, lp in self.plan.leaves.items()}
+            self.store_layout = chunking.build_store_layout(
+                self.chunk_plan, mdims, self.mo_eff)
         else:
+            if self.tc.flat_residency:
+                raise ValueError(
+                    "flat_residency requires a chunk-domain strategy: "
+                    "fsdp_stream shards leaves over 'data' and has no flat "
+                    "parameter store")
             self.chunk_plan = None
+            self.store_layout = None
 
     # ------------------------------------------------------------------ state
 
@@ -158,11 +188,49 @@ class PHubEngine:
         return {str(g.dtype): NamedSharding(self.mesh, spec)
                 for g in self.chunk_plan.groups}
 
+    def store_shapes(self):
+        """Flat-residency parameter store: {dtype_str: (mo, padded)}."""
+        return self.store_layout.store_shapes()
+
+    def store_shardings(self):
+        mspec = "model" if self.mo_eff > 1 else None
+        return {str(g.dtype): NamedSharding(self.mesh, P(mspec, None))
+                for g in self.chunk_plan.groups}
+
+    def params_from_store(self, store):
+        """Materialize the global parameter tree from a flat store (serve /
+        eval / checkpoint-export path — not the training hot path).
+
+        Conversions run unsharded and are re-laid-out with device_put: jit
+        with sharded out_shardings miscompiles the slice-rows/concat
+        relayout on legacy-Shardy installs, and these paths are cold."""
+        store = jax.tree.map(jax.device_get, store)
+        tree = jax.jit(
+            lambda s: self.store_layout.to_tree(s, self.params_shapes))(store)
+        return jax.tree.map(jax.device_put, tree, self.param_shardings())
+
+    def store_from_params(self, params):
+        """Inverse of params_from_store (checkpoint-restore path)."""
+        params = jax.tree.map(jax.device_get, params)
+        store = jax.jit(self.store_layout.from_tree)(params)
+        return {k: jax.device_put(v, s)
+                for (k, v), s in zip(store.items(),
+                                     self.store_shardings().values())}
+
     def init_state(self, key: jax.Array):
-        """Materialize (params, opt_state) with the planned shardings."""
-        pspecs = self.param_shardings()
-        params = jax.jit(lambda k: model_init(self.cfg, k),
-                         out_shardings=pspecs)(key)
+        """Materialize (params, opt_state) with the planned shardings.
+        Under flat residency ``params`` is the flat store dict."""
+        if self.tc.flat_residency:
+            store = jax.jit(
+                lambda k: self.store_layout.from_tree(model_init(self.cfg, k))
+            )(key)
+            params = {k: jax.device_put(v, s)
+                      for (k, v), s in zip(store.items(),
+                                           self.store_shardings().values())}
+        else:
+            pspecs = self.param_shardings()
+            params = jax.jit(lambda k: model_init(self.cfg, k),
+                             out_shardings=pspecs)(key)
         oshapes = self.opt_state_shapes()
         oshards = self.opt_state_shardings()
         opt = jax.tree.map(
@@ -174,10 +242,6 @@ class PHubEngine:
     # ------------------------------------------------------------ update fns
 
     def _update_fn(self, dtype):
-        if self.tc.optimizer != "nesterov":
-            # chunk-domain exchange supports the paper's optimizer; Adam is
-            # available through the fsdp_stream path (tree-level update).
-            pass
         if self.tc.use_pallas and self.tc.fused_agg_opt:
             ce = max(self.tc.chunk_size_bytes // np.dtype(dtype).itemsize, 1)
             return _pallas_vec(self.tc.lr, self.tc.momentum, ce)
@@ -241,10 +305,9 @@ class PHubEngine:
             cp = self.chunk_plan
             # Shardy forbids axis_index over outer axes inside the nested
             # manual computation: compute the shard rank here (outer scope).
-            if tc.strategy == "hierarchical":
-                rank = jax.lax.axis_index("data")
-            else:
-                rank = flat_rank(self.exchange_axes, self.axis_sizes)
+            rank_axes = (("data",) if tc.strategy == "hierarchical"
+                         else self.exchange_axes)
+            rank = compat.manual_axis_rank(rank_axes, self.axis_sizes, mesh)
 
             def inner(grads, params, opt, rank):
                 flats_g = chunking.flatten_groups(cp, grads)
@@ -253,29 +316,73 @@ class PHubEngine:
                 for g in cp.groups:
                     key = str(g.dtype)
                     mloc = opt[key].reshape(-1)
-                    p2, m2 = exchange_group(
+                    p2, m2 = run_exchange(
                         tc.strategy, self.ctx, flats_g[key], flats_p[key],
-                        mloc, self._update_fn(g.dtype), rank)
+                        mloc, self._update_fn(g.dtype), rank, g,
+                        tc.pipeline_windows)
                     new_p[key] = p2
                     new_m[key] = m2.reshape(opt[key].shape)
                 return (chunking.unflatten_groups(cp, new_p, self.params_shapes),
                         new_m)
 
             inner_in_p = pl.specs()           # full specs: model dims manual now
-            S = self.ctx.n_shards(tc.strategy)
-            mspec = "model" if self.mo_eff > 1 else None
-            m_spec = {str(g.dtype): (P(mspec, None, None) if S > 1
-                                     else P(mspec, None))
-                      for g in cp.groups}
+            m_spec = self._inner_m_specs()
             if tc.dp_over_model:
                 # 'model' is already manual in the outer shard_map and the
                 # params are fully local — no nested shard_map needed
                 return inner(grads, params, opt, rank)
-            return jax.shard_map(
-                inner, mesh=jax.sharding.get_abstract_mesh(),
+            return compat.shard_map(
+                inner, mesh=compat.current_mesh(mesh),
                 in_specs=(inner_in_p, inner_in_p, m_spec, P()),
                 out_specs=(inner_in_p, m_spec),
-                axis_names={"model"}, check_vma=False)(grads, params, opt, rank)
+                axis_names={"model"}, check_vma=False,
+                nested=True)(grads, params, opt, rank)
+
+        def exchange_stage_flat(gstore, pstore, opt):
+            """Chunk-domain exchange on per-dtype flat stores (mo, padded):
+            no tree flatten/unflatten — the stores ARE the exchange domain
+            (DESIGN.md §8)."""
+            cp = self.chunk_plan
+            rank_axes = (("data",) if tc.strategy == "hierarchical"
+                         else self.exchange_axes)
+            rank = compat.manual_axis_rank(rank_axes, self.axis_sizes, mesh)
+
+            def inner(fg, fp, opt, rank):
+                new_p, new_m = {}, {}
+                for g in cp.groups:
+                    key = str(g.dtype)
+                    p2, m2 = run_exchange(
+                        tc.strategy, self.ctx, fg[key].reshape(-1),
+                        fp[key].reshape(-1), opt[key].reshape(-1),
+                        self._update_fn(g.dtype), rank, g,
+                        tc.pipeline_windows)
+                    new_p[key] = p2.reshape(fp[key].shape)
+                    new_m[key] = m2.reshape(opt[key].shape)
+                return new_p, new_m
+
+            mspec = "model" if self.mo_eff > 1 else None
+            s_spec = {str(g.dtype): P(mspec, None) for g in cp.groups}
+            m_spec = self._inner_m_specs()
+            if tc.dp_over_model:
+                return inner(gstore, pstore, opt, rank)
+            return compat.shard_map(
+                inner, mesh=compat.current_mesh(mesh),
+                in_specs=(s_spec, s_spec, m_spec, P()),
+                out_specs=(s_spec, m_spec),
+                axis_names={"model"}, check_vma=False,
+                nested=True)(gstore, pstore, opt, rank)
+
+        flat = tc.flat_residency
+        if flat:
+            read_store = self.store_layout.reader(self.params_shapes)
+
+            def loss_fn_used(store, batch):
+                # Differentiate w.r.t. the flat store: leaves are slice
+                # views and the reader's custom VJP assembles the cotangent
+                # already flat — no concatenate, one write per element.
+                return loss_fn(read_store(store), batch)
+        else:
+            loss_fn_used = loss_fn
 
         def local_step(params, opt, batch):
             if tc.microbatch > 1:
@@ -289,7 +396,7 @@ class PHubEngine:
 
                 def acc_fn(carry, mbatch):
                     (tot, loss), grads = jax.value_and_grad(
-                        loss_fn, has_aux=True)(params, mbatch)
+                        loss_fn_used, has_aux=True)(params, mbatch)
                     tot_a, loss_a, g_a = carry
                     g_a = jax.tree.map(lambda a, g: a + g / k, g_a, grads)
                     return (tot_a + tot / k, loss_a + loss / k, g_a), None
@@ -305,13 +412,20 @@ class PHubEngine:
                                      grads, params)
             else:
                 (tot, loss), grads = jax.value_and_grad(
-                    loss_fn, has_aux=True)(params, batch)
-            new_p, new_m = exchange_stage(grads, params, opt)
+                    loss_fn_used, has_aux=True)(params, batch)
+            new_p, new_m = (exchange_stage_flat(grads, params, opt) if flat
+                            else exchange_stage(grads, params, opt))
             metrics = {"loss": jax.lax.pmean(loss, self.exchange_axes),
                        "total_loss": jax.lax.pmean(tot, self.exchange_axes)}
             return new_p, new_m, metrics
 
-        manual_p = pl.manual_specs(self.exchange_axes)
+        if flat:
+            # store rows are replicated over the manual data axes; the
+            # model row dim stays auto (manualized by the nested shard_map)
+            manual_p = {str(g.dtype): P(None, None)
+                        for g in self.chunk_plan.groups}
+        else:
+            manual_p = pl.manual_specs(self.exchange_axes)
         bx = (self.exchange_axes if len(self.exchange_axes) > 1
               else self.exchange_axes[0])
         batch_spec = {k: P(bx, *([None] * (len(v.shape) - 1)))
@@ -330,12 +444,20 @@ class PHubEngine:
                 m_outer = {str(g.dtype): P(None, None)
                            for g in self.chunk_plan.groups}
 
-        step = jax.shard_map(
+        step = compat.shard_map(
             local_step, mesh=mesh,
             in_specs=(manual_p, m_outer, batch_spec),
             out_specs=(manual_p, m_outer, P()),
             axis_names=manual_axes, check_vma=False)
-        return jax.jit(step, donate_argnums=(0, 1))
+        return _MeshScopedJit(jax.jit(step, donate_argnums=(0, 1)), mesh)
+
+    def _inner_m_specs(self):
+        """Momentum specs for the nested (model-manual) exchange region."""
+        S = self.ctx.n_shards(self.tc.strategy)
+        mspec = "model" if self.mo_eff > 1 else None
+        return {str(g.dtype): (P(mspec, None, None) if S > 1
+                               else P(mspec, None))
+                for g in self.chunk_plan.groups}
 
     def _batch_axes(self):
         return (self.data_axes[0] if len(self.data_axes) == 1

@@ -1,0 +1,196 @@
+"""Windowed, overlapped exchange schedule — PHub's gradient processing
+pipeline (§3.2, DESIGN.md §8).
+
+The monolithic schedules in core/exchange.py move each dtype group through
+three serial phases: one whole-group reduce-scatter, one whole-group fused
+agg+opt, one whole-group all-gather.  Fine-grained chunking (§3.2.3) exists
+precisely so that these phases can overlap at chunk granularity: while the
+network carries chunk *c*, the processor aggregates and optimizes chunk
+*c−1*, and each chunk crosses memory exactly once.
+
+This module realizes that as a *windowed software pipeline*: the chunk
+domain of one dtype group is split into ``W`` windows (each a whole number
+of chunks) and a ``lax.scan`` runs the double-buffered schedule
+
+    prologue:  r₀   = ring-reduce-scatter(window 0)
+    step w:    rₓ₊₁ = ring-reduce-scatter(window w+1)      (in flight)
+               p'ₓ  = fused agg+opt(window w, rₓ)          (compute)
+    epilogue:  agg+opt of the last window; one all-gather returns the
+               contiguous updated shard
+
+Inside one scan step the reduce-scatter of window w+1 and the optimization
+of window w are data-independent, so the compiler is free to run the
+collective and the kernel concurrently (async collectives on real
+hardware); window buffers are ``shard_len / W`` elements, small enough to
+stay cache-resident from reduction through optimization — the paper's
+"cross memory once" property.
+
+The reduce-scatter itself is a ``lax.ppermute`` ring (N−1 hops, each hop
+carrying one window-shard): the partial sum for shard row *j* is initiated
+by worker *j+1* and travels the ring accumulating every worker's
+contribution, arriving fully reduced at its owner *j*.  Each hop reads its
+contribution as a *contiguous* slice of the flat local gradient — never a
+strided (S, Lw) slab — which is what keeps the windowed path cheaper than
+the monolithic collectives (profiled: strided slab extraction costs more
+than the reduce-scatter itself).  Multi-axis worker domains (pod × data
+for flat sharded_ps) ring over the linearized axis tuple, matching
+``flat_rank``'s ordering.
+
+Return traffic is batched: updated window shards are contiguous in the
+chunk domain, so one tail all-gather of the assembled shard reproduces the
+monolithic output layout with no transpose.  (Per-window all-gathers would
+overlap the return path with later windows' optimization on hardware with
+async collectives, but profile 2× slower on the synchronous host backend
+that CI and the benchmarks run on — see benchmarks/pipeline_overlap.py.)
+
+Strategies: ``sharded_ps`` rings over all data axes; ``hierarchical``
+rings within the pod and cross-pod-reduces each window's owner shard only
+(1/S of the bytes crossing racks, §3.4).  Other strategies have no shard
+dimension to window — callers fall back to the monolithic schedule.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .chunking import GroupPlan
+from .exchange import ExchangeContext, UpdateFn
+
+PIPELINED_STRATEGIES = ("sharded_ps", "hierarchical")
+
+
+def effective_windows(group: GroupPlan, requested: int) -> int:
+    """Largest window count <= ``requested`` that splits the shard into a
+    whole number of chunks (windows must respect chunk boundaries so the
+    fused agg+opt kernel grid stays aligned)."""
+    cps = group.chunks_per_shard
+    w = max(1, min(requested, cps))
+    while cps % w:
+        w -= 1
+    return w
+
+
+def ring_reduce_scatter(slab: jax.Array, axes: Sequence[str],
+                        rank: jax.Array, n: int) -> jax.Array:
+    """Ring reduce-scatter of ``slab`` (n, Lw): returns this worker's fully
+    reduced row ``sum_i slab_i[rank]`` in n−1 ppermute hops.
+
+    The partial for row j starts at worker j+1 (its own contribution) and
+    hops j+2, …, j+n−1, j; each visit adds that worker's row-j block.  At
+    hop k worker r therefore holds the partial for row (r − 1 − k) mod n
+    and adds its own block before forwarding.
+    """
+    if n == 1:
+        return slab[0]
+    axis = tuple(axes) if len(axes) > 1 else axes[0]
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    acc = jax.lax.dynamic_index_in_dim(slab, (rank - 1) % n, axis=0,
+                                       keepdims=False)
+
+    def hop(acc, k):
+        acc = jax.lax.ppermute(acc, axis, perm)
+        row = jax.lax.dynamic_index_in_dim(slab, (rank - 1 - k) % n, axis=0,
+                                           keepdims=False)
+        return acc + row, None
+
+    acc, _ = jax.lax.scan(hop, acc, jnp.arange(1, n))
+    return acc
+
+
+def _ring_window_rs(g: jax.Array, L: int, start, Lw: int,
+                    axes: Sequence[str], rank: jax.Array,
+                    n: int) -> jax.Array:
+    """Ring reduce-scatter of the window ``[start, start+Lw)`` of every
+    shard row, reading each row's contribution as a contiguous slice of the
+    flat local gradient ``g`` (rows live at stride ``L``) — no strided slab
+    is ever materialized."""
+    def row(j):
+        return jax.lax.dynamic_slice(g, (j * L + start,), (Lw,))
+
+    if n == 1:
+        return row(jnp.zeros((), jnp.int32))
+    axis = tuple(axes) if len(axes) > 1 else axes[0]
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    acc = row((rank - 1) % n)
+
+    def hop(acc, k):
+        acc = jax.lax.ppermute(acc, axis, perm)
+        return acc + row((rank - 1 - k) % n), None
+
+    acc, _ = jax.lax.scan(hop, acc, jnp.arange(1, n))
+    return acc
+
+
+def pipelined_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
+                       p: jax.Array, m: jax.Array, update_fn: UpdateFn,
+                       rank: jax.Array, windows: int
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Windowed counterpart of ``exchange_group`` for the strategies with a
+    shard dimension.  g, p: (padded,) local vectors; m: (shard_len,);
+    rank: flat index over the strategy's ring axes.  Returns (p', m')
+    bit-identical in layout to the monolithic schedule.
+    """
+    if strategy not in PIPELINED_STRATEGIES:
+        raise ValueError(f"strategy {strategy!r} has no shard dimension to "
+                         f"window; use exchange_group")
+    axes = ctx.data_axes
+    N = ctx.n_workers
+    if strategy == "hierarchical":
+        ring_axes: tuple[str, ...] = ("data",)
+        S = ctx.axis_sizes["data"]
+        cross_pod = "pod" in axes
+    else:
+        ring_axes = tuple(axes)
+        S = ctx.n_shards(strategy)
+        cross_pod = False
+
+    L = g.size // S
+    W = windows
+    Lw = L // W
+
+    def rs_window(w):
+        r = _ring_window_rs(g, L, w * Lw, Lw, ring_axes, rank, S)
+        if cross_pod:
+            r = jax.lax.psum(r, "pod")      # cross-rack on the owner only
+        return r / N
+
+    def opt_window(w, r):
+        pw = jax.lax.dynamic_slice(p, (rank * L + w * Lw,), (Lw,))
+        mw = jax.lax.dynamic_slice(m, (w * Lw,), (Lw,))
+        return update_fn(pw, r, mw)
+
+    r0 = rs_window(0)
+
+    def body(carry, w):
+        nxt = rs_window(w + 1)              # window w+1 on the wire ...
+        p2, m2 = opt_window(w, carry)       # ... while window w optimizes
+        return nxt, (p2, m2)
+
+    r_last, (p2s, m2s) = jax.lax.scan(body, r0, jnp.arange(W - 1))
+    p_l, m_l = opt_window(W - 1, r_last)
+    # window shards are consecutive runs of this worker's shard: assembling
+    # them is a contiguous concat, and one tail all-gather reproduces the
+    # shard-major chunk domain with no transpose (see module docstring on
+    # return-path batching)
+    shard = jnp.concatenate([p2s.reshape(-1), p_l])
+    m_out = jnp.concatenate([m2s.reshape(-1), m_l])
+    p_out = jax.lax.all_gather(shard, ring_axes, tiled=True)
+    return p_out, m_out
+
+
+def run_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
+                 p: jax.Array, m: jax.Array, update_fn: UpdateFn,
+                 rank: jax.Array, group: GroupPlan, windows: int
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Dispatch one dtype group: the windowed pipeline when the strategy has
+    a shard dimension and >1 effective windows, else the monolithic
+    schedule."""
+    from .exchange import exchange_group
+    if strategy in PIPELINED_STRATEGIES:
+        w = effective_windows(group, windows)
+        if w > 1:
+            return pipelined_exchange(strategy, ctx, g, p, m, update_fn,
+                                      rank, w)
+    return exchange_group(strategy, ctx, g, p, m, update_fn, rank)

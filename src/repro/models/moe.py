@@ -21,6 +21,23 @@ def load_balance_loss(probs: jax.Array, idx: jax.Array, n_experts: int) -> jax.A
     return n_experts * jnp.sum(f * p)
 
 
+def _top_k(probs: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """top_k via an argmax sweep. ``jax.lax.top_k`` lowers to an mhlo.topk
+    custom call that SPMD partitioners cannot shard when the operand carries
+    a mesh-axis sharding (the router runs inside the partial-auto train
+    step); k is tiny here, so k argmax passes cost nothing and partition
+    everywhere. Tie-breaking matches lax.top_k (lowest index wins)."""
+    vals, idxs = [], []
+    p = probs
+    for _ in range(k):
+        i = jnp.argmax(p, axis=-1)
+        vals.append(jnp.take_along_axis(p, i[..., None], axis=-1)[..., 0])
+        idxs.append(i)
+        p = jnp.where(jax.nn.one_hot(i, p.shape[-1], dtype=jnp.bool_),
+                      -jnp.inf, p)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
 def moe_mlp(x: jax.Array, router_w: jax.Array, w1: jax.Array, w3: jax.Array,
             w2: jax.Array, *, top_k: int, capacity_factor: float
             ) -> tuple[jax.Array, jax.Array]:
@@ -34,7 +51,7 @@ def moe_mlp(x: jax.Array, router_w: jax.Array, w1: jax.Array, w3: jax.Array,
 
     logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)                    # (S, E)
-    gate, idx = jax.lax.top_k(probs, top_k)                    # (S, k)
+    gate, idx = _top_k(probs, top_k)                           # (S, k)
     gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
     aux = load_balance_loss(probs, idx, E)
 

@@ -27,6 +27,10 @@ def fit(engine, state: TrainState, data, *, steps: int,
 
     data: SyntheticTokens-like (device_batch(step, mesh, data_axes)).
     hooks: callables (state, metrics) invoked every step.
+
+    The loss is materialized on host (a blocking device sync) only at log
+    boundaries, on the final step, and when hooks are installed — otherwise
+    step dispatch stays fully asynchronous.
     """
     batch0 = data.batch_at(state.step)
     shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
@@ -34,20 +38,23 @@ def fit(engine, state: TrainState, data, *, steps: int,
     step_fn = engine.make_train_step(shapes)
     t0 = time.time()
     tokens = 0
+    last = state.step + steps - 1
     for i in range(state.step, state.step + steps):
         batch = data.device_batch(i, mesh=engine.mesh,
                                   data_axes=engine.data_axes or ("data",))
         state.params, state.opt, metrics = step_fn(state.params, state.opt,
                                                    batch)
-        loss = float(metrics["loss"])
-        state.losses.append(loss)
         state.step = i + 1
         tokens += batch0["tokens"].size
-        for h in hooks or ():
-            h(state, metrics)
-        if log_every and (i % log_every == 0 or i == state.step - 1):
-            log_fn(f"[fit] step {i:5d} loss {loss:.4f} "
-                   f"({tokens / (time.time() - t0):,.0f} tok/s)")
+        should_log = bool(log_every) and (i % log_every == 0 or i == last)
+        if hooks or should_log or i == last:
+            loss = float(metrics["loss"])        # host sync
+            state.losses.append(loss)
+            for h in hooks or ():
+                h(state, metrics)
+            if should_log:
+                log_fn(f"[fit] step {i:5d} loss {loss:.4f} "
+                       f"({tokens / (time.time() - t0):,.0f} tok/s)")
         if (checkpoint_dir and checkpoint_every
                 and state.step % checkpoint_every == 0):
             save_checkpoint(checkpoint_dir, state.step,

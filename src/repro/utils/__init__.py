@@ -1,1 +1,2 @@
-from .hlo import parse_collectives, summarize_collectives, CollectiveStats
+from .hlo import (parse_collectives, parse_concat_sizes,
+                  summarize_collectives, CollectiveStats)

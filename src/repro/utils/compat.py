@@ -1,0 +1,106 @@
+"""jax version compatibility shims.
+
+The engine is written against the modern jax surface (``jax.set_mesh``,
+``jax.shard_map(..., axis_names=..., check_vma=...)``,
+``jax.sharding.get_abstract_mesh``).  Older installs (0.4.x) spell these
+``with mesh:``, ``jax.experimental.shard_map.shard_map(..., auto=...,
+check_rep=...)`` and have no abstract-mesh accessor.  All call sites go
+through this module so the rest of the codebase stays on one spelling.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional
+
+import jax
+
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+_HAS_USE_MESH = hasattr(jax.sharding, "use_mesh")
+_HAS_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
+
+if not _HAS_SHARD_MAP:
+    # Legacy GSPMD cannot partition the engine's partial-auto train step
+    # (manual data axes, auto model axis): it hard-crashes on manual-subgroup
+    # sharding checks.  The Shardy partitioner — default on modern jax — is
+    # available behind a flag on 0.4.x and compiles it correctly.
+    try:
+        jax.config.update("jax_use_shardy_partitioner", True)
+    except Exception:  # noqa: BLE001 - flag absent on exotic builds
+        pass
+    # Modern jax also defaults to partitionable threefry; without it, random
+    # bits generated under sharded out_shardings differ from the same call
+    # eager/unsharded (init_state vs a host-side oracle would diverge).
+    try:
+        jax.config.update("jax_threefry_partitionable", True)
+    except Exception:  # noqa: BLE001
+        pass
+
+
+def set_mesh(mesh) -> contextlib.AbstractContextManager:
+    """Context manager binding ``mesh`` as the ambient mesh."""
+    if _HAS_SET_MESH:
+        return jax.set_mesh(mesh)
+    if _HAS_USE_MESH:
+        return jax.sharding.use_mesh(mesh)
+    return mesh  # jax.sharding.Mesh is itself a context manager
+
+
+def current_mesh(fallback):
+    """The mesh to hand a nested shard_map: the ambient abstract mesh on
+    modern jax, the engine's concrete mesh otherwise."""
+    if _HAS_ABSTRACT_MESH:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and getattr(m, "axis_names", None):
+            return m
+    return fallback
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[set] = None, check_vma: bool = False,
+              nested: bool = False):
+    """Modern-signature shard_map that lowers to whichever implementation
+    this jax provides.
+
+    ``axis_names`` is the set of *manual* axes (modern convention); under
+    the legacy API it is translated to ``auto = mesh_axes - axis_names``.
+    ``nested=True`` marks a shard_map issued inside an enclosing one whose
+    manual axes cover the rest of the mesh: legacy GSPMD hard-crashes if
+    an already-manual axis is named auto again, so the inner call must go
+    full-manual (``auto = {}``).
+    """
+    if _HAS_SHARD_MAP:
+        kwargs: dict[str, Any] = {"mesh": mesh, "in_specs": in_specs,
+                                  "out_specs": out_specs,
+                                  "check_vma": check_vma}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as _legacy
+    auto = frozenset()
+    if axis_names is not None and not nested:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_vma, auto=auto)
+
+
+def manual_axis_rank(axes, sizes: dict, mesh) -> jax.Array:
+    """Flattened device index over ``axes`` from inside a *partial-auto*
+    manual region.  Modern jax lowers ``axis_index`` there directly; legacy
+    GSPMD lowers it to a PartitionId instruction the SPMD partitioner
+    rejects, so we evaluate it inside a zero-input full-manual shard_map
+    (where the lowering is legal) and return the per-device scalar."""
+    from jax.sharding import PartitionSpec as P
+
+    def rank():
+        r = jax.numpy.zeros((), jax.numpy.int32)
+        for a in axes:
+            r = r * sizes[a] + jax.lax.axis_index(a)
+        return r
+
+    if _HAS_SHARD_MAP:
+        return rank()
+    from jax.experimental.shard_map import shard_map as _legacy
+    return _legacy(rank, mesh=mesh, in_specs=(), out_specs=P(),
+                   check_rep=False)()

@@ -118,6 +118,21 @@ def parse_collectives(hlo_text: str, *, pod_stride: int = 0
     return list(agg.values())
 
 
+_CONCAT_RE = re.compile(
+    r"=\s+(\S+)\s+concatenate\(")
+
+
+def parse_concat_sizes(hlo_text: str) -> list[int]:
+    """Result sizes (bytes) of every ``concatenate`` op in the HLO text.
+
+    Used to prove flat parameter residency (DESIGN.md §8): the seed's
+    flatten_groups round trip shows up in the lowered train step as
+    concatenates whose outputs span a whole dtype group; the flat-residency
+    step must contain none at model scale."""
+    return [_shape_bytes(m.group(1))
+            for m in _CONCAT_RE.finditer(hlo_text)]
+
+
 def summarize_collectives(stats: list[CollectiveStats]) -> dict:
     out: dict = {"ici_bytes": 0.0, "dcn_bytes": 0.0, "by_kind": {}}
     for s in stats:

@@ -1,8 +1,8 @@
 """HLO collective parser unit tests (roofline input integrity)."""
 import textwrap
 
-from repro.utils.hlo import (parse_collectives, summarize_collectives,
-                             CollectiveStats)
+from repro.utils.hlo import (parse_collectives, parse_concat_sizes,
+                             summarize_collectives, CollectiveStats)
 
 SAMPLE = textwrap.dedent("""\
     %ar = f32[16,1024]{1,0} all-reduce(f32[16,1024]{1,0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
@@ -44,6 +44,19 @@ def test_summary_tiers():
     assert s["dcn_bytes"] > 0 and s["ici_bytes"] > 0
     assert set(s["by_kind"]) == {"all-reduce", "all-gather", "reduce-scatter",
                                  "collective-permute"}
+
+
+def test_parse_concat_sizes():
+    """Concat extraction feeding the flat-residency zero-copy assertion
+    (DESIGN.md §8)."""
+    txt = textwrap.dedent("""\
+        %c1 = f32[1024]{0} concatenate(f32[512]{0} %a, f32[512]{0} %b), dimensions={0}
+        %c2 = bf16[4,8]{1,0} concatenate(bf16[4,4]{1,0} %x, bf16[4,4]{1,0} %y), dimensions={1}
+        %n = f32[4]{0} add(f32[4]{0} %p, f32[4]{0} %q)
+    """)
+    sizes = parse_concat_sizes(txt)
+    assert sorted(sizes) == [4 * 8 * 2, 1024 * 4]
+    assert parse_concat_sizes("%n = f32[4]{0} add(f32[4]{0} %a)") == []
 
 
 def test_iota_groups_transpose():

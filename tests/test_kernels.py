@@ -3,7 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels.agg_opt.ops import fused_agg_opt, fused_multi_agg_opt
 from repro.kernels.agg_opt.ref import agg_opt_ref

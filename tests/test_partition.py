@@ -1,6 +1,9 @@
 """LPT 4/3-approximation set partition (§3.2.4) property tests."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.partition import lpt_partition, bin_loads, makespan_ratio
 

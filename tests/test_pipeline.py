@@ -1,0 +1,296 @@
+"""Pipelined chunk-window exchange + flat parameter residency (DESIGN.md §8).
+
+Single-device tests cover the window math, the FlatParamStore offset table,
+single-worker pipeline parity, and the zero-copy HLO property; the
+multi-device parity checks (pipelined == monolithic on 8 fake devices for
+sharded_ps and hierarchical, flat == tree) run in a subprocess like
+tests/test_exchange.py.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, TrainConfig, reduced
+from repro.core.chunking import build_plan, build_store_layout, flatten_groups
+from repro.core.exchange import ExchangeContext, exchange_group
+from repro.core.pipeline import (PIPELINED_STRATEGIES, effective_windows,
+                                 pipelined_exchange, run_exchange)
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+# ------------------------------------------------------------- window math
+
+def test_effective_windows_respects_chunk_boundaries():
+    tree = {"w": jnp.zeros((4096,), jnp.float32)}   # 16 KB
+    plan = build_plan(tree, chunk_bytes=1024, n_shards=2)
+    (g,) = plan.groups
+    assert g.chunks_per_shard == 8
+    assert effective_windows(g, 1) == 1
+    assert effective_windows(g, 4) == 4
+    assert effective_windows(g, 5) == 4      # largest divisor of 8 below 5
+    assert effective_windows(g, 100) == 8    # clamped to chunks_per_shard
+    assert effective_windows(g, 0) == 1
+
+
+def test_pipelined_strategies_registry():
+    assert set(PIPELINED_STRATEGIES) == {"sharded_ps", "hierarchical"}
+
+
+# --------------------------------------------- single-worker pipeline parity
+
+def _upd(lr=0.1, mu=0.9):
+    def f(p, g, m):
+        m2 = mu * m + g
+        return p - lr * (g + mu * m2), m2
+    return f
+
+
+def _bind_data_axis(fn):
+    """Run ``fn`` inside a 1-device shard_map so collective axis names
+    resolve (exchange schedules always execute in a manual region)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.utils import compat
+    mesh = jax.make_mesh((1,), ("data",))
+    return compat.shard_map(fn, mesh=mesh, in_specs=(), out_specs=P(),
+                            axis_names={"data"}, check_vma=False)()
+
+
+@pytest.mark.parametrize("windows", [2, 4, 8])
+def test_single_worker_windows_match_monolithic(windows):
+    """With one worker the ring degenerates to identity and the windowed
+    schedule must reproduce the monolithic update exactly."""
+    ctx = ExchangeContext(data_axes=("data",), axis_sizes={"data": 1})
+    rng = np.random.default_rng(0)
+    n = 1024
+    g = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    p = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    m = jnp.zeros(n, jnp.float32)
+    rank = jnp.zeros((), jnp.int32)
+
+    def both():
+        p_ref, m_ref = exchange_group("sharded_ps", ctx, g, p, m, _upd(),
+                                      rank)
+        p_win, m_win = pipelined_exchange("sharded_ps", ctx, g, p, m,
+                                          _upd(), rank, windows)
+        return p_ref, m_ref, p_win, m_win
+
+    p_ref, m_ref, p_win, m_win = _bind_data_axis(both)
+    np.testing.assert_allclose(np.asarray(p_win), np.asarray(p_ref),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m_win), np.asarray(m_ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_run_exchange_dispatch():
+    """run_exchange falls back to the monolithic schedule for strategies
+    without a shard dimension and for windows=1."""
+    ctx = ExchangeContext(data_axes=("data",), axis_sizes={"data": 1})
+    tree = {"w": jnp.zeros((1024,), jnp.float32)}
+    plan = build_plan(tree, chunk_bytes=512, n_shards=1)
+    (grp,) = plan.groups
+    g = jnp.ones(grp.padded)
+    p = jnp.zeros(grp.padded)
+    m = jnp.zeros(grp.padded)
+    rank = jnp.zeros((), jnp.int32)
+    for strategy in ("allreduce", "sharded_ps"):
+        def both():
+            p2, m2 = run_exchange(strategy, ctx, g, p, m, _upd(), rank,
+                                  grp, 4)
+            p1, m1 = exchange_group(strategy, ctx, g, p, m, _upd(), rank)
+            return p2, p1
+        p2, p1 = _bind_data_axis(both)
+        np.testing.assert_allclose(np.asarray(p2), np.asarray(p1),
+                                   rtol=1e-6)
+
+
+# ------------------------------------------------------------ FlatParamStore
+
+def test_store_roundtrip_mo1():
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": jnp.arange(6.0).reshape(2, 3) + 100}
+    plan = build_plan(tree, chunk_bytes=64, n_shards=2)
+    layout = build_store_layout(plan, {"['a']": None, "['b']": None}, 1)
+    store = layout.from_tree(tree)
+    (g,) = plan.groups
+    assert store["float32"].shape == (1, g.padded)
+    back = layout.to_tree(store, tree)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+    # store row == flatten_groups vector (same chunk domain)
+    flats = flatten_groups(plan, tree)
+    np.testing.assert_array_equal(np.asarray(store["float32"][0]),
+                                  np.asarray(flats["float32"]))
+
+
+def test_store_roundtrip_model_sharded_rows():
+    """mo=2: model-sharded leaves split across rows; replicated leaves are
+    read from row 0."""
+    tree = {"w": jnp.arange(16.0).reshape(2, 8),     # sharded on dim 1
+            "r": jnp.arange(4.0)}                    # replicated
+    local = {"w": jax.ShapeDtypeStruct((2, 4), jnp.float32),
+             "r": jax.ShapeDtypeStruct((4,), jnp.float32)}
+    plan = build_plan(local, chunk_bytes=32, n_shards=1)
+    layout = build_store_layout(plan, {"['w']": 1, "['r']": None}, 2)
+    store = layout.from_tree(tree)
+    assert store["float32"].shape[0] == 2
+    back = layout.to_tree(store, tree)
+    np.testing.assert_array_equal(np.asarray(back["w"]), np.asarray(tree["w"]))
+    np.testing.assert_array_equal(np.asarray(back["r"]), np.asarray(tree["r"]))
+    # offsets are static python ints
+    for offs in layout.offsets.values():
+        assert all(isinstance(o, int) for o in offs)
+
+
+def test_store_gradient_is_flat():
+    """d(loss)/d(store) lands directly in the flat chunk domain."""
+    tree = {"a": jnp.ones((3, 4)), "b": jnp.ones((5,))}
+    plan = build_plan(tree, chunk_bytes=64, n_shards=1)
+    layout = build_store_layout(plan, {"['a']": None, "['b']": None}, 1)
+    store = layout.from_tree(tree)
+
+    def loss(s):
+        t = layout.to_tree(s, tree)
+        return (t["a"] ** 2).sum() + (3 * t["b"]).sum()
+
+    gstore = jax.grad(loss)(store)
+    (g,) = plan.groups
+    assert gstore["float32"].shape == (1, g.padded)
+    flat = np.asarray(gstore["float32"][0])
+    np.testing.assert_allclose(flat[:12], 2.0)       # d(a^2)=2a, a=1
+    np.testing.assert_allclose(flat[12:17], 3.0)
+    np.testing.assert_allclose(flat[17:], 0.0)       # padding gets no grad
+
+
+# ----------------------------------------------------- engine-level (1 dev)
+
+def _one_step(tc):
+    from repro.core import PHubEngine
+    from repro.data import SyntheticTokens
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
+    params, opt = eng.init_state(jax.random.PRNGKey(0))
+    data = SyntheticTokens(cfg, 4, 32, seed=9)
+    b = data.batch_at(0)
+    shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in b.items()}
+    step = eng.make_train_step(shapes)
+    batch = {k: jax.device_put(v, s) for (k, v), s in
+             zip(b.items(), eng.batch_shardings(shapes).values())}
+    return eng, step, params, opt, batch
+
+
+def test_flat_residency_matches_tree_step():
+    eng_t, step_t, p_t, o_t, batch = _one_step(
+        TrainConfig(lr=3e-2, loss_chunk=32))
+    p1, o1, m1 = step_t(p_t, o_t, batch)
+    eng_f, step_f, p_f, o_f, batch = _one_step(
+        TrainConfig(lr=3e-2, loss_chunk=32, flat_residency=True,
+                    pipeline_windows=4))
+    p2s, o2, m2 = step_f(p_f, o_f, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-6
+    back = eng_f.params_from_store(p2s)
+    errs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        p1, back)
+    assert max(jax.tree.leaves(errs)) < 1e-6
+
+
+def test_flat_residency_rejects_fsdp_stream():
+    from repro.core import PHubEngine
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    with pytest.raises(ValueError, match="flat_residency"):
+        PHubEngine(cfg=cfg, tc=TrainConfig(strategy="fsdp_stream",
+                                           flat_residency=True), mesh=mesh)
+
+
+def test_engine_rejects_non_nesterov():
+    from repro.core import PHubEngine
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    with pytest.raises(ValueError, match="[Nn]esterov"):
+        PHubEngine(cfg=cfg, tc=TrainConfig(optimizer="adam"), mesh=mesh)
+
+
+def test_checkpoint_restore_converts_residency(tmp_path):
+    """A tree-state checkpoint restores into a flat-residency engine and
+    back (checkpointer converts between residency modes)."""
+    from repro.checkpoint import save_checkpoint, restore_train_state
+    from repro.core import PHubEngine
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    eng_tree = PHubEngine(cfg=cfg, tc=TrainConfig(), mesh=mesh)
+    eng_flat = PHubEngine(cfg=cfg, tc=TrainConfig(flat_residency=True),
+                          mesh=mesh)
+    params, opt = eng_tree.init_state(jax.random.PRNGKey(0))
+    save_checkpoint(str(tmp_path), 3, {"params": params, "opt": opt})
+
+    step, store, opt2 = restore_train_state(str(tmp_path), eng_flat)
+    assert step == 3
+    assert set(store) == {str(g.dtype) for g in eng_flat.chunk_plan.groups}
+    back = eng_flat.params_from_store(store)
+    errs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        params, back)
+    assert max(jax.tree.leaves(errs)) == 0.0
+
+    # flat checkpoint -> tree engine
+    save_checkpoint(str(tmp_path), 4, {"params": store, "opt": opt2})
+    _, params2, _ = restore_train_state(str(tmp_path), eng_tree, step=4)
+    errs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        params, params2)
+    assert max(jax.tree.leaves(errs)) == 0.0
+
+
+# ------------------------------------------------------- zero-copy HLO proof
+
+def _lowered_hlo(tc):
+    from repro.utils.hlo import parse_concat_sizes
+    eng, step, params, opt, batch = _one_step(tc)
+    txt = step.lower(params, opt, batch).compile().as_text()
+    group_bytes = max(g.total * np.dtype(g.dtype).itemsize
+                      for g in eng.chunk_plan.groups)
+    return parse_concat_sizes(txt), group_bytes
+
+
+def test_flat_residency_train_step_has_no_model_scale_concat():
+    """The flat-residency train step must not rebuild whole dtype groups:
+    no concatenate at >= half the largest group's bytes.  The tree-state
+    step keeps its flatten_groups concats — proving the assertion bites."""
+    concats_flat, group_bytes = _lowered_hlo(
+        TrainConfig(lr=3e-2, loss_chunk=32, flat_residency=True))
+    big = [c for c in concats_flat if c >= group_bytes // 2]
+    assert not big, f"model-scale concatenates survived: {big}"
+
+    concats_tree, group_bytes = _lowered_hlo(
+        TrainConfig(lr=3e-2, loss_chunk=32))
+    assert any(c >= group_bytes // 2 for c in concats_tree), \
+        "control failed: tree-state step lost its flatten concats"
+
+
+# ----------------------------------------------------------- multi-device
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case", ["sharded_ps", "hierarchical", "flat",
+                                  "ring"])
+def test_multidevice_pipeline_parity(case):
+    """Pipelined (windows>1) == monolithic, flat == tree, ring == XLA
+    psum_scatter — on 8 forced host devices in a subprocess."""
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "multidevice",
+                                      "check_pipeline.py"), case],
+        capture_output=True, text=True, timeout=1500,
+        env={**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")})
+    assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-3000:]
+    assert "FAIL" not in proc.stdout
