@@ -22,19 +22,31 @@ def _timeit(fn, *args, warmup=2, reps=5):
     return ts[len(ts) // 2] * 1e6
 
 
+def _timeit_state(step, state, warmup=2, reps=5):
+    """_timeit for steps that donate their inputs: threads ``state`` through
+    ``state = step(*state)`` per rep.  Returns (median_us, final_state)."""
+    import jax
+    for _ in range(warmup):
+        state = step(*state)
+        jax.block_until_ready(jax.tree.leaves(state)[0])
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        state = step(*state)
+        jax.block_until_ready(jax.tree.leaves(state)[0])
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6, state
+
+
 def bench_exchange_only(p):
     """ZeroComputeEngine analog (paper §4.4): the gradient-exchange +
     fused-agg-opt pipeline with fwd/bwd replaced by a no-op — pure PS
-    throughput. Returns us/exchange for the requested strategy and the
-    per-step exchanged bytes."""
+    throughput (engine.make_zero_compute_step). Returns us/exchange for the
+    requested strategy and the per-step exchanged bytes."""
     import jax
-    import jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.configs import ARCHS, TrainConfig, reduced
     from repro.core import PHubEngine
-    from repro.core.chunking import flatten_groups, unflatten_groups
-    from repro.core.exchange import exchange_group
-    from repro.utils import compat
 
     data_size = p["data_size"]
     mesh = jax.make_mesh((data_size, 1), ("data", "model"))
@@ -43,53 +55,10 @@ def bench_exchange_only(p):
     tc = TrainConfig(strategy=p["strategy"],
                      chunk_size_bytes=p.get("chunk_kb", 32) * 1024)
     eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
-    params, opt = eng.init_state(jax.random.PRNGKey(0))
-    cp = eng.chunk_plan
-
-    def exchange_only(params, opt):
-        def local(params, opt):
-            grads = jax.tree.map(lambda x: x * 1e-4, params)  # stand-in push
-            rank_axes = (("data",) if tc.strategy == "hierarchical"
-                         else eng.data_axes)
-            rank = compat.manual_axis_rank(rank_axes, eng.axis_sizes, mesh)
-
-            def inner(grads, params, opt, rank):
-                fg = flatten_groups(cp, grads)
-                fp = flatten_groups(cp, params)
-                new_p, new_m = {}, {}
-                for g in cp.groups:
-                    key = str(g.dtype)
-                    p2, m2 = exchange_group(
-                        tc.strategy, eng.ctx, fg[key], fp[key],
-                        opt[key].reshape(-1), eng._update_fn(g.dtype), rank)
-                    new_p[key] = p2
-                    new_m[key] = m2.reshape(opt[key].shape)
-                return unflatten_groups(cp, new_p, eng.params_shapes), new_m
-
-            specs = eng.plan.specs()
-            S = eng.ctx.n_shards(tc.strategy)
-            m_spec = {str(g.dtype): (P("model", None, None) if S > 1
-                                     else P("model", None))
-                      for g in cp.groups}
-            return compat.shard_map(
-                inner, mesh=compat.current_mesh(mesh),
-                in_specs=(specs, specs, m_spec, P()),
-                out_specs=(specs, m_spec),
-                axis_names={"model"}, check_vma=False,
-                nested=True)(grads, params, opt, rank)
-
-        manual = eng.plan.manual_specs(eng.data_axes)
-        S = eng.ctx.n_shards(tc.strategy)
-        m_outer = {str(g.dtype): (P(None, "data", None) if S > 1
-                                  else P(None, None)) for g in cp.groups}
-        return compat.shard_map(local, mesh=mesh, in_specs=(manual, m_outer),
-                                out_specs=(manual, m_outer),
-                                axis_names={"data"},
-                                check_vma=False)(params, opt)
-
-    step = jax.jit(exchange_only)
-    us = _timeit(step, params, opt)
-    total = cp.total_bytes()
+    state = eng.init_state(jax.random.PRNGKey(0))
+    step = eng.make_zero_compute_step()
+    us, _ = _timeit_state(step, state)
+    total = eng.chunk_plan.total_bytes()
     return {"us": us, "model_bytes": total,
             "exchanges_per_s": 1e6 / us}
 
@@ -232,9 +201,135 @@ def bench_pipeline_exchange(p):
                             for w in windows_list}}
 
 
+def bench_multitenant(p):
+    """Co-scheduled multi-job step vs serially alternated per-tenant engines
+    (the §3.1 multi-tenancy claim): K tenants, same rack, one step each.
+
+    Serial = the pre-co-scheduling behavior: each tenant's own jitted step
+    dispatched back-to-back (K programs, K sets of collectives per dtype
+    group).  Co-scheduled = one jointly compiled program over the packed
+    rack chunk domain (one reduce-scatter/agg+opt/all-gather carrying every
+    tenant).  Both are timed interleaved within one rep loop so machine
+    drift cancels; reported unit is one *round* = one step of every tenant.
+
+    ``zero_compute`` (paper §4.4 methodology) swaps every tenant's fwd/bwd
+    for a synthetic push on both sides — the PS-side view, where the rack's
+    shared exchange capacity is the whole story.
+    """
+    import time as _t
+
+    import jax
+    from repro.configs import ARCHS, TrainConfig, reduced
+    from repro.core import PHubConnectionManager
+    from repro.core.engine import make_co_train_step
+    from repro.data import SyntheticTokens
+
+    K = p["n_tenants"]
+    mesh = jax.make_mesh((p["data_size"], p.get("model_size", 1)),
+                         ("data", "model"))
+    cfg = reduced(ARCHS[p.get("arch", "llama3.2-1b")],
+                  d_model=p.get("d_model", 256))
+    batch, seq = p.get("batch", 8), p.get("seq", 64)
+
+    def make_tc(i):
+        return TrainConfig(strategy=p.get("strategy", "sharded_ps"),
+                           lr=1e-2 * (i + 1), momentum=0.9,
+                           chunk_size_bytes=p.get("chunk_kb", 32) * 1024,
+                           pipeline_windows=p.get("windows", 1),
+                           loss_chunk=seq)
+
+    def provision(cm):
+        handles, params, opts, batches = [], {}, {}, {}
+        for i in range(K):
+            ns = f"job{i}"
+            h = cm.create_service(ns, cfg, make_tc(i), mesh)
+            eng = cm.connect_service(h)
+            params[ns], opts[ns] = cm.init_service(h, jax.random.PRNGKey(i))
+            b = SyntheticTokens(cfg, batch, seq, seed=i).batch_at(0)
+            shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                      for k, v in b.items()}
+            batches[ns] = {k: jax.device_put(v, s) for (k, v), s in
+                           zip(b.items(),
+                               eng.batch_shardings(shapes).values())}
+            handles.append(h)
+        return handles, params, opts, batches
+
+    zero_compute = p.get("zero_compute", False)
+
+    cm_ser = PHubConnectionManager()
+    h_ser, p_ser, o_ser, b_ser = provision(cm_ser)
+
+    cm_co = PHubConnectionManager()
+    h_co, p_co, o_co, b_co = provision(cm_co)
+    cm_co.attach_services(h_co)
+
+    if zero_compute:
+        zc_steps = {h.namespace: cm_ser.connect_service(h)
+                    .make_zero_compute_step() for h in h_ser}
+        shapes = {h.namespace: {} for h in h_co}
+        zc_co = make_co_train_step(
+            {h.namespace: cm_co.connect_service(h) for h in h_co},
+            cm_co.packed_domain, shapes, zero_compute=True)
+        # the step donates its momentum input: run on a copy, not the
+        # manager's live packed buffers
+        opt_co = jax.tree.map(lambda x: x + 0, cm_co._co.opt)
+
+    def serial_round():
+        # the pre-co-scheduling service API: engines run *strictly*
+        # serially (each job's step completes before the next job runs —
+        # block per step, or async dispatch would overlap the programs and
+        # the baseline would not be serial at all)
+        nonlocal p_ser, o_ser
+        ms = []
+        for h in h_ser:
+            ns = h.namespace
+            if zero_compute:
+                p_ser[ns], o_ser[ns] = zc_steps[ns](p_ser[ns], o_ser[ns])
+                ms.append(jax.block_until_ready(
+                    jax.tree.leaves(p_ser[ns])[0]))
+            else:
+                p_ser[ns], o_ser[ns], m = cm_ser.push_pull(
+                    h, p_ser[ns], o_ser[ns], b_ser[ns])
+                ms.append(jax.block_until_ready(m["loss"]))
+        return ms
+
+    def co_round():
+        nonlocal p_co, opt_co
+        if zero_compute:
+            p_co, opt_co, _ = zc_co(p_co, opt_co,
+                                    {h.namespace: {} for h in h_co})
+            return [jax.tree.leaves(p_co)[0]]
+        p_co, metrics = cm_co.co_step(h_co, p_co, b_co)
+        return [m["loss"] for m in metrics.values()]
+
+    if not zero_compute:
+        opt_co = None
+
+    for _ in range(2):                                 # compile + warm
+        jax.block_until_ready(serial_round())
+        jax.block_until_ready(co_round())
+    t_ser, t_co = [], []
+    for _ in range(p.get("reps", 7)):
+        t0 = _t.perf_counter()
+        jax.block_until_ready(serial_round())
+        t_ser.append(_t.perf_counter() - t0)
+        t0 = _t.perf_counter()
+        jax.block_until_ready(co_round())
+        t_co.append(_t.perf_counter() - t0)
+    us_ser = sorted(t_ser)[len(t_ser) // 2] * 1e6
+    us_co = sorted(t_co)[len(t_co) // 2] * 1e6
+    acct = cm_co.accounting()
+    return {"us_serial": us_ser, "us_co": us_co,
+            "speedup": us_ser / us_co,
+            "tenant_bytes": {ns: acct[ns]["model_bytes"] for ns in acct},
+            "domain_padded": {k: g.padded * g.dtype.itemsize
+                              for k, g in cm_co.packed_domain.groups.items()}}
+
+
 BENCHES = {"exchange_only": bench_exchange_only,
            "train_step": bench_train_step,
-           "pipeline_exchange": bench_pipeline_exchange}
+           "pipeline_exchange": bench_pipeline_exchange,
+           "multitenant": bench_multitenant}
 
 
 def main():

@@ -13,6 +13,7 @@ Prints ``name,us_per_call,derived`` CSV rows (plus section markers).
   key_balance         §3.2.4           LPT chunk->core load balance
   roofline            §Roofline        per (arch x shape) terms from dry-run
   pipeline_overlap    §3.2 / D §8      windowed pipeline vs monolithic
+  multitenant         §3.1 / D §9      co-scheduled tenants vs serial engines
 
 Run all: PYTHONPATH=src python -m benchmarks.run
 Subset:  PYTHONPATH=src python -m benchmarks.run tall_vs_wide roofline
@@ -26,7 +27,7 @@ import traceback
 MODULES = ["bandwidth_table2", "cost_table5", "comm_schemes", "hierarchical",
            "key_balance",
            "tall_vs_wide", "caching", "overhead_breakdown", "roofline",
-           "chunk_size", "zero_compute", "pipeline_overlap"]
+           "chunk_size", "zero_compute", "pipeline_overlap", "multitenant"]
 
 
 def main() -> None:

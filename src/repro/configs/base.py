@@ -159,6 +159,15 @@ class TrainConfig:
 
     seed: int = 0
 
+    def exchange_signature(self) -> tuple:
+        """The fields that define the shared collective schedule.  Tenants
+        co-scheduled onto one rack chunk domain (core/api.py) must agree on
+        these — they share one reduce-scatter/agg+opt/all-gather program —
+        while lr/momentum/arch/batch are free to differ per tenant."""
+        return (self.strategy, self.chunk_size_bytes, self.pipeline_windows,
+                self.dp_over_model, self.flat_residency, self.use_pallas,
+                self.fused_agg_opt, self.optimizer)
+
 
 def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 256,
             n_experts: int = 4) -> ModelConfig:

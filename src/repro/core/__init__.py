@@ -1,8 +1,10 @@
 """PHub core: the paper's contribution as composable JAX modules."""
-from .engine import PHubEngine
+from .engine import PHubEngine, make_co_train_step
 from .exchange import STRATEGIES, ExchangeContext, exchange_group
-from .chunking import build_plan, flatten_groups, unflatten_groups, ChunkPlan
-from .partition import lpt_partition, makespan_ratio, bin_loads
+from .chunking import (build_plan, flatten_groups, unflatten_groups,
+                       ChunkPlan, TenantPackedDomain, pack_domains)
+from .partition import (lpt_partition, makespan_ratio, bin_loads,
+                        cochunk_counts)
 from .sharding import plan_params, local_shapes, make_gather_fn, ShardingPlan
 from .api import PHubConnectionManager, ServiceHandle
 from . import cost_model

@@ -1,24 +1,36 @@
 """The PHub service API (§3.1): multi-tenant rendezvous + namespaces.
 
 PHub is *multi-tenant*: several training jobs share one rack-scale PS,
-isolated by namespace + nonce. In the JAX runtime this maps to a registry
-of engines keyed by (namespace, nonce): CreateService provisions an engine
-for a job, ConnectService rendezvouses a worker group onto it, and
+isolated by namespace + nonce. CreateService provisions an engine for a
+job, ConnectService rendezvouses a worker group onto it, and
 Push/Pull/PushPull are the train-step entry points (PushPull — the fused
-push-wait-pull — is the default train_step; it is exactly the
-reduce-scatter + all-gather pair emitted by the exchange stage).
+push-wait-pull — is the default train_step).
+
+Beyond the registry, the connection manager is a *co-scheduler*: attached
+tenants are packed into one shared rack chunk domain
+(chunking.TenantPackedDomain, LPT-balanced across shards by
+partition.cochunk_counts so no tenant monopolizes a shard) and stepped by
+one jointly compiled multi-job program (engine.make_co_train_step) whose
+single reduce-scatter/agg+opt/all-gather schedule carries every tenant's
+gradients at once.  Attach/detach re-packs the domain, migrates the shared
+packed momentum, and invalidates the compiled-step cache; destroy reclaims
+the tenant's chunk ranges.  Per-tenant byte/step accounting is surfaced
+through cost_model.tenant_accounting.
 """
 from __future__ import annotations
 
-import dataclasses
 import secrets
 from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Optional
 
 import jax
+import numpy as np
 
 from ..configs.base import ModelConfig, TrainConfig
-from .engine import PHubEngine
+from . import cost_model
+from .chunking import TenantPackedDomain, pack_domains
+from .engine import (PHubEngine, co_opt_state_shapes, co_opt_state_shardings,
+                     make_co_train_step)
 
 
 @dataclass
@@ -35,11 +47,23 @@ class _Service:
     steps: dict = field(default_factory=dict)
 
 
+@dataclass
+class _CoSchedule:
+    """Shared rack chunk domain state for the attached tenants."""
+    domain: TenantPackedDomain
+    opt: dict                               # packed momentum (device arrays)
+    acct: dict                              # ns -> static per-step accounting
+    steps: dict = field(default_factory=dict)       # compiled-step cache
+    traffic: dict = field(default_factory=dict)     # ns -> counters
+
+
 class PHubConnectionManager:
     """In-process stand-in for the rack's connection manager."""
 
     def __init__(self):
         self._services: dict[str, _Service] = {}
+        self._attached: list[str] = []      # co-scheduled namespaces, ordered
+        self._co: Optional[_CoSchedule] = None
 
     # -- PHub::CreateService -------------------------------------------------
     def create_service(self, namespace: str, cfg: ModelConfig,
@@ -63,6 +87,12 @@ class PHubConnectionManager:
         svc.connected += 1
         return svc.engine
 
+    def service_info(self, handle: ServiceHandle) -> dict:
+        svc = self._auth(handle)
+        return {"namespace": handle.namespace, "connected": svc.connected,
+                "attached": handle.namespace in self._attached,
+                "cached_steps": len(svc.steps)}
+
     # -- PHub::InitService ---------------------------------------------------
     def init_service(self, handle: ServiceHandle, key: jax.Array):
         """Allocate receive/merge buffers (params + owner-shard momentum)."""
@@ -74,6 +104,11 @@ class PHubConnectionManager:
                   batch_shapes=None):
         """One fused push(gradients)+pull(new params) = one train step."""
         svc = self._auth(handle)
+        if handle.namespace in self._attached:
+            raise RuntimeError(
+                f"namespace {handle.namespace!r} is attached to the "
+                f"co-scheduled domain (its momentum lives in the packed "
+                f"buffers); detach_service first or use co_step")
         shapes = batch_shapes or {
             k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
         key = tuple(sorted((k, tuple(v.shape)) for k, v in shapes.items()))
@@ -83,4 +118,227 @@ class PHubConnectionManager:
 
     def destroy_service(self, handle: ServiceHandle):
         self._auth(handle)
+        if handle.namespace in self._attached:
+            self.detach_service(handle)     # reclaims its chunk ranges
         del self._services[handle.namespace]
+
+    # ------------------------------------------------- tenant co-scheduling
+
+    def attach_service(self, handle: ServiceHandle, opt=None):
+        """Join the shared rack chunk domain.  ``opt``, if given, is the
+        tenant's engine-layout momentum (e.g. from solo training) and is
+        folded into the packed buffers at the tenant's new chunk ranges;
+        otherwise the tenant starts from zero momentum.  Triggers a domain
+        re-pack + recompile (existing tenants' momentum migrates to its
+        re-balanced positions)."""
+        self.attach_services([handle], {handle.namespace: opt}
+                             if opt is not None else None)
+
+    def attach_services(self, handles, opts: Optional[dict] = None):
+        """Attach several tenants with one domain re-pack (attaching
+        one-by-one would migrate all prior tenants' momentum through the
+        host once per attach).  ``opts``: {namespace: engine-layout
+        momentum} for tenants carrying state in."""
+        # validate everything before mutating any state: a failure below
+        # must not leave tenants half-attached with no packed domain
+        svcs = {}
+        for handle in handles:
+            svc = self._auth(handle)
+            ns = handle.namespace
+            if ns in self._attached or ns in svcs:
+                raise ValueError(f"namespace {ns!r} already attached")
+            svcs[ns] = svc
+        anchor = (self._services[self._attached[0]].engine
+                  if self._attached else None)
+        for ns, svc in svcs.items():
+            self._check_coschedulable(svc.engine, ns, anchor)
+            anchor = anchor or svc.engine
+        imported = dict(self._extract_all())
+        for ns, svc in svcs.items():
+            opt = (opts or {}).get(ns)
+            if opt is not None:
+                imported[ns] = self._engine_opt_to_flats(svc.engine, opt)
+            self._attached.append(ns)
+        self._repack(imported)
+
+    def detach_service(self, handle: ServiceHandle):
+        """Leave the co-scheduled domain.  Returns the tenant's momentum in
+        its engine layout (ready for solo push_pull); the remaining tenants
+        are re-packed over the reclaimed chunk ranges."""
+        svc = self._auth(handle)
+        ns = handle.namespace
+        if ns not in self._attached:
+            raise ValueError(f"namespace {ns!r} is not attached")
+        flats = self._extract_all()
+        self._attached.remove(ns)
+        out = self._flats_to_engine_opt(svc.engine, flats.pop(ns))
+        self._repack(flats)
+        return out
+
+    @property
+    def attached(self) -> tuple[str, ...]:
+        return tuple(self._attached)
+
+    @property
+    def packed_domain(self) -> Optional[TenantPackedDomain]:
+        return self._co.domain if self._co else None
+
+    def co_step(self, handles, params_by, batches, batch_shapes=None):
+        """One jointly compiled step across every attached tenant.
+
+        ``handles``: the attached tenants' ServiceHandles (auth — every
+        attached namespace must be presented); ``params_by`` / ``batches``:
+        {namespace: params} / {namespace: batch}.  Returns
+        (new_params_by, metrics_by); the shared packed momentum is held and
+        donated internally.  Compiled steps are cached per (tenant set,
+        batch shapes) and invalidated by attach/detach."""
+        if self._co is None:
+            raise ValueError("no tenants attached; attach_service first")
+        by_ns = {h.namespace: h for h in handles}
+        if set(by_ns) != set(self._attached):
+            raise ValueError(
+                f"co_step needs exactly the attached tenants "
+                f"{tuple(self._attached)}; got {tuple(by_ns)}")
+        for h in by_ns.values():
+            self._auth(h)
+        co = self._co
+        shapes = batch_shapes or {
+            ns: {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                 for k, v in batches[ns].items()} for ns in self._attached}
+        key = tuple((ns, tuple(sorted((k, tuple(v.shape))
+                                      for k, v in shapes[ns].items())))
+                    for ns in self._attached)
+        if key not in co.steps:
+            co.steps[key] = make_co_train_step(
+                {ns: self._services[ns].engine for ns in self._attached},
+                co.domain, shapes)
+        new_p, co.opt, metrics = co.steps[key](params_by, co.opt, batches)
+        for ns in self._attached:
+            t = co.traffic.setdefault(
+                ns, {"steps": 0, "push_bytes": 0.0, "pull_bytes": 0.0})
+            t["steps"] += 1
+            t["push_bytes"] += co.acct[ns]["push_bytes"]
+            t["pull_bytes"] += co.acct[ns]["pull_bytes"]
+        return new_p, metrics
+
+    def accounting(self) -> dict:
+        """Per-tenant byte/step accounting for the co-scheduled domain:
+        cumulative wire traffic plus the tenant's packed-domain residency
+        (cost_model.tenant_accounting)."""
+        if self._co is None:
+            return {}
+        out = {}
+        for ns in self._attached:
+            out[ns] = {**self._co.acct[ns],
+                       **self._co.traffic.get(
+                           ns, {"steps": 0, "push_bytes": 0.0,
+                                "pull_bytes": 0.0})}
+        return out
+
+    # ------------------------------------------------------------ internals
+
+    def _check_coschedulable(self, eng: PHubEngine, ns: str,
+                             anchor: Optional[PHubEngine] = None):
+        if eng.tc.strategy == "fsdp_stream":
+            raise ValueError(
+                "fsdp_stream shards leaves over 'data' and has no chunk "
+                "domain to pack; co-scheduling needs a chunk strategy")
+        if eng.tc.flat_residency:
+            raise NotImplementedError(
+                "co-scheduling runs on tree-state tenants; flat_residency "
+                "stores are not packed yet (DESIGN.md §9)")
+        if eng.tc.use_pallas:
+            raise NotImplementedError(
+                "the co-scheduled agg+opt applies per-tenant hyperparameters "
+                "through coefficient tables; the scalar-lr Pallas kernel "
+                "cannot express that — use use_pallas=False for co-scheduled "
+                "tenants")
+        e0 = anchor or (self._services[self._attached[0]].engine
+                        if self._attached else None)
+        if e0 is not None:
+            if eng.mesh != e0.mesh:
+                raise ValueError(
+                    f"tenant {ns!r} runs on a different mesh; co-scheduled "
+                    f"tenants share one rack")
+            if eng.tc.exchange_signature() != e0.tc.exchange_signature():
+                raise ValueError(
+                    f"tenant {ns!r} exchange_signature "
+                    f"{eng.tc.exchange_signature()} != rack signature "
+                    f"{e0.tc.exchange_signature()}; co-scheduled tenants "
+                    f"share one collective schedule")
+
+    def _repack(self, tenant_flats: dict):
+        """(Re)build the packed domain for the attached set and scatter the
+        given per-tenant momentum flats into fresh packed buffers."""
+        if not self._attached:
+            self._co = None
+            return
+        e0 = self._services[self._attached[0]].engine
+        domain = pack_domains(
+            {ns: self._services[ns].engine.chunk_plan
+             for ns in self._attached},
+            n_shards=max(e0.ctx.n_shards(e0.tc.strategy), 1),
+            chunk_bytes=e0.tc.chunk_size_bytes)
+        shapes = co_opt_state_shapes(e0, domain)
+        bufs = {}
+        for key, pg in domain.groups.items():
+            mo = e0.mo_eff
+            buf = np.zeros((mo, pg.padded), pg.dtype)
+            for slot in pg.slots:
+                flat = tenant_flats.get(slot.tenant, {}).get(key)
+                if flat is None:
+                    continue
+                for toff, poff, ln in slot.runs:
+                    buf[:, poff:poff + ln] = flat[:, toff:toff + ln]
+            bufs[key] = buf.reshape(shapes[key].shape)
+        shardings = co_opt_state_shardings(e0, domain)
+        opt = {key: jax.device_put(bufs[key], shardings[key])
+               for key in domain.groups}
+        traffic = self._co.traffic if self._co else {}
+        acct = cost_model.tenant_accounting(      # static per domain: once
+            domain, e0.tc.strategy, e0.ctx.n_workers)
+        self._co = _CoSchedule(domain=domain, opt=opt, acct=acct,
+                               traffic=traffic)
+
+    def _extract_all(self) -> dict:
+        """Packed momentum -> {ns: {key: (mo, slot.padded) np array}}."""
+        if self._co is None:
+            return {}
+        out = {ns: {} for ns in self._attached}
+        for key, pg in self._co.domain.groups.items():
+            rows = np.asarray(jax.device_get(self._co.opt[key]))
+            mo = rows.shape[0]
+            rows = rows.reshape(mo, -1)
+            for slot in pg.slots:
+                flat = np.zeros((mo, slot.padded), pg.dtype)
+                for toff, poff, ln in slot.runs:
+                    flat[:, toff:toff + ln] = rows[:, poff:poff + ln]
+                out[slot.tenant][key] = flat
+        return out
+
+    def _engine_opt_to_flats(self, eng: PHubEngine, opt) -> dict:
+        """Engine-layout momentum -> chunk-granularity flats.  The dropped
+        tail [slot.padded:group.padded) is the tenant's solo rack-granularity
+        padding, which never receives gradient (always zero)."""
+        out = {}
+        for g in eng.chunk_plan.groups:
+            key = str(g.dtype)
+            rows = np.asarray(jax.device_get(opt[key]))
+            out[key] = rows.reshape(rows.shape[0], -1)
+        return out
+
+    def _flats_to_engine_opt(self, eng: PHubEngine, flats: dict):
+        """Chunk-granularity flats -> engine-layout momentum (device)."""
+        shapes = eng.opt_state_shapes()
+        shardings = eng.opt_state_shardings()
+        out = {}
+        for g in eng.chunk_plan.groups:
+            key = str(g.dtype)
+            mo = shapes[key].shape[0]
+            buf = np.zeros((mo, g.padded), g.dtype)
+            flat = flats.get(key)
+            if flat is not None:
+                buf[:, :flat.shape[1]] = flat
+            out[key] = jax.device_put(buf.reshape(shapes[key].shape),
+                                      shardings[key])
+        return out

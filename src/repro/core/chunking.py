@@ -241,6 +241,163 @@ class FlatParamStore:
         return read
 
 
+# ----------------------------------------------------- multi-tenant packing
+
+@dataclass(frozen=True)
+class TenantSlot:
+    """One tenant's residency inside a packed dtype group."""
+    tenant: str
+    total: int                    # unpadded element count
+    padded: int                   # chunk-granularity padding: n_chunks * ce
+    runs: tuple[tuple[int, int, int], ...]   # (tenant_off, packed_off, len)
+
+
+@dataclass(frozen=True)
+class PackedGroup:
+    """One dtype group of the shared rack chunk domain: every tenant's
+    chunks interleaved shard-major so each shard serves a balanced mix of
+    jobs (counts from partition.cochunk_counts)."""
+    dtype: Any
+    chunk_elems: int
+    n_shards: int
+    shard_len: int                # elements per shard (multiple of ce)
+    padded: int                   # n_shards * shard_len
+    slots: tuple[TenantSlot, ...]
+    # packed-order segments: (tenant|None, tenant_off, length); None = pad
+    layout: tuple[tuple[Any, int, int], ...]
+
+    @property
+    def chunks_per_shard(self) -> int:
+        return self.shard_len // self.chunk_elems
+
+    def slot(self, tenant: str) -> TenantSlot:
+        for s in self.slots:
+            if s.tenant == tenant:
+                return s
+        raise KeyError(tenant)
+
+
+@dataclass(frozen=True)
+class TenantPackedDomain:
+    """Shared rack-scale chunk domain for co-scheduled tenants (§3.1 multi-
+    tenancy): per dtype, every tenant's chunk-padded flat vector is split
+    into per-shard quota runs and packed shard-major, so one reduce-scatter
+    / agg+opt / all-gather schedule carries all jobs' gradients at once.
+    The offset tables (TenantSlot.runs) are the namespace isolation: each
+    tenant's update touches exactly its own ranges."""
+    groups: dict                  # dtype_str -> PackedGroup
+    tenants: tuple[str, ...]
+    n_shards: int
+    chunk_bytes: int
+
+    def pack(self, key: str, flats: dict) -> jax.Array:
+        """Per-tenant chunk-padded flats -> one (padded,) packed vector.
+        Every segment is a contiguous slice, so packing is a single
+        concatenate (no gather)."""
+        g = self.groups[key]
+        pieces = []
+        for tenant, off, length in g.layout:
+            if tenant is None:
+                pieces.append(jnp.zeros((length,), g.dtype))
+            else:
+                pieces.append(jax.lax.dynamic_slice_in_dim(
+                    flats[tenant], off, length))
+        return jnp.concatenate(pieces) if len(pieces) > 1 else pieces[0]
+
+    def unpack(self, key: str, packed: jax.Array, tenant: str) -> jax.Array:
+        """Packed vector -> tenant's (slot.padded,) chunk-padded flat."""
+        g = self.groups[key]
+        runs = sorted(g.slot(tenant).runs)        # ascending tenant_off
+        pieces = [jax.lax.dynamic_slice_in_dim(packed, poff, length)
+                  for _, poff, length in runs]
+        return jnp.concatenate(pieces) if len(pieces) > 1 else pieces[0]
+
+    def coef_vector(self, key: str, values: dict, fill: float = 0.0):
+        """(padded,) per-position coefficient table in the group dtype:
+        position i carries its owner tenant's value (pad chunks get
+        ``fill``).  This is how each tenant's fused update_fn is applied to
+        its own chunk ranges inside the single shared schedule."""
+        g = self.groups[key]
+        out = np.full((g.padded,), fill, dtype=g.dtype)
+        off = 0
+        for tenant, _, length in g.layout:
+            if tenant is not None:
+                out[off:off + length] = values[tenant]
+            off += length
+        return out
+
+    def tenant_bytes(self, tenant: str) -> int:
+        """Unpadded model bytes this tenant exchanges per step."""
+        return sum(g.slot(tenant).total * np.dtype(g.dtype).itemsize
+                   for g in self.groups.values()
+                   if any(s.tenant == tenant for s in g.slots))
+
+    def shard_loads(self, key: str) -> dict:
+        """Per-tenant chunks per shard (balance introspection)."""
+        g = self.groups[key]
+        loads = {s.tenant: [0] * g.n_shards for s in g.slots}
+        for s in g.slots:
+            for _, poff, length in s.runs:
+                loads[s.tenant][poff // g.shard_len] += length // g.chunk_elems
+        return loads
+
+
+def pack_domains(tenant_plans: dict, *, n_shards: int,
+                 chunk_bytes: int) -> TenantPackedDomain:
+    """Pack per-tenant ChunkPlans into one TenantPackedDomain.
+
+    Tenants are padded only to *chunk* granularity here — the rack-level
+    padding to ``n_shards`` granularity is shared across jobs, and the LPT
+    quota (partition.cochunk_counts) decides which shard serves which slice
+    of which tenant."""
+    from .partition import cochunk_counts
+    tenants = tuple(tenant_plans)
+    by_dtype: dict[str, list[tuple[str, GroupPlan]]] = {}
+    for t in tenants:
+        for g in tenant_plans[t].groups:
+            if g.chunk_elems != max(chunk_bytes // g.dtype.itemsize, 1):
+                raise ValueError(
+                    f"tenant {t!r} group {g.dtype} was chunked at a "
+                    f"different chunk size; co-scheduled tenants must share "
+                    f"chunk_size_bytes")
+            by_dtype.setdefault(str(g.dtype), []).append((t, g))
+    groups = {}
+    for key, members in by_dtype.items():
+        ce = members[0][1].chunk_elems
+        n_chunks = [-(-m.total // ce) for _, m in members]
+        counts, pad = cochunk_counts(n_chunks, n_shards)
+        cps = (sum(n_chunks) + sum(pad)) // n_shards
+        shard_len = cps * ce
+        layout: list[tuple[Any, int, int]] = []
+        slot_runs: dict[str, list[tuple[int, int, int]]] = {
+            t: [] for t, _ in members}
+        cursors = {t: 0 for t, _ in members}
+        off = 0
+        for s in range(n_shards):
+            for ti, (t, _) in enumerate(members):
+                q = counts[ti][s]
+                if not q:
+                    continue
+                length = q * ce
+                layout.append((t, cursors[t], length))
+                slot_runs[t].append((cursors[t], off, length))
+                cursors[t] += length
+                off += length
+            if pad[s]:
+                layout.append((None, 0, pad[s] * ce))
+                off += pad[s] * ce
+        slots = tuple(
+            TenantSlot(tenant=t, total=m.total, padded=n_chunks[ti] * ce,
+                       runs=tuple(slot_runs[t]))
+            for ti, (t, m) in enumerate(members))
+        groups[key] = PackedGroup(
+            dtype=members[0][1].dtype, chunk_elems=ce, n_shards=n_shards,
+            shard_len=shard_len, padded=n_shards * shard_len, slots=slots,
+            layout=tuple(layout))
+    return TenantPackedDomain(groups=groups, tenants=tenants,
+                              n_shards=n_shards, chunk_bytes=chunk_bytes)
+
+
 def build_store_layout(plan: ChunkPlan, model_dims: dict,
                        mo: int) -> FlatParamStore:
     """model_dims: leaf path -> dim sharded over 'model' (absolute index,

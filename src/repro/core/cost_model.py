@@ -4,6 +4,8 @@
    each PS configuration (Table 2 reproduction).
 2. §3.4: the hierarchical-reduction benefit condition.
 3. §4.9 / Table 5: rack-scale throughput-per-dollar model.
+4. Multi-tenant accounting: per-tenant wire bytes per co-scheduled step and
+   each tenant's share of the packed rack chunk domain (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -64,6 +66,51 @@ def cross_rack_bytes(model_bytes: float, n_workers_per_rack: int,
     w = n_workers_per_rack
     remote_frac = (n_racks - 1) / n_racks
     return 2.0 * model_bytes * w * remote_frac
+
+
+# ------------------------------------------------- multi-tenant accounting
+
+def tenant_step_traffic(strategy: str, model_bytes: float,
+                        n_workers: int) -> dict:
+    """Per-worker wire bytes one tenant contributes to one exchange step
+    (solo or co-scheduled — packing changes layout, not byte volume).
+
+    sharded_ps / hierarchical: reduce-scatter out + all-gather back, each
+    (N-1)/N of the tenant's bytes per worker; allreduce lowers to the same
+    ring pair; centralized_ps pushes and pulls the full model per worker
+    (the §2.3.1 incast)."""
+    N = max(n_workers, 1)
+    M = float(model_bytes)
+    if strategy in ("sharded_ps", "hierarchical", "allreduce",
+                    "fsdp_stream"):
+        push = pull = M * (N - 1) / N
+    elif strategy == "centralized_ps":
+        push = pull = M
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return {"push_bytes": push, "pull_bytes": pull}
+
+
+def tenant_accounting(domain, strategy: str, n_workers: int) -> dict:
+    """Per-tenant view of a TenantPackedDomain: model bytes, padded bytes
+    resident in the packed domain, share of the domain, and per-step wire
+    traffic.  ``domain`` is duck-typed (chunking.TenantPackedDomain)."""
+    import numpy as np
+    padded_total = sum(g.padded * np.dtype(g.dtype).itemsize
+                       for g in domain.groups.values())
+    out = {}
+    for tenant in domain.tenants:
+        model_bytes = domain.tenant_bytes(tenant)
+        padded = sum(s.padded * np.dtype(g.dtype).itemsize
+                     for g in domain.groups.values()
+                     for s in g.slots if s.tenant == tenant)
+        out[tenant] = {
+            "model_bytes": model_bytes,
+            "padded_bytes": padded,
+            "domain_share": padded / max(padded_total, 1),
+            **tenant_step_traffic(strategy, model_bytes, n_workers),
+        }
+    return out
 
 
 # ---------------------------------------------------------------- §4.9

@@ -82,6 +82,20 @@ def _pallas_vec(lr: float, momentum: float, chunk_elems: int):
     return upd
 
 
+def _coef_nesterov_vec(p, g, m, lr, mu):
+    """Nesterov with per-position (lr, mu) coefficient tables — the
+    co-scheduled update: each packed position carries its owner tenant's
+    hyperparameters, so one vector op applies every tenant's own fused
+    update to exactly its chunk ranges (pad positions carry zeros and are
+    fixed points).  Elementwise identical to _nesterov_vec where the table
+    is constant, which is what makes co-scheduled training bitwise-match
+    per-tenant solo training."""
+    g32 = g.astype(m.dtype)
+    m2 = mu * m + g32
+    p2 = p - (lr * (g32 + mu * m2)).astype(p.dtype)
+    return p2, m2
+
+
 @dataclass
 class PHubEngine:
     cfg: ModelConfig
@@ -157,23 +171,30 @@ class PHubEngine:
                 is_leaf=lambda t: isinstance(t, jax.ShapeDtypeStruct))
         return self.plan.shardings(self.mesh)
 
-    def opt_state_shapes(self):
+    def _group_map(self) -> dict:
+        """{dtype_str: group} over this engine's chunk plan.  Momentum
+        shape/spec helpers accept any such mapping (objects carrying
+        ``padded``/``dtype``), so the co-scheduler reuses them with the
+        packed domain's groups instead of duplicating the spec rules."""
+        return {str(g.dtype): g for g in self.chunk_plan.groups}
+
+    def opt_state_shapes(self, groups=None):
         """Momentum layout depends on the strategy (see DESIGN.md §5)."""
         if self.tc.strategy == "fsdp_stream":
             return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
                                 self.params_shapes)
         mo = self.mo_eff
         out = {}
-        for g in self.chunk_plan.groups:
+        for key, g in (groups or self._group_map()).items():
             S = self.ctx.n_shards(self.tc.strategy)
             Lr = self.ctx.state_len(self.tc.strategy, g.padded)
             if S > 1:
-                out[str(g.dtype)] = jax.ShapeDtypeStruct((mo, S, Lr), g.dtype)
+                out[key] = jax.ShapeDtypeStruct((mo, S, Lr), g.dtype)
             else:
-                out[str(g.dtype)] = jax.ShapeDtypeStruct((mo, g.padded), g.dtype)
+                out[key] = jax.ShapeDtypeStruct((mo, g.padded), g.dtype)
         return out
 
-    def opt_state_shardings(self):
+    def opt_state_shardings(self, groups=None):
         if self.tc.strategy == "fsdp_stream":
             return self.plan.shardings(self.mesh)
         S = self.ctx.n_shards(self.tc.strategy)
@@ -185,8 +206,8 @@ class PHubEngine:
             spec = P(mspec, ax, None)
         else:
             spec = P(mspec, None)
-        return {str(g.dtype): NamedSharding(self.mesh, spec)
-                for g in self.chunk_plan.groups}
+        return {key: NamedSharding(self.mesh, spec)
+                for key in (groups or self._group_map())}
 
     def store_shapes(self):
         """Flat-residency parameter store: {dtype_str: (mo, padded)}."""
@@ -249,10 +270,10 @@ class PHubEngine:
 
     # ------------------------------------------------------------ train step
 
-    def make_train_step(self, batch_shapes: dict[str, jax.ShapeDtypeStruct]):
+    def build_loss_fn(self, batch_shapes: dict[str, jax.ShapeDtypeStruct]):
+        """Per-worker loss over tree-state params (shared by the solo train
+        step and the co-scheduled multi-tenant step)."""
         cfg, tc = self.cfg, self.tc
-        mesh = self.mesh
-        manual_axes = set(self.exchange_axes)
         pl = self.plan
         gather = make_gather_fn(pl, self.params_shapes)
         mo = self.axis_sizes.get("model", 1)
@@ -282,95 +303,147 @@ class PHubEngine:
                                          chunk=tc.loss_chunk)
             return loss + cfg.router_aux_weight * out["aux"], loss
 
-        def exchange_stage(grads, params, opt):
-            if tc.strategy == "fsdp_stream":
-                N = self.ctx.n_workers
-                fdims = pl.fsdp_dims()
-                upd = _nesterov_vec(tc.lr, tc.momentum)
+        return loss_fn
 
-                def leaf_update(p, g, m, fd):
-                    if fd is None:                        # replicated leaf
-                        g = jax.lax.psum(g, self.data_axes)
-                    g = g / N
-                    p2, m2 = upd(p.reshape(-1), g.reshape(-1), m.reshape(-1))
-                    return p2.reshape(p.shape), m2.reshape(m.shape)
+    def _local_grads(self, loss_fn, params, batch):
+        """(total_loss, loss, grads) with microbatch accumulation."""
+        tc = self.tc
+        if tc.microbatch > 1:
+            k = tc.microbatch
 
-                out = jax.tree.map(leaf_update, params, grads, opt, fdims)
-                new_p = jax.tree.map(lambda t: t[0], out,
-                                     is_leaf=lambda t: isinstance(t, tuple))
-                new_m = jax.tree.map(lambda t: t[1], out,
-                                     is_leaf=lambda t: isinstance(t, tuple))
-                return new_p, new_m
+            def split(v):
+                B = v.shape[0]
+                return v.reshape(k, B // k, *v.shape[1:])
 
-            cp = self.chunk_plan
-            # Shardy forbids axis_index over outer axes inside the nested
-            # manual computation: compute the shard rank here (outer scope).
-            rank_axes = (("data",) if tc.strategy == "hierarchical"
-                         else self.exchange_axes)
-            rank = compat.manual_axis_rank(rank_axes, self.axis_sizes, mesh)
+            mb = {kk: split(v) for kk, v in batch.items()}
 
-            def inner(grads, params, opt, rank):
-                flats_g = chunking.flatten_groups(cp, grads)
-                flats_p = chunking.flatten_groups(cp, params)
-                new_p, new_m = {}, {}
-                for g in cp.groups:
-                    key = str(g.dtype)
-                    mloc = opt[key].reshape(-1)
-                    p2, m2 = run_exchange(
-                        tc.strategy, self.ctx, flats_g[key], flats_p[key],
-                        mloc, self._update_fn(g.dtype), rank, g,
-                        tc.pipeline_windows)
-                    new_p[key] = p2
-                    new_m[key] = m2.reshape(opt[key].shape)
-                return (chunking.unflatten_groups(cp, new_p, self.params_shapes),
-                        new_m)
+            def acc_fn(carry, mbatch):
+                (tot, loss), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mbatch)
+                tot_a, loss_a, g_a = carry
+                g_a = jax.tree.map(lambda a, g: a + g / k, g_a, grads)
+                return (tot_a + tot / k, loss_a + loss / k, g_a), None
 
-            inner_in_p = pl.specs()           # full specs: model dims manual now
-            m_spec = self._inner_m_specs()
-            if tc.dp_over_model:
-                # 'model' is already manual in the outer shard_map and the
-                # params are fully local — no nested shard_map needed
-                return inner(grads, params, opt, rank)
-            return compat.shard_map(
-                inner, mesh=compat.current_mesh(mesh),
-                in_specs=(inner_in_p, inner_in_p, m_spec, P()),
-                out_specs=(inner_in_p, m_spec),
-                axis_names={"model"}, check_vma=False,
-                nested=True)(grads, params, opt, rank)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32
+                                    if p.dtype == jnp.bfloat16
+                                    else p.dtype), params)
+            (tot, loss, grads), _ = jax.lax.scan(
+                acc_fn, (jnp.zeros((), jnp.float32),
+                         jnp.zeros((), jnp.float32), zeros), mb)
+            grads = jax.tree.map(lambda g, pp: g.astype(pp.dtype),
+                                 grads, params)
+        else:
+            (tot, loss), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        return tot, loss, grads
 
-        def exchange_stage_flat(gstore, pstore, opt):
-            """Chunk-domain exchange on per-dtype flat stores (mo, padded):
-            no tree flatten/unflatten — the stores ARE the exchange domain
-            (DESIGN.md §8)."""
-            cp = self.chunk_plan
-            rank_axes = (("data",) if tc.strategy == "hierarchical"
-                         else self.exchange_axes)
-            rank = compat.manual_axis_rank(rank_axes, self.axis_sizes, mesh)
+    def exchange_rank(self):
+        """Flat shard rank over the strategy's shard axes, computed in the
+        outer (data-manual) scope — Shardy forbids axis_index over an outer
+        axis inside the nested model-manual region."""
+        rank_axes = (("data",) if self.tc.strategy == "hierarchical"
+                     else self.exchange_axes)
+        return compat.manual_axis_rank(rank_axes, self.axis_sizes, self.mesh)
 
-            def inner(fg, fp, opt, rank):
-                new_p, new_m = {}, {}
-                for g in cp.groups:
-                    key = str(g.dtype)
-                    p2, m2 = run_exchange(
-                        tc.strategy, self.ctx, fg[key].reshape(-1),
-                        fp[key].reshape(-1), opt[key].reshape(-1),
-                        self._update_fn(g.dtype), rank, g,
-                        tc.pipeline_windows)
-                    new_p[key] = p2.reshape(fp[key].shape)
-                    new_m[key] = m2.reshape(opt[key].shape)
-                return new_p, new_m
+    def exchange_stage(self, grads, params, opt):
+        """Tree-state exchange: flatten local TP slices into the chunk
+        domain, run the collective schedule + fused agg+opt, rebuild the
+        tree (shared by the solo train step, the zero-compute step, and —
+        per tenant — nothing: co-scheduling packs across tenants instead)."""
+        tc, mesh, pl = self.tc, self.mesh, self.plan
+        if tc.strategy == "fsdp_stream":
+            N = self.ctx.n_workers
+            fdims = pl.fsdp_dims()
+            upd = _nesterov_vec(tc.lr, tc.momentum)
 
-            mspec = "model" if self.mo_eff > 1 else None
-            s_spec = {str(g.dtype): P(mspec, None) for g in cp.groups}
-            m_spec = self._inner_m_specs()
-            if tc.dp_over_model:
-                return inner(gstore, pstore, opt, rank)
-            return compat.shard_map(
-                inner, mesh=compat.current_mesh(mesh),
-                in_specs=(s_spec, s_spec, m_spec, P()),
-                out_specs=(s_spec, m_spec),
-                axis_names={"model"}, check_vma=False,
-                nested=True)(gstore, pstore, opt, rank)
+            def leaf_update(p, g, m, fd):
+                if fd is None:                        # replicated leaf
+                    g = jax.lax.psum(g, self.data_axes)
+                g = g / N
+                p2, m2 = upd(p.reshape(-1), g.reshape(-1), m.reshape(-1))
+                return p2.reshape(p.shape), m2.reshape(m.shape)
+
+            out = jax.tree.map(leaf_update, params, grads, opt, fdims)
+            new_p = jax.tree.map(lambda t: t[0], out,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+            new_m = jax.tree.map(lambda t: t[1], out,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+            return new_p, new_m
+
+        cp = self.chunk_plan
+        rank = self.exchange_rank()
+
+        def inner(grads, params, opt, rank):
+            flats_g = chunking.flatten_groups(cp, grads)
+            flats_p = chunking.flatten_groups(cp, params)
+            new_p, new_m = {}, {}
+            for g in cp.groups:
+                key = str(g.dtype)
+                mloc = opt[key].reshape(-1)
+                p2, m2 = run_exchange(
+                    tc.strategy, self.ctx, flats_g[key], flats_p[key],
+                    mloc, self._update_fn(g.dtype), rank, g,
+                    tc.pipeline_windows)
+                new_p[key] = p2
+                new_m[key] = m2.reshape(opt[key].shape)
+            return (chunking.unflatten_groups(cp, new_p, self.params_shapes),
+                    new_m)
+
+        inner_in_p = pl.specs()           # full specs: model dims manual now
+        m_spec = self._inner_m_specs()
+        if tc.dp_over_model:
+            # 'model' is already manual in the outer shard_map and the
+            # params are fully local — no nested shard_map needed
+            return inner(grads, params, opt, rank)
+        return compat.shard_map(
+            inner, mesh=compat.current_mesh(mesh),
+            in_specs=(inner_in_p, inner_in_p, m_spec, P()),
+            out_specs=(inner_in_p, m_spec),
+            axis_names={"model"}, check_vma=False,
+            nested=True)(grads, params, opt, rank)
+
+    def exchange_stage_flat(self, gstore, pstore, opt):
+        """Chunk-domain exchange on per-dtype flat stores (mo, padded):
+        no tree flatten/unflatten — the stores ARE the exchange domain
+        (DESIGN.md §8)."""
+        tc, mesh = self.tc, self.mesh
+        cp = self.chunk_plan
+        rank = self.exchange_rank()
+
+        def inner(fg, fp, opt, rank):
+            new_p, new_m = {}, {}
+            for g in cp.groups:
+                key = str(g.dtype)
+                p2, m2 = run_exchange(
+                    tc.strategy, self.ctx, fg[key].reshape(-1),
+                    fp[key].reshape(-1), opt[key].reshape(-1),
+                    self._update_fn(g.dtype), rank, g,
+                    tc.pipeline_windows)
+                new_p[key] = p2.reshape(fp[key].shape)
+                new_m[key] = m2.reshape(opt[key].shape)
+            return new_p, new_m
+
+        mspec = "model" if self.mo_eff > 1 else None
+        s_spec = {str(g.dtype): P(mspec, None) for g in cp.groups}
+        m_spec = self._inner_m_specs()
+        if tc.dp_over_model:
+            return inner(gstore, pstore, opt, rank)
+        return compat.shard_map(
+            inner, mesh=compat.current_mesh(mesh),
+            in_specs=(s_spec, s_spec, m_spec, P()),
+            out_specs=(s_spec, m_spec),
+            axis_names={"model"}, check_vma=False,
+            nested=True)(gstore, pstore, opt, rank)
+
+    def make_train_step(self, batch_shapes: dict[str, jax.ShapeDtypeStruct]):
+        tc = self.tc
+        mesh = self.mesh
+        manual_axes = set(self.exchange_axes)
+        pl = self.plan
+        loss_fn = self.build_loss_fn(batch_shapes)
+        exchange_stage = self.exchange_stage
+        exchange_stage_flat = self.exchange_stage_flat
 
         flat = tc.flat_residency
         if flat:
@@ -385,34 +458,7 @@ class PHubEngine:
             loss_fn_used = loss_fn
 
         def local_step(params, opt, batch):
-            if tc.microbatch > 1:
-                k = tc.microbatch
-
-                def split(v):
-                    B = v.shape[0]
-                    return v.reshape(k, B // k, *v.shape[1:])
-
-                mb = {kk: split(v) for kk, v in batch.items()}
-
-                def acc_fn(carry, mbatch):
-                    (tot, loss), grads = jax.value_and_grad(
-                        loss_fn_used, has_aux=True)(params, mbatch)
-                    tot_a, loss_a, g_a = carry
-                    g_a = jax.tree.map(lambda a, g: a + g / k, g_a, grads)
-                    return (tot_a + tot / k, loss_a + loss / k, g_a), None
-
-                zeros = jax.tree.map(
-                    lambda p: jnp.zeros(p.shape, jnp.float32
-                                        if p.dtype == jnp.bfloat16
-                                        else p.dtype), params)
-                (tot, loss, grads), _ = jax.lax.scan(
-                    acc_fn, (jnp.zeros((), jnp.float32),
-                             jnp.zeros((), jnp.float32), zeros), mb)
-                grads = jax.tree.map(lambda g, pp: g.astype(pp.dtype),
-                                     grads, params)
-            else:
-                (tot, loss), grads = jax.value_and_grad(
-                    loss_fn_used, has_aux=True)(params, batch)
+            tot, loss, grads = self._local_grads(loss_fn_used, params, batch)
             new_p, new_m = (exchange_stage_flat(grads, params, opt) if flat
                             else exchange_stage(grads, params, opt))
             metrics = {"loss": jax.lax.pmean(loss, self.exchange_axes),
@@ -430,19 +476,8 @@ class PHubEngine:
               else self.exchange_axes[0])
         batch_spec = {k: P(bx, *([None] * (len(v.shape) - 1)))
                       for k, v in batch_shapes.items()}
-        if tc.strategy == "fsdp_stream":
-            m_outer = manual_p
-        else:
-            S = self.ctx.n_shards(tc.strategy)
-            if S > 1:
-                ax = (self.exchange_axes if tc.strategy == "sharded_ps"
-                      else ("data",))
-                ax = ax[0] if len(ax) == 1 else ax
-                m_outer = {str(g.dtype): P(None, ax, None)
-                           for g in self.chunk_plan.groups}
-            else:
-                m_outer = {str(g.dtype): P(None, None)
-                           for g in self.chunk_plan.groups}
+        m_outer = (manual_p if tc.strategy == "fsdp_stream"
+                   else self._outer_m_specs())
 
         step = compat.shard_map(
             local_step, mesh=mesh,
@@ -451,13 +486,46 @@ class PHubEngine:
             axis_names=manual_axes, check_vma=False)
         return _MeshScopedJit(jax.jit(step, donate_argnums=(0, 1)), mesh)
 
-    def _inner_m_specs(self):
+    def make_zero_compute_step(self):
+        """ZeroComputeEngine (§4.4): the full exchange pipeline with fwd/bwd
+        replaced by a synthetic push — pure PS throughput.  One call = one
+        exchange step over this engine's whole chunk domain."""
+        tc = self.tc
+        if tc.strategy == "fsdp_stream" or tc.flat_residency:
+            raise ValueError("zero-compute step covers the tree-state chunk "
+                             "strategies")
+        mesh = self.mesh
+
+        def local_step(params, opt):
+            grads = jax.tree.map(lambda x: x * 1e-4, params)
+            return self.exchange_stage(grads, params, opt)
+
+        manual_p = self.plan.manual_specs(self.exchange_axes)
+        m_outer = self._outer_m_specs()
+        step = compat.shard_map(
+            local_step, mesh=mesh,
+            in_specs=(manual_p, m_outer),
+            out_specs=(manual_p, m_outer),
+            axis_names=set(self.exchange_axes), check_vma=False)
+        return _MeshScopedJit(jax.jit(step, donate_argnums=(0, 1)), mesh)
+
+    def _outer_m_specs(self, groups=None):
+        """Momentum specs at the outer (data-manual) shard_map boundary."""
+        S = self.ctx.n_shards(self.tc.strategy)
+        keys = groups or self._group_map()
+        if S > 1:
+            ax = (self.exchange_axes if self.tc.strategy == "sharded_ps"
+                  else ("data",))
+            ax = ax[0] if len(ax) == 1 else ax
+            return {key: P(None, ax, None) for key in keys}
+        return {key: P(None, None) for key in keys}
+
+    def _inner_m_specs(self, groups=None):
         """Momentum specs for the nested (model-manual) exchange region."""
         S = self.ctx.n_shards(self.tc.strategy)
         mspec = "model" if self.mo_eff > 1 else None
-        return {str(g.dtype): (P(mspec, None, None) if S > 1
-                               else P(mspec, None))
-                for g in self.chunk_plan.groups}
+        return {key: (P(mspec, None, None) if S > 1 else P(mspec, None))
+                for key in (groups or self._group_map())}
 
     def _batch_axes(self):
         return (self.data_axes[0] if len(self.data_axes) == 1
@@ -542,3 +610,151 @@ class PHubEngine:
         specs = [spec_for(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
         return jax.tree_util.tree_unflatten(
             treedef, [NamedSharding(self.mesh, s) for s in specs])
+
+
+# ---------------------------------------------------- co-scheduled exchange
+
+def co_opt_state_shapes(e0: PHubEngine, domain) -> dict:
+    """Packed-domain momentum shapes — one shared buffer per dtype spanning
+    every tenant (the engine's own layout rules over the packed groups)."""
+    return e0.opt_state_shapes(domain.groups)
+
+
+def co_opt_state_shardings(e0: PHubEngine, domain) -> dict:
+    return e0.opt_state_shardings(domain.groups)
+
+
+def make_co_train_step(tenants: dict, domain, batch_shapes: dict,
+                       zero_compute: bool = False):
+    """One jointly compiled train step over every attached tenant (§3.1
+    multi-tenancy, DESIGN.md §9).
+
+    ``tenants``: {namespace: PHubEngine}, already validated compatible (one
+    mesh, one exchange signature); ``domain``: the TenantPackedDomain over
+    their chunk plans; ``batch_shapes``: {namespace: {name: ShapeDtypeStruct}}.
+
+    Structure: each tenant's fwd/bwd runs under the one outer shard_map
+    (XLA schedules them jointly); the exchange stage packs all tenants'
+    flattened gradients into the shared rack chunk domain and runs a single
+    reduce-scatter / agg+opt / all-gather schedule — including the windowed
+    pipeline, whose windows span tenant boundaries — with per-position
+    lr/momentum tables applying each tenant's own update to its ranges.
+
+    With ``zero_compute`` the per-tenant fwd/bwd is replaced by a synthetic
+    push (the §4.4 ZeroComputeEngine, multi-tenant edition): one call = one
+    co-scheduled exchange of every tenant's whole chunk domain.
+
+    Returns a jitted ``step(params_by_ns, packed_opt, batch_by_ns) ->
+    (new_params_by_ns, new_packed_opt, metrics_by_ns)``.
+    """
+    names = list(tenants)
+    e0 = tenants[names[0]]
+    tc0, mesh = e0.tc, e0.mesh
+    manual_axes = set(e0.exchange_axes)
+    loss_fns = ({} if zero_compute
+                else {ns: tenants[ns].build_loss_fn(batch_shapes[ns])
+                      for ns in names})
+    # Coefficient tables carry each packed position's owner-tenant
+    # hyperparameters.  A coefficient that is uniform across tenants stays
+    # a scalar (pad positions are fixed points either way: zero gradient
+    # into zero momentum moves nothing), so homogeneous fleets pay no
+    # table reads.
+    lr_uniform = len({tenants[ns].tc.lr for ns in names}) == 1
+    mu_uniform = len({tenants[ns].tc.momentum for ns in names}) == 1
+    lr_tab = {key: domain.coef_vector(
+                  key, {ns: tenants[ns].tc.lr for ns in names})
+              for key in domain.groups} if not lr_uniform else None
+    mu_tab = {key: domain.coef_vector(
+                  key, {ns: tenants[ns].tc.momentum for ns in names})
+              for key in domain.groups} if not mu_uniform else None
+    lr0, mu0 = e0.tc.lr, e0.tc.momentum
+
+    def coef_update(key):
+        if lr_uniform and mu_uniform:
+            return (), lambda p, g, m: _coef_nesterov_vec(p, g, m, lr0, mu0)
+        if mu_uniform:
+            return ((jnp.asarray(lr_tab[key]),),
+                    lambda p, g, m, lr: _coef_nesterov_vec(p, g, m, lr, mu0))
+        if lr_uniform:
+            return ((jnp.asarray(mu_tab[key]),),
+                    lambda p, g, m, mu: _coef_nesterov_vec(p, g, m, lr0, mu))
+        return ((jnp.asarray(lr_tab[key]), jnp.asarray(mu_tab[key])),
+                _coef_nesterov_vec)
+
+    def exchange_stage(grads_by, params_by, opt):
+        rank = e0.exchange_rank()
+
+        def inner(grads_by, params_by, opt, rank):
+            flats_g = {ns: chunking.flatten_groups(
+                           tenants[ns].chunk_plan, grads_by[ns])
+                       for ns in names}
+            flats_p = {ns: chunking.flatten_groups(
+                           tenants[ns].chunk_plan, params_by[ns])
+                       for ns in names}
+            new_flats = {ns: {} for ns in names}
+            new_m = {}
+            for key, pg in domain.groups.items():
+                members = [s.tenant for s in pg.slots]
+                packed_g = domain.pack(
+                    key, {ns: flats_g[ns][key] for ns in members})
+                packed_p = domain.pack(
+                    key, {ns: flats_p[ns][key] for ns in members})
+                aux, upd = coef_update(key)
+                p2, m2 = run_exchange(
+                    tc0.strategy, e0.ctx, packed_g, packed_p,
+                    opt[key].reshape(-1), upd, rank, pg,
+                    tc0.pipeline_windows, aux)
+                new_m[key] = m2.reshape(opt[key].shape)
+                for ns in members:
+                    new_flats[ns][key] = domain.unpack(key, p2, ns)
+            new_p = {ns: chunking.unflatten_groups(
+                         tenants[ns].chunk_plan, new_flats[ns],
+                         tenants[ns].params_shapes)
+                     for ns in names}
+            return new_p, new_m
+
+        specs_by = {ns: tenants[ns].plan.specs() for ns in names}
+        m_spec = e0._inner_m_specs(domain.groups)
+        if tc0.dp_over_model:
+            return inner(grads_by, params_by, opt, rank)
+        return compat.shard_map(
+            inner, mesh=compat.current_mesh(mesh),
+            in_specs=(specs_by, specs_by, m_spec, P()),
+            out_specs=(specs_by, m_spec),
+            axis_names={"model"}, check_vma=False,
+            nested=True)(grads_by, params_by, opt, rank)
+
+    def local_step(params_by, opt, batch_by):
+        grads_by, metrics = {}, {}
+        for ns in names:
+            eng = tenants[ns]
+            if zero_compute:
+                grads_by[ns] = jax.tree.map(lambda x: x * 1e-4,
+                                            params_by[ns])
+                metrics[ns] = {"loss": jnp.zeros(()),
+                               "total_loss": jnp.zeros(())}
+                continue
+            tot, loss, grads = eng._local_grads(
+                loss_fns[ns], params_by[ns], batch_by[ns])
+            grads_by[ns] = grads
+            metrics[ns] = {
+                "loss": jax.lax.pmean(loss, e0.exchange_axes),
+                "total_loss": jax.lax.pmean(tot, e0.exchange_axes)}
+        new_p, new_m = exchange_stage(grads_by, params_by, opt)
+        return new_p, new_m, metrics
+
+    manual_p = {ns: tenants[ns].plan.manual_specs(e0.exchange_axes)
+                for ns in names}
+    bx = (e0.exchange_axes if len(e0.exchange_axes) > 1
+          else e0.exchange_axes[0])
+    batch_spec = {ns: {k: P(bx, *([None] * (len(v.shape) - 1)))
+                       for k, v in batch_shapes[ns].items()}
+                  for ns in names}
+    m_outer = e0._outer_m_specs(domain.groups)
+
+    step = compat.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(manual_p, m_outer, batch_spec),
+        out_specs=(manual_p, m_outer, P()),
+        axis_names=manual_axes, check_vma=False)
+    return _MeshScopedJit(jax.jit(step, donate_argnums=(0, 1)), mesh)

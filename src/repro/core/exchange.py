@@ -74,16 +74,19 @@ class ExchangeContext:
 
 def exchange_group(strategy: str, ctx: ExchangeContext, g: jax.Array,
                    p: jax.Array, m: jax.Array, update_fn: UpdateFn,
-                   rank: jax.Array) -> tuple[jax.Array, jax.Array]:
+                   rank: jax.Array, aux: tuple = ()
+                   ) -> tuple[jax.Array, jax.Array]:
     """g, p: (padded,) local vectors; m: (state_len,); rank: this device's
     flat index over the strategy's shard axes (computed in the outer scope).
-    Returns (p', m')."""
+    ``aux`` is a tuple of (padded,) per-position side tables (e.g. the
+    co-scheduled domain's per-tenant lr/momentum vectors) sliced alongside
+    ``p`` and forwarded to ``update_fn(p, g, m, *aux)``.  Returns (p', m')."""
     axes = ctx.data_axes
     N = ctx.n_workers
 
     if strategy == "allreduce":
         ga = jax.lax.psum(g, axes) / N
-        return update_fn(p, ga, m)
+        return update_fn(p, ga, m, *aux)
 
     if strategy == "sharded_ps":
         S = ctx.n_shards(strategy)
@@ -91,7 +94,9 @@ def exchange_group(strategy: str, ctx: ExchangeContext, g: jax.Array,
         gsh = jax.lax.psum_scatter(g.reshape(S, L), axes,
                                    scatter_dimension=0, tiled=False) / N
         psh = jax.lax.dynamic_slice(p, (rank * L,), (L,))
-        p2, m2 = update_fn(psh, gsh, m)
+        auxsh = tuple(jax.lax.dynamic_slice(a, (rank * L,), (L,))
+                      for a in aux)
+        p2, m2 = update_fn(psh, gsh, m, *auxsh)
         return jax.lax.all_gather(p2, axes, tiled=True), m2
 
     if strategy == "hierarchical":
@@ -103,13 +108,15 @@ def exchange_group(strategy: str, ctx: ExchangeContext, g: jax.Array,
             gsh = jax.lax.psum(gsh, "pod")          # cross-rack on 1/S only
         gsh = gsh / N
         psh = jax.lax.dynamic_slice(p, (rank * L,), (L,))
-        p2, m2 = update_fn(psh, gsh, m)
+        auxsh = tuple(jax.lax.dynamic_slice(a, (rank * L,), (L,))
+                      for a in aux)
+        p2, m2 = update_fn(psh, gsh, m, *auxsh)
         return jax.lax.all_gather(p2, "data", tiled=True), m2
 
     if strategy == "centralized_ps":
         allg = jax.lax.all_gather(g, axes, tiled=False)      # (N, padded) incast
         ga = allg.sum(axis=0) / N
-        p2, m2 = update_fn(p, ga, m)
+        p2, m2 = update_fn(p, ga, m, *aux)
         # "broadcast from the PS": only rank 0's copy is authoritative
         p2 = jax.lax.psum(jnp.where(rank == 0, p2, jnp.zeros_like(p2)), axes)
         return p2, m2

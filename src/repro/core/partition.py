@@ -44,3 +44,36 @@ def makespan_ratio(costs: Sequence[int], assign: Sequence[int], n_bins: int) -> 
     loads = bin_loads(costs, assign, n_bins)
     ideal = max(sum(costs) / n_bins, 1e-12)
     return max(loads) / ideal
+
+
+def cochunk_counts(chunks_per_tenant: Sequence[int], n_shards: int
+                   ) -> tuple[list[list[int]], list[int]]:
+    """Cross-tenant chunk->shard quotas for the packed rack domain.
+
+    Every tenant's chunks are unit-cost items fed tenant-major through LPT,
+    plus pad pseudo-chunks rounding the total up to ``n_shards``
+    granularity.  Unit costs make LPT level the bins exactly (every shard
+    owns ``total/n_shards`` chunks, so the shard matrix stays uniform) while
+    the tenant-major order cycles each tenant's run across the bins — no
+    tenant's chunks pile onto one shard, which is the §3.2.4 balance
+    property lifted from keys-within-a-job to jobs-within-a-rack.
+
+    Returns ``(counts, pad)`` where ``counts[t][s]`` is tenant *t*'s chunk
+    quota on shard *s* and ``pad[s]`` the pad chunks closing shard *s*.
+    """
+    total = sum(chunks_per_tenant)
+    n_pad = (-total) % n_shards
+    assign = lpt_partition([1] * (total + n_pad), n_shards)
+    counts = []
+    i = 0
+    for c in chunks_per_tenant:
+        row = [0] * n_shards
+        for _ in range(c):
+            row[assign[i]] += 1
+            i += 1
+        counts.append(row)
+    pad = [0] * n_shards
+    for _ in range(n_pad):
+        pad[assign[i]] += 1
+        i += 1
+    return counts, pad

@@ -125,11 +125,14 @@ def _ring_window_rs(g: jax.Array, L: int, start, Lw: int,
 
 def pipelined_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
                        p: jax.Array, m: jax.Array, update_fn: UpdateFn,
-                       rank: jax.Array, windows: int
+                       rank: jax.Array, windows: int, aux: tuple = ()
                        ) -> tuple[jax.Array, jax.Array]:
     """Windowed counterpart of ``exchange_group`` for the strategies with a
     shard dimension.  g, p: (padded,) local vectors; m: (shard_len,);
-    rank: flat index over the strategy's ring axes.  Returns (p', m')
+    rank: flat index over the strategy's ring axes; ``aux``: (padded,)
+    per-position side tables sliced window-by-window alongside ``p`` (this
+    is how co-scheduled windows span tenant boundaries — the coefficient
+    slice follows the window, not the tenant).  Returns (p', m')
     bit-identical in layout to the monolithic schedule.
     """
     if strategy not in PIPELINED_STRATEGIES:
@@ -159,7 +162,9 @@ def pipelined_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
     def opt_window(w, r):
         pw = jax.lax.dynamic_slice(p, (rank * L + w * Lw,), (Lw,))
         mw = jax.lax.dynamic_slice(m, (w * Lw,), (Lw,))
-        return update_fn(pw, r, mw)
+        auxw = tuple(jax.lax.dynamic_slice(a, (rank * L + w * Lw,), (Lw,))
+                     for a in aux)
+        return update_fn(pw, r, mw, *auxw)
 
     r0 = rs_window(0)
 
@@ -182,15 +187,16 @@ def pipelined_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
 
 def run_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
                  p: jax.Array, m: jax.Array, update_fn: UpdateFn,
-                 rank: jax.Array, group: GroupPlan, windows: int
-                 ) -> tuple[jax.Array, jax.Array]:
+                 rank: jax.Array, group: GroupPlan, windows: int,
+                 aux: tuple = ()) -> tuple[jax.Array, jax.Array]:
     """Dispatch one dtype group: the windowed pipeline when the strategy has
     a shard dimension and >1 effective windows, else the monolithic
-    schedule."""
+    schedule.  ``group`` needs only a ``chunks_per_shard`` property (a
+    GroupPlan or a multi-tenant PackedGroup)."""
     from .exchange import exchange_group
     if strategy in PIPELINED_STRATEGIES:
         w = effective_windows(group, windows)
         if w > 1:
             return pipelined_exchange(strategy, ctx, g, p, m, update_fn,
-                                      rank, w)
-    return exchange_group(strategy, ctx, g, p, m, update_fn, rank)
+                                      rank, w, aux)
+    return exchange_group(strategy, ctx, g, p, m, update_fn, rank, aux)

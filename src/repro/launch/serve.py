@@ -20,7 +20,14 @@ def main(argv=None):
     ap.add_argument("--decode-steps", type=int, default=32)
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--mesh", default="")
-    ap.add_argument("--greedy", action="store_true", default=True)
+    # BooleanOptionalAction so --no-greedy actually works (a bare
+    # store_true with default=True could never be disabled)
+    ap.add_argument("--greedy", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="argmax decoding; --no-greedy samples from the "
+                         "temperature-scaled logits")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     if args.devices:
@@ -53,17 +60,28 @@ def main(argv=None):
     prefill_step = eng.make_prefill_step(args.prompt_len, max_new_tokens=args.decode_steps)
     serve_step = eng.make_serve_step()
 
+    key = jax.random.PRNGKey(args.seed)
+
+    def pick(logits, key):
+        if args.greedy:
+            tok = jnp.argmax(logits, axis=-1)
+        else:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits / max(args.temperature, 1e-6), axis=-1)
+        return tok[:, None].astype(jnp.int32), key
+
     t0 = time.time()
     logits, cache = prefill_step(params, prompts)
     logits.block_until_ready()
     t_prefill = time.time() - t0
-    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    tok, key = pick(logits, key)
 
     out_tokens = [tok]
     t0 = time.time()
     for _ in range(args.decode_steps - 1):
         logits, cache = serve_step(params, cache, tok)
-        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        tok, key = pick(logits, key)
         out_tokens.append(tok)
     tok.block_until_ready()
     t_decode = time.time() - t0

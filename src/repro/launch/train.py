@@ -7,6 +7,9 @@ provisioned through the multi-tenant service API.
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
       --steps 50 --batch 8 --seq 128 --strategy sharded_ps [--devices 8]
+
+Multi-tenant (co-scheduled jobs sharing the rack chunk domain, §3.1):
+  ... --tenants 2   # every job steps in one jointly compiled program
 """
 from __future__ import annotations
 
@@ -35,6 +38,9 @@ def main(argv=None):
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=1)
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="co-schedule N identical jobs (different seeds/lr) "
+                         "onto one shared rack chunk domain")
     args = ap.parse_args(argv)
 
     if args.devices:
@@ -62,6 +68,8 @@ def main(argv=None):
                      loss_chunk=min(1024, args.seq))
 
     cm = PHubConnectionManager()
+    if args.tenants > 1:
+        return _train_multitenant(cm, cfg, tc, mesh, args)
     handle = cm.create_service("train-job", cfg, tc, mesh)
     engine = cm.connect_service(handle)
     params, opt = cm.init_service(handle, jax.random.PRNGKey(tc.seed))
@@ -92,6 +100,52 @@ def main(argv=None):
                             {"params": params, "opt": opt})
     print(f"[train] done: first-5 mean {sum(losses[:5])/5:.4f} -> "
           f"last-5 mean {sum(losses[-5:])/5:.4f}")
+    return losses
+
+
+def _train_multitenant(cm, cfg, tc, mesh, args):
+    """Co-scheduled loop: N jobs, one jointly compiled step per round."""
+    import dataclasses
+    import jax
+    from ..data import SyntheticTokens
+
+    handles, params, feeds = [], {}, {}
+    for i in range(args.tenants):
+        ns = f"job{i}"
+        tci = dataclasses.replace(tc, lr=args.lr * (i + 1), seed=i)
+        h = cm.create_service(ns, cfg, tci, mesh)
+        eng = cm.connect_service(h)
+        params[ns], _ = cm.init_service(h, jax.random.PRNGKey(i))
+        data = SyntheticTokens(cfg, args.batch, args.seq, seed=i)
+
+        def feed(step, data=data, eng=eng):
+            return data.device_batch(step, mesh=mesh,
+                                     data_axes=eng.data_axes or ("data",))
+        feeds[ns] = feed
+        handles.append(h)
+    cm.attach_services(handles)       # one re-pack for the whole fleet
+    print(f"[train] arch={cfg.arch_id} tenants={args.tenants} "
+          f"strategy={tc.strategy} packed domain: "
+          f"{ {k: g.padded for k, g in cm.packed_domain.groups.items()} }")
+    t0 = time.time()
+    losses = {h.namespace: [] for h in handles}
+    for step in range(args.steps):
+        batches = {ns: feeds[ns](step) for ns in feeds}   # fresh data per
+        params, metrics = cm.co_step(handles, params, batches)  # step/job
+        for ns, m in metrics.items():
+            losses[ns].append(float(m["loss"]))
+        if step % args.log_every == 0:
+            row = " ".join(f"{ns}={losses[ns][-1]:.4f}" for ns in losses)
+            print(f"[train] step {step:4d} {row}")
+    dt = time.time() - t0
+    tput = args.tenants * args.batch * args.seq * args.steps / dt
+    print(f"[train] done: {tput:,.0f} aggregate tok/s over "
+          f"{args.tenants} tenants")
+    for ns, acct in cm.accounting().items():
+        print(f"[train] {ns}: steps={acct['steps']} "
+              f"model_mb={acct['model_bytes']/1e6:.1f} "
+              f"share={acct['domain_share']:.2f} "
+              f"pushed_mb={acct['push_bytes']/1e6:.1f}")
     return losses
 
 

@@ -1,0 +1,158 @@
+"""Multi-tenant co-scheduling oracle check (run in a subprocess: 8 fake
+devices).
+
+On a (data=4, model=2) mesh, two co-scheduled tenants (different archs,
+different lr/momentum, different data) must produce *bitwise-identical*
+parameters to each tenant trained alone: packing only relayouts the chunk
+domain, the collectives reduce the same elements over the same workers, and
+the coefficient-table agg+opt is elementwise the same Nesterov — so any
+difference is a real isolation bug.  Covered: sharded_ps and hierarchical,
+pipeline_windows in {1, 2}, plus attach-with-momentum / detach-and-
+continue-solo lifecycle parity.
+
+Usage: python tests/multidevice/check_tenancy.py [case ...]
+Cases: sharded_ps hierarchical lifecycle
+Prints "OK <case>" lines; exits nonzero on failure.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.configs import ARCHS, TrainConfig, reduced  # noqa: E402
+from repro.core import PHubConnectionManager  # noqa: E402
+from repro.data import SyntheticTokens  # noqa: E402
+
+CASES = sys.argv[1:] or ["sharded_ps", "hierarchical", "lifecycle"]
+B, T = 8, 32
+failures = 0
+
+
+def report(ok, name, detail=""):
+    global failures
+    print(f"{'OK' if ok else 'FAIL'} {name} {detail}")
+    failures += 0 if ok else 1
+
+
+def mismatches(a, b):
+    errs = jax.tree.map(
+        lambda x, y: int((np.asarray(x) != np.asarray(y)).sum()), a, b)
+    return sum(jax.tree.leaves(errs))
+
+
+def tenant_pool(strategy, windows):
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    mk = lambda lr, mu: TrainConfig(strategy=strategy, lr=lr, momentum=mu,
+                                    pipeline_windows=windows, loss_chunk=32)
+    return mesh, [
+        ("jobA", reduced(ARCHS["llama3.2-1b"], d_model=64), mk(3e-2, 0.9), 1),
+        ("jobB", reduced(ARCHS["llama3.2-1b"], d_model=128), mk(1e-2, 0.8), 2),
+    ]
+
+
+def device_batch(eng, cfg, mesh, seed):
+    data = SyntheticTokens(cfg, B, T, seed=seed)
+    b = data.batch_at(0)
+    shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in b.items()}
+    return {k: jax.device_put(v, s) for (k, v), s in
+            zip(b.items(), eng.batch_shardings(shapes).values())}
+
+
+def solo_run(name, cfg, tc, mesh, seed, n_steps):
+    cm = PHubConnectionManager()
+    h = cm.create_service(name, cfg, tc, mesh)
+    eng = cm.connect_service(h)
+    p, o = cm.init_service(h, jax.random.PRNGKey(0))
+    batch = device_batch(eng, cfg, mesh, seed)
+    for _ in range(n_steps):
+        p, o, m = cm.push_pull(h, p, o, batch)
+    return p, o, float(m["loss"])
+
+
+def check_coscheduled(strategy):
+    for windows in (1, 2):
+        mesh, pool = tenant_pool(strategy, windows)
+        solo = {name: solo_run(name, cfg, tc, mesh, seed, 3)
+                for name, cfg, tc, seed in pool}
+
+        cm = PHubConnectionManager()
+        handles, params, batches = [], {}, {}
+        for name, cfg, tc, seed in pool:
+            h = cm.create_service(name, cfg, tc, mesh)
+            eng = cm.connect_service(h)
+            params[name], _ = cm.init_service(h, jax.random.PRNGKey(0))
+            batches[name] = device_batch(eng, cfg, mesh, seed)
+            cm.attach_service(h)
+            handles.append(h)
+        for _ in range(3):
+            params, metrics = cm.co_step(handles, params, batches)
+        for name, _, _, _ in pool:
+            p_solo, _, l_solo = solo[name]
+            bad = mismatches(p_solo, params[name])
+            loss_ok = l_solo == float(metrics[name]["loss"])
+            report(bad == 0 and loss_ok,
+                   f"{strategy} windows={windows} tenant={name}",
+                   f"mismatched_elems={bad}")
+        acct = cm.accounting()
+        ok = all(acct[n]["steps"] == 3 and acct[n]["push_bytes"] > 0
+                 for n, _, _, _ in pool)
+        report(ok, f"{strategy} windows={windows} accounting",
+               f"steps={[acct[n]['steps'] for n, _, _, _ in pool]}")
+
+
+def check_lifecycle():
+    """Solo(2) -> attach with momentum -> co(2) -> detach -> solo(2) must
+    bitwise-match 6 solo steps (momentum migrates through re-packs)."""
+    strategy = "sharded_ps"
+    mesh, pool = tenant_pool(strategy, 2)
+    solo = {name: solo_run(name, cfg, tc, mesh, seed, 6)
+            for name, cfg, tc, seed in pool}
+
+    cm = PHubConnectionManager()
+    handles, params, opts, batches, engines = [], {}, {}, {}, {}
+    for name, cfg, tc, seed in pool:
+        h = cm.create_service(name, cfg, tc, mesh)
+        engines[name] = cm.connect_service(h)
+        params[name], opts[name] = cm.init_service(h, jax.random.PRNGKey(0))
+        batches[name] = device_batch(engines[name], cfg, mesh, seed)
+        handles.append(h)
+    for name, _, _, _ in pool:                       # 2 solo steps
+        h = next(hh for hh in handles if hh.namespace == name)
+        for _ in range(2):
+            params[name], opts[name], _ = cm.push_pull(
+                h, params[name], opts[name], batches[name])
+    for h in handles:                                # carry momentum in
+        cm.attach_service(h, opt=opts[h.namespace])
+    for _ in range(2):                               # 2 co-scheduled steps
+        params, metrics = cm.co_step(handles, params, batches)
+    for h in handles:                                # carry momentum out
+        opts[h.namespace] = cm.detach_service(h)
+    for name, _, _, _ in pool:                       # 2 more solo steps
+        h = next(hh for hh in handles if hh.namespace == name)
+        for _ in range(2):
+            params[name], opts[name], m = cm.push_pull(
+                h, params[name], opts[name], batches[name])
+        p_solo, o_solo, l_solo = solo[name]
+        bad = mismatches(p_solo, params[name]) + mismatches(o_solo, opts[name])
+        report(bad == 0 and l_solo == float(m["loss"]),
+               f"lifecycle tenant={name}", f"mismatched_elems={bad}")
+
+
+def main():
+    for case in CASES:
+        if case in ("sharded_ps", "hierarchical"):
+            check_coscheduled(case)
+        elif case == "lifecycle":
+            check_lifecycle()
+        else:
+            raise SystemExit(f"unknown case {case!r}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,216 @@
+"""Service-lifecycle tests for the PHub connection manager (§3.1) and the
+single-device slice of the multi-tenant co-scheduler (DESIGN.md §9).
+
+The 8-device oracle equivalence check lives in
+tests/multidevice/check_tenancy.py (slow-marked runner: tests/test_tenancy.py).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, TrainConfig, reduced
+from repro.core import PHubConnectionManager, ServiceHandle
+from repro.data import SyntheticTokens
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+CFG = reduced(ARCHS["llama3.2-1b"], d_model=64)
+TC = TrainConfig(loss_chunk=32)
+
+
+def _batch(cfg, seed=0, batch=4, seq=32):
+    return SyntheticTokens(cfg, batch, seq, seed=seed).batch_at(0)
+
+
+# -------------------------------------------------------------- lifecycle
+
+def test_bad_nonce_raises_permission_error(mesh):
+    cm = PHubConnectionManager()
+    h = cm.create_service("job", CFG, TC, mesh)
+    forged = ServiceHandle(namespace="job", nonce="0" * 16)
+    with pytest.raises(PermissionError):
+        cm.connect_service(forged)
+    with pytest.raises(PermissionError):
+        cm.push_pull(forged, None, None, _batch(CFG))
+    with pytest.raises(PermissionError):
+        cm.destroy_service(forged)
+    # unknown namespace is the same error, not KeyError
+    with pytest.raises(PermissionError):
+        cm.connect_service(ServiceHandle(namespace="ghost", nonce=h.nonce))
+
+
+def test_duplicate_create_raises_value_error(mesh):
+    cm = PHubConnectionManager()
+    cm.create_service("job", CFG, TC, mesh)
+    with pytest.raises(ValueError, match="already exists"):
+        cm.create_service("job", CFG, TC, mesh)
+
+
+def test_destroy_reclaims_namespace(mesh):
+    cm = PHubConnectionManager()
+    h1 = cm.create_service("job", CFG, TC, mesh)
+    cm.destroy_service(h1)
+    h2 = cm.create_service("job", CFG, TC, mesh)   # namespace free again
+    assert h2.nonce != h1.nonce
+    with pytest.raises(PermissionError):           # old handle is dead
+        cm.connect_service(h1)
+    cm.connect_service(h2)
+
+
+def test_connect_service_counting(mesh):
+    cm = PHubConnectionManager()
+    h = cm.create_service("job", CFG, TC, mesh)
+    assert cm.service_info(h)["connected"] == 0
+    e1 = cm.connect_service(h)
+    e2 = cm.connect_service(h)
+    assert e1 is e2                                # one engine per namespace
+    assert cm.service_info(h)["connected"] == 2
+
+
+def test_cached_step_reuse_keyed_by_batch_shapes(mesh):
+    cm = PHubConnectionManager()
+    h = cm.create_service("job", CFG, TC, mesh)
+    p, o = cm.init_service(h, jax.random.PRNGKey(0))
+    b1 = _batch(CFG, seq=32)
+    p, o, _ = cm.push_pull(h, p, o, b1)
+    assert cm.service_info(h)["cached_steps"] == 1
+    p, o, _ = cm.push_pull(h, p, o, _batch(CFG, seed=1, seq=32))
+    assert cm.service_info(h)["cached_steps"] == 1   # same shapes: reuse
+    p, o, _ = cm.push_pull(h, p, o, _batch(CFG, seq=16))
+    assert cm.service_info(h)["cached_steps"] == 2   # new shapes: new step
+
+
+# ---------------------------------------------------------- co-scheduling
+
+def _two_tenants(cm, mesh):
+    cfgB = reduced(ARCHS["llama3.2-1b"], d_model=128)
+    tcB = dataclasses.replace(TC, lr=5e-3, momentum=0.8)
+    hA = cm.create_service("A", CFG, TC, mesh)
+    hB = cm.create_service("B", cfgB, tcB, mesh)
+    return (hA, CFG), (hB, cfgB)
+
+
+def test_attach_detach_lifecycle(mesh):
+    cm = PHubConnectionManager()
+    (hA, _), (hB, _) = _two_tenants(cm, mesh)
+    assert cm.packed_domain is None
+    cm.attach_service(hA)
+    cm.attach_service(hB)
+    assert cm.attached == ("A", "B")
+    dom = cm.packed_domain
+    assert set(dom.tenants) == {"A", "B"}
+    with pytest.raises(ValueError, match="already attached"):
+        cm.attach_service(hA)
+    opt_b = cm.detach_service(hB)
+    assert cm.attached == ("A",)
+    assert set(cm.packed_domain.tenants) == {"A"}   # ranges reclaimed
+    assert set(opt_b) == {"float32"}
+    with pytest.raises(ValueError, match="not attached"):
+        cm.detach_service(hB)
+    cm.destroy_service(hA)                          # destroy detaches too
+    assert cm.attached == ()
+    assert cm.packed_domain is None
+
+
+def test_attached_tenant_cannot_solo_push_pull(mesh):
+    cm = PHubConnectionManager()
+    (hA, _), _ = _two_tenants(cm, mesh)
+    p, o = cm.init_service(hA, jax.random.PRNGKey(0))
+    cm.attach_service(hA)
+    with pytest.raises(RuntimeError, match="attached"):
+        cm.push_pull(hA, p, o, _batch(CFG))
+
+
+def test_co_step_requires_all_attached_handles(mesh):
+    cm = PHubConnectionManager()
+    (hA, _), (hB, cfgB) = _two_tenants(cm, mesh)
+    pA, _ = cm.init_service(hA, jax.random.PRNGKey(0))
+    cm.attach_service(hA)
+    cm.attach_service(hB)
+    with pytest.raises(ValueError, match="exactly the attached"):
+        cm.co_step([hA], {"A": pA}, {"A": _batch(CFG)})
+
+
+def test_co_step_matches_solo_and_accounts(mesh):
+    cm = PHubConnectionManager()
+    (hA, cfgA), (hB, cfgB) = _two_tenants(cm, mesh)
+    pA, oA = cm.init_service(hA, jax.random.PRNGKey(0))
+    pB, _ = cm.init_service(hB, jax.random.PRNGKey(1))
+    bA, bB = _batch(cfgA), _batch(cfgB, seed=2)
+
+    # solo reference for tenant A (the step donates its inputs, so the
+    # co-scheduled run below re-inits the same deterministic state)
+    pA_ref, oA_ref = pA, oA
+    for _ in range(2):
+        pA_ref, oA_ref, mA = cm.push_pull(hA, pA_ref, oA_ref, bA)
+    pA, _ = cm.init_service(hA, jax.random.PRNGKey(0))
+
+    cm.attach_service(hA)
+    cm.attach_service(hB)
+    params = {"A": pA, "B": pB}
+    for _ in range(2):
+        params, metrics = cm.co_step([hA, hB], params,
+                                     {"A": bA, "B": bB})
+    errs = jax.tree.map(lambda a, b: int((np.asarray(a)
+                                          != np.asarray(b)).sum()),
+                        pA_ref, params["A"])
+    assert sum(jax.tree.leaves(errs)) == 0          # bitwise oracle, 1 dev
+    assert float(mA["loss"]) == float(metrics["A"]["loss"])
+
+    acct = cm.accounting()
+    assert acct["A"]["steps"] == 2 and acct["B"]["steps"] == 2
+    assert acct["B"]["model_bytes"] > acct["A"]["model_bytes"]
+    assert abs(acct["A"]["domain_share"] + acct["B"]["domain_share"]
+               - 1.0) < 1e-9
+    # recompile boundary: attach/detach invalidates the cached co-step
+    assert len(cm._co.steps) == 1
+    cm.detach_service(hB)
+    assert len(cm._co.steps) == 0
+
+
+def test_attach_services_batch(mesh):
+    """Batch attach = one re-pack for the whole fleet; duplicates refused
+    before any state changes."""
+    cm = PHubConnectionManager()
+    (hA, _), (hB, _) = _two_tenants(cm, mesh)
+    with pytest.raises(ValueError, match="already attached"):
+        cm.attach_services([hA, hA])
+    assert cm.attached == ()                        # nothing half-attached
+    hX = cm.create_service(
+        "X", CFG, dataclasses.replace(TC, strategy="allreduce"), mesh)
+    with pytest.raises(ValueError, match="exchange_signature"):
+        cm.attach_services([hA, hX])                # validated before mutate
+    assert cm.attached == () and cm.packed_domain is None
+    cm.attach_services([hA, hB])
+    assert cm.attached == ("A", "B")
+    assert set(cm.packed_domain.tenants) == {"A", "B"}
+
+
+def test_co_step_without_attached_tenants(mesh):
+    cm = PHubConnectionManager()
+    with pytest.raises(ValueError, match="no tenants attached"):
+        cm.co_step([], {}, {})
+
+
+def test_attach_rejects_incompatible_tenants(mesh):
+    cm = PHubConnectionManager()
+    hA = cm.create_service("A", CFG, TC, mesh)
+    hB = cm.create_service(
+        "B", CFG, dataclasses.replace(TC, strategy="allreduce"), mesh)
+    hC = cm.create_service(
+        "C", CFG, dataclasses.replace(TC, strategy="fsdp_stream"), mesh)
+    hD = cm.create_service(
+        "D", CFG, dataclasses.replace(TC, flat_residency=True), mesh)
+    cm.attach_service(hA)
+    with pytest.raises(ValueError, match="exchange_signature"):
+        cm.attach_service(hB)
+    with pytest.raises(ValueError, match="chunk domain"):
+        cm.attach_service(hC)
+    with pytest.raises(NotImplementedError, match="flat_residency"):
+        cm.attach_service(hD)

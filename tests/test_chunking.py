@@ -7,8 +7,10 @@ import pytest
 hyp = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.chunking import (build_plan, flatten_groups, unflatten_groups,
-                                 shard_matrix)
+from repro.core.chunking import (build_plan, build_store_layout,
+                                 flatten_groups, pack_domains,
+                                 unflatten_groups, shard_matrix)
+from repro.core.partition import makespan_ratio
 
 
 def _tree_strategy():
@@ -40,6 +42,121 @@ def test_flatten_roundtrip(tree_spec, n_shards, chunk_bytes):
     for k in tree:
         np.testing.assert_array_equal(np.asarray(tree[k]),
                                       np.asarray(back[k]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(_tree_strategy(), st.integers(1, 4),
+       st.sampled_from([64, 256, 1024]))
+def test_store_offsets_cover_flat_store_exactly_once(tree_spec, n_shards,
+                                                     chunk_bytes):
+    """FlatParamStore's per-leaf slice views must tile [0, total) with no
+    gap and no overlap — the zero-copy reader depends on it."""
+    shapes, dtypes = tree_spec
+    tree = {f"k{i}": jnp.zeros(s, dtype=dtypes[i % len(dtypes)])
+            for i, s in enumerate(shapes)}
+    plan = build_plan(tree, chunk_bytes=chunk_bytes, n_shards=n_shards)
+    layout = build_store_layout(plan, {p: None for g in plan.groups
+                                       for p in g.paths}, 1)
+    for g in plan.groups:
+        offs = layout.offsets[str(g.dtype)]
+        segs = sorted(zip(offs, g.sizes))
+        cursor = 0
+        for off, size in segs:
+            assert off == cursor, f"gap/overlap at {off} (expected {cursor})"
+            cursor += size
+        assert cursor == g.total
+        assert g.total <= g.padded
+
+
+def _multi_tenant_strategy():
+    tenant = st.lists(
+        st.tuples(st.integers(1, 5), st.integers(1, 17)), min_size=1,
+        max_size=4)
+    return st.lists(tenant, min_size=1, max_size=4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(_multi_tenant_strategy(), st.integers(1, 4),
+       st.sampled_from([64, 256]))
+def test_packed_domain_offsets_partition_packed_domain(tenant_shapes,
+                                                       n_shards,
+                                                       chunk_bytes):
+    """TenantPackedDomain offset tables must partition [0, padded): every
+    tenant run disjoint, pad segments closing the gaps, every tenant's own
+    offsets tiling [0, slot.padded) — and the cross-tenant chunk quota must
+    be LPT-balanced (unit chunks level exactly: makespan ratio 1.0)."""
+    plans = {}
+    for t, shapes in enumerate(tenant_shapes):
+        tree = {f"k{i}": jnp.zeros(s, jnp.float32)
+                for i, s in enumerate(shapes)}
+        plans[f"job{t}"] = build_plan(tree, chunk_bytes=chunk_bytes,
+                                     n_shards=n_shards)
+    dom = pack_domains(plans, n_shards=n_shards, chunk_bytes=chunk_bytes)
+    for key, g in dom.groups.items():
+        assert g.padded == g.n_shards * g.shard_len
+        assert g.shard_len % g.chunk_elems == 0
+        # packed side: runs + pads tile [0, padded) exactly once
+        covered = np.zeros(g.padded, np.int32)
+        off = 0
+        for tenant, _, length in g.layout:
+            covered[off:off + length] += 1
+            off += length
+        assert off == g.padded
+        assert (covered == 1).all()
+        # tenant side: each slot's runs tile [0, slot.padded) exactly once
+        for slot in g.slots:
+            tcov = np.zeros(slot.padded, np.int32)
+            for toff, poff, length in slot.runs:
+                tcov[toff:toff + length] += 1
+                assert 0 <= poff and poff + length <= g.padded
+                assert length % g.chunk_elems == 0
+            assert (tcov == 1).all()
+        # cross-tenant balance: tenant quotas + pad fill every shard to
+        # exactly chunks_per_shard (uniform shard matrix), i.e. LPT with
+        # unit chunks levels the bins exactly
+        loads = dom.shard_loads(key)
+        per_shard = [0] * g.n_shards
+        for s in g.slots:
+            for sh, c in enumerate(loads[s.tenant]):
+                per_shard[sh] += c
+        pad_per_shard = [g.chunks_per_shard - c for c in per_shard]
+        assert all(p >= 0 for p in pad_per_shard)
+        total_chunks = [c + p for c, p in zip(per_shard, pad_per_shard)]
+        assert makespan_ratio([1] * sum(total_chunks),
+                              [sh for sh in range(g.n_shards)
+                               for _ in range(total_chunks[sh])],
+                              g.n_shards) == 1.0
+        assert all(c == g.chunks_per_shard for c in total_chunks)
+        # no tenant monopolizes a shard: per-tenant quotas differ by <= 1
+        for s in g.slots:
+            assert max(loads[s.tenant]) - min(loads[s.tenant]) <= 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(_multi_tenant_strategy(), st.integers(1, 4))
+def test_packed_pack_unpack_roundtrip(tenant_shapes, n_shards):
+    """pack -> unpack is the identity on every tenant's flat vector (the
+    co-scheduled exchange relies on relayout-only packing)."""
+    chunk_bytes = 64
+    rng = np.random.default_rng(0)
+    plans, flats = {}, {}
+    for t, shapes in enumerate(tenant_shapes):
+        ns = f"job{t}"
+        tree = {f"k{i}": jnp.asarray(rng.normal(size=s).astype("float32"))
+                for i, s in enumerate(shapes)}
+        plans[ns] = build_plan(tree, chunk_bytes=chunk_bytes,
+                               n_shards=n_shards)
+        flats[ns] = flatten_groups(plans[ns], tree)
+    dom = pack_domains(plans, n_shards=n_shards, chunk_bytes=chunk_bytes)
+    for key, g in dom.groups.items():
+        packed = dom.pack(key, {s.tenant: flats[s.tenant][key]
+                                for s in g.slots})
+        assert packed.shape == (g.padded,)
+        for slot in g.slots:
+            back = dom.unpack(key, packed, slot.tenant)
+            np.testing.assert_array_equal(
+                np.asarray(back),
+                np.asarray(flats[slot.tenant][key][:slot.padded]))
 
 
 def test_groups_split_by_dtype():

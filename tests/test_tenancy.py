@@ -1,0 +1,130 @@
+"""Multi-tenant co-scheduled exchange (§3.1, DESIGN.md §9).
+
+Single-device tests cover the packed-domain math at the engine level; the
+8-device oracle equivalence (co-scheduled == per-tenant solo, bitwise, for
+sharded_ps and hierarchical with pipeline_windows in {1, 2}, plus the
+attach/detach momentum lifecycle) runs in a subprocess like
+tests/test_pipeline.py.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, TrainConfig, reduced
+from repro.core import PHubConnectionManager, pack_domains
+from repro.core.cost_model import tenant_accounting, tenant_step_traffic
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+# ----------------------------------------------------------- domain/engine
+
+def _manager_with_tenants(n, mesh, **tc_kw):
+    cm = PHubConnectionManager()
+    handles = []
+    for i in range(n):
+        cfg = reduced(ARCHS["llama3.2-1b"], d_model=64 * (i + 1))
+        tc = TrainConfig(lr=1e-2 * (i + 1), loss_chunk=32, **tc_kw)
+        h = cm.create_service(f"job{i}", cfg, tc, mesh)
+        cm.attach_service(h)
+        handles.append(h)
+    return cm, handles
+
+
+def test_packed_domain_tracks_attached_set():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cm, handles = _manager_with_tenants(3, mesh)
+    dom = cm.packed_domain
+    assert dom.tenants == ("job0", "job1", "job2")
+    (g,) = dom.groups.values()
+    # packed domain holds every tenant's total exactly once
+    assert sum(s.total for s in g.slots) == sum(
+        cm._services[h.namespace].engine.chunk_plan.groups[0].total
+        for h in handles)
+    cm.detach_service(handles[1])
+    assert cm.packed_domain.tenants == ("job0", "job2")
+
+
+def test_coef_vector_marks_tenant_ranges():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cm, _ = _manager_with_tenants(2, mesh)
+    dom = cm.packed_domain
+    (key,) = dom.groups
+    g = dom.groups[key]
+    lr = dom.coef_vector(key, {"job0": 1.0, "job1": 2.0})
+    for slot, want in zip(g.slots, (1.0, 2.0)):
+        for toff, poff, length in slot.runs:
+            assert (lr[poff:poff + length] == want).all()
+    # pad positions carry the fill value (fixed points of the update)
+    covered = np.zeros(g.padded, bool)
+    for slot in g.slots:
+        for _, poff, length in slot.runs:
+            covered[poff:poff + length] = True
+    assert (lr[~covered] == 0.0).all()
+
+
+def test_tenant_accounting_shares_sum_to_one():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cm, _ = _manager_with_tenants(3, mesh)
+    acct = tenant_accounting(cm.packed_domain, "sharded_ps", 4)
+    assert abs(sum(a["domain_share"] for a in acct.values()) - 1.0) < 1e-9
+    t = tenant_step_traffic("sharded_ps", 100.0, 4)
+    assert t["push_bytes"] == t["pull_bytes"] == 75.0
+    assert tenant_step_traffic("centralized_ps", 100.0, 4)["push_bytes"] == 100.0
+
+
+def test_single_tenant_coschedule_matches_solo():
+    """K=1 co-scheduling is the solo engine in a different coat — bitwise."""
+    from repro.data import SyntheticTokens
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    tc = TrainConfig(lr=3e-2, loss_chunk=32)
+    b = SyntheticTokens(cfg, 4, 32, seed=5).batch_at(0)
+
+    cm = PHubConnectionManager()
+    h = cm.create_service("solo", cfg, tc, mesh)
+    p, o = cm.init_service(h, jax.random.PRNGKey(0))
+    for _ in range(2):
+        p, o, m = cm.push_pull(h, p, o, b)
+
+    cm2 = PHubConnectionManager()
+    h2 = cm2.create_service("solo", cfg, tc, mesh)
+    p2, _ = cm2.init_service(h2, jax.random.PRNGKey(0))
+    cm2.attach_service(h2)
+    params = {"solo": p2}
+    for _ in range(2):
+        params, metrics = cm2.co_step([h2], params, {"solo": b})
+    errs = jax.tree.map(
+        lambda a, b: int((np.asarray(a) != np.asarray(b)).sum()),
+        p, params["solo"])
+    assert sum(jax.tree.leaves(errs)) == 0
+    assert float(m["loss"]) == float(metrics["solo"]["loss"])
+
+
+def test_pack_domains_rejects_mismatched_chunk_size():
+    tree = {"w": jax.ShapeDtypeStruct((4096,), np.float32)}
+    from repro.core.chunking import build_plan
+    a = build_plan(tree, chunk_bytes=1024, n_shards=2)
+    b = build_plan(tree, chunk_bytes=512, n_shards=2)
+    with pytest.raises(ValueError, match="chunk size"):
+        pack_domains({"A": a, "B": b}, n_shards=2, chunk_bytes=1024)
+
+
+# ----------------------------------------------------------- multi-device
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case", ["sharded_ps", "hierarchical", "lifecycle"])
+def test_multidevice_tenancy_oracle(case):
+    """Two co-scheduled tenants == each tenant trained alone (bitwise), on
+    8 forced host devices in a subprocess."""
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "multidevice",
+                                      "check_tenancy.py"), case],
+        capture_output=True, text=True, timeout=1500,
+        env={**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")})
+    assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-3000:]
+    assert "FAIL" not in proc.stdout
