@@ -53,6 +53,7 @@ def bench_exchange_only(p):
     cfg = reduced(ARCHS[p.get("arch", "llama3.2-1b")],
                   d_model=p.get("d_model", 256))
     tc = TrainConfig(strategy=p["strategy"],
+                     optimizer=p.get("optimizer", "nesterov"),
                      chunk_size_bytes=p.get("chunk_kb", 32) * 1024)
     eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
     state = eng.init_state(jax.random.PRNGKey(0))
@@ -155,9 +156,10 @@ def bench_pipeline_exchange(p):
     (grp,) = plan.groups
     lr, mu = 1e-2, 0.9
 
-    def upd(pv, gv, mv):
+    def upd(pv, gv, slots):
+        (mv,) = slots
         m2 = mu * mv + gv
-        return pv - lr * (gv + mu * m2), m2
+        return pv - lr * (gv + mu * m2), (m2,)
 
     # momentum is sharded over the strategy's shard axes: the in-pod data
     # axis for hierarchical (replicated across pods), every worker axis for
@@ -174,8 +176,9 @@ def bench_pipeline_exchange(p):
                 rank = jnp.zeros((), jnp.int32)
                 for a in axes:
                     rank = rank * sizes[a] + jax.lax.axis_index(a)
-            return run_exchange(strategy, ctx, gv, pv, mv, upd, rank, grp,
-                                windows)
+            p2, (m2,) = run_exchange(strategy, ctx, gv, pv, (mv,), upd,
+                                     rank, grp, windows)
+            return p2, m2
         return jax.jit(compat.shard_map(
             local, mesh=mesh, in_specs=(P(), m_spec),
             out_specs=(P(), m_spec), axis_names=manual,
@@ -231,8 +234,12 @@ def bench_multitenant(p):
                   d_model=p.get("d_model", 256))
     batch, seq = p.get("batch", 8), p.get("seq", 64)
 
+    optimizers = p.get("optimizers")     # per-tenant list (mixed-rule co)
+
     def make_tc(i):
         return TrainConfig(strategy=p.get("strategy", "sharded_ps"),
+                           optimizer=(optimizers[i % len(optimizers)]
+                                      if optimizers else "nesterov"),
                            lr=1e-2 * (i + 1), momentum=0.9,
                            chunk_size_bytes=p.get("chunk_kb", 32) * 1024,
                            pipeline_windows=p.get("windows", 1),

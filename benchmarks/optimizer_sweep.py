@@ -1,0 +1,53 @@
+"""Optimizer cost in the exchange (DESIGN.md §10): nesterov vs sgd vs adam.
+
+The sharded-optimizer protocol changes the per-chunk fused agg+opt work
+and the opt-state traffic: sgd carries zero slots, nesterov one, adam
+four (m, v, k1, k2).  This sweep measures the *pure PS* exchange cost per
+optimizer (zero-compute engine, §4.4 methodology — fwd/bwd replaced by a
+synthetic push) on a 4-worker rack, plus the 2-tenant co-scheduled round:
+a homogeneous nesterov pair against a mixed nesterov+adam pair, whose
+packed update applies both rules under per-position mask tables.
+
+Derived columns report the cost relative to nesterov (solo) and the
+co-vs-serial speedup (co rounds, same caveats as benchmarks/multitenant:
+the synchronous host backend amortizes per-program fixed cost only).
+"""
+from __future__ import annotations
+
+from .common import Row, run_multidevice
+
+DEPLOY = {"data_size": 4, "strategy": "sharded_ps", "d_model": 256}
+
+
+def run() -> list[Row]:
+    rows = []
+    base_us = None
+    for optname in ("nesterov", "sgd", "adam"):
+        r = run_multidevice({"bench": "exchange_only", "optimizer": optname,
+                             **DEPLOY}, n_devices=8)
+        if optname == "nesterov":
+            base_us = r["us"]
+        rows.append(Row(
+            f"optimizer_sweep/solo_{optname}", r["us"],
+            f"vs_nesterov={r['us'] / base_us:.2f}x "
+            f"model_mb={r['model_bytes'] / 1e6:.1f} "
+            f"exchanges_per_s={r['exchanges_per_s']:.1f}"))
+
+    for label, opts in (("co2_nesterov_pair", ["nesterov", "nesterov"]),
+                        ("co2_nesterov_adam", ["nesterov", "adam"])):
+        r = run_multidevice(
+            {"bench": "multitenant", "n_tenants": 2, "model_size": 2,
+             "optimizers": opts, "batch": 8, "seq": 64, "reps": 7,
+             "strategy": "sharded_ps", "data_size": 4, "d_model": 256},
+            n_devices=8)
+        rows.append(Row(
+            f"optimizer_sweep/{label}", r["us_co"],
+            f"speedup_vs_serial={r['speedup']:.2f}x "
+            f"serial_us={r['us_serial']:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run():
+        row.print()

@@ -14,6 +14,8 @@ Prints ``name,us_per_call,derived`` CSV rows (plus section markers).
   roofline            §Roofline        per (arch x shape) terms from dry-run
   pipeline_overlap    §3.2 / D §8      windowed pipeline vs monolithic
   multitenant         §3.1 / D §9      co-scheduled tenants vs serial engines
+  optimizer_sweep     D §10            nesterov/sgd/adam exchange cost,
+                                       solo + 2-tenant co (mixed rules)
 
 Run all: PYTHONPATH=src python -m benchmarks.run
 Subset:  PYTHONPATH=src python -m benchmarks.run tall_vs_wide roofline
@@ -27,7 +29,8 @@ import traceback
 MODULES = ["bandwidth_table2", "cost_table5", "comm_schemes", "hierarchical",
            "key_balance",
            "tall_vs_wide", "caching", "overhead_breakdown", "roofline",
-           "chunk_size", "zero_compute", "pipeline_overlap", "multitenant"]
+           "chunk_size", "zero_compute", "pipeline_overlap", "multitenant",
+           "optimizer_sweep"]
 
 
 def main() -> None:

@@ -1,0 +1,93 @@
+"""A hand-rolled training loop — no repro model zoo, no PHubEngine —
+driving the rack exchange through the framework-agnostic PHubClient
+(DESIGN.md §10).
+
+The model is a plain 2-layer MLP on a synthetic regression task, written
+as any external framework would write it: its own init, its own loss, its
+own grad computation.  PHub's involvement is exactly the kvstore-style
+contract from the paper (§2, §4):
+
+    client = PHubClient(tc, mesh).register(grads_like)   # key registration
+    opt    = client.init_state()                         # PS-side buffers
+    params, opt = client.push_pull(grads, params, opt)   # fused PushPull
+
+Per-worker gradients carry a leading worker axis — here produced with a
+vmapped grad over per-worker batch slices, which is exactly the
+"every worker pushes its own gradient" stream the PS aggregates (mean)
+before running the fused sharded-optimizer update (adam below; swap
+TrainConfig.optimizer for nesterov/sgd).
+
+Run:  PYTHONPATH=src python examples/external_loop.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import TrainConfig  # noqa: E402
+from repro.core import PHubClient  # noqa: E402
+
+
+def init_mlp(key, d_in=32, d_hidden=128, d_out=8):
+    k1, k2 = jax.random.split(key)
+    s1, s2 = 1 / np.sqrt(d_in), 1 / np.sqrt(d_hidden)
+    return {"fc1": {"w": jax.random.normal(k1, (d_in, d_hidden)) * s1,
+                    "b": jnp.zeros((d_hidden,))},
+            "fc2": {"w": jax.random.normal(k2, (d_hidden, d_out)) * s2,
+                    "b": jnp.zeros((d_out,))}}
+
+
+def mlp(params, x):
+    h = jnp.tanh(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return h @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def loss_fn(params, batch):
+    pred = mlp(params, batch["x"])
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def main():
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    tc = TrainConfig(optimizer="adam", lr=3e-3, strategy="sharded_ps",
+                     chunk_size_bytes=4096, pipeline_windows=2)
+    key = jax.random.PRNGKey(0)
+    params = init_mlp(key)
+
+    # register the gradient pytree (== parameter structure) with the PS
+    client = PHubClient(tc, mesh).register(params)
+    opt = client.init_state()
+    W = client.ctx.n_workers
+    print(f"workers={W} optimizer={tc.optimizer} "
+          f"registered={client.registered_bytes() / 1e3:.1f} KB "
+          f"slots={[s.name for s in client.sopt.slots]}")
+
+    # fixed synthetic teacher for the regression target
+    tkey = jax.random.PRNGKey(42)
+    teacher = init_mlp(tkey)
+
+    # each worker grabs its own batch slice; vmapped grad = one gradient
+    # per worker, the (W, ...) push stream push_pull expects
+    per_worker_grads = jax.jit(jax.vmap(jax.grad(loss_fn),
+                                        in_axes=(None, 0)))
+    per_worker_loss = jax.jit(jax.vmap(loss_fn, in_axes=(None, 0)))
+
+    B = 16                                       # per-worker batch
+    for step in range(200):
+        k = jax.random.fold_in(key, step)
+        x = jax.random.normal(k, (W, B, 32))
+        batch = {"x": x, "y": mlp(teacher, x.reshape(-1, 32))
+                 .reshape(W, B, -1)}
+        grads = per_worker_grads(params, batch)
+        params, opt = client.push_pull(grads, params, opt)
+        if step % 40 == 0 or step == 199:
+            loss = float(per_worker_loss(params, batch).mean())
+            print(f"step {step:4d}  mse {loss:.5f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,10 +7,15 @@ scale; a production deployment would swap in a per-shard writer behind the
 same API.
 
 Flat-residency states (DESIGN.md §8) need no special casing on the save
-path — the store is a plain {dtype_str: array} dict.  ``restore_train_state``
-re-lays-out a loaded state onto an engine's planned shardings and converts
-between tree-state and flat-store checkpoints in either direction, so a
-training run can be resumed under a different residency mode.
+path — the store is a plain {dtype_str: array} dict, and the optimizer
+state is {dtype_str: {slot_name: array}} for however many slots the
+engine's sharded optimizer declares (one momentum buffer for nesterov,
+(m, v, k1, k2) for adam, none for sgd — optim/protocol.py).
+``restore_train_state`` re-lays-out a loaded state onto an engine's
+planned shardings — walking the engine's declared slot structure, so
+zero-slot states round-trip too — and converts between tree-state and
+flat-store checkpoints in either direction, so a training run can be
+resumed under a different residency mode.
 """
 from __future__ import annotations
 
@@ -94,9 +99,13 @@ def restore_train_state(directory: str, engine, step: int | None = None):
     """Load a {"params", "opt"} checkpoint and place it with ``engine``'s
     planned shardings.  Converts tree-state checkpoints into the flat store
     (and vice versa) when the engine's residency mode differs from the one
-    that wrote the checkpoint.  Returns (step, params, opt)."""
+    that wrote the checkpoint.  The opt state is restored against the
+    engine's declared slot structure (N slots per dtype group; nothing for
+    a stateless optimizer — np.savez drops empty subtrees, so structure
+    cannot be recovered from the archive alone).  Returns
+    (step, params, opt)."""
     step, tree = load_checkpoint(directory, step)
-    params, opt = tree["params"], tree["opt"]
+    params, opt = tree["params"], tree.get("opt", {})
     flat_ckpt = _is_flat_store(params)
     if engine.tc.flat_residency and not flat_ckpt:
         params = engine.store_from_params(params)
@@ -113,6 +122,55 @@ def restore_train_state(directory: str, engine, step: int | None = None):
         params = jax.tree.map(
             lambda v, s: jax.device_put(np.asarray(v), s),
             params, engine.param_shardings())
-    opt = jax.tree.map(lambda v, s: jax.device_put(np.asarray(v), s),
-                       opt, engine.opt_state_shardings())
-    return step, params, opt
+
+    # walk the engine's slot structure and pick each buffer by path: this
+    # restores however many slots the optimizer declares and rebuilds the
+    # empty {dtype: {}} containers a zero-slot state needs for jit specs
+    flat_loaded = _flatten(opt)
+    oshapes = engine.opt_state_shapes()
+    oshards = _flatten(engine.opt_state_shardings())
+    vals = {}
+    consumed = set()
+    for path, sd in _flatten(oshapes).items():
+        src = path
+        if src not in flat_loaded:
+            # pre-protocol layout: the single momentum buffer lived at the
+            # dtype key directly ({dtype: arr}; fsdp: the bare leaf path)
+            # — accept it as the 'm' slot so old runs stay resumable
+            legacy = (path[:-2] if path.endswith("/m")
+                      else path[2:] if path.startswith("m/") else None)
+            if legacy is not None and legacy in flat_loaded:
+                src = legacy
+            else:
+                raise ValueError(
+                    f"checkpoint step_{step} has no opt slot {path!r}; it "
+                    f"was written by a different optimizer than the "
+                    f"engine's ({engine.tc.optimizer!r}: slots "
+                    f"{[s.name for s in engine.sopt.slots]})")
+        consumed.add(src)
+        arr = np.asarray(flat_loaded[src])
+        if tuple(arr.shape) != tuple(sd.shape):
+            raise ValueError(
+                f"opt slot {path!r} shape {arr.shape} != engine layout "
+                f"{tuple(sd.shape)}")
+        vals[path] = jax.device_put(arr, oshards[path])
+    extra = set(flat_loaded) - consumed
+    if extra:
+        raise ValueError(
+            f"checkpoint step_{step} carries opt slots {sorted(extra)} the "
+            f"engine's optimizer ({engine.tc.optimizer!r}: slots "
+            f"{[s.name for s in engine.sopt.slots]}) does not declare; "
+            f"restoring would silently drop optimizer state")
+    return step, params, _rebuild_like(oshapes, vals)
+
+
+def _rebuild_like(shapes_tree, vals: dict, prefix=""):
+    """Mirror ``shapes_tree``'s container structure (including empty dicts)
+    substituting the restored array for each ShapeDtypeStruct leaf."""
+    if isinstance(shapes_tree, dict):
+        return {k: _rebuild_like(v, vals, f"{prefix}{k}/")
+                for k, v in shapes_tree.items()}
+    if isinstance(shapes_tree, (list, tuple)):
+        return tuple(_rebuild_like(v, vals, f"{prefix}#{i}/")
+                     for i, v in enumerate(shapes_tree))
+    return vals[prefix[:-1]]

@@ -111,11 +111,17 @@ class InputShape:
 @dataclass(frozen=True)
 class TrainConfig:
     """Optimization + parameter-exchange (PHub) configuration."""
-    optimizer: str = "nesterov"       # nesterov (paper's) | sgd | adam
+    optimizer: str = "nesterov"       # nesterov (paper's) | sgd | adam —
+                                      # all three implement the sharded-
+                                      # optimizer protocol (optim/protocol)
+                                      # and run fused inside the exchange
     lr: float = 1e-2
     momentum: float = 0.9
     weight_decay: float = 0.0
     grad_clip: float = 0.0
+    adam_b1: float = 0.9              # adam statics (rule identity: tenants
+    adam_b2: float = 0.999            # differing in any of these are two
+    adam_eps: float = 1e-8            # distinct co-scheduled rules)
 
     # --- PHub exchange (the paper's contribution) ---
     strategy: str = "sharded_ps"      # allreduce | sharded_ps | centralized_ps | hierarchical
@@ -163,10 +169,12 @@ class TrainConfig:
         """The fields that define the shared collective schedule.  Tenants
         co-scheduled onto one rack chunk domain (core/api.py) must agree on
         these — they share one reduce-scatter/agg+opt/all-gather program —
-        while lr/momentum/arch/batch are free to differ per tenant."""
+        while lr/momentum/arch/batch *and the optimizer itself* are free to
+        differ per tenant (mixed-optimizer updates ride per-position mask +
+        coefficient tables; optim/protocol.py)."""
         return (self.strategy, self.chunk_size_bytes, self.pipeline_windows,
                 self.dp_over_model, self.flat_residency, self.use_pallas,
-                self.fused_agg_opt, self.optimizer)
+                self.fused_agg_opt)
 
 
 def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 256,

@@ -1,4 +1,5 @@
 """PHub core: the paper's contribution as composable JAX modules."""
+from .client import PHubClient
 from .engine import PHubEngine, make_co_train_step
 from .exchange import STRATEGIES, ExchangeContext, exchange_group
 from .chunking import (build_plan, flatten_groups, unflatten_groups,

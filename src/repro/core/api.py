@@ -12,10 +12,13 @@ tenants are packed into one shared rack chunk domain
 partition.cochunk_counts so no tenant monopolizes a shard) and stepped by
 one jointly compiled multi-job program (engine.make_co_train_step) whose
 single reduce-scatter/agg+opt/all-gather schedule carries every tenant's
-gradients at once.  Attach/detach re-packs the domain, migrates the shared
-packed momentum, and invalidates the compiled-step cache; destroy reclaims
-the tenant's chunk ranges.  Per-tenant byte/step accounting is surfaced
-through cost_model.tenant_accounting.
+gradients at once — tenants may mix optimizers (per-position mask +
+coefficient tables select each position's owner rule; optim/protocol.py),
+and the packed opt state holds the attached tenants' union slot set.
+Attach/detach re-packs the domain, migrates the shared packed opt slots,
+and invalidates the compiled-step cache; destroy reclaims the tenant's
+chunk ranges.  Per-tenant byte/step accounting is surfaced through
+cost_model.tenant_accounting.
 """
 from __future__ import annotations
 
@@ -30,7 +33,7 @@ from ..configs.base import ModelConfig, TrainConfig
 from . import cost_model
 from .chunking import TenantPackedDomain, pack_domains
 from .engine import (PHubEngine, co_opt_state_shapes, co_opt_state_shardings,
-                     make_co_train_step)
+                     co_slot_specs, make_co_train_step)
 
 
 @dataclass
@@ -51,7 +54,7 @@ class _Service:
 class _CoSchedule:
     """Shared rack chunk domain state for the attached tenants."""
     domain: TenantPackedDomain
-    opt: dict                               # packed momentum (device arrays)
+    opt: dict                  # packed opt slots {key: {slot: device array}}
     acct: dict                              # ns -> static per-step accounting
     steps: dict = field(default_factory=dict)       # compiled-step cache
     traffic: dict = field(default_factory=dict)     # ns -> counters
@@ -269,7 +272,10 @@ class PHubConnectionManager:
 
     def _repack(self, tenant_flats: dict):
         """(Re)build the packed domain for the attached set and scatter the
-        given per-tenant momentum flats into fresh packed buffers."""
+        given per-tenant opt-slot flats into fresh packed buffers (one
+        buffer per (dtype, slot) over the attached tenants' union slot
+        set).  A tenant lacking a slot (an sgd tenant in an adam domain)
+        simply leaves its ranges of that buffer zero."""
         if not self._attached:
             self._co = None
             return
@@ -279,20 +285,28 @@ class PHubConnectionManager:
              for ns in self._attached},
             n_shards=max(e0.ctx.n_shards(e0.tc.strategy), 1),
             chunk_bytes=e0.tc.chunk_size_bytes)
-        shapes = co_opt_state_shapes(e0, domain)
+        slots = co_slot_specs(
+            {ns: self._services[ns].engine for ns in self._attached})
+        shapes = co_opt_state_shapes(e0, domain, slots)
         bufs = {}
         for key, pg in domain.groups.items():
             mo = e0.mo_eff
-            buf = np.zeros((mo, pg.padded), pg.dtype)
-            for slot in pg.slots:
-                flat = tenant_flats.get(slot.tenant, {}).get(key)
-                if flat is None:
-                    continue
-                for toff, poff, ln in slot.runs:
-                    buf[:, poff:poff + ln] = flat[:, toff:toff + ln]
-            bufs[key] = buf.reshape(shapes[key].shape)
-        shardings = co_opt_state_shardings(e0, domain)
-        opt = {key: jax.device_put(bufs[key], shardings[key])
+            bufs[key] = {}
+            for spec in slots:
+                dt = spec.resolve_dtype(pg.dtype)
+                buf = np.zeros((mo, pg.padded), dt)
+                for slot in pg.slots:
+                    flat = (tenant_flats.get(slot.tenant, {})
+                            .get(key, {}).get(spec.name))
+                    if flat is None:
+                        continue
+                    for toff, poff, ln in slot.runs:
+                        buf[:, poff:poff + ln] = flat[:, toff:toff + ln]
+                bufs[key][spec.name] = buf.reshape(
+                    shapes[key][spec.name].shape)
+        shardings = co_opt_state_shardings(e0, domain, slots)
+        opt = {key: {n: jax.device_put(b, shardings[key][n])
+                     for n, b in bufs[key].items()}
                for key in domain.groups}
         traffic = self._co.traffic if self._co else {}
         acct = cost_model.tenant_accounting(      # static per domain: once
@@ -301,44 +315,52 @@ class PHubConnectionManager:
                                traffic=traffic)
 
     def _extract_all(self) -> dict:
-        """Packed momentum -> {ns: {key: (mo, slot.padded) np array}}."""
+        """Packed opt slots -> {ns: {key: {slot: (mo, slot.padded) np}}}."""
         if self._co is None:
             return {}
         out = {ns: {} for ns in self._attached}
         for key, pg in self._co.domain.groups.items():
-            rows = np.asarray(jax.device_get(self._co.opt[key]))
-            mo = rows.shape[0]
-            rows = rows.reshape(mo, -1)
-            for slot in pg.slots:
-                flat = np.zeros((mo, slot.padded), pg.dtype)
-                for toff, poff, ln in slot.runs:
-                    flat[:, toff:toff + ln] = rows[:, poff:poff + ln]
-                out[slot.tenant][key] = flat
+            for name, arr in self._co.opt[key].items():
+                rows = np.asarray(jax.device_get(arr))
+                mo = rows.shape[0]
+                rows = rows.reshape(mo, -1)
+                for slot in pg.slots:
+                    flat = np.zeros((mo, slot.padded), rows.dtype)
+                    for toff, poff, ln in slot.runs:
+                        flat[:, toff:toff + ln] = rows[:, poff:poff + ln]
+                    out[slot.tenant].setdefault(key, {})[name] = flat
         return out
 
     def _engine_opt_to_flats(self, eng: PHubEngine, opt) -> dict:
-        """Engine-layout momentum -> chunk-granularity flats.  The dropped
+        """Engine-layout opt slots -> chunk-granularity flats.  The dropped
         tail [slot.padded:group.padded) is the tenant's solo rack-granularity
         padding, which never receives gradient (always zero)."""
         out = {}
         for g in eng.chunk_plan.groups:
             key = str(g.dtype)
-            rows = np.asarray(jax.device_get(opt[key]))
-            out[key] = rows.reshape(rows.shape[0], -1)
+            out[key] = {}
+            for name in eng.sopt.slot_names:
+                rows = np.asarray(jax.device_get(opt[key][name]))
+                out[key][name] = rows.reshape(rows.shape[0], -1)
         return out
 
     def _flats_to_engine_opt(self, eng: PHubEngine, flats: dict):
-        """Chunk-granularity flats -> engine-layout momentum (device)."""
+        """Chunk-granularity flats -> engine-layout opt slots (device),
+        restricted to the engine's own optimizer's slot set (union-domain
+        slots foreign to this tenant's rule are dropped)."""
         shapes = eng.opt_state_shapes()
         shardings = eng.opt_state_shardings()
         out = {}
         for g in eng.chunk_plan.groups:
             key = str(g.dtype)
-            mo = shapes[key].shape[0]
-            buf = np.zeros((mo, g.padded), g.dtype)
-            flat = flats.get(key)
-            if flat is not None:
-                buf[:, :flat.shape[1]] = flat
-            out[key] = jax.device_put(buf.reshape(shapes[key].shape),
-                                      shardings[key])
+            out[key] = {}
+            for spec in eng.sopt.slots:
+                sd = shapes[key][spec.name]
+                mo = sd.shape[0]
+                buf = np.zeros((mo, g.padded), sd.dtype)
+                flat = flats.get(key, {}).get(spec.name)
+                if flat is not None:
+                    buf[:, :flat.shape[1]] = flat
+                out[key][spec.name] = jax.device_put(
+                    buf.reshape(sd.shape), shardings[key][spec.name])
         return out

@@ -1,0 +1,307 @@
+"""PHubClient: the framework-agnostic push/pull API (paper §2, §4).
+
+PHub's headline interface is a kvstore-style push/pull that "many DDNN
+training frameworks" can drop in: workers push gradients, the PS runs
+fused aggregation+optimization on its chunk shards, workers pull updated
+parameters.  This module is that seam extracted from the engine: a client
+is built from a chunk plan over an *arbitrary* gradient pytree — no
+models, no losses — and drives the full sharded/hierarchical, windowed-
+pipeline, flat-residency exchange of core/exchange.py / core/pipeline.py
+with the pluggable sharded-optimizer protocol (optim/protocol.py):
+
+    client = PHubClient(tc, mesh).register(grads_like)
+    opt    = client.init_state()
+    params, opt = client.push_pull(grads, params, opt)
+
+``grads`` carries a leading worker axis — leaf shape ``(n_workers,
+*leaf)``, sharded over the mesh's data axes: in SPMD terms that leading
+axis *is* the per-worker push stream PHub's PS receives.  ``push_pull``
+is the fused Push-wait-Pull: one call aggregates every worker's push
+(mean), applies the optimizer on each shard's own chunks, and returns the
+pulled parameters.
+
+``PHubEngine`` (core/engine.py), ``make_co_train_step``, and the
+connection manager's PushPull are thin consumers: the engine builds a
+client over its local chunk plan and delegates every per-group exchange
+to ``exchange_flats`` (with its own shard_map nesting and model-axis
+layout around it); the co-scheduler passes the packed tenant domain's
+groups plus per-position coefficient/mask aux tables through the same
+call.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import TrainConfig
+from ..optim.protocol import (ShardedOptimizer, SlotSpec,
+                              make_sharded_optimizer, tuple_update)
+from ..utils import compat
+from . import chunking
+from .exchange import ExchangeContext, flat_rank
+from .pipeline import run_exchange
+
+
+class _MeshScopedJit:
+    """Wrap a jitted fn so tracing/lowering happens under the owning mesh
+    (with_sharding_constraint with bare PartitionSpecs needs a context mesh
+    outside shard_map)."""
+
+    def __init__(self, fn, mesh):
+        self._fn = fn
+        self._mesh = mesh
+
+    def __call__(self, *a, **k):
+        with compat.set_mesh(self._mesh):
+            return self._fn(*a, **k)
+
+    def lower(self, *a, **k):
+        with compat.set_mesh(self._mesh):
+            return self._fn.lower(*a, **k)
+
+
+class PHubClient:
+    """One job's handle onto the rack's exchange machinery.
+
+    Two construction paths:
+      * standalone — ``PHubClient(tc, mesh).register(grads_like)``: the
+        client derives the exchange context from the mesh's pod/data axes,
+        builds the chunk plan, and ``push_pull`` runs its own shard_map.
+      * embedded — ``PHubClient(tc, ctx=..., plan=...)``: an engine (or
+        the co-scheduler) that already owns a manual region hands its
+        context and plan in and calls ``exchange_flats`` directly.
+    """
+
+    def __init__(self, tc: TrainConfig, mesh: Optional[Mesh] = None, *,
+                 data_axes: Optional[tuple] = None,
+                 ctx: Optional[ExchangeContext] = None,
+                 plan: Optional[chunking.ChunkPlan] = None):
+        if tc.strategy == "fsdp_stream":
+            raise ValueError(
+                "fsdp_stream shards leaves over 'data' and has no chunk "
+                "domain; PHubClient serves the chunk-domain strategies")
+        self.tc = tc
+        self.mesh = mesh
+        self.sopt: ShardedOptimizer = make_sharded_optimizer(tc)
+        if ctx is None:
+            if mesh is None:
+                raise ValueError("PHubClient needs a mesh or an "
+                                 "ExchangeContext")
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            if data_axes is None:
+                data_axes = tuple(a for a in mesh.axis_names
+                                  if a in ("pod", "data")) or mesh.axis_names
+            ctx = ExchangeContext(data_axes=tuple(data_axes),
+                                  axis_sizes=sizes)
+        self.ctx = ctx
+        self.plan = plan
+        self.grads_like = None
+        self._steps: dict = {}
+
+    # ------------------------------------------------------------- register
+
+    def register(self, grads_like) -> "PHubClient":
+        """Build the chunk plan over an arbitrary gradient pytree (arrays
+        or ShapeDtypeStructs).  This is PHub's key registration: every
+        leaf is split into chunk_size_bytes chunks and mapped to an owner
+        shard.  Returns self."""
+        self.grads_like = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), grads_like)
+        self.plan = chunking.build_plan(
+            self.grads_like, chunk_bytes=self.tc.chunk_size_bytes,
+            n_shards=max(self.ctx.n_shards(self.tc.strategy), 1))
+        self._steps.clear()
+        return self
+
+    def _groups(self) -> dict:
+        return {str(g.dtype): g for g in self.plan.groups}
+
+    # ----------------------------------------------------------- opt state
+
+    def slot_shapes(self) -> dict:
+        """{dtype_key: {slot_name: ShapeDtypeStruct}} — every optimizer
+        slot shares the momentum buffer's sharded layout: (S, state_len)
+        rows over the strategy's shard axes, or one (padded,) vector for
+        the full-vector strategies."""
+        S = self.ctx.n_shards(self.tc.strategy)
+        out = {}
+        for key, g in self._groups().items():
+            Lr = self.ctx.state_len(self.tc.strategy, g.padded)
+            out[key] = {}
+            for s in self.sopt.slots:
+                dt = s.resolve_dtype(g.dtype)
+                shape = (S, Lr) if S > 1 else (g.padded,)
+                out[key][s.name] = jax.ShapeDtypeStruct(shape, dt)
+        return out
+
+    def _shard_axes(self):
+        return (self.ctx.data_axes if self.tc.strategy == "sharded_ps"
+                else ("data",))
+
+    def slot_shardings(self) -> dict:
+        if self.mesh is None:
+            raise ValueError("slot_shardings needs a standalone client "
+                             "(constructed with a mesh)")
+        S = self.ctx.n_shards(self.tc.strategy)
+        if S > 1:
+            ax = self._shard_axes()
+            spec = P(ax[0] if len(ax) == 1 else ax, None)
+        else:
+            spec = P(None)
+        return {key: {name: NamedSharding(self.mesh, spec) for name in d}
+                for key, d in self.slot_shapes().items()}
+
+    def init_state(self) -> dict:
+        """Zero-filled optimizer slots with their planned shardings."""
+        return jax.tree.map(
+            lambda sd, sh: jax.device_put(jnp.zeros(sd.shape, sd.dtype), sh),
+            self.slot_shapes(), self.slot_shardings(),
+            is_leaf=lambda t: isinstance(t, jax.ShapeDtypeStruct))
+
+    # ----------------------------------------------------- flat residency
+
+    def flatten(self, tree) -> dict:
+        """Param/grad pytree -> {dtype_key: (padded,)} flat store (the
+        chunk-domain residency; see DESIGN.md §8)."""
+        return chunking.flatten_groups(self.plan, tree)
+
+    def unflatten(self, store: dict):
+        return chunking.unflatten_groups(self.plan, store, self.grads_like)
+
+    # ------------------------------------------------------- the exchange
+
+    def update_fn(self, group):
+        """The fused agg+opt for one dtype group: the protocol rule at
+        this client's coefficients, through the Pallas kernel when
+        configured (and the rule has one)."""
+        coefs = self.sopt.coefs(self.tc)
+        if self.tc.use_pallas and self.tc.fused_agg_opt:
+            ce = max(self.tc.chunk_size_bytes
+                     // np.dtype(group.dtype).itemsize, 1)
+            k = self.sopt.pallas_update(ce, coefs)
+            if k is not None:
+                return k
+        return tuple_update(self.sopt, coefs)
+
+    def exchange_flats(self, fg: dict, fp: dict, opt: dict, rank,
+                       *, groups: Optional[dict] = None,
+                       slot_specs: Optional[tuple] = None,
+                       update_by_key: Optional[dict] = None,
+                       aux_by_key: Optional[dict] = None):
+        """Run one full exchange over flat per-dtype buffers, inside an
+        already-manual region.
+
+        fg/fp: {dtype_key: local flat gradient/parameter array} (any
+        shape; raveled internally and restored); opt: {dtype_key:
+        {slot_name: local buffer}}; rank: flat shard rank.  ``groups`` /
+        ``slot_specs`` / ``update_by_key`` / ``aux_by_key`` override the
+        client's own plan, slots, and update rules — the co-scheduler's
+        hook for packed tenant domains with mask/coefficient tables.
+
+        Returns (new_fp, new_opt) with input shapes preserved.
+        """
+        groups = self._groups() if groups is None else groups
+        specs: tuple[SlotSpec, ...] = (self.sopt.slots if slot_specs is None
+                                       else slot_specs)
+        new_p, new_o = {}, {}
+        for key, grp in groups.items():
+            slots = tuple(opt[key][s.name].reshape(-1) for s in specs)
+            upd = (update_by_key[key] if update_by_key is not None
+                   else self.update_fn(grp))
+            aux = aux_by_key[key] if aux_by_key is not None else ()
+            p2, s2 = run_exchange(
+                self.tc.strategy, self.ctx, fg[key].reshape(-1),
+                fp[key].reshape(-1), slots, upd, rank, grp,
+                self.tc.pipeline_windows, aux)
+            new_p[key] = p2.reshape(fp[key].shape)
+            new_o[key] = {s.name: v.reshape(opt[key][s.name].shape)
+                          for s, v in zip(specs, s2)}
+        return new_p, new_o
+
+    # ------------------------------------------------- standalone PushPull
+
+    def push_pull(self, grads, params, opt):
+        """Fused Push(gradients) + Pull(new params) on caller-supplied
+        pytrees.  ``grads`` leaves carry a leading worker axis
+        (n_workers, *leaf_shape) sharded over the data axes — each
+        worker's local push; ``params`` is the replicated parameter
+        pytree; ``opt`` the slot state from ``init_state``.  Returns
+        (params', opt')."""
+        return self._step("tree")(grads, params, opt)
+
+    def push_pull_flat(self, gstore, pstore, opt):
+        """Flat-residency PushPull: ``pstore`` is the {dtype_key:
+        (padded,)} chunk-domain store (``flatten``), ``gstore`` the same
+        with a leading worker axis (n_workers, padded).  No per-step
+        flatten/unflatten runs — the stores ARE the exchange domain."""
+        return self._step("flat")(gstore, pstore, opt)
+
+    def _step(self, mode: str):
+        if self.plan is None:
+            raise ValueError("call register(grads_like) first")
+        if self.mesh is None:
+            raise ValueError("standalone push_pull needs a client "
+                             "constructed with a mesh")
+        if mode not in self._steps:
+            self._steps[mode] = self._build_step(mode)
+        return self._steps[mode]
+
+    def _build_step(self, mode: str):
+        tc, ctx, cp = self.tc, self.ctx, self.plan
+        axes = ctx.data_axes
+        sizes = ctx.axis_sizes
+        rank_axes = (("data",) if tc.strategy == "hierarchical" else axes)
+        bx = axes if len(axes) > 1 else axes[0]
+        flat = mode == "flat"
+
+        def local(grads, params, opt):
+            rank = flat_rank(rank_axes, sizes)
+            if flat:
+                fg = {k: v.reshape(-1) for k, v in grads.items()}
+                fp = params
+            else:
+                g_local = jax.tree.map(
+                    lambda x: jax.lax.squeeze(x, (0,)), grads)
+                fg = chunking.flatten_groups(cp, g_local)
+                fp = chunking.flatten_groups(cp, params)
+            new_fp, new_opt = self.exchange_flats(fg, fp, opt, rank)
+            new_params = (new_fp if flat
+                          else chunking.unflatten_groups(cp, new_fp,
+                                                         self.grads_like))
+            return new_params, new_opt
+
+        if flat:
+            g_spec = {key: P(bx, None) for key in self._groups()}
+            p_spec = {key: P(None) for key in self._groups()}
+        else:
+            g_spec = jax.tree.map(
+                lambda s: P(bx, *([None] * len(s.shape))), self.grads_like,
+                is_leaf=lambda t: isinstance(t, jax.ShapeDtypeStruct))
+            p_spec = jax.tree.map(
+                lambda s: P(*([None] * len(s.shape))), self.grads_like,
+                is_leaf=lambda t: isinstance(t, jax.ShapeDtypeStruct))
+        S = ctx.n_shards(tc.strategy)
+        if S > 1:
+            ax = self._shard_axes()
+            o_leaf = P(ax[0] if len(ax) == 1 else ax, None)
+        else:
+            o_leaf = P(None)
+        o_spec = {key: {name: o_leaf for name in d}
+                  for key, d in self.slot_shapes().items()}
+        step = compat.shard_map(
+            local, mesh=self.mesh,
+            in_specs=(g_spec, p_spec, o_spec),
+            out_specs=(p_spec, o_spec),
+            axis_names=set(axes), check_vma=False)
+        return _MeshScopedJit(jax.jit(step, donate_argnums=(1, 2)),
+                              self.mesh)
+
+    # ---------------------------------------------------------- accounting
+
+    def registered_bytes(self) -> int:
+        """Unpadded bytes this client exchanges per push_pull."""
+        return self.plan.total_bytes() if self.plan else 0

@@ -38,62 +38,16 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ModelConfig, TrainConfig
+from ..optim.protocol import (RuleBinding, ShardedOptimizer,
+                              make_combined_update, make_sharded_optimizer,
+                              union_slots)
 from ..utils import compat
 from ..models import (init as model_init, forward, prefill, init_cache,
                       lm_head_weight, chunked_cross_entropy)
 from . import chunking
+from .client import PHubClient, _MeshScopedJit
 from .exchange import ExchangeContext
-from .pipeline import run_exchange
 from .sharding import ShardingPlan, plan_params, local_shapes, make_gather_fn
-
-
-class _MeshScopedJit:
-    """Wrap a jitted fn so tracing/lowering happens under the engine's mesh
-    (with_sharding_constraint with bare PartitionSpecs needs a context mesh
-    outside shard_map)."""
-
-    def __init__(self, fn, mesh):
-        self._fn = fn
-        self._mesh = mesh
-
-    def __call__(self, *a, **k):
-        with compat.set_mesh(self._mesh):
-            return self._fn(*a, **k)
-
-    def lower(self, *a, **k):
-        with compat.set_mesh(self._mesh):
-            return self._fn.lower(*a, **k)
-
-
-def _nesterov_vec(lr: float, momentum: float):
-    def upd(p, g, m):
-        g32 = g.astype(m.dtype)
-        m2 = momentum * m + g32
-        p2 = p - (lr * (g32 + momentum * m2)).astype(p.dtype)
-        return p2, m2
-    return upd
-
-
-def _pallas_vec(lr: float, momentum: float, chunk_elems: int):
-    from ..kernels.agg_opt.ops import fused_agg_opt
-    def upd(p, g, m):
-        return fused_agg_opt(p, g, m, lr=lr, momentum=momentum,
-                             chunk_elems=chunk_elems)
-    return upd
-
-
-def _coef_nesterov_vec(p, g, m, lr, mu):
-    """Nesterov with per-position (lr, mu) coefficient tables — the
-    co-scheduled update: each packed position carries its owner tenant's
-    hyperparameters, so one vector op applies every tenant's own fused
-    update to exactly its chunk ranges (pad positions carry zeros and are
-    fixed points).  Elementwise identical to _nesterov_vec where the table
-    is constant, which is what makes co-scheduled training bitwise-match
-    per-tenant solo training."""
-    g32 = g.astype(m.dtype)
-    m2 = mu * m + g32
-    p2 = p - (lr * (g32 + mu * m2)).astype(p.dtype)
-    return p2, m2
 
 
 @dataclass
@@ -108,13 +62,9 @@ class PHubEngine:
             raise ValueError(
                 f"unknown exchange strategy {self.tc.strategy!r}; "
                 f"expected one of {STRATEGIES}")
-        if self.tc.optimizer != "nesterov":
-            raise ValueError(
-                f"PHubEngine's chunk-domain exchange implements the paper's "
-                f"Nesterov optimizer only (momentum is a single flat buffer "
-                f"per dtype group); got optimizer={self.tc.optimizer!r}. "
-                f"Use optim.make_optimizer for tree-level sgd/adam updates "
-                f"outside the engine.")
+        # fail fast on unknown optimizers; nesterov/sgd/adam all implement
+        # the sharded-optimizer protocol and run fused inside the exchange
+        self.sopt: ShardedOptimizer = make_sharded_optimizer(self.tc)
         self.axis_sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
         self.data_axes = tuple(a for a in self.mesh.axis_names
                                if a in ("pod", "data"))
@@ -145,6 +95,10 @@ class PHubEngine:
             mdims = {p: lp.model_dim for p, lp in self.plan.leaves.items()}
             self.store_layout = chunking.build_store_layout(
                 self.chunk_plan, mdims, self.mo_eff)
+            # the engine is a thin consumer of the push/pull client: every
+            # per-group exchange below delegates to client.exchange_flats
+            self.client = PHubClient(self.tc, ctx=self.ctx,
+                                     plan=self.chunk_plan)
         else:
             if self.tc.flat_residency:
                 raise ValueError(
@@ -153,6 +107,7 @@ class PHubEngine:
                     "parameter store")
             self.chunk_plan = None
             self.store_layout = None
+            self.client = None
 
     # ------------------------------------------------------------------ state
 
@@ -178,25 +133,35 @@ class PHubEngine:
         packed domain's groups instead of duplicating the spec rules."""
         return {str(g.dtype): g for g in self.chunk_plan.groups}
 
-    def opt_state_shapes(self, groups=None):
-        """Momentum layout depends on the strategy (see DESIGN.md §5)."""
+    def opt_state_shapes(self, groups=None, slots=None):
+        """Optimizer-slot layout: {dtype_key: {slot_name: shape}} for the
+        chunk strategies ({slot_name: params-tree} for fsdp_stream).  Every
+        slot of the sharded-optimizer protocol shares the layout rules the
+        single momentum buffer always had (DESIGN.md §5/§10); ``slots``
+        overrides the engine's own optimizer's slot set (the co-scheduler
+        passes the attached tenants' union)."""
+        slots = self.sopt.slots if slots is None else slots
         if self.tc.strategy == "fsdp_stream":
-            return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
-                                self.params_shapes)
+            return {s.name: jax.tree.map(
+                        lambda t, s=s: jax.ShapeDtypeStruct(
+                            t.shape, s.resolve_dtype(t.dtype)),
+                        self.params_shapes)
+                    for s in slots}
         mo = self.mo_eff
         out = {}
         for key, g in (groups or self._group_map()).items():
             S = self.ctx.n_shards(self.tc.strategy)
             Lr = self.ctx.state_len(self.tc.strategy, g.padded)
-            if S > 1:
-                out[key] = jax.ShapeDtypeStruct((mo, S, Lr), g.dtype)
-            else:
-                out[key] = jax.ShapeDtypeStruct((mo, g.padded), g.dtype)
+            shape = (mo, S, Lr) if S > 1 else (mo, g.padded)
+            out[key] = {s.name: jax.ShapeDtypeStruct(
+                            shape, s.resolve_dtype(g.dtype))
+                        for s in slots}
         return out
 
-    def opt_state_shardings(self, groups=None):
+    def opt_state_shardings(self, groups=None, slots=None):
+        slots = self.sopt.slots if slots is None else slots
         if self.tc.strategy == "fsdp_stream":
-            return self.plan.shardings(self.mesh)
+            return {s.name: self.plan.shardings(self.mesh) for s in slots}
         S = self.ctx.n_shards(self.tc.strategy)
         mspec = "model" if self.mo_eff > 1 else None
         if S > 1:
@@ -206,7 +171,7 @@ class PHubEngine:
             spec = P(mspec, ax, None)
         else:
             spec = P(mspec, None)
-        return {key: NamedSharding(self.mesh, spec)
+        return {key: {s.name: NamedSharding(self.mesh, spec) for s in slots}
                 for key in (groups or self._group_map())}
 
     def store_shapes(self):
@@ -259,14 +224,6 @@ class PHubEngine:
             oshapes, oshards,
             is_leaf=lambda t: isinstance(t, jax.ShapeDtypeStruct))
         return params, opt
-
-    # ------------------------------------------------------------ update fns
-
-    def _update_fn(self, dtype):
-        if self.tc.use_pallas and self.tc.fused_agg_opt:
-            ce = max(self.tc.chunk_size_bytes // np.dtype(dtype).itemsize, 1)
-            return _pallas_vec(self.tc.lr, self.tc.momentum, ce)
-        return _nesterov_vec(self.tc.lr, self.tc.momentum)
 
     # ------------------------------------------------------------ train step
 
@@ -353,22 +310,29 @@ class PHubEngine:
         per tenant — nothing: co-scheduling packs across tenants instead)."""
         tc, mesh, pl = self.tc, self.mesh, self.plan
         if tc.strategy == "fsdp_stream":
+            from ..optim.protocol import tuple_update
             N = self.ctx.n_workers
             fdims = pl.fsdp_dims()
-            upd = _nesterov_vec(tc.lr, tc.momentum)
+            upd = tuple_update(self.sopt, self.sopt.coefs(tc))
+            names = self.sopt.slot_names
 
-            def leaf_update(p, g, m, fd):
+            def leaf_update(p, g, fd, *slot_leaves):
                 if fd is None:                        # replicated leaf
                     g = jax.lax.psum(g, self.data_axes)
                 g = g / N
-                p2, m2 = upd(p.reshape(-1), g.reshape(-1), m.reshape(-1))
-                return p2.reshape(p.shape), m2.reshape(m.shape)
+                p2, s2 = upd(
+                    p.reshape(-1), g.reshape(-1),
+                    tuple(s.reshape(-1) for s in slot_leaves))
+                return (p2.reshape(p.shape),) + tuple(
+                    v.reshape(s.shape) for v, s in zip(s2, slot_leaves))
 
-            out = jax.tree.map(leaf_update, params, grads, opt, fdims)
-            new_p = jax.tree.map(lambda t: t[0], out,
-                                 is_leaf=lambda t: isinstance(t, tuple))
-            new_m = jax.tree.map(lambda t: t[1], out,
-                                 is_leaf=lambda t: isinstance(t, tuple))
+            out = jax.tree.map(leaf_update, params, grads, fdims,
+                               *[opt[n] for n in names])
+            is_t = lambda t: isinstance(t, tuple)
+            new_p = jax.tree.map(lambda t: t[0], out, is_leaf=is_t)
+            new_m = {n: jax.tree.map(lambda t, i=i: t[i + 1], out,
+                                     is_leaf=is_t)
+                     for i, n in enumerate(names)}
             return new_p, new_m
 
         cp = self.chunk_plan
@@ -377,16 +341,8 @@ class PHubEngine:
         def inner(grads, params, opt, rank):
             flats_g = chunking.flatten_groups(cp, grads)
             flats_p = chunking.flatten_groups(cp, params)
-            new_p, new_m = {}, {}
-            for g in cp.groups:
-                key = str(g.dtype)
-                mloc = opt[key].reshape(-1)
-                p2, m2 = run_exchange(
-                    tc.strategy, self.ctx, flats_g[key], flats_p[key],
-                    mloc, self._update_fn(g.dtype), rank, g,
-                    tc.pipeline_windows)
-                new_p[key] = p2
-                new_m[key] = m2.reshape(opt[key].shape)
+            new_p, new_m = self.client.exchange_flats(flats_g, flats_p,
+                                                      opt, rank)
             return (chunking.unflatten_groups(cp, new_p, self.params_shapes),
                     new_m)
 
@@ -412,17 +368,7 @@ class PHubEngine:
         rank = self.exchange_rank()
 
         def inner(fg, fp, opt, rank):
-            new_p, new_m = {}, {}
-            for g in cp.groups:
-                key = str(g.dtype)
-                p2, m2 = run_exchange(
-                    tc.strategy, self.ctx, fg[key].reshape(-1),
-                    fp[key].reshape(-1), opt[key].reshape(-1),
-                    self._update_fn(g.dtype), rank, g,
-                    tc.pipeline_windows)
-                new_p[key] = p2.reshape(fp[key].shape)
-                new_m[key] = m2.reshape(opt[key].shape)
-            return new_p, new_m
+            return self.client.exchange_flats(fg, fp, opt, rank)
 
         mspec = "model" if self.mo_eff > 1 else None
         s_spec = {str(g.dtype): P(mspec, None) for g in cp.groups}
@@ -476,7 +422,8 @@ class PHubEngine:
               else self.exchange_axes[0])
         batch_spec = {k: P(bx, *([None] * (len(v.shape) - 1)))
                       for k, v in batch_shapes.items()}
-        m_outer = (manual_p if tc.strategy == "fsdp_stream"
+        m_outer = ({n: manual_p for n in self.sopt.slot_names}
+                   if tc.strategy == "fsdp_stream"
                    else self._outer_m_specs())
 
         step = compat.shard_map(
@@ -509,22 +456,29 @@ class PHubEngine:
             axis_names=set(self.exchange_axes), check_vma=False)
         return _MeshScopedJit(jax.jit(step, donate_argnums=(0, 1)), mesh)
 
-    def _outer_m_specs(self, groups=None):
-        """Momentum specs at the outer (data-manual) shard_map boundary."""
+    def _outer_m_specs(self, groups=None, slots=None):
+        """Opt-slot specs at the outer (data-manual) shard_map boundary."""
         S = self.ctx.n_shards(self.tc.strategy)
         keys = groups or self._group_map()
+        names = [s.name for s in (self.sopt.slots if slots is None
+                                  else slots)]
         if S > 1:
             ax = (self.exchange_axes if self.tc.strategy == "sharded_ps"
                   else ("data",))
             ax = ax[0] if len(ax) == 1 else ax
-            return {key: P(None, ax, None) for key in keys}
-        return {key: P(None, None) for key in keys}
+            spec = P(None, ax, None)
+        else:
+            spec = P(None, None)
+        return {key: {n: spec for n in names} for key in keys}
 
-    def _inner_m_specs(self, groups=None):
-        """Momentum specs for the nested (model-manual) exchange region."""
+    def _inner_m_specs(self, groups=None, slots=None):
+        """Opt-slot specs for the nested (model-manual) exchange region."""
         S = self.ctx.n_shards(self.tc.strategy)
         mspec = "model" if self.mo_eff > 1 else None
-        return {key: (P(mspec, None, None) if S > 1 else P(mspec, None))
+        names = [s.name for s in (self.sopt.slots if slots is None
+                                  else slots)]
+        spec = P(mspec, None, None) if S > 1 else P(mspec, None)
+        return {key: {n: spec for n in names}
                 for key in (groups or self._group_map())}
 
     def _batch_axes(self):
@@ -614,14 +568,22 @@ class PHubEngine:
 
 # ---------------------------------------------------- co-scheduled exchange
 
-def co_opt_state_shapes(e0: PHubEngine, domain) -> dict:
-    """Packed-domain momentum shapes — one shared buffer per dtype spanning
-    every tenant (the engine's own layout rules over the packed groups)."""
-    return e0.opt_state_shapes(domain.groups)
+def co_slot_specs(tenants: dict) -> tuple:
+    """Union of the attached tenants' optimizer slot sets: same-named slots
+    (nesterov's m, adam's m) share one packed buffer — the mask tables keep
+    each tenant's ranges disjoint."""
+    return union_slots([tenants[ns].sopt for ns in tenants])
 
 
-def co_opt_state_shardings(e0: PHubEngine, domain) -> dict:
-    return e0.opt_state_shardings(domain.groups)
+def co_opt_state_shapes(e0: PHubEngine, domain, slots=None) -> dict:
+    """Packed-domain opt-slot shapes — one shared buffer per (dtype, slot)
+    spanning every tenant (the engine's own layout rules over the packed
+    groups and the attached tenants' union slot set)."""
+    return e0.opt_state_shapes(domain.groups, slots)
+
+
+def co_opt_state_shardings(e0: PHubEngine, domain, slots=None) -> dict:
+    return e0.opt_state_shardings(domain.groups, slots)
 
 
 def make_co_train_step(tenants: dict, domain, batch_shapes: dict,
@@ -638,7 +600,10 @@ def make_co_train_step(tenants: dict, domain, batch_shapes: dict,
     flattened gradients into the shared rack chunk domain and runs a single
     reduce-scatter / agg+opt / all-gather schedule — including the windowed
     pipeline, whose windows span tenant boundaries — with per-position
-    lr/momentum tables applying each tenant's own update to its ranges.
+    coefficient tables applying each tenant's own hyperparameters and,
+    when tenants mix optimizers, per-position mask tables selecting each
+    position's owner rule (optim/protocol.py).  The packed opt state holds
+    the attached tenants' *union* slot set.
 
     With ``zero_compute`` the per-tenant fwd/bwd is replaced by a synthetic
     push (the §4.4 ZeroComputeEngine, multi-tenant edition): one call = one
@@ -654,32 +619,52 @@ def make_co_train_step(tenants: dict, domain, batch_shapes: dict,
     loss_fns = ({} if zero_compute
                 else {ns: tenants[ns].build_loss_fn(batch_shapes[ns])
                       for ns in names})
-    # Coefficient tables carry each packed position's owner-tenant
-    # hyperparameters.  A coefficient that is uniform across tenants stays
-    # a scalar (pad positions are fixed points either way: zero gradient
-    # into zero momentum moves nothing), so homogeneous fleets pay no
-    # table reads.
-    lr_uniform = len({tenants[ns].tc.lr for ns in names}) == 1
-    mu_uniform = len({tenants[ns].tc.momentum for ns in names}) == 1
-    lr_tab = {key: domain.coef_vector(
-                  key, {ns: tenants[ns].tc.lr for ns in names})
-              for key in domain.groups} if not lr_uniform else None
-    mu_tab = {key: domain.coef_vector(
-                  key, {ns: tenants[ns].tc.momentum for ns in names})
-              for key in domain.groups} if not mu_uniform else None
-    lr0, mu0 = e0.tc.lr, e0.tc.momentum
+    # Tenants sharing one protocol rule (equal ShardedOptimizer instances —
+    # same optimizer, same statics) share one vectorized update; distinct
+    # rules (mixed optimizers, or same optimizer with different statics)
+    # each compute the full packed vector and per-position mask tables
+    # select each position's owner rule.  Per-tenant coefficients (lr,
+    # momentum) ride coefficient tables only when non-uniform within a
+    # rule, so homogeneous fleets pay no table reads; pad positions belong
+    # to no tenant (masked out, or zero fixed points in the single-rule
+    # case: zero gradient into zero state moves nothing).
+    rule_members: dict[ShardedOptimizer, list] = {}
+    for ns in names:
+        rule_members.setdefault(tenants[ns].sopt, []).append(ns)
+    rules = list(rule_members.items())
+    multi = len(rules) > 1
+    slot_specs = co_slot_specs(tenants)
+    slot_index = {s.name: i for i, s in enumerate(slot_specs)}
 
     def coef_update(key):
-        if lr_uniform and mu_uniform:
-            return (), lambda p, g, m: _coef_nesterov_vec(p, g, m, lr0, mu0)
-        if mu_uniform:
-            return ((jnp.asarray(lr_tab[key]),),
-                    lambda p, g, m, lr: _coef_nesterov_vec(p, g, m, lr, mu0))
-        if lr_uniform:
-            return ((jnp.asarray(mu_tab[key]),),
-                    lambda p, g, m, mu: _coef_nesterov_vec(p, g, m, lr0, mu))
-        return ((jnp.asarray(lr_tab[key]), jnp.asarray(mu_tab[key])),
-                _coef_nesterov_vec)
+        """(aux tables, combined update_fn) for one packed dtype group."""
+        aux: list = []
+        bindings = []
+        for sopt, members in rules:
+            coefs: list = []
+            for i in range(len(sopt.coef_names)):
+                vals = {ns: sopt.coefs(tenants[ns].tc)[i] for ns in members}
+                if len(set(vals.values())) == 1:
+                    coefs.append(next(iter(vals.values())))
+                else:
+                    full = {ns: vals.get(ns, 0.0) for ns in names}
+                    aux.append(jnp.asarray(domain.coef_vector(key, full)))
+                    coefs.append(("aux", len(aux) - 1))
+            mask_idx = None
+            if multi:
+                aux.append(jnp.asarray(domain.coef_vector(
+                    key, {ns: 1.0 if ns in members else 0.0
+                          for ns in names})))
+                mask_idx = len(aux) - 1
+            bindings.append(RuleBinding(
+                opt=sopt,
+                slot_idx=tuple(slot_index[n] for n in sopt.slot_names),
+                coefs=tuple(coefs), mask_aux=mask_idx))
+        return tuple(aux), make_combined_update(bindings)
+
+    aux_by_key, upd_by_key = {}, {}
+    for key in domain.groups:
+        aux_by_key[key], upd_by_key[key] = coef_update(key)
 
     def exchange_stage(grads_by, params_by, opt):
         rank = e0.exchange_rank()
@@ -691,22 +676,22 @@ def make_co_train_step(tenants: dict, domain, batch_shapes: dict,
             flats_p = {ns: chunking.flatten_groups(
                            tenants[ns].chunk_plan, params_by[ns])
                        for ns in names}
-            new_flats = {ns: {} for ns in names}
-            new_m = {}
+            packed_g, packed_p = {}, {}
             for key, pg in domain.groups.items():
                 members = [s.tenant for s in pg.slots]
-                packed_g = domain.pack(
+                packed_g[key] = domain.pack(
                     key, {ns: flats_g[ns][key] for ns in members})
-                packed_p = domain.pack(
+                packed_p[key] = domain.pack(
                     key, {ns: flats_p[ns][key] for ns in members})
-                aux, upd = coef_update(key)
-                p2, m2 = run_exchange(
-                    tc0.strategy, e0.ctx, packed_g, packed_p,
-                    opt[key].reshape(-1), upd, rank, pg,
-                    tc0.pipeline_windows, aux)
-                new_m[key] = m2.reshape(opt[key].shape)
-                for ns in members:
-                    new_flats[ns][key] = domain.unpack(key, p2, ns)
+            p2, new_m = e0.client.exchange_flats(
+                packed_g, packed_p, opt, rank, groups=domain.groups,
+                slot_specs=slot_specs, update_by_key=upd_by_key,
+                aux_by_key=aux_by_key)
+            new_flats = {ns: {} for ns in names}
+            for key, pg in domain.groups.items():
+                for s in pg.slots:
+                    new_flats[s.tenant][key] = domain.unpack(
+                        key, p2[key], s.tenant)
             new_p = {ns: chunking.unflatten_groups(
                          tenants[ns].chunk_plan, new_flats[ns],
                          tenants[ns].params_shapes)
@@ -714,7 +699,7 @@ def make_co_train_step(tenants: dict, domain, batch_shapes: dict,
             return new_p, new_m
 
         specs_by = {ns: tenants[ns].plan.specs() for ns in names}
-        m_spec = e0._inner_m_specs(domain.groups)
+        m_spec = e0._inner_m_specs(domain.groups, slot_specs)
         if tc0.dp_over_model:
             return inner(grads_by, params_by, opt, rank)
         return compat.shard_map(
@@ -750,7 +735,7 @@ def make_co_train_step(tenants: dict, domain, batch_shapes: dict,
     batch_spec = {ns: {k: P(bx, *([None] * (len(v.shape) - 1)))
                        for k, v in batch_shapes[ns].items()}
                   for ns in names}
-    m_outer = e0._outer_m_specs(domain.groups)
+    m_outer = e0._outer_m_specs(domain.groups, slot_specs)
 
     step = compat.shard_map(
         local_step, mesh=mesh,

@@ -3,9 +3,13 @@ schedules over the mesh's data/pod axes (see DESIGN.md §2/§5).
 
 Every strategy consumes the *local, unreduced* gradient vector of one dtype
 group (flattened chunk domain, already padded to n_shards * shard_len) and
-returns the updated parameter vector. ``update_fn(p, g, m) -> (p', m')`` is
-the fused aggregation+optimization step (§3.2.2), applied to exactly the
-chunks this shard owns.
+returns the updated parameter vector. ``update_fn(p, g, slots) ->
+(p', slots')`` is the fused aggregation+optimization step (§3.2.2) of the
+pluggable sharded-optimizer protocol (optim/protocol.py), applied to
+exactly the chunks this shard owns; ``slots`` is the optimizer's tuple of
+flat state buffers (one momentum slot for the paper's Nesterov,
+(m, v, k1, k2) for Adam, empty for plain SGD), every one laid out and
+sliced exactly like the single momentum buffer always was.
 
 Strategies:
 - allreduce        — colocated-sharded baseline (ring all-reduce; every
@@ -33,7 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-UpdateFn = Callable[[jax.Array, jax.Array, jax.Array], tuple[jax.Array, jax.Array]]
+# update_fn(p, g, slots, *aux) -> (p', slots'): the protocol's fused rule
+UpdateFn = Callable[..., tuple[jax.Array, tuple]]
 
 STRATEGIES = ("allreduce", "sharded_ps", "centralized_ps", "hierarchical",
               "fsdp_stream")
@@ -73,20 +78,22 @@ class ExchangeContext:
 
 
 def exchange_group(strategy: str, ctx: ExchangeContext, g: jax.Array,
-                   p: jax.Array, m: jax.Array, update_fn: UpdateFn,
+                   p: jax.Array, slots: tuple, update_fn: UpdateFn,
                    rank: jax.Array, aux: tuple = ()
-                   ) -> tuple[jax.Array, jax.Array]:
-    """g, p: (padded,) local vectors; m: (state_len,); rank: this device's
-    flat index over the strategy's shard axes (computed in the outer scope).
-    ``aux`` is a tuple of (padded,) per-position side tables (e.g. the
-    co-scheduled domain's per-tenant lr/momentum vectors) sliced alongside
-    ``p`` and forwarded to ``update_fn(p, g, m, *aux)``.  Returns (p', m')."""
+                   ) -> tuple[jax.Array, tuple]:
+    """g, p: (padded,) local vectors; ``slots``: tuple of (state_len,)
+    optimizer-state buffers (already this shard's slice); rank: this
+    device's flat index over the strategy's shard axes (computed in the
+    outer scope).  ``aux`` is a tuple of (padded,) per-position side tables
+    (e.g. the co-scheduled domain's per-tenant coefficient/mask vectors)
+    sliced alongside ``p`` and forwarded to ``update_fn(p, g, slots,
+    *aux)``.  Returns (p', slots')."""
     axes = ctx.data_axes
     N = ctx.n_workers
 
     if strategy == "allreduce":
         ga = jax.lax.psum(g, axes) / N
-        return update_fn(p, ga, m, *aux)
+        return update_fn(p, ga, slots, *aux)
 
     if strategy == "sharded_ps":
         S = ctx.n_shards(strategy)
@@ -96,8 +103,8 @@ def exchange_group(strategy: str, ctx: ExchangeContext, g: jax.Array,
         psh = jax.lax.dynamic_slice(p, (rank * L,), (L,))
         auxsh = tuple(jax.lax.dynamic_slice(a, (rank * L,), (L,))
                       for a in aux)
-        p2, m2 = update_fn(psh, gsh, m, *auxsh)
-        return jax.lax.all_gather(p2, axes, tiled=True), m2
+        p2, s2 = update_fn(psh, gsh, slots, *auxsh)
+        return jax.lax.all_gather(p2, axes, tiled=True), s2
 
     if strategy == "hierarchical":
         S = ctx.axis_sizes["data"]
@@ -110,15 +117,15 @@ def exchange_group(strategy: str, ctx: ExchangeContext, g: jax.Array,
         psh = jax.lax.dynamic_slice(p, (rank * L,), (L,))
         auxsh = tuple(jax.lax.dynamic_slice(a, (rank * L,), (L,))
                       for a in aux)
-        p2, m2 = update_fn(psh, gsh, m, *auxsh)
-        return jax.lax.all_gather(p2, "data", tiled=True), m2
+        p2, s2 = update_fn(psh, gsh, slots, *auxsh)
+        return jax.lax.all_gather(p2, "data", tiled=True), s2
 
     if strategy == "centralized_ps":
         allg = jax.lax.all_gather(g, axes, tiled=False)      # (N, padded) incast
         ga = allg.sum(axis=0) / N
-        p2, m2 = update_fn(p, ga, m, *aux)
+        p2, s2 = update_fn(p, ga, slots, *aux)
         # "broadcast from the PS": only rank 0's copy is authoritative
         p2 = jax.lax.psum(jnp.where(rank == 0, p2, jnp.zeros_like(p2)), axes)
-        return p2, m2
+        return p2, s2
 
     raise ValueError(f"unknown strategy {strategy!r}")

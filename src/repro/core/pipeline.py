@@ -124,16 +124,18 @@ def _ring_window_rs(g: jax.Array, L: int, start, Lw: int,
 
 
 def pipelined_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
-                       p: jax.Array, m: jax.Array, update_fn: UpdateFn,
+                       p: jax.Array, slots: tuple, update_fn: UpdateFn,
                        rank: jax.Array, windows: int, aux: tuple = ()
-                       ) -> tuple[jax.Array, jax.Array]:
+                       ) -> tuple[jax.Array, tuple]:
     """Windowed counterpart of ``exchange_group`` for the strategies with a
-    shard dimension.  g, p: (padded,) local vectors; m: (shard_len,);
-    rank: flat index over the strategy's ring axes; ``aux``: (padded,)
-    per-position side tables sliced window-by-window alongside ``p`` (this
-    is how co-scheduled windows span tenant boundaries — the coefficient
-    slice follows the window, not the tenant).  Returns (p', m')
-    bit-identical in layout to the monolithic schedule.
+    shard dimension.  g, p: (padded,) local vectors; ``slots``: tuple of
+    (shard_len,) optimizer-state buffers, each sliced window-by-window like
+    the single momentum buffer always was; rank: flat index over the
+    strategy's ring axes; ``aux``: (padded,) per-position side tables
+    sliced window-by-window alongside ``p`` (this is how co-scheduled
+    windows span tenant boundaries — the coefficient slice follows the
+    window, not the tenant).  Returns (p', slots') bit-identical in layout
+    to the monolithic schedule.
     """
     if strategy not in PIPELINED_STRATEGIES:
         raise ValueError(f"strategy {strategy!r} has no shard dimension to "
@@ -161,42 +163,45 @@ def pipelined_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
 
     def opt_window(w, r):
         pw = jax.lax.dynamic_slice(p, (rank * L + w * Lw,), (Lw,))
-        mw = jax.lax.dynamic_slice(m, (w * Lw,), (Lw,))
+        sw = tuple(jax.lax.dynamic_slice(s, (w * Lw,), (Lw,))
+                   for s in slots)
         auxw = tuple(jax.lax.dynamic_slice(a, (rank * L + w * Lw,), (Lw,))
                      for a in aux)
-        return update_fn(pw, r, mw, *auxw)
+        return update_fn(pw, r, sw, *auxw)
 
     r0 = rs_window(0)
 
     def body(carry, w):
         nxt = rs_window(w + 1)              # window w+1 on the wire ...
-        p2, m2 = opt_window(w, carry)       # ... while window w optimizes
-        return nxt, (p2, m2)
+        p2, s2 = opt_window(w, carry)       # ... while window w optimizes
+        return nxt, (p2, s2)
 
-    r_last, (p2s, m2s) = jax.lax.scan(body, r0, jnp.arange(W - 1))
-    p_l, m_l = opt_window(W - 1, r_last)
+    r_last, (p2s, s2s) = jax.lax.scan(body, r0, jnp.arange(W - 1))
+    p_l, s_l = opt_window(W - 1, r_last)
     # window shards are consecutive runs of this worker's shard: assembling
     # them is a contiguous concat, and one tail all-gather reproduces the
     # shard-major chunk domain with no transpose (see module docstring on
     # return-path batching)
     shard = jnp.concatenate([p2s.reshape(-1), p_l])
-    m_out = jnp.concatenate([m2s.reshape(-1), m_l])
+    s_out = tuple(jnp.concatenate([ws.reshape(-1), wl])
+                  for ws, wl in zip(s2s, s_l))
     p_out = jax.lax.all_gather(shard, ring_axes, tiled=True)
-    return p_out, m_out
+    return p_out, s_out
 
 
 def run_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
-                 p: jax.Array, m: jax.Array, update_fn: UpdateFn,
+                 p: jax.Array, slots: tuple, update_fn: UpdateFn,
                  rank: jax.Array, group: GroupPlan, windows: int,
-                 aux: tuple = ()) -> tuple[jax.Array, jax.Array]:
+                 aux: tuple = ()) -> tuple[jax.Array, tuple]:
     """Dispatch one dtype group: the windowed pipeline when the strategy has
     a shard dimension and >1 effective windows, else the monolithic
     schedule.  ``group`` needs only a ``chunks_per_shard`` property (a
-    GroupPlan or a multi-tenant PackedGroup)."""
+    GroupPlan or a multi-tenant PackedGroup); ``slots`` is the optimizer's
+    tuple of flat state buffers (optim/protocol.py)."""
     from .exchange import exchange_group
     if strategy in PIPELINED_STRATEGIES:
         w = effective_windows(group, windows)
         if w > 1:
-            return pipelined_exchange(strategy, ctx, g, p, m, update_fn,
+            return pipelined_exchange(strategy, ctx, g, p, slots, update_fn,
                                       rank, w, aux)
-    return exchange_group(strategy, ctx, g, p, m, update_fn, rank, aux)
+    return exchange_group(strategy, ctx, g, p, slots, update_fn, rank, aux)

@@ -51,6 +51,69 @@ def agg_opt_chunks(p: jax.Array, g: jax.Array, m: jax.Array, *, lr: float,
     )(p, g, m)
 
 
+def _sgd_body(p_ref, g_ref, po_ref, *, lr):
+    g = g_ref[...].astype(jnp.float32)
+    p2 = p_ref[...].astype(jnp.float32) - lr * g
+    po_ref[...] = p2.astype(po_ref.dtype)
+
+
+def sgd_opt_chunks(p: jax.Array, g: jax.Array, *, lr: float,
+                   interpret: bool = False) -> jax.Array:
+    """Stateless SGD: p, g: (nc, ce) with g pre-aggregated. Returns p'."""
+    nc, ce = p.shape
+    spec = pl.BlockSpec((1, ce), lambda i: (i, 0))
+    return pl.pallas_call(
+        partial(_sgd_body, lr=lr),
+        grid=(nc,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(p.shape, p.dtype),
+        interpret=interpret,
+    )(p, g)
+
+
+def _adam_body(p_ref, g_ref, m_ref, v_ref, k1_ref, k2_ref, po_ref, mo_ref,
+               vo_ref, k1o_ref, k2o_ref, *, lr, b1, b2, eps):
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    k1n = b1 * k1_ref[...].astype(jnp.float32) + (1 - b1)   # = 1 - b1^t
+    k2n = b2 * k2_ref[...].astype(jnp.float32) + (1 - b2)
+    m2 = b1 * m + (1 - b1) * g
+    v2 = b2 * v + (1 - b2) * g * g
+    rk2 = jnp.sqrt(k2n)
+    # epsilon-hat form, matching the protocol's jnp body (optim/protocol)
+    step = (lr * (1.0 / k1n) * rk2 * m2) / (jnp.sqrt(v2) + eps * rk2)
+    po_ref[...] = (p_ref[...].astype(jnp.float32) - step).astype(po_ref.dtype)
+    mo_ref[...] = m2.astype(mo_ref.dtype)
+    vo_ref[...] = v2.astype(vo_ref.dtype)
+    k1o_ref[...] = k1n.astype(k1o_ref.dtype)
+    k2o_ref[...] = k2n.astype(k2o_ref.dtype)
+
+
+def adam_opt_chunks(p: jax.Array, g: jax.Array, m: jax.Array, v: jax.Array,
+                    k1: jax.Array, k2: jax.Array, *, lr: float, b1: float,
+                    b2: float, eps: float, interpret: bool = False) -> tuple:
+    """Fused Adam on one chunk per grid step: all of p/m/v/k1/k2 cross HBM
+    exactly once (the same cache-residency argument as the Nesterov
+    kernel; k1/k2 are the per-position bias-correction state, see
+    optim/protocol.py).  Returns (p', m', v', k1', k2')."""
+    nc, ce = p.shape
+    spec = pl.BlockSpec((1, ce), lambda i: (i, 0))
+    return pl.pallas_call(
+        partial(_adam_body, lr=lr, b1=b1, b2=b2, eps=eps),
+        grid=(nc,),
+        in_specs=[spec] * 6,
+        out_specs=[spec] * 5,
+        out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype),
+                   jax.ShapeDtypeStruct(m.shape, m.dtype),
+                   jax.ShapeDtypeStruct(v.shape, v.dtype),
+                   jax.ShapeDtypeStruct(k1.shape, k1.dtype),
+                   jax.ShapeDtypeStruct(k2.shape, k2.dtype)],
+        interpret=interpret,
+    )(p, g, m, v, k1, k2)
+
+
 def multi_agg_opt_chunks(p: jax.Array, g: jax.Array, m: jax.Array, *,
                          lr: float, momentum: float,
                          interpret: bool = False) -> tuple:

@@ -10,7 +10,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import agg_opt_chunks, multi_agg_opt_chunks
+from .kernel import (adam_opt_chunks, agg_opt_chunks, multi_agg_opt_chunks,
+                     sgd_opt_chunks)
 
 _LANE = 128
 
@@ -40,6 +41,41 @@ def fused_agg_opt(p: jax.Array, g: jax.Array, m: jax.Array, *, lr: float,
     p2, m2 = agg_opt_chunks(pc, gc, mc, lr=lr, momentum=momentum,
                             interpret=interpret)
     return p2.reshape(-1)[:n], m2.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("lr", "chunk_elems", "interpret"))
+def fused_sgd_opt(p: jax.Array, g: jax.Array, *, lr: float,
+                  chunk_elems: int = 8192,
+                  interpret: bool | None = None):
+    """Flat fused stateless-SGD update. p/g: (n,). Returns p'."""
+    interpret = _default_interpret() if interpret is None else interpret
+    _, pc, ce, n = _to_chunks(p, chunk_elems)
+    _, gc, _, _ = _to_chunks(g, chunk_elems)
+    p2 = sgd_opt_chunks(pc, gc, lr=lr, interpret=interpret)
+    return p2.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps", "chunk_elems",
+                                   "interpret"))
+def fused_adam_opt(p: jax.Array, g: jax.Array, m: jax.Array, v: jax.Array,
+                   k1: jax.Array, k2: jax.Array, *, lr: float,
+                   b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                   chunk_elems: int = 8192,
+                   interpret: bool | None = None):
+    """Flat fused Adam update (per-position k1/k2 bias-correction state).
+    Returns (p', m', v', k1', k2')."""
+    interpret = _default_interpret() if interpret is None else interpret
+    _, pc, ce, n = _to_chunks(p, chunk_elems)
+    _, gc, _, _ = _to_chunks(g, chunk_elems)
+    _, mc, _, _ = _to_chunks(m, chunk_elems)
+    _, vc, _, _ = _to_chunks(v, chunk_elems)
+    _, k1c, _, _ = _to_chunks(k1, chunk_elems)
+    _, k2c, _, _ = _to_chunks(k2, chunk_elems)
+    p2, m2, v2, k1n, k2n = adam_opt_chunks(pc, gc, mc, vc, k1c, k2c, lr=lr,
+                                           b1=b1, b2=b2, eps=eps,
+                                           interpret=interpret)
+    return (p2.reshape(-1)[:n], m2.reshape(-1)[:n], v2.reshape(-1)[:n],
+            k1n.reshape(-1)[:n], k2n.reshape(-1)[:n])
 
 
 @partial(jax.jit, static_argnames=("lr", "momentum", "chunk_elems",

@@ -14,3 +14,22 @@ def agg_opt_ref(p, g, m, *, lr: float, momentum: float, n_workers: int = 1):
     m2 = momentum * m32 + g
     p2 = p.astype(jnp.float32) - lr * (g + momentum * m2)
     return p2.astype(p.dtype), m2.astype(m.dtype)
+
+
+def sgd_opt_ref(p, g, *, lr: float):
+    return (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype)
+
+
+def adam_opt_ref(p, g, m, v, k1, k2, *, lr: float, b1: float = 0.9,
+                 b2: float = 0.999, eps: float = 1e-8):
+    g = g.astype(jnp.float32)
+    m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+    k1n = b1 * k1.astype(jnp.float32) + (1 - b1)
+    k2n = b2 * k2.astype(jnp.float32) + (1 - b2)
+    m2 = b1 * m32 + (1 - b1) * g
+    v2 = b2 * v32 + (1 - b2) * g * g
+    rk2 = jnp.sqrt(k2n)
+    step = (lr * (1.0 / k1n) * rk2 * m2) / (jnp.sqrt(v2) + eps * rk2)
+    return ((p.astype(jnp.float32) - step).astype(p.dtype),
+            m2.astype(m.dtype), v2.astype(v.dtype),
+            k1n.astype(k1.dtype), k2n.astype(k2.dtype))

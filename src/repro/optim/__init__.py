@@ -1,3 +1,7 @@
+from .protocol import (OPTIMIZERS, AdamOptimizer, NesterovOptimizer,
+                       RuleBinding, SGDOptimizer, ShardedOptimizer, SlotSpec,
+                       make_combined_update, make_sharded_optimizer,
+                       tree_init, tree_update, tuple_update, union_slots)
 from .sgd import nesterov_init, nesterov_update, sgd_update
 from .adam import adam_init, adam_update
 from .api import make_optimizer

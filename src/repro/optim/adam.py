@@ -1,32 +1,23 @@
-"""Adam (substrate; the paper's experiments use Nesterov SGD)."""
+"""Tree-level Adam wrappers over the sharded-optimizer protocol.
+
+The update rule lives in optim/protocol.py only.  Note the protocol keeps
+the bias correction as *per-position* k1/k2 slots holding ``1 - b^t``
+directly (so they shard/window/migrate like every other slot in the
+exchange, with no transcendental pow); the tree state mirrors that with
+per-leaf k trees rather than the single scalar step count of the
+pre-protocol code.
+"""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from .protocol import AdamOptimizer, tree_init, tree_update
 
 
 def adam_init(params):
-    zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
-    return {"m": zeros(params), "v": zeros(params),
-            "t": jnp.zeros((), jnp.int32)}
+    return tree_init(AdamOptimizer(), params)
 
 
 def adam_update(params, grads, state, *, lr: float, b1: float = 0.9,
-                b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.0):
-    t = state["t"] + 1
-    bc1 = 1 - b1 ** t.astype(jnp.float32)
-    bc2 = 1 - b2 ** t.astype(jnp.float32)
-
-    def upd(p, g, m, v):
-        g = g.astype(m.dtype)
-        if weight_decay:
-            g = g + weight_decay * p.astype(m.dtype)
-        m = b1 * m + (1 - b1) * g
-        v = b2 * v + (1 - b2) * g * g
-        step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
-        return p - step.astype(p.dtype), m, v
-
-    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
-    pick = lambda i: jax.tree.map(lambda t_: t_[i], out,
-                                  is_leaf=lambda t_: isinstance(t_, tuple))
-    return pick(0), {"m": pick(1), "v": pick(2), "t": t}
+                b2: float = 0.999, eps: float = 1e-8,
+                weight_decay: float = 0.0):
+    opt = AdamOptimizer(weight_decay=weight_decay, b1=b1, b2=b2, eps=eps)
+    return tree_update(opt, (lr,), params, grads, state)

@@ -1,20 +1,24 @@
-"""Optimizer factory keyed by TrainConfig.optimizer."""
+"""Optimizer factory keyed by TrainConfig.optimizer (tree-level entry).
+
+``make_optimizer`` returns the classic (init, update) pair applying the
+protocol rule leaf-wise — the single-process reference for what the
+chunk-domain exchange computes on flat buffers.
+"""
 from __future__ import annotations
 
 from ..configs.base import TrainConfig
-from .sgd import nesterov_init, nesterov_update, sgd_update
-from .adam import adam_init, adam_update
+from .protocol import make_sharded_optimizer, tree_init, tree_update
 
 
 def make_optimizer(tc: TrainConfig):
     """Returns (init_fn(params) -> state, update_fn(params, grads, state))."""
-    if tc.optimizer == "nesterov":
-        return nesterov_init, lambda p, g, s: nesterov_update(
-            p, g, s, lr=tc.lr, momentum=tc.momentum,
-            weight_decay=tc.weight_decay)
-    if tc.optimizer == "sgd":
-        return (lambda p: {}), lambda p, g, s: sgd_update(p, g, s, lr=tc.lr)
-    if tc.optimizer == "adam":
-        return adam_init, lambda p, g, s: adam_update(
-            p, g, s, lr=tc.lr, weight_decay=tc.weight_decay)
-    raise ValueError(f"unknown optimizer {tc.optimizer!r}")
+    opt = make_sharded_optimizer(tc)
+    coefs = opt.coefs(tc)
+
+    def init(params):
+        return tree_init(opt, params)
+
+    def update(params, grads, state):
+        return tree_update(opt, coefs, params, grads, state)
+
+    return init, update

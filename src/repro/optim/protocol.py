@@ -1,0 +1,329 @@
+"""The pluggable sharded-optimizer protocol (DESIGN.md §10).
+
+PHub's PS applies *aggregation + optimization* fused, chunk by chunk, on
+flat per-dtype buffers (§3.2.2).  This module is the contract between an
+optimizer and that exchange machinery: a ``ShardedOptimizer`` declares
+
+  * ``slots``      — per-dtype-group flat state buffers (``SlotSpec``:
+    name + optional dtype override).  Nesterov carries one momentum slot,
+    Adam carries (m, v, k1, k2), plain SGD carries none.  Every slot inherits
+    the single-momentum buffer's layout rules: sharded ``(S, shard_len)``
+    over the strategy's shard axes, windowed, packed, and migrated exactly
+    like momentum always was.
+  * ``coef_names`` — the per-tenant hyperparameters (lr, momentum).  Solo
+    they are scalars closed over the update; co-scheduled they ride the
+    per-position ``aux`` coefficient tables, which is what lets tenants
+    with different hyperparameters — or different *optimizers* — share one
+    collective schedule.
+  * ``update(p, g, slots, coefs)`` — the elementwise, shape-polymorphic
+    fused rule.  The same function body serves the chunk-domain exchange
+    (flat vectors), the fsdp leaf stream, and the tree-level
+    ``make_optimizer`` API, so each rule exists exactly once.
+
+Static hyperparameters (adam's betas, weight decay) are frozen dataclass
+fields: two tenants whose rules differ in *any* static field are simply
+two distinct rules, and ``make_combined_update`` selects per position with
+boolean mask tables — the mixed-optimizer co-scheduled update.
+
+Adam's bias correction is carried as *per-position* slots k1/k2 holding
+``1 - b^t`` directly, updated multiplicatively (``k' = b*k + (1-b)``, the
+same recurrence as momentum driven by 1) rather than recomputed from a
+step count: per-position state shards, windows, packs, and migrates
+through the identical machinery as every other slot with no special
+cases, and — unlike ``b ** t`` — the recurrence uses only exactly-rounded
+mul/add, so the windowed (lax.scan) and monolithic compilations of the
+rule produce bitwise-identical corrections (XLA's pow approximation is
+not stable across fusion contexts; the oracle caught this).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, ClassVar, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SlotSpec:
+    """One flat optimizer-state buffer per dtype group."""
+    name: str
+    dtype: Optional[str] = None           # None -> the group's dtype
+
+    def resolve_dtype(self, group_dtype):
+        return np.dtype(self.dtype) if self.dtype else np.dtype(group_dtype)
+
+
+@dataclass(frozen=True)
+class ShardedOptimizer:
+    """Base protocol.  Subclasses define ``name``, ``slots``,
+    ``coef_names``, and ``update``; frozen-dataclass equality doubles as
+    the rule identity for mixed-optimizer co-scheduling (two tenants with
+    equal instances share one vectorized rule)."""
+    weight_decay: float = 0.0
+
+    # class-level protocol declarations, not dataclass fields
+    name: ClassVar[str] = "base"
+    slots: ClassVar[tuple[SlotSpec, ...]] = ()
+    coef_names: ClassVar[tuple[str, ...]] = ()
+
+    @property
+    def slot_names(self) -> tuple[str, ...]:
+        return tuple(s.name for s in self.slots)
+
+    def coefs(self, tc) -> tuple[float, ...]:
+        """Extract this rule's per-tenant coefficients from a TrainConfig."""
+        return tuple(float(getattr(tc, n)) for n in self.coef_names)
+
+    def update(self, p, g, slots: tuple, coefs: tuple):
+        """Elementwise fused agg+opt rule on same-shape arrays.  ``coefs``
+        entries are scalars (solo) or broadcastable per-position vectors
+        (co-scheduled coefficient tables).  Returns (p', slots')."""
+        raise NotImplementedError
+
+    def pallas_update(self, chunk_elems: int, coefs: tuple
+                      ) -> Optional[Callable]:
+        """Fused Pallas kernel for this rule at scalar coefficients, or
+        None when the rule has no kernel (callers fall back to the jnp
+        body, which XLA fuses anyway)."""
+        return None
+
+    def _decayed(self, p, g):
+        if self.weight_decay:
+            return g + self.weight_decay * p.astype(g.dtype)
+        return g
+
+
+@dataclass(frozen=True)
+class NesterovOptimizer(ShardedOptimizer):
+    """The paper's optimizer (§4.2; MXNet's nesterov momentum)."""
+    name = "nesterov"
+    slots = (SlotSpec("m"),)
+    coef_names = ("lr", "momentum")
+
+    def update(self, p, g, slots, coefs):
+        (m,) = slots
+        lr, mu = coefs
+        g32 = self._decayed(p, g.astype(m.dtype))
+        m2 = mu * m + g32
+        p2 = p - (lr * (g32 + mu * m2)).astype(p.dtype)
+        return p2, (m2,)
+
+    def pallas_update(self, chunk_elems, coefs):
+        from ..kernels.agg_opt.ops import fused_agg_opt
+        lr, mu = coefs
+        if self.weight_decay:
+            return None
+
+        def upd(p, g, slots):
+            p2, m2 = fused_agg_opt(p, g, slots[0], lr=lr, momentum=mu,
+                                   chunk_elems=chunk_elems)
+            return p2, (m2,)
+        return upd
+
+
+@dataclass(frozen=True)
+class SGDOptimizer(ShardedOptimizer):
+    """Stateless SGD: zero slots — the exchange carries no opt state."""
+    name = "sgd"
+    slots = ()
+    coef_names = ("lr",)
+
+    def update(self, p, g, slots, coefs):
+        (lr,) = coefs
+        return p - (lr * g).astype(p.dtype), ()
+
+    def pallas_update(self, chunk_elems, coefs):
+        from ..kernels.agg_opt.ops import fused_sgd_opt
+        (lr,) = coefs
+
+        def upd(p, g, slots):
+            return fused_sgd_opt(p, g, lr=lr, chunk_elems=chunk_elems), ()
+        return upd
+
+
+@dataclass(frozen=True)
+class AdamOptimizer(ShardedOptimizer):
+    """Adam with bias correction.  k1/k2 hold ``1 - b^t`` per position
+    (float32 regardless of group dtype, so the correction stays precise
+    for bf16 groups), updated multiplicatively — see module docstring for
+    why no ``b ** t`` appears here."""
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+    name = "adam"
+    slots = (SlotSpec("m"), SlotSpec("v"), SlotSpec("k1", "float32"),
+             SlotSpec("k2", "float32"))
+    coef_names = ("lr",)
+
+    def update(self, p, g, slots, coefs):
+        # Formulated for *compilation-stable* bitwise reproducibility: the
+        # classical lr*(m/bc1)/(sqrt(v/bc2)+eps) chains divisions, which
+        # XLA's algebraic simplifier reassociates differently depending on
+        # the surrounding context (monolithic vs lax.scan-windowed
+        # schedules disagreed by 1 ulp).  Instead: fence the new state
+        # with optimization_barriers (they hold through the algebraic
+        # passes, which is where the reassociation happens), hoist 1/bc1
+        # and sqrt(bc2) as fenced reciprocals, and spend exactly one
+        # division — the epsilon-hat form step = lr*(sqrt(bc2)/bc1)*m /
+        # (sqrt(v) + eps*sqrt(bc2)), algebraically classical adam with
+        # eps scaled by sqrt(bc2).  Verified bitwise-stable across
+        # windows 1/2/4/8 and against the tree-level reference.
+        m, v, k1, k2 = slots
+        (lr,) = coefs
+        g = self._decayed(p, g.astype(m.dtype))
+        k1n = self.b1 * k1 + (1 - self.b1)        # = 1 - b1^t, exactly-
+        k2n = self.b2 * k2 + (1 - self.b2)        # rounded recurrence
+        m2 = self.b1 * m + (1 - self.b1) * g
+        v2 = self.b2 * v + (1 - self.b2) * g * g
+        m2, v2, k1n, k2n = jax.lax.optimization_barrier((m2, v2, k1n, k2n))
+        q1, rk2 = jax.lax.optimization_barrier(
+            (1.0 / k1n.astype(m.dtype), jnp.sqrt(k2n).astype(m.dtype)))
+        step = (lr * q1 * rk2 * m2) / (jnp.sqrt(v2) + self.eps * rk2)
+        return p - step.astype(p.dtype), (m2, v2, k1n, k2n)
+
+    def pallas_update(self, chunk_elems, coefs):
+        from ..kernels.agg_opt.ops import fused_adam_opt
+        (lr,) = coefs
+        if self.weight_decay:
+            return None
+
+        def upd(p, g, slots):
+            m, v, k1, k2 = slots
+            p2, m2, v2, k1n, k2n = fused_adam_opt(
+                p, g, m, v, k1, k2, lr=lr, b1=self.b1, b2=self.b2,
+                eps=self.eps, chunk_elems=chunk_elems)
+            return p2, (m2, v2, k1n, k2n)
+        return upd
+
+
+OPTIMIZERS: dict[str, Callable[..., ShardedOptimizer]] = {
+    "nesterov": NesterovOptimizer,
+    "sgd": SGDOptimizer,
+    "adam": AdamOptimizer,
+}
+
+
+def make_sharded_optimizer(tc) -> ShardedOptimizer:
+    """TrainConfig -> protocol instance (static fields bound here)."""
+    if tc.optimizer == "nesterov":
+        return NesterovOptimizer(weight_decay=tc.weight_decay)
+    if tc.optimizer == "sgd":
+        return SGDOptimizer()
+    if tc.optimizer == "adam":
+        return AdamOptimizer(weight_decay=tc.weight_decay, b1=tc.adam_b1,
+                             b2=tc.adam_b2, eps=tc.adam_eps)
+    raise ValueError(f"unknown optimizer {tc.optimizer!r}; expected one of "
+                     f"{tuple(OPTIMIZERS)}")
+
+
+# --------------------------------------------------- slot layout helpers
+
+def union_slots(opts: Sequence[ShardedOptimizer]) -> tuple[SlotSpec, ...]:
+    """Union of the rules' slot sets, first-appearance ordered.  Same-named
+    slots are shared buffers (nesterov's m and adam's m occupy one packed
+    buffer; masks keep the ranges disjoint) and must agree on dtype."""
+    out: list[SlotSpec] = []
+    seen: dict[str, SlotSpec] = {}
+    for o in opts:
+        for s in o.slots:
+            prev = seen.get(s.name)
+            if prev is None:
+                seen[s.name] = s
+                out.append(s)
+            elif prev.dtype != s.dtype:
+                raise ValueError(
+                    f"slot {s.name!r} declared with conflicting dtypes "
+                    f"{prev.dtype!r} vs {s.dtype!r}")
+    return tuple(out)
+
+
+def tuple_update(opt: ShardedOptimizer, coefs: tuple) -> Callable:
+    """Close scalar coefficients over ``opt.update`` — the solo exchange's
+    update_fn(p, g, slots) -> (p', slots')."""
+    def upd(p, g, slots):
+        return opt.update(p, g, slots, coefs)
+    return upd
+
+
+@dataclass(frozen=True)
+class RuleBinding:
+    """One rule of a combined (possibly mixed-optimizer) update: which
+    union-slot indices it reads/writes, its coefficients (scalar or an
+    index into the aux tables), and its member mask's aux index (None for
+    a single-rule update, which needs no selection)."""
+    opt: ShardedOptimizer
+    slot_idx: tuple[int, ...]              # into the union slot tuple
+    coefs: tuple                           # float | ("aux", i)
+    mask_aux: Optional[int] = None
+
+
+def make_combined_update(bindings: Sequence[RuleBinding]) -> Callable:
+    """Build update_fn(p, g, slots, *aux) applying every rule and, when
+    more than one rule is bound, selecting per position with the mask
+    tables.  Masks are exact 0/1 selections (jnp.where), so each position
+    is exactly the output of its owner tenant's rule *as compiled in this
+    program*; positions owned by nobody (rack padding) keep their inputs
+    untouched in the multi-rule case and rely on the rules' zero fixed
+    points in the single-rule case (zero gradient into zero state moves
+    nothing).
+
+    Cross-program caveat: a single-rule combined update compiles to the
+    same arithmetic as the solo engines (co-scheduled == solo is enforced
+    *bitwise* in tests/multidevice/check_tenancy.py), but when several
+    rules share one fused kernel XLA:CPU may contract/fuse the identical
+    expressions differently than the solo program by 1 ulp
+    (optimization_barrier does not survive to fusion on CPU, so islands
+    cannot be pinned) — the mixed-optimizer oracle therefore checks
+    solo-parity to ulp tolerance, not bitwise
+    (tests/multidevice/check_client.py)."""
+    single = len(bindings) == 1
+
+    def upd(p, g, slots, *aux):
+        new_p = p
+        new_slots = list(slots)
+        for b in bindings:
+            coefs = tuple(aux[c[1]] if isinstance(c, tuple) else c
+                          for c in b.coefs)
+            sub = tuple(slots[i] for i in b.slot_idx)
+            cand_p, cand_s = b.opt.update(p, g, sub, coefs)
+            if single:
+                new_p = cand_p
+                for i, s2 in zip(b.slot_idx, cand_s):
+                    new_slots[i] = s2
+            else:
+                mask = aux[b.mask_aux] != 0
+                new_p = jnp.where(mask, cand_p, new_p)
+                for i, s2 in zip(b.slot_idx, cand_s):
+                    new_slots[i] = jnp.where(mask, s2, new_slots[i])
+        return new_p, tuple(new_slots)
+    return upd
+
+
+# ------------------------------------------------------- tree-level API
+
+def tree_init(opt: ShardedOptimizer, params) -> dict:
+    """{slot_name: zeros-like-params tree} — the tree-level state."""
+    return {s.name: jax.tree.map(
+                lambda p: jnp.zeros(p.shape, s.resolve_dtype(p.dtype)),
+                params)
+            for s in opt.slots}
+
+
+def tree_update(opt: ShardedOptimizer, coefs: tuple, params, grads,
+                state: dict):
+    """Apply the protocol rule leaf-wise (the reference / non-exchange
+    path).  Returns (params', state')."""
+    names = opt.slot_names
+    slot_trees = [state[n] for n in names]
+    out = jax.tree.map(
+        lambda p, g, *slots: opt.update(p, g, tuple(slots), coefs),
+        params, grads, *slot_trees)
+    is_pair = lambda t: isinstance(t, tuple)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
+    new_state = {n: jax.tree.map(lambda t, i=i: t[1][i], out,
+                                 is_leaf=is_pair)
+                 for i, n in enumerate(names)}
+    return new_p, new_state

@@ -1,37 +1,26 @@
-"""SGD with Nesterov's accelerated gradient — the paper's optimizer (§4.2).
+"""Tree-level SGD / Nesterov wrappers over the sharded-optimizer protocol.
 
-Update (matching MXNet's nesterov momentum, which PHub reimplements):
-    m <- mu * m + g
-    p <- p - lr * (g + mu * m)
-
-These element-wise formulas are exactly what the fused ``agg_opt`` Pallas
-kernel applies per chunk; ``nesterov_update`` is its pytree-level oracle.
+The elementwise update rules live in optim/protocol.py only — the same
+bodies the chunk-domain exchange applies per window — so the functions
+here are thin pytree adapters (kept for callers that update tree states
+outside an engine, e.g. benchmarks/overhead_breakdown.py).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from .protocol import (NesterovOptimizer, SGDOptimizer, tree_init,
+                       tree_update)
 
 
 def nesterov_init(params):
-    return {"m": jax.tree.map(jnp.zeros_like, params)}
+    return tree_init(NesterovOptimizer(), params)
 
 
 def nesterov_update(params, grads, state, *, lr: float, momentum: float = 0.9,
                     weight_decay: float = 0.0):
-    def upd(p, g, m):
-        g = g.astype(m.dtype)
-        if weight_decay:
-            g = g + weight_decay * p.astype(m.dtype)
-        m_new = momentum * m + g
-        p_new = p - (lr * (g + momentum * m_new)).astype(p.dtype)
-        return p_new, m_new
-    out = jax.tree.map(upd, params, grads, state["m"])
-    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
-    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
-    return new_p, {"m": new_m}
+    opt = NesterovOptimizer(weight_decay=weight_decay)
+    return tree_update(opt, (lr, momentum), params, grads, state)
 
 
 def sgd_update(params, grads, state, *, lr: float, **_):
-    return jax.tree.map(lambda p, g: p - (lr * g).astype(p.dtype),
-                        params, grads), state
+    new_p, _ = tree_update(SGDOptimizer(), (lr,), params, grads, {})
+    return new_p, state

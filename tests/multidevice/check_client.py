@@ -1,0 +1,282 @@
+"""PHubClient oracle check (run in a subprocess: 8 fake devices).
+
+The framework-agnostic push/pull client must be *bitwise* equal to the
+single-process reference on an external (non-model-zoo) gradient pytree:
+``push_pull`` on a (pod=2, data=4) mesh — every worker pushing a different
+gradient — against the jitted tree-level ``make_optimizer`` update applied
+to the mean gradient, for nesterov/sgd/adam × {sharded_ps, hierarchical}
+× pipeline_windows {1, 2}.  Gradients and parameters are integer-valued,
+so every partial sum in every reduction order is exact and any mismatch is
+a real layout/update bug, not float reassociation (adam divides by
+sqrt(v), which amplifies infinitesimal gradient differences into
+O(lr)-scale parameter differences — exactness is what makes the bitwise
+claim testable at all).
+
+Also: the co-scheduled mixed-optimizer oracle — a nesterov tenant and an
+adam tenant packed into one rack domain must each track its solo
+trajectory, including the attach-with-state/detach lifecycle migrating
+adam's (m, v, k1, k2) slots through the packed buffers.  Unlike the
+homogeneous case (bitwise, check_tenancy.py), the mixed-rule update puts
+two rules in one fused kernel and XLA:CPU contracts the identical
+expressions up to 1 ulp differently than the solo programs
+(optimization_barrier does not survive to fusion on CPU), so solo parity
+here is asserted to tight tolerance rather than bitwise — layout or
+isolation bugs show up as O(1) errors, far above the threshold.
+
+Usage: python tests/multidevice/check_client.py [case ...]
+Cases: sharded_ps hierarchical mixed_co
+Prints "OK <case>" lines; exits nonzero on failure.
+"""
+import dataclasses
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.configs import ARCHS, TrainConfig, reduced  # noqa: E402
+from repro.core import PHubClient, PHubConnectionManager  # noqa: E402
+from repro.data import SyntheticTokens  # noqa: E402
+from repro.optim import make_optimizer  # noqa: E402
+
+CASES = sys.argv[1:] or ["sharded_ps", "hierarchical", "mixed_co"]
+failures = 0
+W = 8                                    # workers = pod(2) x data(4)
+STEPS = 3
+
+
+def report(ok, name, detail=""):
+    global failures
+    print(f"{'OK' if ok else 'FAIL'} {name} {detail}")
+    failures += 0 if ok else 1
+
+
+def mismatches(a, b):
+    errs = jax.tree.map(
+        lambda x, y: int((np.asarray(x) != np.asarray(y)).sum()), a, b)
+    return sum(jax.tree.leaves(errs))
+
+
+def max_err(a, b):
+    errs = jax.tree.map(
+        lambda x, y: float(np.abs(np.asarray(x, np.float32)
+                                  - np.asarray(y, np.float32)).max()), a, b)
+    return max(jax.tree.leaves(errs))
+
+
+def external_pytree():
+    """A hand-rolled, non-model-zoo parameter pytree: mixed dtypes, odd
+    shapes (padding exercised), sized so windows=2 divides the per-shard
+    chunk count for both S=8 (sharded_ps) and S=4 (hierarchical)."""
+    return {
+        "conv": {"w": jax.ShapeDtypeStruct((3, 3, 8, 16), jnp.float32),
+                 "b": jax.ShapeDtypeStruct((16,), jnp.float32)},
+        "head": jax.ShapeDtypeStruct((47, 33), jnp.float32),
+        "body": jax.ShapeDtypeStruct((188, 199), jnp.float32),
+        "emb": jax.ShapeDtypeStruct((120, 130), jnp.bfloat16),
+        "bias": jax.ShapeDtypeStruct((47,), jnp.bfloat16),
+    }
+
+
+def int_tree(like, rng, lo, hi, lead=None):
+    """Integer-valued arrays (exact under any summation order)."""
+    def mk(s):
+        shape = ((lead,) + s.shape) if lead else s.shape
+        return jnp.asarray(rng.integers(lo, hi, shape).astype(np.float32)
+                           ).astype(s.dtype)
+    return jax.tree.map(mk, like,
+                        is_leaf=lambda t: isinstance(t, jax.ShapeDtypeStruct))
+
+
+def check_client(strategy):
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+    like = external_pytree()
+    for optname in ("nesterov", "sgd", "adam"):
+        for windows in (1, 2):
+            tc = TrainConfig(optimizer=optname, strategy=strategy,
+                             lr=3e-2, momentum=0.9, chunk_size_bytes=1024,
+                             pipeline_windows=windows)
+            client = PHubClient(tc, mesh).register(like)
+            rng = np.random.default_rng(7)
+            params0 = int_tree(like, rng, -4, 5)
+            grads = [int_tree(like, rng, -8, 9, lead=W)
+                     for _ in range(STEPS)]
+            p = jax.tree.map(lambda x: x + 0, params0)
+            o = client.init_state()
+            for s in range(STEPS):
+                p, o = client.push_pull(grads[s], p, o)
+
+            # single-process reference: mean push + jitted tree update
+            init_fn, upd_fn = make_optimizer(tc)
+            upd_jit = jax.jit(upd_fn)
+            pr, st = params0, init_fn(params0)
+            for s in range(STEPS):
+                gm = jax.tree.map(lambda g: (g.astype(jnp.float32).sum(0)
+                                             / W).astype(g.dtype), grads[s])
+                pr, st = upd_jit(pr, gm, st)
+            bad = mismatches(p, pr)
+            # slot parity: client slot rows concatenated == chunk-domain
+            # flat state; unflatten and compare leaf-wise
+            for name in client.sopt.slot_names:
+                flat = {k: np.asarray(jax.device_get(d[name])).reshape(-1)
+                        for k, d in o.items()}
+                back = client.unflatten(
+                    {k: jnp.asarray(v) for k, v in flat.items()})
+                bad += mismatches(back, st[name])
+            report(bad == 0,
+                   f"client {strategy} opt={optname} windows={windows}",
+                   f"mismatched_elems={bad}")
+
+
+TOL = 1e-4           # mixed-rule co vs solo: ulp drift amplified over
+                     # steps; layout/isolation bugs are O(1), far above
+
+
+def check_mixed_co():
+    """nesterov tenant + adam tenant co-scheduled tracks each solo run
+    (tolerance — see module docstring), incl. the
+    solo->attach(with N-slot state)->co->detach->solo lifecycle."""
+    strategy = "sharded_ps"
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    B, T = 8, 32
+    pool = [
+        ("jobN", reduced(ARCHS["llama3.2-1b"], d_model=64),
+         TrainConfig(strategy=strategy, optimizer="nesterov", lr=3e-2,
+                     momentum=0.9, pipeline_windows=2, loss_chunk=32), 1),
+        ("jobA", reduced(ARCHS["llama3.2-1b"], d_model=128),
+         TrainConfig(strategy=strategy, optimizer="adam", lr=1e-3,
+                     pipeline_windows=2, loss_chunk=32), 2),
+    ]
+
+    def device_batch(eng, cfg, seed):
+        data = SyntheticTokens(cfg, B, T, seed=seed)
+        b = data.batch_at(0)
+        shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                  for k, v in b.items()}
+        return {k: jax.device_put(v, s) for (k, v), s in
+                zip(b.items(), eng.batch_shardings(shapes).values())}
+
+    def solo_run(name, cfg, tc, seed, n_steps):
+        cm = PHubConnectionManager()
+        h = cm.create_service(name, cfg, tc, mesh)
+        eng = cm.connect_service(h)
+        p, o = cm.init_service(h, jax.random.PRNGKey(0))
+        batch = device_batch(eng, cfg, seed)
+        for _ in range(n_steps):
+            p, o, m = cm.push_pull(h, p, o, batch)
+        return p, o, float(m["loss"])
+
+    solo = {name: solo_run(name, cfg, tc, seed, 3)
+            for name, cfg, tc, seed in pool}
+    cm = PHubConnectionManager()
+    handles, params, batches = [], {}, {}
+    for name, cfg, tc, seed in pool:
+        h = cm.create_service(name, cfg, tc, mesh)
+        eng = cm.connect_service(h)
+        params[name], _ = cm.init_service(h, jax.random.PRNGKey(0))
+        batches[name] = device_batch(eng, cfg, seed)
+        cm.attach_service(h)
+        handles.append(h)
+    # the packed domain carries the union slot set
+    union = {n for key in cm._co.opt for n in cm._co.opt[key]}
+    report(union == {"m", "v", "k1", "k2"}, "mixed_co union slots",
+           f"{union}")
+    for _ in range(3):
+        params, metrics = cm.co_step(handles, params, batches)
+    for name, _, _, _ in pool:
+        p_solo, _, l_solo = solo[name]
+        err = max_err(p_solo, params[name])
+        lerr = abs(l_solo - float(metrics[name]["loss"]))
+        report(err < TOL and lerr < TOL, f"mixed_co tenant={name}",
+               f"max_err={err:.2e} loss_err={lerr:.2e}")
+
+    # lifecycle: solo(2) -> attach with state -> co(2) -> detach -> solo(2)
+    # against 6 straight solo steps.  Two flavours:
+    #   * a homogeneous ADAM pair — single rule, so the co arithmetic is
+    #     identical to solo and the N-slot (m, v, k1, k2) migration must
+    #     be BITWISE on params and on every slot's live region.  The k
+    #     slots tick on the dead rack-padding tail solo (no gradient ever
+    #     lands there, so the values are semantically inert) and migration
+    #     drops that tail by design — compare up to each group's
+    #     chunk-granular live length.
+    #   * the mixed nesterov+adam pair — union-slot migration mechanics
+    #     under masked rules; params to (looser) tolerance, since adam's
+    #     sqrt(v)-normalized step turns the mixed-kernel ulp drift into
+    #     O(lr) differences at near-zero-gradient coordinates over steps.
+    def lifecycle(pool2, tag):
+        solo6 = {name: solo_run(name, cfg, tc, seed, 6)
+                 for name, cfg, tc, seed in pool2}
+        cm = PHubConnectionManager()
+        handles, params, opts, batches = [], {}, {}, {}
+        for name, cfg, tc, seed in pool2:
+            h = cm.create_service(name, cfg, tc, mesh)
+            eng = cm.connect_service(h)
+            params[name], opts[name] = cm.init_service(
+                h, jax.random.PRNGKey(0))
+            batches[name] = device_batch(eng, cfg, seed)
+            handles.append(h)
+        for h in handles:
+            for _ in range(2):
+                params[h.namespace], opts[h.namespace], _ = cm.push_pull(
+                    h, params[h.namespace], opts[h.namespace],
+                    batches[h.namespace])
+        for h in handles:
+            cm.attach_service(h, opt=opts[h.namespace])
+        for _ in range(2):
+            params, metrics = cm.co_step(handles, params, batches)
+        for h in handles:
+            opts[h.namespace] = cm.detach_service(h)
+        for h in handles:
+            name = h.namespace
+            for _ in range(2):
+                params[name], opts[name], m = cm.push_pull(
+                    h, params[name], opts[name], batches[name])
+            yield name, params[name], opts[name], float(m["loss"]), \
+                solo6[name], cm._services[name].engine
+
+    adam_pool = [
+        (name, cfg, dataclasses.replace(tc, optimizer="adam", lr=lr), seed)
+        for (name, cfg, tc, seed), lr in zip(pool, (1e-3, 3e-3))]
+    for name, p, o, loss, (p_ref, o_ref, l_ref), eng in lifecycle(
+            adam_pool, "adam_pair"):
+        bad = mismatches(p_ref, p)
+        for g in eng.chunk_plan.groups:
+            key = str(g.dtype)
+            live = -(-g.total // g.chunk_elems) * g.chunk_elems
+            for slot in o[key]:
+                a = np.asarray(o[key][slot]).reshape(
+                    np.asarray(o[key][slot]).shape[0], -1)[:, :live]
+                b = np.asarray(o_ref[key][slot]).reshape(
+                    np.asarray(o_ref[key][slot]).shape[0], -1)[:, :live]
+                bad += int((a != b).sum())
+        report(bad == 0 and loss == l_ref,
+               f"adam_pair lifecycle tenant={name}",
+               f"mismatched_elems={bad}")
+
+    for name, p, o, loss, (p_ref, o_ref, l_ref), eng in lifecycle(
+            pool, "mixed"):
+        err = max_err(p_ref, p)
+        lerr = abs(l_ref - loss)
+        report(err < 1e-2 and lerr < 1e-2,
+               f"mixed_co lifecycle tenant={name}",
+               f"max_err={err:.2e} loss_err={lerr:.2e}")
+
+
+def main():
+    for case in CASES:
+        if case in ("sharded_ps", "hierarchical"):
+            check_client(case)
+        elif case == "mixed_co":
+            check_mixed_co()
+        else:
+            raise SystemExit(f"unknown case {case!r}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,214 @@
+"""PHubClient — the framework-agnostic push/pull API (DESIGN.md §10).
+
+Single-device tests cover registration, the slot-state layout, tree and
+flat-store PushPull parity against the tree-level optimizer reference, and
+N-slot checkpointing; the 8-device bitwise oracle (client == single-process
+reference for nesterov/sgd/adam × sharded_ps/hierarchical × windows {1,2},
+plus the mixed-optimizer co-scheduled oracle) runs in a subprocess like
+tests/test_pipeline.py.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import TrainConfig
+from repro.core import PHubClient
+from repro.optim import make_optimizer
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+LIKE = {"dense": {"w": jax.ShapeDtypeStruct((64, 48), jnp.float32),
+                  "b": jax.ShapeDtypeStruct((48,), jnp.float32)},
+        "scale": jax.ShapeDtypeStruct((17,), jnp.float32)}
+
+
+def _mesh():
+    return jax.make_mesh((1,), ("data",))
+
+
+def _int_tree(rng, lo, hi, lead=None):
+    isl = lambda t: isinstance(t, jax.ShapeDtypeStruct)
+    mk = lambda s: jnp.asarray(
+        rng.integers(lo, hi, ((lead,) + s.shape) if lead else s.shape)
+        .astype(np.float32)).astype(s.dtype)
+    return jax.tree.map(mk, LIKE, is_leaf=isl)
+
+
+def test_register_builds_chunk_plan():
+    tc = TrainConfig(chunk_size_bytes=1024)
+    client = PHubClient(tc, _mesh()).register(LIKE)
+    (g,) = client.plan.groups
+    assert g.total == 64 * 48 + 48 + 17
+    assert client.registered_bytes() == g.total * 4
+    # slot layout mirrors the strategy's momentum rules
+    shapes = client.slot_shapes()
+    assert set(shapes) == {"float32"} and set(shapes["float32"]) == {"m"}
+
+
+def test_client_rejects_fsdp_stream_and_unregistered():
+    with pytest.raises(ValueError, match="chunk domain"):
+        PHubClient(TrainConfig(strategy="fsdp_stream"), _mesh())
+    client = PHubClient(TrainConfig(), _mesh())
+    with pytest.raises(ValueError, match="register"):
+        client.push_pull({}, {}, {})
+
+
+@pytest.mark.parametrize("optname", ["nesterov", "sgd", "adam"])
+def test_push_pull_matches_tree_reference(optname):
+    """Single worker: push_pull == jitted tree-level make_optimizer update,
+    bitwise (integer-valued inputs keep every reduction exact)."""
+    tc = TrainConfig(optimizer=optname, lr=3e-2, chunk_size_bytes=1024)
+    client = PHubClient(tc, _mesh()).register(LIKE)
+    rng = np.random.default_rng(0)
+    params0 = _int_tree(rng, -4, 5)
+    grads = _int_tree(rng, -8, 9, lead=1)
+    p = jax.tree.map(lambda x: x + 0, params0)
+    o = client.init_state()
+    init_fn, upd_fn = make_optimizer(tc)
+    upd_jit = jax.jit(upd_fn)
+    pr, st = params0, init_fn(params0)
+    for _ in range(3):
+        p, o = client.push_pull(grads, p, o)
+        pr, st = upd_jit(pr, jax.tree.map(lambda g: g[0], grads), st)
+    bad = jax.tree.map(
+        lambda a, b: int((np.asarray(a) != np.asarray(b)).sum()), p, pr)
+    assert sum(jax.tree.leaves(bad)) == 0
+
+
+def test_push_pull_flat_matches_tree_mode():
+    """Flat-residency PushPull on chunk-domain stores == tree PushPull."""
+    tc = TrainConfig(lr=1e-2, chunk_size_bytes=1024, pipeline_windows=2)
+    client = PHubClient(tc, _mesh()).register(LIKE)
+    rng = np.random.default_rng(1)
+    params0 = _int_tree(rng, -4, 5)
+    grads = _int_tree(rng, -8, 9, lead=1)
+    p_t = jax.tree.map(lambda x: x + 0, params0)
+    o_t = client.init_state()
+    p_t, o_t = client.push_pull(grads, p_t, o_t)
+
+    pstore = client.flatten(params0)
+    gstore = {k: v[None] for k, v in
+              client.flatten(jax.tree.map(lambda g: g[0], grads)).items()}
+    o_f = client.init_state()
+    pstore, o_f = client.push_pull_flat(gstore, pstore, o_f)
+    back = client.unflatten(pstore)
+    bad = jax.tree.map(
+        lambda a, b: int((np.asarray(a) != np.asarray(b)).sum()), back, p_t)
+    assert sum(jax.tree.leaves(bad)) == 0
+    bad_o = jax.tree.map(
+        lambda a, b: int((np.asarray(a) != np.asarray(b)).sum()), o_t, o_f)
+    assert sum(jax.tree.leaves(bad_o)) == 0
+
+
+def test_engine_is_thin_client_consumer():
+    """The engine's exchange delegates to an embedded PHubClient over its
+    own chunk plan."""
+    from repro.configs import ARCHS, reduced
+    from repro.core import PHubEngine
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    eng = PHubEngine(cfg=cfg, tc=TrainConfig(), mesh=mesh)
+    assert isinstance(eng.client, PHubClient)
+    assert eng.client.plan is eng.chunk_plan
+    assert eng.client.sopt == eng.sopt
+
+
+@pytest.mark.parametrize("optname", ["sgd", "adam"])
+@pytest.mark.parametrize("flat", [False, True])
+def test_checkpoint_nslot_roundtrip(tmp_path, optname, flat):
+    """Save/restore round-trips N-slot opt states (adam's four, sgd's
+    zero) in both residency modes, bitwise."""
+    from repro.checkpoint import save_checkpoint, restore_train_state
+    from repro.configs import ARCHS, reduced
+    from repro.core import PHubEngine
+    from repro.data import SyntheticTokens
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    tc = TrainConfig(optimizer=optname, loss_chunk=32, flat_residency=flat)
+    eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
+    params, opt = eng.init_state(jax.random.PRNGKey(0))
+    data = SyntheticTokens(cfg, 4, 32, seed=2)
+    b = data.batch_at(0)
+    shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in b.items()}
+    step = eng.make_train_step(shapes)
+    batch = {k: jax.device_put(v, s) for (k, v), s in
+             zip(b.items(), eng.batch_shardings(shapes).values())}
+    params, opt, _ = step(params, opt, batch)
+    save_checkpoint(str(tmp_path), 1, {"params": params, "opt": opt})
+
+    st, params2, opt2 = restore_train_state(str(tmp_path), eng)
+    assert st == 1
+    bad = jax.tree.map(
+        lambda a, b: int((np.asarray(a) != np.asarray(b)).sum()),
+        (params, opt), (params2, opt2))
+    assert sum(jax.tree.leaves(bad)) == 0
+    if optname == "adam":
+        assert all(set(d) == {"m", "v", "k1", "k2"} for d in opt2.values())
+    else:
+        assert all(set(d) == set() for d in opt2.values())
+    # restored state continues training (specs/structure intact)
+    params2, opt2, m = step(params2, opt2, batch)
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_checkpoint_rejects_wrong_optimizer_slots(tmp_path):
+    """Both directions fail fast: an adam engine can't restore a nesterov
+    checkpoint (missing slots) and a nesterov engine can't restore an adam
+    one (extra slots would silently drop optimizer state)."""
+    from repro.checkpoint import save_checkpoint, restore_train_state
+    from repro.configs import ARCHS, reduced
+    from repro.core import PHubEngine
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    eng_n = PHubEngine(cfg=cfg, tc=TrainConfig(), mesh=mesh)
+    params, opt = eng_n.init_state(jax.random.PRNGKey(0))
+    save_checkpoint(str(tmp_path), 1, {"params": params, "opt": opt})
+    eng_a = PHubEngine(cfg=cfg, tc=TrainConfig(optimizer="adam"), mesh=mesh)
+    with pytest.raises(ValueError, match="no opt slot"):
+        restore_train_state(str(tmp_path), eng_a)
+    params_a, opt_a = eng_a.init_state(jax.random.PRNGKey(0))
+    save_checkpoint(str(tmp_path), 2, {"params": params_a, "opt": opt_a})
+    with pytest.raises(ValueError, match="does not declare"):
+        restore_train_state(str(tmp_path), eng_n, step=2)
+
+
+def test_checkpoint_legacy_single_momentum_restores(tmp_path):
+    """A pre-protocol checkpoint ({dtype: momentum array}, no slot level)
+    restores into a nesterov engine as the 'm' slot — old runs stay
+    resumable."""
+    from repro.checkpoint import save_checkpoint, restore_train_state
+    from repro.configs import ARCHS, reduced
+    from repro.core import PHubEngine
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    eng = PHubEngine(cfg=cfg, tc=TrainConfig(), mesh=mesh)
+    params, opt = eng.init_state(jax.random.PRNGKey(0))
+    legacy_opt = {key: np.asarray(d["m"]) + 0.5 for key, d in opt.items()}
+    save_checkpoint(str(tmp_path), 7, {"params": params, "opt": legacy_opt})
+    st, _, opt2 = restore_train_state(str(tmp_path), eng)
+    assert st == 7
+    for key in legacy_opt:
+        np.testing.assert_array_equal(np.asarray(opt2[key]["m"]),
+                                      legacy_opt[key])
+
+
+# ----------------------------------------------------------- multi-device
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case", ["sharded_ps", "hierarchical", "mixed_co"])
+def test_multidevice_client_oracle(case):
+    """PHubClient push_pull on an external pytree is bitwise-equal to the
+    single-process reference (all optimizers × windows), and mixed-opt
+    co-scheduling is bitwise-equal to solo — 8 forced host devices."""
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "multidevice",
+                                      "check_client.py"), case],
+        capture_output=True, text=True, timeout=1500,
+        env={**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")})
+    assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-3000:]
+    assert "FAIL" not in proc.stdout

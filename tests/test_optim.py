@@ -1,13 +1,19 @@
-"""Optimizer math: Nesterov matches manual recurrence; Adam bias correction;
-the fused kernel's vector update equals the pytree update."""
+"""Optimizer math: the sharded-optimizer protocol rules (Nesterov manual
+recurrence, Adam bias correction, SGD), their tree-level wrappers, and the
+fused Pallas kernels against the protocol bodies."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.optim import (nesterov_init, nesterov_update, adam_init,
-                         adam_update, make_optimizer)
+from repro.optim import (AdamOptimizer, NesterovOptimizer, SGDOptimizer,
+                         RuleBinding, adam_init, adam_update,
+                         make_combined_update, make_optimizer,
+                         make_sharded_optimizer, nesterov_init,
+                         nesterov_update, tuple_update, union_slots)
 from repro.configs import TrainConfig
-from repro.kernels.agg_opt.ops import fused_agg_opt
+from repro.kernels.agg_opt.ops import (fused_adam_opt, fused_agg_opt,
+                                       fused_sgd_opt)
 
 
 def test_nesterov_two_steps_manual():
@@ -38,7 +44,11 @@ def test_adam_first_step_is_lr_sized():
     g = {"w": jnp.array([3.0])}
     p1, st = adam_update(p, g, adam_init(p), lr=0.01)
     np.testing.assert_allclose(np.asarray(p1["w"]), [-0.01], rtol=1e-4)
-    assert int(st["t"]) == 1
+    # bias correction rides per-position k slots holding 1 - b^t directly
+    # (they shard/window/migrate like every other slot), float32 always
+    np.testing.assert_allclose(np.asarray(st["k1"]["w"]), [0.1], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(st["k2"]["w"]), [0.001], rtol=1e-4)
+    assert st["k1"]["w"].dtype == jnp.float32
 
 
 def test_factory():
@@ -48,6 +58,55 @@ def test_factory():
         st = init(p)
         p1, _ = upd(p, {"w": jnp.ones((4,))}, st)
         assert p1["w"].shape == (4,)
+    with pytest.raises(ValueError, match="unknown optimizer"):
+        make_optimizer(TrainConfig(optimizer="lion"))
+
+
+def test_rule_identity_and_slot_union():
+    """Equal statics -> one rule; slot union shares same-named slots."""
+    a = make_sharded_optimizer(TrainConfig(optimizer="adam"))
+    b = make_sharded_optimizer(TrainConfig(optimizer="adam"))
+    assert a == b and hash(a) == hash(b)
+    c = make_sharded_optimizer(TrainConfig(optimizer="adam", adam_b1=0.8))
+    assert a != c                       # different statics = distinct rule
+    n = make_sharded_optimizer(TrainConfig(optimizer="nesterov"))
+    names = [s.name for s in union_slots([n, a])]
+    assert names == ["m", "v", "k1", "k2"]   # nesterov's m shared with adam's
+
+
+def test_combined_update_masks_select_owner_rule():
+    """Mixed nesterov+adam combined rule: each position gets bitwise its
+    owner rule's output; foreign slots stay untouched."""
+    nes, adam = NesterovOptimizer(), AdamOptimizer()
+    specs = union_slots([nes, adam])
+    idx = {s.name: i for i, s in enumerate(specs)}
+    upd = make_combined_update([
+        RuleBinding(opt=nes, slot_idx=(idx["m"],), coefs=(0.1, 0.9),
+                    mask_aux=0),
+        RuleBinding(opt=adam,
+                    slot_idx=(idx["m"], idx["v"], idx["k1"], idx["k2"]),
+                    coefs=(0.01,), mask_aux=1),
+    ])
+    n = 8
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    slots = tuple(jnp.zeros(n, jnp.float32) for _ in specs)
+    mask_n = jnp.asarray(([1.0, 0.0] * 4), jnp.float32)
+    mask_a = 1.0 - mask_n
+    p2, s2 = upd(p, g, slots, mask_n, mask_a)
+    pn, (mn,) = nes.update(p, g, (slots[idx["m"]],), (0.1, 0.9))
+    pa, (ma, va, k1a, k2a) = adam.update(
+        p, g, (slots[idx["m"]], slots[idx["v"]], slots[idx["k1"]],
+               slots[idx["k2"]]), (0.01,))
+    sel = np.asarray(mask_n) != 0
+    np.testing.assert_array_equal(np.asarray(p2)[sel], np.asarray(pn)[sel])
+    np.testing.assert_array_equal(np.asarray(p2)[~sel], np.asarray(pa)[~sel])
+    np.testing.assert_array_equal(np.asarray(s2[idx["m"]])[sel],
+                                  np.asarray(mn)[sel])
+    np.testing.assert_array_equal(np.asarray(s2[idx["v"]])[sel], 0.0)
+    np.testing.assert_array_equal(np.asarray(s2[idx["v"]])[~sel],
+                                  np.asarray(va)[~sel])
 
 
 def test_fused_kernel_equals_tree_update():
@@ -64,3 +123,40 @@ def test_fused_kernel_equals_tree_update():
                                atol=1e-6)
     np.testing.assert_allclose(np.asarray(st2["m"]["w"]), np.asarray(m_vec),
                                atol=1e-6)
+
+
+def test_fused_sgd_kernel_equals_protocol():
+    n = 3000
+    key = jax.random.PRNGKey(2)
+    p = jax.random.normal(key, (n,))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    p_ref, () = tuple_update(SGDOptimizer(), (0.05,))(p, g, ())
+    p_vec = fused_sgd_opt(p, g, lr=0.05, chunk_elems=1024)
+    np.testing.assert_allclose(np.asarray(p_ref), np.asarray(p_vec),
+                               atol=1e-6)
+
+
+def test_fused_adam_kernel_equals_protocol():
+    n = 3000
+    key = jax.random.PRNGKey(3)
+    p = jax.random.normal(key, (n,))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    m = jax.random.normal(jax.random.fold_in(key, 2), (n,)) * 0.1
+    v = jnp.abs(jax.random.normal(jax.random.fold_in(key, 3), (n,))) * 0.01
+    k1 = jnp.full((n,), 1 - 0.9 ** 3)
+    k2 = jnp.full((n,), 1 - 0.999 ** 3)
+    opt = AdamOptimizer()
+    p_ref, (m_ref, v_ref, k1_ref, k2_ref) = tuple_update(opt, (0.01,))(
+        p, g, (m, v, k1, k2))
+    p_vec, m_vec, v_vec, k1_vec, k2_vec = fused_adam_opt(
+        p, g, m, v, k1, k2, lr=0.01, chunk_elems=1024)
+    np.testing.assert_allclose(np.asarray(p_ref), np.asarray(p_vec),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m_ref), np.asarray(m_vec),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v_ref), np.asarray(v_vec),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(k1_ref), np.asarray(k1_vec),
+                               atol=1e-7)
+    np.testing.assert_allclose(np.asarray(k2_ref), np.asarray(k2_vec),
+                               atol=1e-7)

@@ -45,9 +45,10 @@ def test_pipelined_strategies_registry():
 # --------------------------------------------- single-worker pipeline parity
 
 def _upd(lr=0.1, mu=0.9):
-    def f(p, g, m):
+    def f(p, g, slots):
+        (m,) = slots
         m2 = mu * m + g
-        return p - lr * (g + mu * m2), m2
+        return p - lr * (g + mu * m2), (m2,)
     return f
 
 
@@ -74,10 +75,10 @@ def test_single_worker_windows_match_monolithic(windows):
     rank = jnp.zeros((), jnp.int32)
 
     def both():
-        p_ref, m_ref = exchange_group("sharded_ps", ctx, g, p, m, _upd(),
-                                      rank)
-        p_win, m_win = pipelined_exchange("sharded_ps", ctx, g, p, m,
-                                          _upd(), rank, windows)
+        p_ref, (m_ref,) = exchange_group("sharded_ps", ctx, g, p, (m,),
+                                         _upd(), rank)
+        p_win, (m_win,) = pipelined_exchange("sharded_ps", ctx, g, p, (m,),
+                                             _upd(), rank, windows)
         return p_ref, m_ref, p_win, m_win
 
     p_ref, m_ref, p_win, m_win = _bind_data_axis(both)
@@ -100,9 +101,9 @@ def test_run_exchange_dispatch():
     rank = jnp.zeros((), jnp.int32)
     for strategy in ("allreduce", "sharded_ps"):
         def both():
-            p2, m2 = run_exchange(strategy, ctx, g, p, m, _upd(), rank,
-                                  grp, 4)
-            p1, m1 = exchange_group(strategy, ctx, g, p, m, _upd(), rank)
+            p2, _ = run_exchange(strategy, ctx, g, p, (m,), _upd(), rank,
+                                 grp, 4)
+            p1, _ = exchange_group(strategy, ctx, g, p, (m,), _upd(), rank)
             return p2, p1
         p2, p1 = _bind_data_axis(both)
         np.testing.assert_allclose(np.asarray(p2), np.asarray(p1),
@@ -212,12 +213,26 @@ def test_flat_residency_rejects_fsdp_stream():
                                            flat_residency=True), mesh=mesh)
 
 
-def test_engine_rejects_non_nesterov():
+def test_engine_rejects_unknown_optimizer():
+    """nesterov/sgd/adam all ride the sharded-optimizer protocol now; an
+    optimizer outside the registry must fail fast at engine construction."""
     from repro.core import PHubEngine
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
-    with pytest.raises(ValueError, match="[Nn]esterov"):
-        PHubEngine(cfg=cfg, tc=TrainConfig(optimizer="adam"), mesh=mesh)
+    with pytest.raises(ValueError, match="unknown optimizer"):
+        PHubEngine(cfg=cfg, tc=TrainConfig(optimizer="adagrad"), mesh=mesh)
+
+
+@pytest.mark.parametrize("optname", ["sgd", "adam"])
+def test_engine_runs_protocol_optimizers(optname):
+    """One engine step with each protocol optimizer: state structure is
+    {dtype: {slot: buffer}} and the step produces finite loss."""
+    eng, step, params, opt, batch = _one_step(
+        TrainConfig(optimizer=optname, lr=1e-2, loss_chunk=32))
+    want = {"sgd": set(), "adam": {"m", "v", "k1", "k2"}}[optname]
+    assert {k for d in opt.values() for k in d} == want
+    p1, o1, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
 
 
 def test_checkpoint_restore_converts_residency(tmp_path):
