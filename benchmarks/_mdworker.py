@@ -204,6 +204,123 @@ def bench_pipeline_exchange(p):
                             for w in windows_list}}
 
 
+def bench_wire_exchange(p):
+    """Wire-format sweep on one flat dtype group (DESIGN.md §11): the pure
+    PS exchange (synthetic push) per requested wire format, full-manual
+    over the worker mesh.  identity runs the pre-wire run_exchange path;
+    bf16/int8 run the encoded ring (per-hop re-quantization, pull-delta
+    error feedback carried in a residual buffer).
+
+    All formats are timed interleaved within one rep loop so machine
+    drift cancels.  Reports us per format plus the raw and encoded bytes
+    per worker per step (cost_model) — on the host backend quantization
+    is pure compute cost (collectives have ~zero launch cost and move
+    host memory), so the derived byte columns, not the timings, carry
+    the bandwidth story; on NIC-bound hardware the byte ratio is the
+    speedup ceiling."""
+    import time as _t
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import TrainConfig
+    from repro.core import cost_model
+    from repro.core.chunking import build_plan
+    from repro.core.exchange import ExchangeContext
+    from repro.core.pipeline import run_exchange, run_wire_exchange
+    from repro.core.wire import WireFormat
+    from repro.utils import compat
+
+    D = p["data_size"]
+    mo = p.get("model_size", 0)
+    if mo:
+        mesh = jax.make_mesh((D, mo), ("data", "model"))
+        manual = {"data", "model"}
+    else:
+        mesh = jax.make_mesh((D,), ("data",))
+        manual = {"data"}
+    axes = ("data",)
+    sizes = {"data": D}
+    strategy = p.get("strategy", "sharded_ps")
+    wires = p.get("wires", ["identity", "bf16", "int8"])
+    windows = p.get("windows", 1)
+    elems = p["elems"]
+    ctx = ExchangeContext(data_axes=axes, axis_sizes=sizes)
+    tree = {"w": jax.ShapeDtypeStruct((elems,), jnp.float32)}
+    plan = build_plan(tree, chunk_bytes=p.get("chunk_kb", 32) * 1024,
+                      n_shards=max(ctx.n_shards(strategy), 1))
+    (grp,) = plan.groups
+    lr, mu = 1e-2, 0.9
+
+    def upd(pv, gv, slots):
+        (mv,) = slots
+        m2 = mu * mv + gv
+        return pv - lr * (gv + mu * m2), (m2,)
+
+    m_spec = P("data")
+
+    def make_step(wf):
+        wire = WireFormat(wf)
+
+        def local_id(pv, mv):
+            gv = pv * 1e-4
+            rank = jax.lax.axis_index("data")
+            p2, (m2,) = run_exchange(strategy, ctx, gv, pv, (mv,), upd,
+                                     rank, grp, windows)
+            return p2, m2
+
+        def local_wire(pv, mv, rv):
+            gv = pv * 1e-4
+            rank = jax.lax.axis_index("data")
+            p2, (m2,), r2 = run_wire_exchange(
+                strategy, ctx, gv, pv, (mv,), upd, rank, grp, windows,
+                wire, rv)
+            return p2, m2, r2
+
+        if wire.is_identity:
+            return jax.jit(compat.shard_map(
+                local_id, mesh=mesh, in_specs=(P(), m_spec),
+                out_specs=(P(), m_spec), axis_names=manual,
+                check_vma=False))
+        return jax.jit(compat.shard_map(
+            local_wire, mesh=mesh, in_specs=(P(), m_spec, m_spec),
+            out_specs=(P(), m_spec, m_spec), axis_names=manual,
+            check_vma=False))
+
+    steps = {wf: make_step(wf) for wf in wires}
+    pv = jnp.asarray(np.random.default_rng(0).normal(
+        size=grp.padded).astype(np.float32))
+    mv = jnp.zeros((grp.padded,), jnp.float32)
+    rv = jnp.zeros((grp.padded,), jnp.float32)
+
+    def call(wf):
+        return (steps[wf](pv, mv) if wf == "identity"
+                else steps[wf](pv, mv, rv))
+
+    for wf in wires:                                 # compile + warm
+        jax.block_until_ready(call(wf))
+        jax.block_until_ready(call(wf))
+    times = {wf: [] for wf in wires}
+    for _ in range(p.get("reps", 7)):
+        for wf in wires:                             # interleaved A/B
+            t0 = _t.perf_counter()
+            jax.block_until_ready(call(wf))
+            times[wf].append(_t.perf_counter() - t0)
+    out = {}
+    raw = grp.total * 4
+    for wf in wires:
+        wire = WireFormat(wf)
+        wb = wire.payload_bytes(grp.total, grp.dtype, grp.chunk_elems)
+        tr = cost_model.tenant_step_traffic(strategy, raw, D,
+                                            wire_bytes=wb)
+        out[wf] = {"us": sorted(times[wf])[len(times[wf]) // 2] * 1e6,
+                   "wire_bytes": wb,
+                   "wire_push_bytes": tr["wire_push_bytes"],
+                   "compression": raw / wb}
+    return {"by_wire": out, "model_bytes": raw}
+
+
 def bench_multitenant(p):
     """Co-scheduled multi-job step vs serially alternated per-tenant engines
     (the §3.1 multi-tenancy claim): K tenants, same rack, one step each.
@@ -336,6 +453,7 @@ def bench_multitenant(p):
 BENCHES = {"exchange_only": bench_exchange_only,
            "train_step": bench_train_step,
            "pipeline_exchange": bench_pipeline_exchange,
+           "wire_exchange": bench_wire_exchange,
            "multitenant": bench_multitenant}
 
 

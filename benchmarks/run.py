@@ -16,9 +16,12 @@ Prints ``name,us_per_call,derived`` CSV rows (plus section markers).
   multitenant         §3.1 / D §9      co-scheduled tenants vs serial engines
   optimizer_sweep     D §10            nesterov/sgd/adam exchange cost,
                                        solo + 2-tenant co (mixed rules)
+  wire_sweep          D §11            identity/bf16/int8 wire formats:
+                                       exchange cost + bytes on the wire
 
 Run all: PYTHONPATH=src python -m benchmarks.run
 Subset:  PYTHONPATH=src python -m benchmarks.run tall_vs_wide roofline
+One:     PYTHONPATH=src python -m benchmarks.run --only wire_sweep
 JSON:    PYTHONPATH=src python -m benchmarks.run --json out.json [modules]
 """
 import json
@@ -30,7 +33,29 @@ MODULES = ["bandwidth_table2", "cost_table5", "comm_schemes", "hierarchical",
            "key_balance",
            "tall_vs_wide", "caching", "overhead_breakdown", "roofline",
            "chunk_size", "zero_compute", "pipeline_overlap", "multitenant",
-           "optimizer_sweep"]
+           "optimizer_sweep", "wire_sweep"]
+
+
+def select_modules(args: list) -> tuple:
+    """Parse [--only name[,name...]] and positional module names into the
+    benchmark list (validated against MODULES; unknown names fail fast
+    rather than silently running nothing)."""
+    args = list(args)
+    only = []
+    while "--only" in args:
+        i = args.index("--only")
+        try:
+            only.extend(args[i + 1].split(","))
+        except IndexError:
+            raise SystemExit("--only requires a benchmark name "
+                             f"(one of {MODULES})")
+        args = args[:i] + args[i + 2:]
+    names = only + args or MODULES
+    unknown = [n for n in names if n not in MODULES]
+    if unknown:
+        raise SystemExit(f"unknown benchmark(s) {unknown}; "
+                         f"expected names from {MODULES}")
+    return tuple(names)
 
 
 def main() -> None:
@@ -43,7 +68,7 @@ def main() -> None:
         except IndexError:
             raise SystemExit("--json requires an output path")
         args = args[:i] + args[i + 2:]
-    names = args or MODULES
+    names = select_modules(args)
     print("name,us_per_call,derived")
     failures = []
     records = []

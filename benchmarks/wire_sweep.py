@@ -1,0 +1,60 @@
+"""Wire-format sweep: exchange cost for identity/bf16/int8 (DESIGN.md §11).
+
+The wire layer decouples the dtype a chunk travels in from the dtype the
+optimizer state lives in: bf16 halves the exchange bytes, blockwise int8
+quarters them (plus one f32 scale per 32 KB chunk, ~0.003% overhead), at
+the price of encode/decode compute on every ring hop and the pull path.
+
+This sweep runs the pure-PS exchange (synthetic push, §4.4 methodology)
+for each wire format over two model classes from the paper's Table 3 zoo
+— a GoogleNet-class dense gradient group (38 MB) and an MoE-class wide
+expert group (96 MB: expert-parallel groups are the shapes where exchange
+bytes dominate hardest) — on flat-worker and TP×DP deployments, windowed
+and monolithic.
+
+Derived columns report the wire bytes per worker per step next to raw and
+the measured speedup vs identity.  Host-backend caveat (DESIGN.md §11):
+XLA:CPU collectives move host memory at memcpy speed, so the encode
+compute usually *costs* wall time here while the byte ratio — the speedup
+ceiling on NIC-bound racks — shows up only in the derived columns.
+"""
+from __future__ import annotations
+
+from .common import Row, run_multidevice
+
+SHAPES = [
+    ("gn_dense_38mb", 9 * (1 << 20) + (1 << 19)),      # GoogleNet-class
+    ("moe_expert_96mb", 24 * (1 << 20)),               # MoE expert group
+]
+WIRES = ["identity", "bf16", "int8"]
+DEPLOYMENTS = [("4w", {"data_size": 4}),
+               ("4wx2tp", {"data_size": 4, "model_size": 2})]
+WINDOWS = [1, 2]
+
+
+def run() -> list[Row]:
+    rows = []
+    for dep_name, dep in DEPLOYMENTS:
+        for shape_name, elems in SHAPES:
+            for windows in WINDOWS:
+                r = run_multidevice(
+                    {"bench": "wire_exchange", "strategy": "sharded_ps",
+                     "elems": elems, "wires": WIRES, "windows": windows,
+                     "reps": 7, **dep}, n_devices=8)
+                base = r["by_wire"]["identity"]["us"]
+                for wf in WIRES:
+                    d = r["by_wire"][wf]
+                    rows.append(Row(
+                        f"wire_sweep/{dep_name}/{shape_name}/win{windows}/"
+                        f"{wf}", d["us"],
+                        f"speedup_vs_identity={base / d['us']:.2f}x "
+                        f"compression={d['compression']:.2f}x "
+                        f"wire_mb_per_worker="
+                        f"{d['wire_push_bytes'] / 1e6:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run():
+        row.print()

@@ -16,6 +16,13 @@ planned shardings — walking the engine's declared slot structure, so
 zero-slot states round-trip too — and converts between tree-state and
 flat-store checkpoints in either direction, so a training run can be
 resumed under a different residency mode.
+
+The wire layer's error-feedback residual (``wire_ef``, core/wire.py)
+rides the same slot structure: it round-trips bitwise under the same
+wire format, a pre-wire checkpoint restores into an encoded-wire engine
+with a zero residual, and an encoded-wire checkpoint restores into an
+identity-wire engine by dropping the residual (one step's un-transmitted
+delta tail) — legacy conversion in both directions.
 """
 from __future__ import annotations
 
@@ -141,6 +148,14 @@ def restore_train_state(directory: str, engine, step: int | None = None):
                       else path[2:] if path.startswith("m/") else None)
             if legacy is not None and legacy in flat_loaded:
                 src = legacy
+            elif path.endswith("/wire_ef"):
+                # legacy conversion: a pre-wire-layer (or identity-wire)
+                # checkpoint restored into an encoded-wire engine — the
+                # error-feedback residual is accumulated rounding error,
+                # so a fresh run legitimately starts it from zero
+                vals[path] = jax.device_put(
+                    np.zeros(sd.shape, sd.dtype), oshards[path])
+                continue
             else:
                 raise ValueError(
                     f"checkpoint step_{step} has no opt slot {path!r}; it "
@@ -154,7 +169,12 @@ def restore_train_state(directory: str, engine, step: int | None = None):
                 f"opt slot {path!r} shape {arr.shape} != engine layout "
                 f"{tuple(sd.shape)}")
         vals[path] = jax.device_put(arr, oshards[path])
-    extra = set(flat_loaded) - consumed
+    # an encoded-wire checkpoint restored into an identity-wire engine:
+    # the wire_ef residual is exchange state, not optimizer state — it
+    # holds one step's un-transmitted delta tail (bounded by half a
+    # quantization step per element), dropped by design on conversion
+    extra = {p for p in set(flat_loaded) - consumed
+             if not p.endswith("/wire_ef")}
     if extra:
         raise ValueError(
             f"checkpoint step_{step} carries opt slots {sorted(extra)} the "

@@ -129,6 +129,17 @@ class TrainConfig:
     fused_agg_opt: bool = True        # tall aggregation: fuse aggregate+optimize (§3.2.2)
     use_pallas: bool = False          # use the Pallas agg_opt kernel (TPU target)
 
+    # --- wire format (DESIGN.md §11) ---
+    wire_format: str = "identity"     # dtype chunks travel in, decoupled
+                                      # from the optimizer-state dtype:
+                                      # identity (bitwise the pre-wire
+                                      # path) | bf16 | f16 | int8 (block-
+                                      # wise per-chunk scales + error-
+                                      # feedback residual slot 'wire_ef');
+                                      # non-identity wires need a chunk
+                                      # strategy with a shard dimension
+                                      # (sharded_ps / hierarchical)
+
     # --- gradient processing pipeline (§3.2, DESIGN.md §8) ---
     pipeline_windows: int = 1         # split each dtype group's chunk domain
                                       # into this many windows: window w's
@@ -168,13 +179,15 @@ class TrainConfig:
     def exchange_signature(self) -> tuple:
         """The fields that define the shared collective schedule.  Tenants
         co-scheduled onto one rack chunk domain (core/api.py) must agree on
-        these — they share one reduce-scatter/agg+opt/all-gather program —
-        while lr/momentum/arch/batch *and the optimizer itself* are free to
+        these — they share one reduce-scatter/agg+opt/all-gather program,
+        and one *wire format* per packed dtype domain (the encoded payload
+        and scale layout is a property of the shared schedule) — while
+        lr/momentum/arch/batch *and the optimizer itself* are free to
         differ per tenant (mixed-optimizer updates ride per-position mask +
         coefficient tables; optim/protocol.py)."""
         return (self.strategy, self.chunk_size_bytes, self.pipeline_windows,
                 self.dp_over_model, self.flat_residency, self.use_pallas,
-                self.fused_agg_opt)
+                self.fused_agg_opt, self.wire_format)
 
 
 def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 256,

@@ -7,5 +7,6 @@ from .chunking import (build_plan, flatten_groups, unflatten_groups,
 from .partition import (lpt_partition, makespan_ratio, bin_loads,
                         cochunk_counts)
 from .sharding import plan_params, local_shapes, make_gather_fn, ShardingPlan
+from .wire import WIRE_EF_SLOT, WIRE_FORMATS, WireFormat, make_wire_format
 from .api import PHubConnectionManager, ServiceHandle
 from . import cost_model

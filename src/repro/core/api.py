@@ -218,10 +218,13 @@ class PHubConnectionManager:
         new_p, co.opt, metrics = co.steps[key](params_by, co.opt, batches)
         for ns in self._attached:
             t = co.traffic.setdefault(
-                ns, {"steps": 0, "push_bytes": 0.0, "pull_bytes": 0.0})
+                ns, {"steps": 0, "push_bytes": 0.0, "pull_bytes": 0.0,
+                     "wire_push_bytes": 0.0, "wire_pull_bytes": 0.0})
             t["steps"] += 1
             t["push_bytes"] += co.acct[ns]["push_bytes"]
             t["pull_bytes"] += co.acct[ns]["pull_bytes"]
+            t["wire_push_bytes"] += co.acct[ns]["wire_push_bytes"]
+            t["wire_pull_bytes"] += co.acct[ns]["wire_pull_bytes"]
         return new_p, metrics
 
     def accounting(self) -> dict:
@@ -235,7 +238,9 @@ class PHubConnectionManager:
             out[ns] = {**self._co.acct[ns],
                        **self._co.traffic.get(
                            ns, {"steps": 0, "push_bytes": 0.0,
-                                "pull_bytes": 0.0})}
+                                "pull_bytes": 0.0,
+                                "wire_push_bytes": 0.0,
+                                "wire_pull_bytes": 0.0})}
         return out
 
     # ------------------------------------------------------------ internals
@@ -263,6 +268,16 @@ class PHubConnectionManager:
                 raise ValueError(
                     f"tenant {ns!r} runs on a different mesh; co-scheduled "
                     f"tenants share one rack")
+            if eng.tc.wire_format != e0.tc.wire_format:
+                # the packed dtype domain travels as ONE encoded payload +
+                # scale stream; a tenant cannot ride it in a different wire
+                # format (fail fast with the specific field, not just the
+                # generic signature diff)
+                raise ValueError(
+                    f"tenant {ns!r} wire_format {eng.tc.wire_format!r} != "
+                    f"rack wire format {e0.tc.wire_format!r}; co-scheduled "
+                    f"tenants share one packed chunk domain per dtype and "
+                    f"must exchange it over one wire")
             if eng.tc.exchange_signature() != e0.tc.exchange_signature():
                 raise ValueError(
                     f"tenant {ns!r} exchange_signature "
@@ -310,7 +325,7 @@ class PHubConnectionManager:
                for key in domain.groups}
         traffic = self._co.traffic if self._co else {}
         acct = cost_model.tenant_accounting(      # static per domain: once
-            domain, e0.tc.strategy, e0.ctx.n_workers)
+            domain, e0.tc.strategy, e0.ctx.n_workers, wire=e0.wire)
         self._co = _CoSchedule(domain=domain, opt=opt, acct=acct,
                                traffic=traffic)
 
@@ -339,22 +354,23 @@ class PHubConnectionManager:
         for g in eng.chunk_plan.groups:
             key = str(g.dtype)
             out[key] = {}
-            for name in eng.sopt.slot_names:
-                rows = np.asarray(jax.device_get(opt[key][name]))
-                out[key][name] = rows.reshape(rows.shape[0], -1)
+            for spec in eng.exchange_slots:       # wire_ef migrates too
+                rows = np.asarray(jax.device_get(opt[key][spec.name]))
+                out[key][spec.name] = rows.reshape(rows.shape[0], -1)
         return out
 
     def _flats_to_engine_opt(self, eng: PHubEngine, flats: dict):
         """Chunk-granularity flats -> engine-layout opt slots (device),
-        restricted to the engine's own optimizer's slot set (union-domain
-        slots foreign to this tenant's rule are dropped)."""
+        restricted to the engine's own exchange slot set — its optimizer's
+        slots plus the shared wire residual (union-domain slots foreign to
+        this tenant's rule are dropped)."""
         shapes = eng.opt_state_shapes()
         shardings = eng.opt_state_shardings()
         out = {}
         for g in eng.chunk_plan.groups:
             key = str(g.dtype)
             out[key] = {}
-            for spec in eng.sopt.slots:
+            for spec in eng.exchange_slots:
                 sd = shapes[key][spec.name]
                 mo = sd.shape[0]
                 buf = np.zeros((mo, g.padded), sd.dtype)

@@ -39,6 +39,28 @@ class GroupPlan:
     def chunks_per_shard(self) -> int:
         return self.shard_len // self.chunk_elems
 
+    @property
+    def n_chunks(self) -> int:
+        """Chunks in the whole padded domain — also the length of the
+        domain's per-chunk scale table under a blockwise wire format
+        (core/wire.py): scale k governs elements [k*ce, (k+1)*ce)."""
+        return self.padded // self.chunk_elems
+
+
+def chunk_spans(n_elems: int, chunk_elems: int) -> tuple:
+    """Chunk-granular (start, length) spans tiling a chunk-aligned
+    [0, n_elems) exactly once.  This is the contract between the chunk
+    domain and the encoded wire layout: the blockwise codec emits exactly
+    one scale per span, and window boundaries (core/pipeline.py) land on
+    span boundaries, which is why windowed and monolithic encoded
+    schedules agree (tested by hypothesis in tests/test_wire.py)."""
+    if n_elems % chunk_elems:
+        raise ValueError(f"{n_elems} elements do not tile into "
+                         f"{chunk_elems}-element chunks; the exchange only "
+                         f"encodes chunk-aligned vectors")
+    return tuple((k * chunk_elems, chunk_elems)
+                 for k in range(n_elems // chunk_elems))
+
 
 @dataclass(frozen=True)
 class ChunkPlan:
@@ -269,6 +291,10 @@ class PackedGroup:
     @property
     def chunks_per_shard(self) -> int:
         return self.shard_len // self.chunk_elems
+
+    @property
+    def n_chunks(self) -> int:
+        return self.padded // self.chunk_elems
 
     def slot(self, tenant: str) -> TenantSlot:
         for s in self.slots:

@@ -9,9 +9,16 @@ models, no losses — and drives the full sharded/hierarchical, windowed-
 pipeline, flat-residency exchange of core/exchange.py / core/pipeline.py
 with the pluggable sharded-optimizer protocol (optim/protocol.py):
 
-    client = PHubClient(tc, mesh).register(grads_like)
+    client = PHubClient(tc, mesh).register(grads_like)    # or
+    client = PHubClient(tc, mesh, wire_format="int8").register(grads_like)
     opt    = client.init_state()
     params, opt = client.push_pull(grads, params, opt)
+
+``wire_format`` decouples the dtype chunks travel in from the dtype the
+optimizer state lives in (core/wire.py, DESIGN.md §11): ``identity``
+keeps today's bitwise datapath; ``bf16``/``f16``/``int8`` route the
+exchange through the encoded ring schedule with an error-feedback
+residual carried as one extra exchange slot (``wire_ef``).
 
 ``grads`` carries a leading worker axis — leaf shape ``(n_workers,
 *leaf)``, sharded over the mesh's data axes: in SPMD terms that leading
@@ -30,6 +37,7 @@ call.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -43,7 +51,8 @@ from ..optim.protocol import (ShardedOptimizer, SlotSpec,
 from ..utils import compat
 from . import chunking
 from .exchange import ExchangeContext, flat_rank
-from .pipeline import run_exchange
+from .pipeline import PIPELINED_STRATEGIES, run_exchange, run_wire_exchange
+from .wire import WIRE_EF_SLOT, WireFormat, make_wire_format
 
 
 class _MeshScopedJit:
@@ -79,7 +88,12 @@ class PHubClient:
     def __init__(self, tc: TrainConfig, mesh: Optional[Mesh] = None, *,
                  data_axes: Optional[tuple] = None,
                  ctx: Optional[ExchangeContext] = None,
-                 plan: Optional[chunking.ChunkPlan] = None):
+                 plan: Optional[chunking.ChunkPlan] = None,
+                 wire_format: Optional[str] = None):
+        if wire_format is not None and wire_format != tc.wire_format:
+            # per-client wire override: push_pull then travels this wire
+            # (the slot layout — residual included — follows it)
+            tc = dataclasses.replace(tc, wire_format=wire_format)
         if tc.strategy == "fsdp_stream":
             raise ValueError(
                 "fsdp_stream shards leaves over 'data' and has no chunk "
@@ -87,6 +101,13 @@ class PHubClient:
         self.tc = tc
         self.mesh = mesh
         self.sopt: ShardedOptimizer = make_sharded_optimizer(tc)
+        self.wire: WireFormat = make_wire_format(tc)
+        if not self.wire.is_identity and tc.strategy not in \
+                PIPELINED_STRATEGIES:
+            raise ValueError(
+                f"wire format {tc.wire_format!r} needs a strategy with a "
+                f"shard dimension {PIPELINED_STRATEGIES}; {tc.strategy!r} "
+                f"exchanges full vectors in the state dtype")
         if ctx is None:
             if mesh is None:
                 raise ValueError("PHubClient needs a mesh or an "
@@ -122,17 +143,26 @@ class PHubClient:
 
     # ----------------------------------------------------------- opt state
 
+    @property
+    def exchange_slots(self) -> tuple[SlotSpec, ...]:
+        """The optimizer's slots plus the wire's exchange-level slots
+        (the error-feedback residual for encoded wires), residual LAST so
+        optimizer-rule slot indices are position-stable
+        (optim/protocol.py, core/wire.py)."""
+        return self.sopt.slots + self.wire.extra_slots()
+
     def slot_shapes(self) -> dict:
-        """{dtype_key: {slot_name: ShapeDtypeStruct}} — every optimizer
-        slot shares the momentum buffer's sharded layout: (S, state_len)
-        rows over the strategy's shard axes, or one (padded,) vector for
-        the full-vector strategies."""
+        """{dtype_key: {slot_name: ShapeDtypeStruct}} — every exchange
+        slot (optimizer state + wire residual) shares the momentum
+        buffer's sharded layout: (S, state_len) rows over the strategy's
+        shard axes, or one (padded,) vector for the full-vector
+        strategies."""
         S = self.ctx.n_shards(self.tc.strategy)
         out = {}
         for key, g in self._groups().items():
             Lr = self.ctx.state_len(self.tc.strategy, g.padded)
             out[key] = {}
-            for s in self.sopt.slots:
+            for s in self.exchange_slots:
                 dt = s.resolve_dtype(g.dtype)
                 shape = (S, Lr) if S > 1 else (g.padded,)
                 out[key][s.name] = jax.ShapeDtypeStruct(shape, dt)
@@ -187,6 +217,16 @@ class PHubClient:
                 return k
         return tuple_update(self.sopt, coefs)
 
+    def _fused_dequant(self, group):
+        """The wire-tail dequant+agg+opt kernel for one group, or None
+        (jnp decode + update_fn; XLA fuses that too)."""
+        if not (self.tc.use_pallas and self.tc.fused_agg_opt
+                and self.wire.has_scales):
+            return None
+        return self.sopt.pallas_dequant_update(
+            group.chunk_elems, self.sopt.coefs(self.tc),
+            1.0 / self.ctx.n_workers)
+
     def exchange_flats(self, fg: dict, fp: dict, opt: dict, rank,
                        *, groups: Optional[dict] = None,
                        slot_specs: Optional[tuple] = None,
@@ -202,24 +242,55 @@ class PHubClient:
         client's own plan, slots, and update rules — the co-scheduler's
         hook for packed tenant domains with mask/coefficient tables.
 
+        Under an encoded wire format the slot tuple's LAST entry is the
+        ``wire_ef`` error-feedback residual: it is split off here and
+        threaded to the wire exchange as the pull-delta residual rather
+        than handed to the optimizer rule, so every update_fn keeps its
+        optimizer-only slot view and the co-scheduler's union-slot
+        indices stay valid.
+
         Returns (new_fp, new_opt) with input shapes preserved.
         """
         groups = self._groups() if groups is None else groups
-        specs: tuple[SlotSpec, ...] = (self.sopt.slots if slot_specs is None
-                                       else slot_specs)
+        specs: tuple[SlotSpec, ...] = (self.exchange_slots
+                                       if slot_specs is None else slot_specs)
+        ef = self.wire.error_feedback
+        if ef:
+            if not specs or specs[-1].name != WIRE_EF_SLOT:
+                raise ValueError(
+                    f"encoded wire {self.wire.name!r} expects the "
+                    f"{WIRE_EF_SLOT!r} residual as the last slot spec; "
+                    f"got {[s.name for s in specs]}")
+            opt_specs = specs[:-1]
+        else:
+            opt_specs = specs
         new_p, new_o = {}, {}
         for key, grp in groups.items():
-            slots = tuple(opt[key][s.name].reshape(-1) for s in specs)
+            slots = tuple(opt[key][s.name].reshape(-1) for s in opt_specs)
             upd = (update_by_key[key] if update_by_key is not None
                    else self.update_fn(grp))
             aux = aux_by_key[key] if aux_by_key is not None else ()
-            p2, s2 = run_exchange(
-                self.tc.strategy, self.ctx, fg[key].reshape(-1),
-                fp[key].reshape(-1), slots, upd, rank, grp,
-                self.tc.pipeline_windows, aux)
+            if self.wire.is_identity:
+                p2, s2 = run_exchange(
+                    self.tc.strategy, self.ctx, fg[key].reshape(-1),
+                    fp[key].reshape(-1), slots, upd, rank, grp,
+                    self.tc.pipeline_windows, aux)
+                r2 = None
+            else:
+                residual = opt[key][WIRE_EF_SLOT].reshape(-1)
+                fd = (self._fused_dequant(grp)
+                      if update_by_key is None and not aux else None)
+                p2, s2, r2 = run_wire_exchange(
+                    self.tc.strategy, self.ctx, fg[key].reshape(-1),
+                    fp[key].reshape(-1), slots, upd, rank, grp,
+                    self.tc.pipeline_windows, self.wire, residual, aux,
+                    fused_dequant=fd)
             new_p[key] = p2.reshape(fp[key].shape)
             new_o[key] = {s.name: v.reshape(opt[key][s.name].shape)
-                          for s, v in zip(specs, s2)}
+                          for s, v in zip(opt_specs, s2)}
+            if ef:
+                new_o[key][WIRE_EF_SLOT] = r2.reshape(
+                    opt[key][WIRE_EF_SLOT].shape)
         return new_p, new_o
 
     # ------------------------------------------------- standalone PushPull

@@ -71,30 +71,53 @@ def cross_rack_bytes(model_bytes: float, n_workers_per_rack: int,
 # ------------------------------------------------- multi-tenant accounting
 
 def tenant_step_traffic(strategy: str, model_bytes: float,
-                        n_workers: int) -> dict:
+                        n_workers: int, wire_bytes: float = None) -> dict:
     """Per-worker wire bytes one tenant contributes to one exchange step
     (solo or co-scheduled — packing changes layout, not byte volume).
 
     sharded_ps / hierarchical: reduce-scatter out + all-gather back, each
     (N-1)/N of the tenant's bytes per worker; allreduce lowers to the same
     ring pair; centralized_ps pushes and pulls the full model per worker
-    (the §2.3.1 incast)."""
+    (the §2.3.1 incast).  ``wire_bytes``, if given, is the tenant's bytes
+    *as encoded* (core/wire.py payload + scale sidecar); the returned
+    ``wire_push/pull_bytes`` report the traffic the rack actually carries
+    next to the raw-dtype figures."""
     N = max(n_workers, 1)
     M = float(model_bytes)
+    Mw = M if wire_bytes is None else float(wire_bytes)
     if strategy in ("sharded_ps", "hierarchical", "allreduce",
                     "fsdp_stream"):
-        push = pull = M * (N - 1) / N
+        frac = (N - 1) / N
     elif strategy == "centralized_ps":
-        push = pull = M
+        frac = 1.0
     else:
         raise ValueError(f"unknown strategy {strategy!r}")
-    return {"push_bytes": push, "pull_bytes": pull}
+    return {"push_bytes": M * frac, "pull_bytes": M * frac,
+            "wire_push_bytes": Mw * frac, "wire_pull_bytes": Mw * frac}
 
 
-def tenant_accounting(domain, strategy: str, n_workers: int) -> dict:
+def wire_bytes_for_groups(groups, wire=None) -> float:
+    """Encoded bytes for an iterable of (n_elems, dtype, chunk_elems)
+    triples under ``wire`` (duck-typed core/wire.WireFormat; None or
+    identity -> raw bytes)."""
+    import numpy as np
+    total = 0.0
+    for n_elems, dtype, chunk_elems in groups:
+        if wire is None:
+            total += n_elems * np.dtype(dtype).itemsize
+        else:
+            total += wire.payload_bytes(n_elems, dtype, chunk_elems)
+    return total
+
+
+def tenant_accounting(domain, strategy: str, n_workers: int,
+                      wire=None) -> dict:
     """Per-tenant view of a TenantPackedDomain: model bytes, padded bytes
-    resident in the packed domain, share of the domain, and per-step wire
-    traffic.  ``domain`` is duck-typed (chunking.TenantPackedDomain)."""
+    resident in the packed domain, share of the domain, and per-step
+    traffic — raw and as-encoded (``wire``: the rack's shared
+    core/wire.WireFormat), so multi-tenant accounting reflects what the
+    rack actually carries.  ``domain`` is duck-typed
+    (chunking.TenantPackedDomain)."""
     import numpy as np
     padded_total = sum(g.padded * np.dtype(g.dtype).itemsize
                        for g in domain.groups.values())
@@ -104,11 +127,18 @@ def tenant_accounting(domain, strategy: str, n_workers: int) -> dict:
         padded = sum(s.padded * np.dtype(g.dtype).itemsize
                      for g in domain.groups.values()
                      for s in g.slots if s.tenant == tenant)
+        wire_bytes = wire_bytes_for_groups(
+            ((s.total, g.dtype, g.chunk_elems)
+             for g in domain.groups.values()
+             for s in g.slots if s.tenant == tenant), wire)
         out[tenant] = {
             "model_bytes": model_bytes,
             "padded_bytes": padded,
+            "wire_bytes": wire_bytes,
+            "compression": model_bytes / max(wire_bytes, 1e-9),
             "domain_share": padded / max(padded_total, 1),
-            **tenant_step_traffic(strategy, model_bytes, n_workers),
+            **tenant_step_traffic(strategy, model_bytes, n_workers,
+                                  wire_bytes=wire_bytes),
         }
     return out
 

@@ -47,7 +47,9 @@ from ..models import (init as model_init, forward, prefill, init_cache,
 from . import chunking
 from .client import PHubClient, _MeshScopedJit
 from .exchange import ExchangeContext
+from .pipeline import PIPELINED_STRATEGIES
 from .sharding import ShardingPlan, plan_params, local_shapes, make_gather_fn
+from .wire import make_wire_format
 
 
 @dataclass
@@ -65,6 +67,14 @@ class PHubEngine:
         # fail fast on unknown optimizers; nesterov/sgd/adam all implement
         # the sharded-optimizer protocol and run fused inside the exchange
         self.sopt: ShardedOptimizer = make_sharded_optimizer(self.tc)
+        self.wire = make_wire_format(self.tc)
+        if not self.wire.is_identity and self.tc.strategy not in \
+                PIPELINED_STRATEGIES:
+            raise ValueError(
+                f"wire format {self.tc.wire_format!r} needs a chunk "
+                f"strategy with a shard dimension {PIPELINED_STRATEGIES}; "
+                f"{self.tc.strategy!r} exchanges leaves or full vectors "
+                f"in the state dtype")
         self.axis_sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
         self.data_axes = tuple(a for a in self.mesh.axis_names
                                if a in ("pod", "data"))
@@ -133,14 +143,24 @@ class PHubEngine:
         packed domain's groups instead of duplicating the spec rules."""
         return {str(g.dtype): g for g in self.chunk_plan.groups}
 
+    @property
+    def exchange_slots(self):
+        """Optimizer slots plus the wire's exchange-level slots (the
+        error-feedback residual, last) — the full per-group state the
+        exchange carries (core/wire.py).  fsdp_stream has no chunk domain
+        and only ever runs the identity wire."""
+        if self.tc.strategy == "fsdp_stream":
+            return self.sopt.slots
+        return self.sopt.slots + self.wire.extra_slots()
+
     def opt_state_shapes(self, groups=None, slots=None):
-        """Optimizer-slot layout: {dtype_key: {slot_name: shape}} for the
+        """Exchange-slot layout: {dtype_key: {slot_name: shape}} for the
         chunk strategies ({slot_name: params-tree} for fsdp_stream).  Every
-        slot of the sharded-optimizer protocol shares the layout rules the
-        single momentum buffer always had (DESIGN.md §5/§10); ``slots``
-        overrides the engine's own optimizer's slot set (the co-scheduler
-        passes the attached tenants' union)."""
-        slots = self.sopt.slots if slots is None else slots
+        slot of the sharded-optimizer protocol — and the wire residual —
+        shares the layout rules the single momentum buffer always had
+        (DESIGN.md §5/§10/§11); ``slots`` overrides the engine's own slot
+        set (the co-scheduler passes the attached tenants' union)."""
+        slots = self.exchange_slots if slots is None else slots
         if self.tc.strategy == "fsdp_stream":
             return {s.name: jax.tree.map(
                         lambda t, s=s: jax.ShapeDtypeStruct(
@@ -159,7 +179,7 @@ class PHubEngine:
         return out
 
     def opt_state_shardings(self, groups=None, slots=None):
-        slots = self.sopt.slots if slots is None else slots
+        slots = self.exchange_slots if slots is None else slots
         if self.tc.strategy == "fsdp_stream":
             return {s.name: self.plan.shardings(self.mesh) for s in slots}
         S = self.ctx.n_shards(self.tc.strategy)
@@ -295,6 +315,18 @@ class PHubEngine:
                 loss_fn, has_aux=True)(params, batch)
         return tot, loss, grads
 
+    def _model_nesting(self) -> bool:
+        """Whether the exchange needs the nested model-manual shard_map.
+        With no 'model' axis (or size 1, or dp_over_model) the wrapper is
+        a partitioning no-op — and on legacy (0.4.x) jax it is actively
+        harmful: ppermute inside a nested full-manual region lowers to a
+        replica-mode collective-permute (no channel_id) that segfaults at
+        runtime on partitioned programs, so every ring schedule (windowed
+        identity, all encoded wires) must run in the outer manual region
+        there."""
+        return (not self.tc.dp_over_model
+                and self.axis_sizes.get("model", 1) > 1)
+
     def exchange_rank(self):
         """Flat shard rank over the strategy's shard axes, computed in the
         outer (data-manual) scope — Shardy forbids axis_index over an outer
@@ -348,9 +380,9 @@ class PHubEngine:
 
         inner_in_p = pl.specs()           # full specs: model dims manual now
         m_spec = self._inner_m_specs()
-        if tc.dp_over_model:
-            # 'model' is already manual in the outer shard_map and the
-            # params are fully local — no nested shard_map needed
+        if not self._model_nesting():
+            # 'model' is already manual in the outer shard_map (or absent)
+            # and the params are fully local — no nested shard_map needed
             return inner(grads, params, opt, rank)
         return compat.shard_map(
             inner, mesh=compat.current_mesh(mesh),
@@ -373,7 +405,7 @@ class PHubEngine:
         mspec = "model" if self.mo_eff > 1 else None
         s_spec = {str(g.dtype): P(mspec, None) for g in cp.groups}
         m_spec = self._inner_m_specs()
-        if tc.dp_over_model:
+        if not self._model_nesting():
             return inner(gstore, pstore, opt, rank)
         return compat.shard_map(
             inner, mesh=compat.current_mesh(mesh),
@@ -460,7 +492,7 @@ class PHubEngine:
         """Opt-slot specs at the outer (data-manual) shard_map boundary."""
         S = self.ctx.n_shards(self.tc.strategy)
         keys = groups or self._group_map()
-        names = [s.name for s in (self.sopt.slots if slots is None
+        names = [s.name for s in (self.exchange_slots if slots is None
                                   else slots)]
         if S > 1:
             ax = (self.exchange_axes if self.tc.strategy == "sharded_ps"
@@ -475,7 +507,7 @@ class PHubEngine:
         """Opt-slot specs for the nested (model-manual) exchange region."""
         S = self.ctx.n_shards(self.tc.strategy)
         mspec = "model" if self.mo_eff > 1 else None
-        names = [s.name for s in (self.sopt.slots if slots is None
+        names = [s.name for s in (self.exchange_slots if slots is None
                                   else slots)]
         spec = P(mspec, None, None) if S > 1 else P(mspec, None)
         return {key: {n: spec for n in names}
@@ -571,8 +603,14 @@ class PHubEngine:
 def co_slot_specs(tenants: dict) -> tuple:
     """Union of the attached tenants' optimizer slot sets: same-named slots
     (nesterov's m, adam's m) share one packed buffer — the mask tables keep
-    each tenant's ranges disjoint."""
-    return union_slots([tenants[ns].sopt for ns in tenants])
+    each tenant's ranges disjoint.  The shared wire format's exchange
+    slots (the error-feedback residual) are appended LAST, after the
+    optimizer union, so rule slot indices stay position-stable
+    (core/wire.py); all attached tenants share one wire format — enforced
+    at attach (core/api.py)."""
+    specs = union_slots([tenants[ns].sopt for ns in tenants])
+    e0 = next(iter(tenants.values()))
+    return specs + e0.wire.extra_slots()
 
 
 def co_opt_state_shapes(e0: PHubEngine, domain, slots=None) -> dict:
@@ -700,7 +738,7 @@ def make_co_train_step(tenants: dict, domain, batch_shapes: dict,
 
         specs_by = {ns: tenants[ns].plan.specs() for ns in names}
         m_spec = e0._inner_m_specs(domain.groups, slot_specs)
-        if tc0.dp_over_model:
+        if not e0._model_nesting():
             return inner(grads_by, params_by, opt, rank)
         return compat.shard_map(
             inner, mesh=compat.current_mesh(mesh),

@@ -3,7 +3,13 @@ schedules over the mesh's data/pod axes (see DESIGN.md §2/§5).
 
 Every strategy consumes the *local, unreduced* gradient vector of one dtype
 group (flattened chunk domain, already padded to n_shards * shard_len) and
-returns the updated parameter vector. ``update_fn(p, g, slots) ->
+returns the updated parameter vector.  These are the *identity-wire*
+schedules: chunks cross the wire in the optimizer-state dtype.  Encoded
+wire formats (core/wire.py — bf16/f16 down-cast, blockwise int8) travel
+``run_wire_exchange`` (core/pipeline.py) instead, whose per-hop
+decode/re-encode ring psum_scatter cannot express; the strategies without
+a shard dimension (allreduce, centralized_ps) reject non-identity wires
+at engine/client construction. ``update_fn(p, g, slots) ->
 (p', slots')`` is the fused aggregation+optimization step (§3.2.2) of the
 pluggable sharded-optimizer protocol (optim/protocol.py), applied to
 exactly the chunks this shard owns; ``slots`` is the optimizer's tuple of

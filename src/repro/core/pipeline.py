@@ -197,7 +197,11 @@ def run_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
     a shard dimension and >1 effective windows, else the monolithic
     schedule.  ``group`` needs only a ``chunks_per_shard`` property (a
     GroupPlan or a multi-tenant PackedGroup); ``slots`` is the optimizer's
-    tuple of flat state buffers (optim/protocol.py)."""
+    tuple of flat state buffers (optim/protocol.py).
+
+    This is the *identity-wire* datapath — callers with a non-identity
+    ``WireFormat`` dispatch to ``run_wire_exchange`` instead, keeping this
+    path bitwise-identical to the pre-wire-layer code."""
     from .exchange import exchange_group
     if strategy in PIPELINED_STRATEGIES:
         w = effective_windows(group, windows)
@@ -205,3 +209,162 @@ def run_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
             return pipelined_exchange(strategy, ctx, g, p, slots, update_fn,
                                       rank, w, aux)
     return exchange_group(strategy, ctx, g, p, slots, update_fn, rank, aux)
+
+
+# ------------------------------------------------------ encoded-wire path
+
+def pipelined_wire_exchange(strategy: str, ctx: ExchangeContext,
+                            g: jax.Array, p: jax.Array, slots: tuple,
+                            update_fn: UpdateFn, rank: jax.Array,
+                            windows: int, wire, ce: int,
+                            residual: jax.Array, aux: tuple = (),
+                            fused_dequant=None):
+    """The windowed schedule over *encoded* payloads (DESIGN.md §11).
+
+    Same double-buffered structure as ``pipelined_exchange``, but every
+    wire crossing carries the WireFormat's encoding:
+
+      push   the ring partial for each window hops the ring as
+             ``wire.encode(acc)`` — (payload,) for dtype-only wires,
+             (payload, per-chunk scales) for int8, the scale tensor
+             threaded through the window exactly like an ``aux``
+             coefficient table.  Each hop decodes, adds its own
+             contiguous row slice, re-encodes; the final hop is left
+             encoded so the owner (or the fused dequant+agg+opt kernel)
+             decodes it once.
+      pull   the owner encodes the parameter *delta* of its whole shard
+             (p' − p) plus the carried ``residual``, all-gathers payload
+             (+ scales), and every worker applies the decoded delta to
+             its replicated p — bitwise-consistent replication.  What the
+             encoding rounded away becomes the new residual
+             (error feedback): nothing is lost, only deferred.
+
+    Window boundaries are whole chunks and the codec works at chunk
+    granularity, so the arithmetic is *independent of the window count* —
+    windowed and monolithic (W=1) schedules of an encoded wire produce
+    identical results by construction (oracle-checked in
+    tests/multidevice/check_client.py).
+
+    ``residual``: (shard_len,) f32 error-feedback buffer — the exchange's
+    ``wire_ef`` slot slice (core/wire.py).  ``fused_dequant``, if given,
+    is ``upd(p_w, parts, g_own, slots_w) -> (p', slots')`` fusing the
+    final decode into the optimizer kernel (skipped for the cross-pod
+    hierarchical reduction, which needs the decoded value first).
+    Returns (p', slots', residual')."""
+    axes = ctx.data_axes
+    N = ctx.n_workers
+    if strategy == "hierarchical":
+        ring_axes: tuple[str, ...] = ("data",)
+        S = ctx.axis_sizes["data"]
+        cross_pod = "pod" in axes
+    else:
+        ring_axes = tuple(axes)
+        S = ctx.n_shards(strategy)
+        cross_pod = False
+
+    L = g.size // S
+    W = windows
+    Lw = L // W
+    axis = tuple(ring_axes) if len(ring_axes) > 1 else ring_axes[0]
+    perm = [(i, (i + 1) % S) for i in range(S)]
+
+    def pp(parts):
+        return tuple(jax.lax.ppermute(v, axis, perm) for v in parts)
+
+    def rs_window(w):
+        """Encoded ring reduce-scatter of window w: returns (parts, own) —
+        the still-encoded inbound partial (None when S == 1: nothing
+        crossed a wire) and this owner's own row contribution.
+
+        The hop loop is UNROLLED (S is static and rack-bounded): keeping
+        every hop of every window in one straight-line fusion context is
+        what minimizes cross-program (windowed vs monolithic) fusion
+        jitter on the host backend, and hop count is never large enough
+        for a lax.scan to pay for itself (DESIGN.md §11)."""
+        start = w * Lw
+
+        def row(j):
+            return jax.lax.dynamic_slice(g, (j * L + start,), (Lw,)
+                                         ).astype(jnp.float32)
+
+        if S == 1:
+            return None, row(jnp.zeros((), jnp.int32))
+        # the ring carries word-packed encoded partials: byte-identical
+        # payload, 32-bit collective buffers (see WireFormat.pack_words)
+        carry = wire.pack_words(wire.encode(row((rank - 1) % S), ce))
+        for k in range(1, S - 1):
+            acc = (wire.decode(wire.unpack_words(pp(carry)), ce)
+                   + row((rank - 1 - k) % S))
+            carry = wire.pack_words(wire.encode(acc, ce))
+        return pp(carry), row(rank)          # (rank-1-(S-1)) mod S == rank
+
+    def opt_window(w, parts, own):
+        pw = jax.lax.dynamic_slice(p, (rank * L + w * Lw,), (Lw,))
+        sw = tuple(jax.lax.dynamic_slice(s, (w * Lw,), (Lw,))
+                   for s in slots)
+        if (fused_dequant is not None and parts is not None
+                and not cross_pod and not aux):
+            return fused_dequant(pw, wire.unpack_words(parts), own, sw)
+        gsum = (own if parts is None
+                else wire.decode(wire.unpack_words(parts), ce) + own)
+        if cross_pod:
+            gsum = jax.lax.psum(gsum, "pod")    # cross-rack on owner only
+        auxw = tuple(jax.lax.dynamic_slice(a, (rank * L + w * Lw,), (Lw,))
+                     for a in aux)
+        return update_fn(pw, gsum / N, sw, *auxw)
+
+    # window loop, also unrolled (W static, small): window w+1 on the
+    # wire while window w optimizes — the data independence inside one
+    # iteration is what lets the compiler overlap them
+    carry = rs_window(0)
+    p_wins: list = []
+    s_wins: list = []
+    for w in range(W - 1):
+        nxt = rs_window(w + 1)              # window w+1 on the wire ...
+        p2, s2 = opt_window(w, *carry)      # ... while window w optimizes
+        p_wins.append(p2)
+        s_wins.append(s2)
+        carry = nxt
+    p_l, s_l = opt_window(W - 1, *carry)
+    shard = (jnp.concatenate(p_wins + [p_l]) if p_wins else p_l)
+    s_out = tuple(
+        (jnp.concatenate([sw[i] for sw in s_wins] + [s_l[i]])
+         if s_wins else s_l[i])
+        for i in range(len(slots)))
+
+    # pull: encode the shard's parameter delta + carried residual, gather
+    # the narrow payload, apply the decoded delta to the replicated p
+    p_own = jax.lax.dynamic_slice(p, (rank * L,), (L,)).astype(jnp.float32)
+    e = (shard.astype(jnp.float32) - p_own) + residual.astype(jnp.float32)
+    parts = wire.encode(e, ce)
+    r_out = e - wire.decode(parts, ce)
+    gathered = wire.unpack_words(tuple(
+        jax.lax.all_gather(t, ring_axes, tiled=True)
+        for t in wire.pack_words(parts)))
+    p_out = (p.astype(jnp.float32)
+             + wire.decode(gathered, ce)).astype(p.dtype)
+    return p_out, s_out, r_out
+
+
+def run_wire_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
+                      p: jax.Array, slots: tuple, update_fn: UpdateFn,
+                      rank: jax.Array, group: GroupPlan, windows: int,
+                      wire, residual: jax.Array, aux: tuple = (),
+                      fused_dequant=None):
+    """Dispatch one dtype group over a non-identity wire.  Monolithic is
+    just W=1 of the windowed schedule here — encoded partials need the
+    per-hop decode/re-encode ring, which psum_scatter cannot express, and
+    sharing the code path is what makes windowed vs monolithic encoded
+    exchanges deterministic."""
+    if wire.is_identity:
+        raise ValueError("identity wire travels run_exchange (the bitwise "
+                         "pre-wire path); run_wire_exchange is the encoded "
+                         "datapath")
+    if strategy not in PIPELINED_STRATEGIES:
+        raise ValueError(
+            f"wire format {wire.name!r} needs a strategy with a shard "
+            f"dimension {PIPELINED_STRATEGIES}; {strategy!r} has none")
+    w = effective_windows(group, windows)
+    return pipelined_wire_exchange(strategy, ctx, g, p, slots, update_fn,
+                                   rank, w, wire, group.chunk_elems,
+                                   residual, aux, fused_dequant)

@@ -1,0 +1,177 @@
+"""Wire formats: the dtype a chunk *travels* in, decoupled from the dtype
+the optimizer state *lives* in (DESIGN.md §11).
+
+PHub's thesis is that DDNN training is bandwidth-bound (§2): the exchange
+bytes per step are the lever.  Until this layer, wire dtype == state dtype
+— every chunk crossed the ring at full fp32/bf16 width.  A ``WireFormat``
+describes how a chunk-aligned flat vector is encoded onto the wire:
+
+  identity   payload = the vector itself; the exchange datapath is the
+             pre-wire-layer code, bitwise (run_exchange, psum_scatter /
+             ppermute ring, untouched).
+  bf16/f16   down-cast payload, no side data.
+  int8       blockwise quantization at chunk granularity: per-chunk scale
+             ``max|x| / 127``, payload ``round(x / scale)`` — one f32
+             scale per 32 KB chunk rides the wire next to the payload,
+             exactly like the co-scheduler's ``aux`` coefficient tables
+             ride next to the parameter vector.
+
+Encoded exchanges (core/pipeline.run_wire_exchange) re-quantize the
+partial sum at every ring hop and quantize the pull-direction parameter
+*delta*; the part of the delta that rounding discards is carried to the
+next step in an **error-feedback residual** — declared as one extra
+optimizer-protocol slot (``SlotSpec("wire_ef", "float32")``, appended
+*last* so optimizer-rule slot indices are stable), which buys the
+residual the momentum buffer's whole lifecycle for free: (S, shard_len)
+sharding, windowed slicing, tenant packing, attach/detach migration, and
+checkpointing (optim/protocol.py, DESIGN.md §10).
+
+Encode/decode dispatch to the Pallas kernels in ``kernels/quant`` when
+``use_pallas`` is set and the chunk is lane-aligned; the jnp bodies are
+the bitwise reference (kernels/quant/ref.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..optim.protocol import SlotSpec
+
+WIRE_FORMATS = ("identity", "bf16", "f16", "int8")
+
+# the error-feedback residual slot: one per dtype group, float32, layout-
+# identical to momentum.  Always the LAST slot of an exchange slot tuple.
+WIRE_EF_SLOT = "wire_ef"
+
+_WIRE_DTYPES = {"bf16": jnp.bfloat16, "f16": jnp.float16, "int8": jnp.int8}
+
+
+@dataclass(frozen=True)
+class WireFormat:
+    """One wire encoding.  ``encode`` returns a tuple of wire arrays —
+    ``(payload,)`` for dtype-only wires, ``(payload, scales)`` for the
+    blockwise-quantized ones — so collective schedules can thread every
+    element of the tuple through the same ppermute/all_gather calls."""
+    name: str
+    use_pallas: bool = False
+
+    def __post_init__(self):
+        if self.name not in WIRE_FORMATS:
+            raise ValueError(f"unknown wire format {self.name!r}; expected "
+                             f"one of {WIRE_FORMATS}")
+
+    @property
+    def is_identity(self) -> bool:
+        return self.name == "identity"
+
+    @property
+    def has_scales(self) -> bool:
+        return self.name == "int8"
+
+    @property
+    def error_feedback(self) -> bool:
+        """Non-identity wires carry the pull-delta residual slot."""
+        return not self.is_identity
+
+    def wire_dtype(self, state_dtype) -> np.dtype:
+        if self.is_identity:
+            return np.dtype(state_dtype)
+        return np.dtype(_WIRE_DTYPES[self.name])
+
+    def extra_slots(self) -> tuple[SlotSpec, ...]:
+        """Exchange-level slots this wire adds to the optimizer's set."""
+        if not self.error_feedback:
+            return ()
+        return (SlotSpec(WIRE_EF_SLOT, "float32"),)
+
+    # ------------------------------------------------------- encode/decode
+
+    def _pallas_ok(self, n: int, chunk_elems: int) -> bool:
+        # the quant kernels grid one chunk per step; lane width 128
+        return (self.use_pallas and chunk_elems % 128 == 0
+                and n % chunk_elems == 0)
+
+    def encode(self, x: jax.Array, chunk_elems: int) -> tuple:
+        """Chunk-aligned (n,) float vector -> tuple of wire arrays."""
+        if self.is_identity:
+            return (x,)
+        x = x.astype(jnp.float32)
+        if not self.has_scales:
+            return (x.astype(_WIRE_DTYPES[self.name]),)
+        if x.size % chunk_elems:
+            raise ValueError(
+                f"int8 wire encodes at chunk granularity: size {x.size} is "
+                f"not a multiple of chunk_elems {chunk_elems}")
+        if self._pallas_ok(x.size, chunk_elems):
+            from ..kernels.quant.ops import quantize_int8
+            return quantize_int8(x, chunk_elems=chunk_elems)
+        from ..kernels.quant.ref import quantize_int8_ref
+        return quantize_int8_ref(x, chunk_elems)
+
+    def decode(self, parts: tuple, chunk_elems: int) -> jax.Array:
+        """Wire tuple -> (n,) float32 vector."""
+        if self.is_identity:
+            return parts[0]
+        if not self.has_scales:
+            return parts[0].astype(jnp.float32)
+        q, scales = parts
+        if self._pallas_ok(q.size, chunk_elems):
+            from ..kernels.quant.ops import dequantize_int8
+            return dequantize_int8(q, scales, chunk_elems=chunk_elems)
+        from ..kernels.quant.ref import dequantize_int8_ref
+        return dequantize_int8_ref(q, scales, chunk_elems)
+
+    # ------------------------------------------------- collective word packing
+
+    def pack_words(self, parts: tuple) -> tuple:
+        """Bitcast the narrow payload to uint32 *words* for the collective
+        — byte-identical wire content, carried at the 32-bit width every
+        identity-path collective already uses (so no collective ever sees
+        a sub-word element type across jax/XLA versions), and word
+        framing is how a real NIC datapath carries the payload anyway.
+        Payload lengths are whole chunks and chunk_elems is always a
+        multiple of the packing factor (2 for bf16/f16, 4 for int8), so
+        the reshape is exact."""
+        if self.is_identity:
+            return parts
+        q = parts[0]
+        k = 4 // np.dtype(q.dtype).itemsize
+        if k > 1:
+            q = jax.lax.bitcast_convert_type(q.reshape(-1, k), jnp.uint32)
+        return (q,) + parts[1:]
+
+    def unpack_words(self, parts: tuple) -> tuple:
+        """Inverse of ``pack_words`` (bitwise)."""
+        q = parts[0]
+        if not self.is_identity and q.dtype == jnp.uint32:
+            wdt = _WIRE_DTYPES[self.name]
+            if np.dtype(wdt).itemsize < 4:
+                q = jax.lax.bitcast_convert_type(q, wdt).reshape(-1)
+        return (q,) + parts[1:]
+
+    # ------------------------------------------------------- byte accounting
+
+    def payload_bytes(self, n_elems: int, state_dtype,
+                      chunk_elems: int) -> int:
+        """Bytes ``n_elems`` of ``state_dtype`` occupy on the wire,
+        including the per-chunk scale sidecar for quantized formats."""
+        if n_elems <= 0:
+            return 0
+        b = n_elems * self.wire_dtype(state_dtype).itemsize
+        if self.has_scales:
+            b += -(-n_elems // chunk_elems) * 4        # one f32 scale/chunk
+        return int(b)
+
+    def compression_factor(self, state_dtype, chunk_elems: int) -> float:
+        """raw_bytes / wire_bytes for one element stream (>= 1 saves)."""
+        raw = np.dtype(state_dtype).itemsize * chunk_elems
+        return raw / self.payload_bytes(chunk_elems, state_dtype,
+                                        chunk_elems)
+
+
+def make_wire_format(tc) -> WireFormat:
+    """TrainConfig -> WireFormat (fails fast on unknown names)."""
+    return WireFormat(name=tc.wire_format, use_pallas=bool(tc.use_pallas))

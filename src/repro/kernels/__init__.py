@@ -3,7 +3,10 @@ kernel.py with pl.pallas_call + BlockSpec, ops.py jit wrapper, ref.py
 pure-jnp oracle; validated with interpret=True on CPU):
 
   agg_opt/      fused tall aggregation + Nesterov update (§3.2.2) — the
-                paper's central gradient-processing optimization
+                paper's central gradient-processing optimization — plus
+                the int8-wire dequant+agg+opt tail fusion (DESIGN.md §11)
+  quant/        blockwise int8 wire codec: per-chunk scales, one chunk
+                per grid step (core/wire.py encode/decode)
   swa_attn/     sliding-window flash attention (danube/hymba, long_500k)
   rwkv_scan/    RWKV6 chunked linear-attention scan (VMEM-resident state)
   decode_attn/  single-token GQA decode over a ring-buffer KV cache

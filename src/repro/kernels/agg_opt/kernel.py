@@ -114,6 +114,44 @@ def adam_opt_chunks(p: jax.Array, g: jax.Array, m: jax.Array, v: jax.Array,
     )(p, g, m, v, k1, k2)
 
 
+def _dequant_agg_opt_body(p_ref, q_ref, s_ref, gown_ref, m_ref, po_ref,
+                          mo_ref, *, lr, momentum, inv_n):
+    """Wire-format tail fusion (DESIGN.md §11): the ring reduce-scatter's
+    final hop arrives still encoded (int8 payload + per-chunk scale); one
+    grid step dequantizes the chunk, folds in the owner's own contribution
+    and the 1/N mean, and runs the Nesterov update — the encoded chunk
+    crosses HBM once and is never materialized at full width."""
+    g = (q_ref[...].astype(jnp.float32) * s_ref[...].astype(jnp.float32)
+         + gown_ref[...].astype(jnp.float32)) * inv_n
+    m = m_ref[...].astype(jnp.float32)
+    m2 = momentum * m + g
+    p2 = p_ref[...].astype(jnp.float32) - lr * (g + momentum * m2)
+    po_ref[...] = p2.astype(po_ref.dtype)
+    mo_ref[...] = m2.astype(mo_ref.dtype)
+
+
+def dequant_agg_opt_chunks(p: jax.Array, q: jax.Array, scales: jax.Array,
+                           g_own: jax.Array, m: jax.Array, *, lr: float,
+                           momentum: float, inv_n: float,
+                           interpret: bool = False) -> tuple:
+    """p, g_own, m: (nc, ce); q: (nc, ce) int8; scales: (nc, 1) f32.
+    Computes the Nesterov update on g = (dequant(q) + g_own) * inv_n.
+    Returns (p', m')."""
+    nc, ce = p.shape
+    spec = pl.BlockSpec((1, ce), lambda i: (i, 0))
+    sspec = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        partial(_dequant_agg_opt_body, lr=lr, momentum=momentum,
+                inv_n=inv_n),
+        grid=(nc,),
+        in_specs=[spec, spec, sspec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype),
+                   jax.ShapeDtypeStruct(m.shape, m.dtype)],
+        interpret=interpret,
+    )(p, q, scales, g_own, m)
+
+
 def multi_agg_opt_chunks(p: jax.Array, g: jax.Array, m: jax.Array, *,
                          lr: float, momentum: float,
                          interpret: bool = False) -> tuple:

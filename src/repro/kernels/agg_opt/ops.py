@@ -10,8 +10,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import (adam_opt_chunks, agg_opt_chunks, multi_agg_opt_chunks,
-                     sgd_opt_chunks)
+from .kernel import (adam_opt_chunks, agg_opt_chunks, dequant_agg_opt_chunks,
+                     multi_agg_opt_chunks, sgd_opt_chunks)
 
 _LANE = 128
 
@@ -76,6 +76,31 @@ def fused_adam_opt(p: jax.Array, g: jax.Array, m: jax.Array, v: jax.Array,
                                            interpret=interpret)
     return (p2.reshape(-1)[:n], m2.reshape(-1)[:n], v2.reshape(-1)[:n],
             k1n.reshape(-1)[:n], k2n.reshape(-1)[:n])
+
+
+@partial(jax.jit, static_argnames=("lr", "momentum", "inv_n", "chunk_elems",
+                                   "interpret"))
+def fused_dequant_agg_opt(p: jax.Array, q: jax.Array, scales: jax.Array,
+                          g_own: jax.Array, m: jax.Array, *, lr: float,
+                          momentum: float, inv_n: float,
+                          chunk_elems: int = 8192,
+                          interpret: bool | None = None):
+    """Fused int8-wire dequant + mean + Nesterov (DESIGN.md §11).
+    p/g_own/m: (n,); q: (n,) int8; scales: (n/ce,) per-chunk f32.  The
+    chunk layout must be lane-aligned whole chunks (the wire exchange only
+    produces such layouts).  Returns (p', m')."""
+    interpret = _default_interpret() if interpret is None else interpret
+    n = p.size
+    ce = chunk_elems
+    if ce % _LANE or n % ce:
+        raise ValueError(f"fused_dequant_agg_opt needs lane-aligned whole "
+                         f"chunks: n={n}, chunk_elems={ce}")
+    nc = n // ce
+    p2, m2 = dequant_agg_opt_chunks(
+        p.reshape(nc, ce), q.reshape(nc, ce), scales.reshape(nc, 1),
+        g_own.reshape(nc, ce), m.reshape(nc, ce), lr=lr, momentum=momentum,
+        inv_n=inv_n, interpret=interpret)
+    return p2.reshape(-1), m2.reshape(-1)
 
 
 @partial(jax.jit, static_argnames=("lr", "momentum", "chunk_elems",

@@ -33,3 +33,15 @@ def adam_opt_ref(p, g, m, v, k1, k2, *, lr: float, b1: float = 0.9,
     return ((p.astype(jnp.float32) - step).astype(p.dtype),
             m2.astype(m.dtype), v2.astype(v.dtype),
             k1n.astype(k1.dtype), k2n.astype(k2.dtype))
+
+
+def dequant_agg_opt_ref(p, q, scales, g_own, m, *, lr: float,
+                        momentum: float, inv_n: float, chunk_elems: int):
+    """Oracle for the fused int8-wire dequant + mean + Nesterov tail:
+    g = (dequant(q, scales) + g_own) * inv_n, then the Nesterov update."""
+    qc = q.astype(jnp.float32).reshape(-1, chunk_elems)
+    deq = (qc * scales.reshape(-1, 1)).reshape(-1)
+    g = (deq + g_own.astype(jnp.float32)) * inv_n
+    m2 = momentum * m.astype(jnp.float32) + g
+    p2 = p.astype(jnp.float32) - lr * (g + momentum * m2)
+    return p2.astype(p.dtype), m2.astype(m.dtype)

@@ -1,0 +1,68 @@
+"""Blockwise int8 wire codec as Pallas kernels (DESIGN.md §11).
+
+One grid step owns one chunk — the same ownership discipline as the fused
+agg+opt kernel (§3.2.2): the chunk is staged into VMEM once, its absmax /
+scale / quantized payload (or the dequantized values) are produced
+in-register, and each buffer crosses HBM exactly once.  Scales live in a
+(n_chunks, 1) column so each grid step reads/writes a (1, 1) block.
+
+Layout: vectors are reshaped to (n_chunks, chunk_elems) with chunk_elems a
+multiple of 128 (lane width).  Note the (1, ce) int8 blocks target the
+interpret path and TPU generations with (1, 128)-packable int8 tiles; on
+older TPUs int8 wants (32, 128) tiles — re-block before enabling there.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QMAX = 127.0
+
+
+def _quant_body(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)            # (1, ce)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / QMAX, 1.0)
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -QMAX, QMAX
+                          ).astype(q_ref.dtype)
+    s_ref[...] = jnp.full(s_ref.shape, scale, s_ref.dtype)
+
+
+def quantize_chunks(x: jax.Array, *, interpret: bool = False) -> tuple:
+    """x: (nc, ce) f32 -> (q: (nc, ce) int8, scales: (nc, 1) f32)."""
+    nc, ce = x.shape
+    spec = pl.BlockSpec((1, ce), lambda i: (i, 0))
+    sspec = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        _quant_body,
+        grid=(nc,),
+        in_specs=[spec],
+        out_specs=[spec, sspec],
+        out_shape=[jax.ShapeDtypeStruct((nc, ce), jnp.int8),
+                   jax.ShapeDtypeStruct((nc, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
+def _dequant_body(q_ref, s_ref, x_ref):
+    x_ref[...] = (q_ref[...].astype(jnp.float32)
+                  * s_ref[...].astype(jnp.float32)).astype(x_ref.dtype)
+
+
+def dequantize_chunks(q: jax.Array, scales: jax.Array, *,
+                      interpret: bool = False) -> jax.Array:
+    """q: (nc, ce) int8, scales: (nc, 1) f32 -> (nc, ce) f32."""
+    nc, ce = q.shape
+    spec = pl.BlockSpec((1, ce), lambda i: (i, 0))
+    sspec = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        partial(_dequant_body),
+        grid=(nc,),
+        in_specs=[spec, sspec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((nc, ce), jnp.float32),
+        interpret=interpret,
+    )(q, scales)

@@ -1,0 +1,47 @@
+"""jit'd public wrappers for the blockwise int8 wire codec.
+
+``interpret`` defaults to True off-TPU so the same call sites work in CPU
+tests and on real hardware (the repo-wide kernel convention).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import dequantize_chunks, quantize_chunks
+
+_LANE = 128
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _check(n: int, chunk_elems: int):
+    if chunk_elems % _LANE or n % chunk_elems:
+        raise ValueError(
+            f"quant kernels need lane-aligned whole chunks: n={n}, "
+            f"chunk_elems={chunk_elems} (lane {_LANE}); use the jnp "
+            f"reference (kernels/quant/ref.py) for other layouts")
+
+
+@partial(jax.jit, static_argnames=("chunk_elems", "interpret"))
+def quantize_int8(x: jax.Array, *, chunk_elems: int,
+                  interpret: bool | None = None):
+    """(n,) float -> ((n,) int8, (n/ce,) f32 scales), one scale per chunk."""
+    interpret = _default_interpret() if interpret is None else interpret
+    _check(x.size, chunk_elems)
+    q, s = quantize_chunks(x.reshape(-1, chunk_elems), interpret=interpret)
+    return q.reshape(-1), s.reshape(-1)
+
+
+@partial(jax.jit, static_argnames=("chunk_elems", "interpret"))
+def dequantize_int8(q: jax.Array, scales: jax.Array, *, chunk_elems: int,
+                    interpret: bool | None = None):
+    """((n,) int8, (n/ce,) f32) -> (n,) f32."""
+    interpret = _default_interpret() if interpret is None else interpret
+    _check(q.size, chunk_elems)
+    x = dequantize_chunks(q.reshape(-1, chunk_elems),
+                          scales.reshape(-1, 1), interpret=interpret)
+    return x.reshape(-1)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the blockwise int8 wire codec.
+
+These bodies are also the production fallback on non-lane-aligned chunks
+(core/wire.py) — kernel and reference must stay bitwise-interchangeable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127.0
+
+
+def quantize_int8_ref(x: jax.Array, chunk_elems: int):
+    """(n,) float -> ((n,) int8 payload, (n/ce,) f32 per-chunk scales).
+
+    scale = max|chunk| / 127 (1.0 for all-zero chunks so the payload is 0
+    and decode is exact); payload = round(x / scale) clipped to ±127.
+    Roundtrip error is bounded by scale/2 per element (tested by
+    hypothesis in tests/test_wire.py)."""
+    xc = x.astype(jnp.float32).reshape(-1, chunk_elems)
+    amax = jnp.max(jnp.abs(xc), axis=1)
+    scales = jnp.where(amax > 0, amax / QMAX, 1.0)
+    q = jnp.clip(jnp.round(xc / scales[:, None]), -QMAX, QMAX)
+    return q.astype(jnp.int8).reshape(-1), scales
+
+
+def dequantize_int8_ref(q: jax.Array, scales: jax.Array, chunk_elems: int):
+    """Inverse of quantize_int8_ref (up to the rounding error)."""
+    qc = q.astype(jnp.float32).reshape(-1, chunk_elems)
+    return (qc * scales[:, None]).reshape(-1)

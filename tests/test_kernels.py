@@ -163,3 +163,50 @@ def test_decode_attention_ring_rotation():
                                bs=64)
     np.testing.assert_allclose(np.asarray(base), np.asarray(rotated),
                                atol=1e-5)
+
+
+# -------------------------------------------------------------------- quant
+
+def test_quant_roundtrip_matches_ref():
+    from repro.kernels.quant.ops import dequantize_int8, quantize_int8
+    from repro.kernels.quant.ref import dequantize_int8_ref, quantize_int8_ref
+    n, ce = 4096, 256
+    x = rnd(10, (n,), scale=3.0)
+    q, s = quantize_int8(x, chunk_elems=ce)
+    qr, sr = quantize_int8_ref(x, ce)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_int8(q, s, chunk_elems=ce)),
+        np.asarray(dequantize_int8_ref(qr, sr, ce)))
+
+
+def test_quant_rejects_misaligned_layout():
+    from repro.kernels.quant.ops import quantize_int8
+    with pytest.raises(ValueError, match="lane-aligned"):
+        quantize_int8(rnd(11, (300,)), chunk_elems=100)
+
+
+def test_quant_zero_chunk_is_exact():
+    from repro.kernels.quant.ops import dequantize_int8, quantize_int8
+    x = jnp.zeros((256,), jnp.float32)
+    q, s = quantize_int8(x, chunk_elems=128)
+    assert float(np.abs(np.asarray(s)).min()) > 0      # safe divide
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_int8(q, s, chunk_elems=128)), np.zeros(256))
+
+
+@pytest.mark.parametrize("W_inv", [1.0, 0.125])
+def test_fused_dequant_agg_opt_matches_ref(W_inv):
+    from repro.kernels.agg_opt.ops import fused_dequant_agg_opt
+    from repro.kernels.agg_opt.ref import dequant_agg_opt_ref
+    from repro.kernels.quant.ref import quantize_int8_ref
+    n, ce = 2048, 256
+    p, m, gown = rnd(12, (n,)), rnd(13, (n,)), rnd(14, (n,), scale=2.0)
+    q, s = quantize_int8_ref(rnd(15, (n,), scale=4.0), ce)
+    p2, m2 = fused_dequant_agg_opt(p, q, s, gown, m, lr=0.05, momentum=0.9,
+                                   inv_n=W_inv, chunk_elems=ce)
+    pr, mr = dequant_agg_opt_ref(p, q, s, gown, m, lr=0.05, momentum=0.9,
+                                 inv_n=W_inv, chunk_elems=ce)
+    np.testing.assert_allclose(np.asarray(p2), np.asarray(pr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(mr), atol=1e-6)

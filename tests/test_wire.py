@@ -1,0 +1,333 @@
+"""Wire-format layer (core/wire.py, DESIGN.md §11): formats, slot layout,
+validation, error feedback, legacy checkpoints, and byte accounting.
+
+Single-device here (the PS pull path is encoded + error-fed even at S=1);
+the 8-device encoded ring — windowed-vs-monolithic determinism, the
+multi-worker int8 convergence run, and the residual migration lifecycle —
+runs in tests/multidevice/check_client.py (slow tier).  Hypothesis
+property tests for the codec live in tests/test_wire_properties.py.
+"""
+import dataclasses
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, TrainConfig, reduced
+from repro.core import PHubClient, PHubConnectionManager, PHubEngine
+from repro.core.wire import (WIRE_EF_SLOT, WIRE_FORMATS, WireFormat,
+                             make_wire_format)
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+LIKE = {"dense": {"w": jax.ShapeDtypeStruct((64, 48), jnp.float32),
+                  "b": jax.ShapeDtypeStruct((48,), jnp.float32)},
+        "scale": jax.ShapeDtypeStruct((17,), jnp.float32)}
+
+
+def _mesh():
+    return jax.make_mesh((1,), ("data",))
+
+
+# ---------------------------------------------------------------- formats
+
+def test_wire_format_registry():
+    assert make_wire_format(TrainConfig()).is_identity
+    with pytest.raises(ValueError, match="unknown wire format"):
+        WireFormat("int4")
+    for name in WIRE_FORMATS:
+        w = WireFormat(name)
+        assert w.error_feedback == (name != "identity")
+        assert w.has_scales == (name == "int8")
+
+
+def test_wire_dtype_and_payload_bytes():
+    w = WireFormat("int8")
+    assert w.wire_dtype(np.float32) == np.int8
+    # 1 byte/elem + one f32 scale per 256-elem chunk
+    assert w.payload_bytes(1024, np.float32, 256) == 1024 + 4 * 4
+    assert WireFormat("bf16").payload_bytes(1024, np.float32, 256) == 2048
+    assert WireFormat("identity").payload_bytes(1024, np.float32, 256) == 4096
+    assert WireFormat("int8").compression_factor(np.float32, 8192) > 3.9
+
+
+def test_extra_slots_rides_last():
+    tc = TrainConfig(wire_format="int8", chunk_size_bytes=1024)
+    client = PHubClient(tc, _mesh()).register(LIKE)
+    names = [s.name for s in client.exchange_slots]
+    assert names == ["m", WIRE_EF_SLOT]
+    shapes = client.slot_shapes()
+    assert set(shapes["float32"]) == {"m", WIRE_EF_SLOT}
+    assert shapes["float32"][WIRE_EF_SLOT].dtype == np.float32
+    # identity wire adds nothing: the pre-wire layout, bitwise
+    c0 = PHubClient(TrainConfig(chunk_size_bytes=1024), _mesh())
+    assert [s.name for s in c0.exchange_slots] == ["m"]
+
+
+# ------------------------------------------------------------- validation
+
+def test_wire_needs_shard_dimension():
+    for strategy in ("allreduce", "centralized_ps"):
+        with pytest.raises(ValueError, match="shard dimension"):
+            PHubClient(TrainConfig(strategy=strategy, wire_format="int8"),
+                       _mesh())
+    mesh2 = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    for strategy in ("allreduce", "fsdp_stream"):
+        with pytest.raises(ValueError, match="wire format"):
+            PHubEngine(cfg=cfg, tc=TrainConfig(strategy=strategy,
+                                               wire_format="int8"),
+                       mesh=mesh2)
+
+
+def test_exchange_signature_includes_wire_format():
+    a = TrainConfig(wire_format="identity")
+    b = TrainConfig(wire_format="int8")
+    assert a.exchange_signature() != b.exchange_signature()
+
+
+def test_attach_fails_fast_on_wire_mismatch():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    cm = PHubConnectionManager()
+    h1 = cm.create_service("a", cfg, TrainConfig(loss_chunk=32), mesh)
+    h2 = cm.create_service("b", cfg, TrainConfig(loss_chunk=32,
+                                                 wire_format="int8"), mesh)
+    cm.attach_service(h1)
+    with pytest.raises(ValueError, match="wire format"):
+        cm.attach_service(h2)
+
+
+# --------------------------------------------------------- error feedback
+
+@pytest.mark.parametrize("wf", ["bf16", "int8"])
+def test_push_pull_encoded_wire_engages_residual(wf):
+    """The pull path quantizes the parameter delta and carries the
+    rounding error forward: the residual is nonzero after a step and the
+    two-step trajectory differs from (tracks) the identity wire."""
+    rng = np.random.default_rng(3)
+    isl = lambda t: isinstance(t, jax.ShapeDtypeStruct)
+    mk = lambda s, lead=None: jnp.asarray(
+        rng.normal(size=((lead,) + s.shape) if lead else s.shape)
+    ).astype(s.dtype)
+    params0 = jax.tree.map(lambda s: mk(s), LIKE, is_leaf=isl)
+    grads = jax.tree.map(lambda s: mk(s, 1), LIKE, is_leaf=isl)
+
+    outs = {}
+    for name in ("identity", wf):
+        tc = TrainConfig(optimizer="nesterov", lr=3e-2,
+                         chunk_size_bytes=1024, wire_format=name)
+        client = PHubClient(tc, _mesh()).register(LIKE)
+        p = jax.tree.map(lambda x: x + 0, params0)
+        o = client.init_state()
+        for _ in range(2):
+            p, o = client.push_pull(grads, p, o)
+        outs[name] = (p, o)
+    p_id, _ = outs["identity"]
+    p_w, o_w = outs[wf]
+    res = np.asarray(o_w["float32"][WIRE_EF_SLOT]).reshape(-1)
+    assert np.abs(res).max() > 0            # error feedback engaged
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(np.abs(np.asarray(a, np.float32)
+                                  - np.asarray(b, np.float32)).max()),
+        p_id, p_w)))
+    assert 0 < err < 0.05                   # differs, but tracks identity
+
+
+def _mlp_losses(wire_format, steps=80):
+    """Tiny regression MLP through PHubClient; returns the loss curve."""
+    tc = TrainConfig(optimizer="adam", lr=1e-2, strategy="sharded_ps",
+                     chunk_size_bytes=1024, wire_format=wire_format)
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    params = {"w1": jax.random.normal(k1, (16, 32)) * 0.25,
+              "w2": jax.random.normal(k2, (32, 4)) * 0.18}
+
+    def loss_fn(p, x, y):
+        return jnp.mean((jnp.tanh(x @ p["w1"]) @ p["w2"] - y) ** 2)
+
+    client = PHubClient(tc, _mesh()).register(params)
+    opt = client.init_state()
+    x = jax.random.normal(jax.random.PRNGKey(7), (256, 16))
+    y = jnp.tanh(x @ jax.random.normal(jax.random.PRNGKey(8), (16, 4)))
+    grad = jax.jit(jax.grad(loss_fn))
+    lval = jax.jit(loss_fn)
+    losses = []
+    for _ in range(steps):
+        g = grad(params, x, y)
+        params, opt = client.push_pull(
+            jax.tree.map(lambda v: v[None], g), params, opt)
+        losses.append(float(lval(params, x, y)))
+    return losses
+
+
+def test_int8_error_feedback_tracks_fp32_convergence():
+    """Small-MLP convergence oracle: the int8+error-feedback loss curve
+    tracks the fp32 (identity-wire) curve (single-device flavor — the
+    pull path is quantized; the multi-worker quantized push runs in the
+    8-device check)."""
+    ref = _mlp_losses("identity")
+    q = _mlp_losses("int8")
+    assert ref[-1] < 0.2 * ref[0]           # the task is learnable
+    assert q[-1] < 0.2 * q[0]               # quantized run learns too
+    # curves track: endpoint within 20% of the fp32 loss drop
+    drop = ref[0] - ref[-1]
+    assert abs(q[-1] - ref[-1]) < 0.2 * drop
+
+
+# ------------------------------------------- window invariance (structural)
+
+def test_encode_commutes_with_chunk_aligned_windows():
+    """enc(x)[window] == enc(x[window]) bitwise for chunk-aligned windows
+    — the codec never sees window boundaries, the structural half of the
+    windowed == monolithic determinism claim (the other half is that the
+    ring visits rows in the same order regardless of W)."""
+    rng = np.random.default_rng(5)
+    ce, n = 64, 64 * 8
+    x = jnp.asarray(rng.normal(size=n).astype(np.float32) * 10)
+    for wf in ("bf16", "int8"):
+        wire = WireFormat(wf)
+        whole = wire.encode(x, ce)
+        for W in (2, 4):
+            Lw = n // W
+            for w in range(W):
+                sl = slice(w * Lw, (w + 1) * Lw)
+                parts = wire.encode(x[sl], ce)
+                np.testing.assert_array_equal(
+                    np.asarray(whole[0][sl]), np.asarray(parts[0]))
+                if wire.has_scales:
+                    np.testing.assert_array_equal(
+                        np.asarray(whole[1][sl.start // ce:sl.stop // ce]),
+                        np.asarray(parts[1]))
+
+
+def test_ring_schedule_window_invariant_eager():
+    """Eager (per-op compiled, no cross-program fusion) simulation of the
+    encoded ring reduce-scatter: splitting the shard into W windows
+    produces bitwise the same reduced values as the monolithic pass —
+    window partitioning is invisible to the wire arithmetic.  The jitted
+    8-device check (check_client.py case 'wire') asserts the same to one
+    quantization grid step, the residual slack XLA:CPU's cross-program
+    FMA/rounding-elision jitter needs (DESIGN.md §11)."""
+    rng = np.random.default_rng(9)
+    S, L, ce = 4, 512, 64
+    rows = rng.normal(size=(S, L)).astype(np.float32) * 5
+
+    def reduce_ring(W, wf):
+        wire = WireFormat(wf)
+        Lw = L // W
+        out = np.zeros(L, np.float32)
+        for w in range(W):
+            sl = slice(w * Lw, (w + 1) * Lw)
+            carry = wire.encode(jnp.asarray(rows[0, sl]), ce)
+            for k in range(1, S - 1):
+                acc = wire.decode(carry, ce) + jnp.asarray(rows[k, sl])
+                carry = wire.encode(acc, ce)
+            out[sl] = np.asarray(wire.decode(carry, ce)
+                                 + jnp.asarray(rows[S - 1, sl]))
+        return out
+
+    for wf in ("bf16", "int8"):
+        np.testing.assert_array_equal(reduce_ring(1, wf),
+                                      reduce_ring(2, wf))
+        np.testing.assert_array_equal(reduce_ring(1, wf),
+                                      reduce_ring(4, wf))
+
+
+# ------------------------------------------------------------- checkpoints
+
+def test_checkpoint_wire_residual_roundtrip_and_legacy(tmp_path):
+    """wire_ef round-trips bitwise; a pre-wire checkpoint restores into an
+    encoded-wire engine with a fresh residual; an encoded-wire checkpoint
+    restores into an identity engine by dropping the residual."""
+    from repro.checkpoint import restore_train_state, save_checkpoint
+    from repro.data import SyntheticTokens
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    tc = TrainConfig(optimizer="sgd", loss_chunk=32, wire_format="int8")
+    eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
+    params, opt = eng.init_state(jax.random.PRNGKey(0))
+    data = SyntheticTokens(cfg, 4, 32, seed=2)
+    b = data.batch_at(0)
+    shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in b.items()}
+    step = eng.make_train_step(shapes)
+    batch = {k: jax.device_put(v, s) for (k, v), s in
+             zip(b.items(), eng.batch_shardings(shapes).values())}
+    params, opt, _ = step(params, opt, batch)
+    assert all(WIRE_EF_SLOT in d for d in opt.values())
+    save_checkpoint(str(tmp_path), 1, {"params": params, "opt": opt})
+
+    st, p2, o2 = restore_train_state(str(tmp_path), eng)
+    bad = jax.tree.map(
+        lambda a, b: int((np.asarray(a) != np.asarray(b)).sum()),
+        (params, opt), (p2, o2))
+    assert sum(jax.tree.leaves(bad)) == 0
+
+    # encoded-wire ckpt -> identity engine: residual dropped by design
+    eng_id = PHubEngine(cfg=cfg, tc=dataclasses.replace(
+        tc, wire_format="identity"), mesh=mesh)
+    st, p3, o3 = restore_train_state(str(tmp_path), eng_id)
+    assert all(WIRE_EF_SLOT not in d for d in o3.values())
+
+    # identity ckpt -> encoded-wire engine: residual starts from zero
+    p_id, o_id = eng_id.init_state(jax.random.PRNGKey(0))
+    save_checkpoint(str(tmp_path), 2, {"params": p_id, "opt": o_id})
+    st, p4, o4 = restore_train_state(str(tmp_path), eng, step=2)
+    for d in o4.values():
+        assert float(np.abs(np.asarray(d[WIRE_EF_SLOT])).max()) == 0.0
+    params, opt, m = step(p4, o4, batch)     # restored state still trains
+    assert np.isfinite(float(m["loss"]))
+
+
+# --------------------------------------------------------- byte accounting
+
+def test_cost_model_wire_traffic():
+    from repro.core import cost_model
+    tr = cost_model.tenant_step_traffic("sharded_ps", 4096.0, 4,
+                                        wire_bytes=1024.0)
+    assert tr["push_bytes"] == 4096.0 * 3 / 4
+    assert tr["wire_push_bytes"] == 1024.0 * 3 / 4
+    # identity default: wire == raw
+    tr0 = cost_model.tenant_step_traffic("sharded_ps", 4096.0, 4)
+    assert tr0["wire_push_bytes"] == tr0["push_bytes"]
+
+
+def test_tenant_accounting_reports_wire_bytes():
+    from repro.core import cost_model
+    from repro.core.chunking import build_plan, pack_domains
+    plans = {f"job{i}": build_plan(
+        {"w": jnp.zeros((1000 + 100 * i,), jnp.float32)},
+        chunk_bytes=256, n_shards=2) for i in range(2)}
+    dom = pack_domains(plans, n_shards=2, chunk_bytes=256)
+    acct = cost_model.tenant_accounting(dom, "sharded_ps", 2,
+                                        wire=WireFormat("int8"))
+    for ns, a in acct.items():
+        assert a["wire_bytes"] < a["model_bytes"]
+        assert 3.5 < a["compression"] < 4.1
+        assert a["wire_push_bytes"] < a["push_bytes"]
+    # no wire: raw figures
+    acct0 = cost_model.tenant_accounting(dom, "sharded_ps", 2)
+    for ns, a in acct0.items():
+        assert a["wire_bytes"] == a["model_bytes"]
+
+
+# ------------------------------------------------------------ benchmarks
+
+def test_benchmark_run_only_filter():
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks.run import MODULES, select_modules
+    finally:
+        sys.path.pop(0)
+    assert select_modules([]) == tuple(MODULES)
+    assert select_modules(["--only", "wire_sweep"]) == ("wire_sweep",)
+    assert select_modules(["--only", "wire_sweep,roofline"]) == \
+        ("wire_sweep", "roofline")
+    with pytest.raises(SystemExit, match="unknown benchmark"):
+        select_modules(["--only", "nope"])
+    with pytest.raises(SystemExit, match="unknown benchmark"):
+        select_modules(["nope"])

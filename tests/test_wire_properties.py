@@ -1,0 +1,100 @@
+"""Hypothesis property tests for the wire codec (core/wire.py §11).
+
+Two contracts the exchange datapath rests on:
+  * the int8 blockwise quantize/dequantize roundtrip error is bounded by
+    scale/2 per element (round-to-nearest within each chunk's scale);
+  * the encoded payload + per-chunk scale layout tiles the chunk domain
+    exactly once — scale k governs elements [k*ce, (k+1)*ce) and nothing
+    else, which is what makes window boundaries (whole chunks) invisible
+    to the codec and windowed == monolithic encoded schedules exact.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.chunking import build_plan, chunk_spans  # noqa: E402
+from repro.core.wire import WireFormat  # noqa: E402
+from repro.kernels.quant.ref import (dequantize_int8_ref,  # noqa: E402
+                                     quantize_int8_ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 24), st.sampled_from([16, 64, 256]),
+       st.floats(0.01, 1e4), st.integers(0, 2**31 - 1))
+def test_int8_roundtrip_error_bounded_by_half_scale(n_chunks, ce, scale,
+                                                    seed):
+    """|x - deq(quant(x))| <= scale_k / 2 for every element of chunk k."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.normal(size=n_chunks * ce) * scale)
+                    .astype(np.float32))
+    q, s = quantize_int8_ref(x, ce)
+    back = dequantize_int8_ref(q, s, ce)
+    err = np.abs(np.asarray(x) - np.asarray(back))
+    bound = np.repeat(np.asarray(s), ce) * 0.5
+    # tiny epsilon: the bound itself is computed in f32
+    assert (err <= bound * (1 + 1e-6) + 1e-30).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 24), st.sampled_from([16, 64, 256]),
+       st.integers(0, 2**31 - 1))
+def test_scale_layout_tiles_chunk_domain_exactly_once(n_chunks, ce, seed):
+    """One scale per chunk; chunk k's decode depends on scale k and
+    nothing else (perturb one chunk -> only its scale and its span of
+    the payload change)."""
+    rng = np.random.default_rng(seed)
+    n = n_chunks * ce
+    x = np.asarray(rng.normal(size=n).astype(np.float32)) + 0.5
+    q, s = quantize_int8_ref(jnp.asarray(x), ce)
+    q, s = np.asarray(q), np.asarray(s)
+    assert q.shape == (n,) and s.shape == (n_chunks,)
+    spans = chunk_spans(n, ce)
+    assert len(spans) == n_chunks
+    covered = np.zeros(n, np.int32)
+    for start, length in spans:
+        covered[start:start + length] += 1
+    assert (covered == 1).all()
+    k = rng.integers(0, n_chunks)
+    x2 = x.copy()
+    start, length = spans[k]
+    x2[start:start + length] *= 3.0
+    q2, s2 = quantize_int8_ref(jnp.asarray(x2), ce)
+    q2, s2 = np.asarray(q2), np.asarray(s2)
+    unchanged = np.ones(n_chunks, bool)
+    unchanged[k] = False
+    assert (s2[unchanged] == s[unchanged]).all()
+    mask = np.ones(n, bool)
+    mask[start:start + length] = False
+    assert (q2[mask] == q[mask]).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 5), st.integers(1, 17)),
+                min_size=1, max_size=5),
+       st.integers(1, 4), st.sampled_from([64, 256]))
+def test_group_scale_table_matches_n_chunks(shapes, n_shards, chunk_bytes):
+    """For every plan group, the per-chunk scale table of an int8-encoded
+    (padded,) vector has exactly group.n_chunks entries and the spans
+    tile [0, padded) — the wire layout and the chunk domain agree."""
+    tree = {f"k{i}": jnp.zeros(s, jnp.float32)
+            for i, s in enumerate(shapes)}
+    plan = build_plan(tree, chunk_bytes=chunk_bytes, n_shards=n_shards)
+    wire = WireFormat("int8")
+    for g in plan.groups:
+        x = jnp.ones((g.padded,), jnp.float32)
+        q, s = wire.encode(x, g.chunk_elems)
+        assert q.shape == (g.padded,)
+        assert s.shape == (g.n_chunks,)
+        assert g.n_chunks * g.chunk_elems == g.padded
+        assert g.n_chunks == len(chunk_spans(g.padded, g.chunk_elems))
+        # payload+scale byte accounting matches the layout
+        assert wire.payload_bytes(g.padded, g.dtype, g.chunk_elems) == \
+            g.padded * 1 + g.n_chunks * 4
+
+
+def test_chunk_spans_rejects_misaligned():
+    with pytest.raises(ValueError, match="chunk-aligned"):
+        chunk_spans(100, 64)
