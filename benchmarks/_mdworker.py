@@ -450,11 +450,214 @@ def bench_multitenant(p):
                               for k, g in cm_co.packed_domain.groups.items()}}
 
 
+def bench_elastic_straggler(p):
+    """k-of-n exchange vs full-barrier exchange under injected stragglers
+    (DESIGN.md §12) on one flat dtype group, full-manual over the worker
+    mesh.
+
+    The SPMD emulation cannot make one host device *actually* slow, so
+    the straggler's cost is modeled the way the synchronous protocol
+    defines it: a full-barrier step cannot commit before the slowest
+    worker's push arrives (wait = severity × per-worker compute), while
+    the k-of-n step masks the straggler out and waits only for the
+    slowest LIVE worker (wait = 1 × compute).  The exchange itself is
+    *measured* — full-rack and masked programs timed interleaved (the
+    masked exchange pays the mask multiply and the non-pow-2 divisor) —
+    and the emulated compute wait is added per severity.  ``compute_us``
+    defaults to the measured full exchange time (the balanced regime:
+    compute ≈ communication, the paper's §2 premise)."""
+    import time as _t
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core.chunking import build_plan
+    from repro.core.exchange import ExchangeContext
+    from repro.core.pipeline import run_exchange
+    from repro.elastic import Membership
+    from repro.utils import compat
+
+    D = p["data_size"]
+    mesh = jax.make_mesh((D,), ("data",))
+    axes = ("data",)
+    sizes = {"data": D}
+    strategy = p.get("strategy", "sharded_ps")
+    windows = p.get("windows", 1)
+    elems = p["elems"]
+    straggler = p.get("straggler", D - 1)
+    ctx = ExchangeContext(data_axes=axes, axis_sizes=sizes)
+    tree = {"w": jax.ShapeDtypeStruct((elems,), jnp.float32)}
+    plan = build_plan(tree, chunk_bytes=p.get("chunk_kb", 32) * 1024,
+                      n_shards=max(ctx.n_shards(strategy), 1))
+    (grp,) = plan.groups
+    lr, mu = 1e-2, 0.9
+
+    def upd(pv, gv, slots):
+        (mv,) = slots
+        m2 = mu * mv + gv
+        return pv - lr * (gv + mu * m2), (m2,)
+
+    membership = Membership.full(D).mark_slow(straggler, 4.0)
+    mask = jnp.asarray(membership.mask())
+    n_live = float(membership.n_live)
+    m_spec = P("data")
+
+    def make_step(masked):
+        def local(pv, mv):
+            gv = pv * 1e-4
+            rank = jax.lax.axis_index("data")
+            if masked:
+                gv = gv * mask[rank]
+                p2, (m2,) = run_exchange(strategy, ctx, gv, pv, (mv,),
+                                         upd, rank, grp, windows,
+                                         n_live=n_live)
+            else:
+                p2, (m2,) = run_exchange(strategy, ctx, gv, pv, (mv,),
+                                         upd, rank, grp, windows)
+            return p2, m2
+        return jax.jit(compat.shard_map(
+            local, mesh=mesh, in_specs=(P(), m_spec),
+            out_specs=(P(), m_spec), axis_names={"data"},
+            check_vma=False))
+
+    steps = {False: make_step(False), True: make_step(True)}
+    pv = jnp.asarray(np.random.default_rng(0).normal(
+        size=grp.padded).astype(np.float32))
+    mv = jnp.zeros((grp.padded,), jnp.float32)
+    for s in steps.values():                         # compile + warm
+        jax.block_until_ready(s(pv, mv))
+        jax.block_until_ready(s(pv, mv))
+    times = {False: [], True: []}
+    for _ in range(p.get("reps", 7)):
+        for masked, s in steps.items():              # interleaved A/B
+            t0 = _t.perf_counter()
+            jax.block_until_ready(s(pv, mv))
+            times[masked].append(_t.perf_counter() - t0)
+    us_full = sorted(times[False])[len(times[False]) // 2] * 1e6
+    us_masked = sorted(times[True])[len(times[True]) // 2] * 1e6
+    compute_us = p.get("compute_us")
+    if compute_us is None:          # 0 is meaningful: the pure-PS regime
+        compute_us = us_full
+    by_severity = {}
+    for sev in p.get("severities", [1, 2, 4, 8]):
+        barrier = sev * compute_us + us_full        # wait for the straggler
+        kofn = compute_us + us_masked               # wait for slowest live
+        by_severity[str(sev)] = {
+            "us_barrier": barrier, "us_kofn": kofn,
+            "throughput_ratio": barrier / kofn}
+    return {"us_exchange_full": us_full, "us_exchange_masked": us_masked,
+            "compute_us": compute_us, "n_live": n_live,
+            "model_bytes": grp.total * 4, "by_severity": by_severity}
+
+
+def bench_elastic_resize(p):
+    """Training throughput vs rack-resize frequency (DESIGN.md §12): a
+    solo job steps through the connection manager while the rack cycles
+    world 8 -> 6 -> 8 every ``resize_every`` steps, caller state migrated
+    through the rebalance plan each time.  Reports effective steps/s per
+    resize period, the median resize latency, and whether every exchange
+    slot survived the final full cycle bitwise on its live region (the
+    'no tenant state dropped' claim)."""
+    import time as _t
+
+    import jax
+    import numpy as np
+    from repro.configs import ARCHS, TrainConfig, reduced
+    from repro.core import PHubConnectionManager
+    from repro.data import SyntheticTokens
+
+    worlds = p.get("worlds", [8, 6])
+    steps_total = p.get("steps", 12)
+    periods = p.get("resize_every", [0, 6, 3])
+    B, T = p.get("batch", 24), p.get("seq", 64)
+    cfg = reduced(ARCHS[p.get("arch", "llama3.2-1b")],
+                  d_model=p.get("d_model", 256))
+    tc = TrainConfig(strategy=p.get("strategy", "sharded_ps"),
+                     optimizer=p.get("optimizer", "adam"), lr=1e-3,
+                     chunk_size_bytes=p.get("chunk_kb", 32) * 1024,
+                     pipeline_windows=p.get("windows", 1), loss_chunk=T,
+                     wire_format=p.get("wire_format", "identity"))
+
+    def mesh_of(n):
+        return jax.sharding.Mesh(
+            np.array(jax.devices()[:n]).reshape(n, 1), ("data", "model"))
+
+    def batch_for(eng, seed=0):
+        data = SyntheticTokens(cfg, B, T, seed=seed)
+        b = data.batch_at(0)
+        shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                  for k, v in b.items()}
+        return {k: jax.device_put(v, s) for (k, v), s in
+                zip(b.items(), eng.batch_shardings(shapes).values())}
+
+    out = {}
+    for period in periods:
+        cm = PHubConnectionManager()
+        h = cm.create_service("job", cfg, tc, mesh_of(worlds[0]))
+        eng = cm.connect_service(h)
+        params, opt = cm.init_service(h, jax.random.PRNGKey(0))
+        batch = batch_for(eng)
+        params, opt, m = cm.push_pull(h, params, opt, batch)  # compile
+        jax.block_until_ready(m["loss"])
+        resize_ts, widx = [], 0
+        t0 = _t.perf_counter()
+        for s in range(steps_total):
+            if period and s and s % period == 0:
+                widx = (widx + 1) % len(worlds)
+                tr = _t.perf_counter()
+                st = cm.resize(mesh_of(worlds[widx]),
+                               states={"job": (params, opt)})
+                params, opt = st["job"]
+                eng = cm.connect_service(h)
+                batch = batch_for(eng)
+                resize_ts.append(_t.perf_counter() - tr)
+            params, opt, m = cm.push_pull(h, params, opt, batch)
+            jax.block_until_ready(m["loss"])
+        wall = _t.perf_counter() - t0
+        rec = {"steps_per_s": steps_total / wall,
+               "n_resizes": len(resize_ts),
+               "us_resize": (sorted(resize_ts)[len(resize_ts) // 2] * 1e6
+                             if resize_ts else 0.0),
+               "final_loss": float(m["loss"])}
+        if period:
+            rec["moved_bytes"] = (cm.last_rebalance["solo"]
+                                  .get("job", {}).get("moved_bytes", 0.0))
+        out[str(period)] = rec
+
+    # state preservation: one full cycle with NO steps in between must be
+    # bitwise on every slot's live region
+    cm = PHubConnectionManager()
+    h = cm.create_service("job", cfg, tc, mesh_of(worlds[0]))
+    eng = cm.connect_service(h)
+    params, opt = cm.init_service(h, jax.random.PRNGKey(0))
+    batch = batch_for(eng)
+    for _ in range(2):
+        params, opt, _ = cm.push_pull(h, params, opt, batch)
+    pre = jax.tree.map(np.asarray, opt)
+    for w in worlds[1:] + worlds[:1]:
+        st = cm.resize(mesh_of(w), states={"job": (params, opt)})
+        params, opt = st["job"]
+    bad = 0
+    for g in cm.connect_service(h).chunk_plan.groups:
+        key = str(g.dtype)
+        for slot in pre[key]:
+            a = np.asarray(opt[key][slot])
+            a = a.reshape(a.shape[0], -1)[:, :g.live_elems]
+            b = pre[key][slot].reshape(
+                pre[key][slot].shape[0], -1)[:, :g.live_elems]
+            bad += int((a != b).sum())
+    return {"by_period": out, "state_preserved": bad == 0,
+            "slot_mismatches": bad}
+
+
 BENCHES = {"exchange_only": bench_exchange_only,
            "train_step": bench_train_step,
            "pipeline_exchange": bench_pipeline_exchange,
            "wire_exchange": bench_wire_exchange,
-           "multitenant": bench_multitenant}
+           "multitenant": bench_multitenant,
+           "elastic_straggler": bench_elastic_straggler,
+           "elastic_resize": bench_elastic_resize}
 
 
 def main():

@@ -1,0 +1,81 @@
+"""Elastic resilience: k-of-n exchange vs full-barrier under stragglers,
+and training throughput vs rack-resize frequency (DESIGN.md §12).
+
+Straggler sweep — a GoogleNet-class dense gradient group (38 MB) on 8
+workers: the full-barrier round cannot commit before the slowest worker's
+push arrives (wait = severity × per-worker compute), while the k-of-n
+round masks the straggler out bitwise and waits only for the slowest
+*live* worker.  The exchange programs themselves are measured (full-rack
+vs masked, timed interleaved — the masked program pays the mask multiply
+and the non-power-of-two divisor); the straggler's compute wait is
+emulated on top, at compute ≈ exchange (the paper's §2 bandwidth-bound
+premise).  Emulation caveat (DESIGN.md §12): XLA's SPMD host backend
+cannot make one device genuinely slow, so the barrier wait is applied
+analytically — the derived throughput ratio is the protocol-level claim,
+the measured exchange costs are real.
+
+Resize sweep — a reduced GoogleNet-class-budget job steps through the
+connection manager while the rack cycles 8 → 6 → 8 workers every R steps,
+caller state migrating through the rebalance plan each time; reports
+effective steps/s per resize period, resize latency, migrated bytes, and
+whether every exchange slot survived the cycle bitwise on its live
+region (the "resize completes without dropping tenant state" claim).
+"""
+from __future__ import annotations
+
+from .common import Row, run_multidevice
+
+GN_ELEMS = 9 * (1 << 20) + (1 << 19)          # GoogleNet-class, 38 MB f32
+SEVERITIES = [1, 2, 4, 8]
+
+
+def run() -> list[Row]:
+    rows = []
+    for windows in (1, 2):
+        r = run_multidevice(
+            {"bench": "elastic_straggler", "strategy": "sharded_ps",
+             "elems": GN_ELEMS, "data_size": 8, "windows": windows,
+             "severities": SEVERITIES, "reps": 7}, n_devices=8)
+        rows.append(Row(
+            f"elastic/straggler/gn_dense_38mb/win{windows}/exchange",
+            r["us_exchange_full"],
+            f"masked_us={r['us_exchange_masked']:.1f} "
+            f"mask_overhead="
+            f"{r['us_exchange_masked'] / r['us_exchange_full']:.2f}x "
+            f"n_live={r['n_live']:.0f}/8"))
+        for sev in SEVERITIES:
+            d = r["by_severity"][str(sev)]
+            rows.append(Row(
+                f"elastic/straggler/gn_dense_38mb/win{windows}/sev{sev}",
+                d["us_kofn"],
+                f"barrier_us={d['us_barrier']:.1f} "
+                f"kofn_speedup={d['throughput_ratio']:.2f}x"))
+
+    r = run_multidevice(
+        {"bench": "elastic_resize", "worlds": [8, 6], "steps": 12,
+         "resize_every": [0, 6, 3], "d_model": 256, "seq": 64},
+        n_devices=8)
+    base = r["by_period"]["0"]["steps_per_s"]
+    for period in ("0", "6", "3"):
+        d = r["by_period"][period]
+        label = "never" if period == "0" else f"every{period}"
+        derived = (f"steps_per_s={d['steps_per_s']:.2f} "
+                   f"vs_static={d['steps_per_s'] / base:.2f}x "
+                   f"resizes={d['n_resizes']}")
+        if d["n_resizes"]:
+            derived += (f" resize_ms={d['us_resize'] / 1e3:.0f}"
+                        f" moved_mb={d.get('moved_bytes', 0) / 1e6:.1f}")
+        rows.append(Row(f"elastic/resize/{label}",
+                        1e6 / d["steps_per_s"], derived))
+    rows.append(Row(
+        "elastic/resize/state_preserved",
+        0.0,
+        f"bitwise_on_live_regions={r['state_preserved']} "
+        f"slot_mismatches={r['slot_mismatches']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run():
+        row.print()

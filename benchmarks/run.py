@@ -18,11 +18,17 @@ Prints ``name,us_per_call,derived`` CSV rows (plus section markers).
                                        solo + 2-tenant co (mixed rules)
   wire_sweep          D §11            identity/bf16/int8 wire formats:
                                        exchange cost + bytes on the wire
+  elastic_resilience  D §12            k-of-n vs full-barrier exchange under
+                                       stragglers; throughput vs resize
+                                       frequency
 
 Run all: PYTHONPATH=src python -m benchmarks.run
 Subset:  PYTHONPATH=src python -m benchmarks.run tall_vs_wide roofline
 One:     PYTHONPATH=src python -m benchmarks.run --only wire_sweep
 JSON:    PYTHONPATH=src python -m benchmarks.run --json out.json [modules]
+Repeat:  PYTHONPATH=src python -m benchmarks.run --repeat 5 --json out.json
+         (each module runs 5 times; rows report the median us, and the JSON
+         record carries every sample — BENCH trajectories stay noise-robust)
 """
 import json
 import sys
@@ -33,7 +39,7 @@ MODULES = ["bandwidth_table2", "cost_table5", "comm_schemes", "hierarchical",
            "key_balance",
            "tall_vs_wide", "caching", "overhead_breakdown", "roofline",
            "chunk_size", "zero_compute", "pipeline_overlap", "multitenant",
-           "optimizer_sweep", "wire_sweep"]
+           "optimizer_sweep", "wire_sweep", "elastic_resilience"]
 
 
 def select_modules(args: list) -> tuple:
@@ -58,6 +64,12 @@ def select_modules(args: list) -> tuple:
     return tuple(names)
 
 
+def median(xs: list) -> float:
+    xs = sorted(xs)
+    n = len(xs)
+    return (xs[n // 2] if n % 2 else (xs[n // 2 - 1] + xs[n // 2]) / 2.0)
+
+
 def main() -> None:
     args = sys.argv[1:]
     json_out = None
@@ -68,6 +80,16 @@ def main() -> None:
         except IndexError:
             raise SystemExit("--json requires an output path")
         args = args[:i] + args[i + 2:]
+    repeat = 1
+    if "--repeat" in args:
+        i = args.index("--repeat")
+        try:
+            repeat = int(args[i + 1])
+        except (IndexError, ValueError):
+            raise SystemExit("--repeat requires an integer count")
+        if repeat < 1:
+            raise SystemExit("--repeat must be >= 1")
+        args = args[:i] + args[i + 2:]
     names = select_modules(args)
     print("name,us_per_call,derived")
     failures = []
@@ -76,12 +98,33 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            for row in mod.run():
-                row.print()
-                records.append({"bench": name, "name": row.name,
-                                "us_per_call": row.us,
-                                "derived": row.derived})
-            print(f"# {name} done in {time.time()-t0:.1f}s")
+            # N independent runs of the whole module; rows keyed by name,
+            # the printed/recorded us is the median-of-N (derived comes
+            # from the median run so its figures stay self-consistent)
+            samples: dict = {}
+            order: list = []
+            for _ in range(repeat):
+                for row in mod.run():
+                    if row.name not in samples:
+                        samples[row.name] = []
+                        order.append(row.name)
+                    samples[row.name].append((row.us, row.derived))
+            for rname in order:
+                runs = sorted(samples[rname], key=lambda t: t[0])
+                med_us = median([us for us, _ in runs])
+                # derived comes from the lower-middle actual run (for
+                # even N the true median is an average belonging to no
+                # run), keeping its figures self-consistent
+                med_derived = runs[(len(runs) - 1) // 2][1]
+                print(f"{rname},{med_us:.1f},{med_derived}")
+                rec = {"bench": name, "name": rname,
+                       "us_per_call": med_us, "derived": med_derived}
+                if repeat > 1:
+                    rec["repeat"] = repeat
+                    rec["us_samples"] = [us for us, _ in samples[rname]]
+                records.append(rec)
+            print(f"# {name} done in {time.time()-t0:.1f}s"
+                  + (f" ({repeat} repeats)" if repeat > 1 else ""))
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             failures.append(name)

@@ -1,0 +1,66 @@
+"""Elastic training: a worker is killed and rejoins mid-``fit()``
+(DESIGN.md §12).
+
+The rack starts with 8 live workers.  At step 6 worker 3 dies — the next
+compiled step excludes its pushes bitwise and renormalizes the mean over
+the 7 live contributors (k-of-n partial aggregation; the epoch bump
+re-keys the step cache, nothing retraces on repeat memberships).  At step
+12 a replacement joins at the same position and the loop is back on the
+byte-identical full-rack program.  The same mechanism driven by a seeded
+schedule is ``launch/train.py --chaos``.
+
+Run:  PYTHONPATH=src python examples/elastic_train.py
+(8 forced host devices; CPU-friendly reduced config)
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.configs import ARCHS, TrainConfig, reduced  # noqa: E402
+from repro.core import PHubEngine  # noqa: E402
+from repro.data import SyntheticTokens  # noqa: E402
+from repro.elastic import Membership  # noqa: E402
+from repro.training import TrainState, fit  # noqa: E402
+
+
+def main():
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=128)
+    tc = TrainConfig(strategy="sharded_ps", lr=3e-2, loss_chunk=64,
+                     pipeline_windows=2)
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    engine = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
+    params, opt = engine.init_state(jax.random.PRNGKey(0))
+    data = SyntheticTokens(cfg, batch=16, seq_len=64, seed=0)
+
+    # the membership timeline: full -> worker 3 dies at step 6 -> a
+    # replacement joins at step 12 (epochs 0 -> 1 -> 2)
+    full = Membership.full(8)
+    degraded = full.leave(3)
+    healed = degraded.join(3)
+
+    def membership_fn(step):
+        if step < 6:
+            return full
+        if step < 12:
+            if step == 6:
+                print(f"[elastic] step {step}: worker 3 died -> "
+                      f"{degraded.n_live}/8 live, epoch {degraded.epoch}")
+            return degraded
+        if step == 12:
+            print(f"[elastic] step {step}: worker 3 rejoined -> "
+                  f"{healed.n_live}/8 live, epoch {healed.epoch}")
+        return healed
+
+    state = fit(engine, TrainState(params=params, opt=opt), data,
+                steps=18, log_every=3, membership_fn=membership_fn)
+    print(f"final loss {state.losses[-1]:.4f} after {state.step} steps "
+          f"(trained through a kill and a rejoin)")
+
+
+if __name__ == "__main__":
+    main()

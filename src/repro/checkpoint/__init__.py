@@ -1,2 +1,2 @@
-from .checkpointer import (save_checkpoint, load_checkpoint, latest_step,
-                           restore_train_state)
+from .checkpointer import (save_checkpoint, load_checkpoint, load_manifest,
+                           latest_step, restore_train_state)

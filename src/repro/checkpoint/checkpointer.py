@@ -65,15 +65,35 @@ def _unflatten(flat: dict):
     return fix(tree)
 
 
-def save_checkpoint(directory: str, step: int, tree) -> str:
+def save_checkpoint(directory: str, step: int, tree, membership=None) -> str:
+    """``membership``: the rack's elastic Membership at save time — its
+    (epoch, world) is recorded in the manifest so a restore into a
+    different rack can tell a legitimate resize (world changed: migrate
+    through the rebalance plan) from membership drift (same world,
+    different epoch: fail fast naming both epochs)."""
     path = os.path.join(directory, f"step_{step:08d}")
     os.makedirs(path, exist_ok=True)
     flat = _flatten(tree)
     arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
     np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {"step": step, "keys": sorted(arrays)}
+    if membership is not None:
+        manifest["membership"] = {"epoch": membership.epoch,
+                                  "world": membership.world}
     with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump({"step": step, "keys": sorted(arrays)}, f)
+        json.dump(manifest, f)
     return path
+
+
+def load_manifest(directory: str, step: int | None = None) -> dict:
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
 
 
 def latest_step(directory: str) -> int | None:
@@ -102,15 +122,50 @@ def _is_flat_store(params) -> bool:
                and getattr(v, "ndim", 0) == 2 for k, v in params.items())
 
 
-def restore_train_state(directory: str, engine, step: int | None = None):
+def _resize_rows(engine, key: str, rows: np.ndarray,
+                 new_flat: int) -> np.ndarray:
+    """Cross-rack-size restore: migrate one (mo, old_padded) buffer of
+    dtype group ``key`` through the solo rebalance plan (identity on the
+    chunk-granular live extent; the rack pad tail is re-cut for the new
+    shard count — elastic/rebalance.py)."""
+    from ..elastic import solo_resize_plan
+    g = engine._group_map()[key]
+    plan = solo_resize_plan(g.dtype, g.chunk_elems, g.live_elems,
+                            rows.shape[1], new_flat)
+    return plan.apply(key, rows)
+
+
+def restore_train_state(directory: str, engine, step: int | None = None,
+                        membership=None):
     """Load a {"params", "opt"} checkpoint and place it with ``engine``'s
     planned shardings.  Converts tree-state checkpoints into the flat store
     (and vice versa) when the engine's residency mode differs from the one
     that wrote the checkpoint.  The opt state is restored against the
     engine's declared slot structure (N slots per dtype group; nothing for
     a stateless optimizer — np.savez drops empty subtrees, so structure
-    cannot be recovered from the archive alone).  Returns
+    cannot be recovered from the archive alone).
+
+    Elastic racks (DESIGN.md §12): a checkpoint written at a different
+    *world size* restores through the rebalance plan — every slot's
+    chunk-granular live region survives bitwise, the rack pad tail is
+    re-cut for the new shard count.  ``membership``: the restoring rack's
+    Membership; when the checkpoint records one at the SAME world but a
+    different epoch the restore fails fast naming both epochs (the worker
+    set churned between save and restore — resuming silently would commit
+    steps against gradients the saved trajectory never saw).  Returns
     (step, params, opt)."""
+    manifest = load_manifest(directory, step)
+    rec = manifest.get("membership")
+    if membership is not None and rec is not None:
+        if (rec["world"] == membership.world
+                and rec["epoch"] != membership.epoch):
+            raise ValueError(
+                f"checkpoint membership epoch {rec['epoch']} != rack "
+                f"membership epoch {membership.epoch} at world "
+                f"{membership.world}: the worker set churned between save "
+                f"and restore; resize/rejoin the rack to the saved "
+                f"membership or restore with an explicit override "
+                f"(membership=None)")
     step, tree = load_checkpoint(directory, step)
     params, opt = tree["params"], tree.get("opt", {})
     flat_ckpt = _is_flat_store(params)
@@ -118,7 +173,12 @@ def restore_train_state(directory: str, engine, step: int | None = None):
         params = engine.store_from_params(params)
     elif engine.tc.flat_residency:
         shards = engine.store_shardings()
-        params = {k: jax.device_put(np.asarray(v), shards[k])
+        sshapes = engine.store_shapes()
+        params = {k: np.asarray(v) for k, v in params.items()}
+        params = {k: (v if v.shape == tuple(sshapes[k].shape)
+                      else _resize_rows(engine, k, v, sshapes[k].shape[1]))
+                  for k, v in params.items()}
+        params = {k: jax.device_put(v, shards[k])
                   for k, v in params.items()}
     elif flat_ckpt:
         # params_from_store converts on host; hand it the loaded arrays
@@ -165,9 +225,25 @@ def restore_train_state(directory: str, engine, step: int | None = None):
         consumed.add(src)
         arr = np.asarray(flat_loaded[src])
         if tuple(arr.shape) != tuple(sd.shape):
-            raise ValueError(
-                f"opt slot {path!r} shape {arr.shape} != engine layout "
-                f"{tuple(sd.shape)}")
+            # same model at a different rack size: the slot's flat content
+            # is identity-placed, only the shard cut and pad tail change —
+            # migrate through the rebalance plan (or plain reshape when
+            # only the (S, L) factorization moved)
+            key = path.split("/", 1)[0]
+            groups = ({str(g.dtype): g for g in engine.chunk_plan.groups}
+                      if getattr(engine, "chunk_plan", None) is not None
+                      else {})
+            new_flat = int(np.prod(sd.shape[1:]))
+            if (key in groups and arr.ndim >= 2
+                    and arr.shape[0] == sd.shape[0]):
+                rows = arr.reshape(arr.shape[0], -1)
+                if rows.shape[1] != new_flat:
+                    rows = _resize_rows(engine, key, rows, new_flat)
+                arr = rows.reshape(sd.shape)
+            else:
+                raise ValueError(
+                    f"opt slot {path!r} shape {arr.shape} != engine "
+                    f"layout {tuple(sd.shape)}")
         vals[path] = jax.device_put(arr, oshards[path])
     # an encoded-wire checkpoint restored into an identity-wire engine:
     # the wire_ef residual is exchange state, not optimizer state — it

@@ -30,6 +30,8 @@ import jax
 import numpy as np
 
 from ..configs.base import ModelConfig, TrainConfig
+from ..elastic import Membership, plan_rebalance
+from ..elastic.rebalance import migrate_engine_state
 from . import cost_model
 from .chunking import TenantPackedDomain, pack_domains
 from .engine import (PHubEngine, co_opt_state_shapes, co_opt_state_shardings,
@@ -67,6 +69,69 @@ class PHubConnectionManager:
         self._services: dict[str, _Service] = {}
         self._attached: list[str] = []      # co-scheduled namespaces, ordered
         self._co: Optional[_CoSchedule] = None
+        # elastic rack state (DESIGN.md §12): sized from the first created
+        # service's worker count; every compiled-step cache below keys on
+        # the membership's live-set program key, so transitions re-key
+        # and recurring live sets reuse their first compilation
+        self._membership: Optional[Membership] = None
+        self.last_rebalance: Optional[dict] = None
+
+    # ------------------------------------------------------ elastic rack
+
+    @property
+    def membership(self) -> Optional[Membership]:
+        return self._membership
+
+    def set_membership(self, membership: Membership):
+        """Install a membership snapshot directly (the chaos harness's
+        entry point; join/leave/mark_slow below are the incremental
+        transitions)."""
+        if self._services:
+            world = next(iter(self._services.values())).engine.ctx.n_workers
+            membership.validate_world(world)
+        self._membership = membership
+        return membership
+
+    def _require_membership(self) -> Membership:
+        if self._membership is None:
+            raise ValueError("no rack membership yet: create a service "
+                             "first (membership is sized from its worker "
+                             "count) or set_membership explicitly")
+        return self._membership
+
+    def join(self, rank: int) -> Membership:
+        """Worker ``rank`` (re)joined the rack."""
+        self._membership = self._require_membership().join(rank)
+        return self._membership
+
+    def leave(self, rank: int) -> Membership:
+        """Worker ``rank`` left (failure or scale-down): its pushes are
+        excluded from every subsequent step until it joins back."""
+        self._membership = self._require_membership().leave(rank)
+        return self._membership
+
+    def mark_slow(self, rank: int, factor: float) -> Membership:
+        """Worker ``rank`` straggles at ``factor``×: stop waiting for it
+        (k-of-n partial aggregation)."""
+        self._membership = self._require_membership().mark_slow(rank, factor)
+        return self._membership
+
+    def mark_recovered(self, rank: int) -> Membership:
+        self._membership = self._require_membership().mark_recovered(rank)
+        return self._membership
+
+    def _membership_key(self):
+        """Step-cache key component: the live-set program key (NOT the
+        epoch — recurring live sets reuse their first compilation).
+        All-live folds to None so the rack at full strength — before any
+        churn, or after every straggler recovers — reuses the identical
+        pre-elastic compiled step."""
+        m = self._membership
+        return None if m is None or m.all_live else m.program_key()
+
+    def _step_membership(self) -> Optional[Membership]:
+        m = self._membership
+        return None if m is None or m.all_live else m
 
     # -- PHub::CreateService -------------------------------------------------
     def create_service(self, namespace: str, cfg: ModelConfig,
@@ -74,8 +139,10 @@ class PHubConnectionManager:
         if namespace in self._services:
             raise ValueError(f"namespace {namespace!r} already exists")
         nonce = secrets.token_hex(8)
-        self._services[namespace] = _Service(
-            engine=PHubEngine(cfg=cfg, tc=tc, mesh=mesh), nonce=nonce)
+        engine = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
+        self._services[namespace] = _Service(engine=engine, nonce=nonce)
+        if self._membership is None:
+            self._membership = Membership.full(engine.ctx.n_workers)
         return ServiceHandle(namespace=namespace, nonce=nonce)
 
     def _auth(self, handle: ServiceHandle) -> _Service:
@@ -114,9 +181,11 @@ class PHubConnectionManager:
                 f"buffers); detach_service first or use co_step")
         shapes = batch_shapes or {
             k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
-        key = tuple(sorted((k, tuple(v.shape)) for k, v in shapes.items()))
+        key = (tuple(sorted((k, tuple(v.shape)) for k, v in shapes.items())),
+               self._membership_key())
         if key not in svc.steps:
-            svc.steps[key] = svc.engine.make_train_step(shapes)
+            svc.steps[key] = svc.engine.make_train_step(
+                shapes, membership=self._step_membership())
         return svc.steps[key](params, opt, batch)
 
     def destroy_service(self, handle: ServiceHandle):
@@ -124,6 +193,10 @@ class PHubConnectionManager:
         if handle.namespace in self._attached:
             self.detach_service(handle)     # reclaims its chunk ranges
         del self._services[handle.namespace]
+        if not self._services:
+            # an empty rack has no worker set; the next created service
+            # sizes a fresh membership from its own mesh
+            self._membership = None
 
     # ------------------------------------------------- tenant co-scheduling
 
@@ -208,13 +281,14 @@ class PHubConnectionManager:
         shapes = batch_shapes or {
             ns: {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
                  for k, v in batches[ns].items()} for ns in self._attached}
-        key = tuple((ns, tuple(sorted((k, tuple(v.shape))
-                                      for k, v in shapes[ns].items())))
-                    for ns in self._attached)
+        key = (tuple((ns, tuple(sorted((k, tuple(v.shape))
+                                       for k, v in shapes[ns].items())))
+                     for ns in self._attached),
+               self._membership_key())
         if key not in co.steps:
             co.steps[key] = make_co_train_step(
                 {ns: self._services[ns].engine for ns in self._attached},
-                co.domain, shapes)
+                co.domain, shapes, membership=self._step_membership())
         new_p, co.opt, metrics = co.steps[key](params_by, co.opt, batches)
         for ns in self._attached:
             t = co.traffic.setdefault(
@@ -241,6 +315,72 @@ class PHubConnectionManager:
                                 "pull_bytes": 0.0,
                                 "wire_push_bytes": 0.0,
                                 "wire_pull_bytes": 0.0})}
+        return out
+
+    # ------------------------------------------------------- rack resizing
+
+    def resize(self, new_mesh, states: Optional[dict] = None) -> dict:
+        """Resize the rack: rebuild every service's engine on ``new_mesh``
+        and migrate state across the chunk-domain repartition (DESIGN.md
+        §12).
+
+        ``states``: {namespace: (params, opt)} — the caller-held solo
+        training states to migrate (solo opt state lives with the caller,
+        not the manager); returns the migrated {namespace: (params, opt)}.
+        Attached tenants' packed opt slots migrate internally through the
+        same extract/re-pack machinery attach/detach uses, and the shared
+        domain re-packs at the new shard count.  Membership resets to
+        all-live at the new world size (epoch bumped, so every step cache
+        re-keys); ``last_rebalance`` records the delta plan's migration
+        traffic (cost_model.rebalance_traffic)."""
+        if not self._services:
+            raise ValueError("no services to resize")
+        for ns in (states or {}):
+            if ns not in self._services:
+                raise ValueError(f"unknown namespace {ns!r} in states")
+            if ns in self._attached:
+                raise ValueError(
+                    f"namespace {ns!r} is attached: its opt slots live in "
+                    f"the packed domain and migrate internally — pass "
+                    f"only solo tenants' states")
+        # build every new engine before mutating anything: a failure here
+        # must leave the old rack intact
+        rebuilt = {}
+        for ns, svc in self._services.items():
+            rebuilt[ns] = (svc.engine,
+                           PHubEngine(cfg=svc.engine.cfg, tc=svc.engine.tc,
+                                      mesh=new_mesh))
+        flats = self._extract_all()           # packed co slots, old domain
+        old_domain = self._co.domain if self._co else None
+        out, solo_traffic = {}, {}
+        for ns, (old_eng, new_eng) in rebuilt.items():
+            if states and ns in states:
+                out[ns] = migrate_engine_state(old_eng, new_eng,
+                                               *states[ns])
+                if old_eng.chunk_plan is not None:
+                    solo_traffic[ns] = cost_model.rebalance_traffic(
+                        plan_rebalance(old_eng.chunk_plan,
+                                       new_eng.chunk_plan),
+                        new_eng.exchange_slots, mo=new_eng.mo_eff)
+            svc = self._services[ns]
+            svc.engine = new_eng
+            svc.steps.clear()
+        world = next(iter(rebuilt.values()))[1].ctx.n_workers
+        self._membership = (self._membership.resized(world)
+                            if self._membership
+                            else Membership.full(world))
+        self._repack(flats)                   # re-pack at the new n_shards
+        co_traffic = None
+        if old_domain is not None and self._co is not None:
+            e_any = next(iter(rebuilt.values()))[1]
+            co_traffic = cost_model.rebalance_traffic(
+                plan_rebalance(old_domain, self._co.domain),
+                co_slot_specs({ns: self._services[ns].engine
+                               for ns in self._attached}),
+                mo=e_any.mo_eff)
+        self.last_rebalance = {"co": co_traffic, "solo": solo_traffic,
+                               "world": world,
+                               "epoch": self._membership.epoch}
         return out
 
     # ------------------------------------------------------------ internals

@@ -46,6 +46,15 @@ class GroupPlan:
         (core/wire.py): scale k governs elements [k*ce, (k+1)*ce)."""
         return self.padded // self.chunk_elems
 
+    @property
+    def live_elems(self) -> int:
+        """The chunk-granular live extent: ``total`` rounded up to whole
+        chunks.  Everything past it is rack-granularity padding that never
+        receives gradient — the region state migrations (attach/detach,
+        elastic resize, cross-rack-size checkpoint restore) preserve
+        bitwise, and the region comparisons are made over."""
+        return -(-self.total // self.chunk_elems) * self.chunk_elems
+
 
 def chunk_spans(n_elems: int, chunk_elems: int) -> tuple:
     """Chunk-granular (start, length) spans tiling a chunk-aligned

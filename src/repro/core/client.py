@@ -121,6 +121,7 @@ class PHubClient:
         self.ctx = ctx
         self.plan = plan
         self.grads_like = None
+        self.membership = None          # elastic live set (DESIGN.md §12)
         self._steps: dict = {}
 
     # ------------------------------------------------------------- register
@@ -140,6 +141,33 @@ class PHubClient:
 
     def _groups(self) -> dict:
         return {str(g.dtype): g for g in self.plan.groups}
+
+    # ------------------------------------------------------------ elastic
+
+    def set_membership(self, membership) -> "PHubClient":
+        """Install an elastic ``Membership`` (repro.elastic): subsequent
+        ``push_pull`` steps exclude non-live workers' pushes bitwise and
+        renormalize the mean over the live count (k-of-n semantics,
+        DESIGN.md §12).  ``None`` — or an all-live membership — restores
+        the static full-rack program byte-for-byte (steps are cached per
+        live-set program key, so transitions re-key instead of running a
+        stale mask and recurring memberships don't retrace).  Returns
+        self."""
+        if membership is not None:
+            membership.validate_world(self.ctx.n_workers)
+        self.membership = membership
+        return self
+
+    def _elastic(self):
+        """(mask, n_live) for the current membership, or (None, None) on
+        the static full-rack fast path — which must stay the *identical*
+        trace, so the all-live case takes it too."""
+        m = self.membership
+        if m is None or m.all_live:
+            return None, None
+        m.validate_world(self.ctx.n_workers)
+        m.require_quorum()
+        return m.mask(), float(m.n_live)
 
     # ----------------------------------------------------------- opt state
 
@@ -217,7 +245,7 @@ class PHubClient:
                 return k
         return tuple_update(self.sopt, coefs)
 
-    def _fused_dequant(self, group):
+    def _fused_dequant(self, group, n_live: Optional[float] = None):
         """The wire-tail dequant+agg+opt kernel for one group, or None
         (jnp decode + update_fn; XLA fuses that too)."""
         if not (self.tc.use_pallas and self.tc.fused_agg_opt
@@ -225,13 +253,14 @@ class PHubClient:
             return None
         return self.sopt.pallas_dequant_update(
             group.chunk_elems, self.sopt.coefs(self.tc),
-            1.0 / self.ctx.n_workers)
+            1.0 / (self.ctx.n_workers if n_live is None else n_live))
 
     def exchange_flats(self, fg: dict, fp: dict, opt: dict, rank,
                        *, groups: Optional[dict] = None,
                        slot_specs: Optional[tuple] = None,
                        update_by_key: Optional[dict] = None,
-                       aux_by_key: Optional[dict] = None):
+                       aux_by_key: Optional[dict] = None,
+                       n_live: Optional[float] = None):
         """Run one full exchange over flat per-dtype buffers, inside an
         already-manual region.
 
@@ -248,6 +277,11 @@ class PHubClient:
         than handed to the optimizer rule, so every update_fn keeps its
         optimizer-only slot view and the co-scheduler's union-slot
         indices stay valid.
+
+        ``n_live`` renormalizes the aggregation mean over the elastic
+        live-contributor count (masked workers' gradients are zeroed at
+        the push site by the caller; DESIGN.md §12).  None keeps the
+        static full-rack divisor and the pre-elastic program.
 
         Returns (new_fp, new_opt) with input shapes preserved.
         """
@@ -274,17 +308,17 @@ class PHubClient:
                 p2, s2 = run_exchange(
                     self.tc.strategy, self.ctx, fg[key].reshape(-1),
                     fp[key].reshape(-1), slots, upd, rank, grp,
-                    self.tc.pipeline_windows, aux)
+                    self.tc.pipeline_windows, aux, n_live)
                 r2 = None
             else:
                 residual = opt[key][WIRE_EF_SLOT].reshape(-1)
-                fd = (self._fused_dequant(grp)
+                fd = (self._fused_dequant(grp, n_live)
                       if update_by_key is None and not aux else None)
                 p2, s2, r2 = run_wire_exchange(
                     self.tc.strategy, self.ctx, fg[key].reshape(-1),
                     fp[key].reshape(-1), slots, upd, rank, grp,
                     self.tc.pipeline_windows, self.wire, residual, aux,
-                    fused_dequant=fd)
+                    fused_dequant=fd, n_live=n_live)
             new_p[key] = p2.reshape(fp[key].shape)
             new_o[key] = {s.name: v.reshape(opt[key][s.name].shape)
                           for s, v in zip(opt_specs, s2)}
@@ -317,9 +351,11 @@ class PHubClient:
         if self.mesh is None:
             raise ValueError("standalone push_pull needs a client "
                              "constructed with a mesh")
-        if mode not in self._steps:
-            self._steps[mode] = self._build_step(mode)
-        return self._steps[mode]
+        m = self.membership
+        key = (mode, None if m is None or m.all_live else m.program_key())
+        if key not in self._steps:
+            self._steps[key] = self._build_step(mode)
+        return self._steps[key]
 
     def _build_step(self, mode: str):
         tc, ctx, cp = self.tc, self.ctx, self.plan
@@ -328,6 +364,7 @@ class PHubClient:
         rank_axes = (("data",) if tc.strategy == "hierarchical" else axes)
         bx = axes if len(axes) > 1 else axes[0]
         flat = mode == "flat"
+        mask, n_live = self._elastic()
 
         def local(grads, params, opt):
             rank = flat_rank(rank_axes, sizes)
@@ -339,7 +376,15 @@ class PHubClient:
                     lambda x: jax.lax.squeeze(x, (0,)), grads)
                 fg = chunking.flatten_groups(cp, g_local)
                 fp = chunking.flatten_groups(cp, params)
-            new_fp, new_opt = self.exchange_flats(fg, fp, opt, rank)
+            if mask is not None:
+                # the k-of-n push gate: this worker's whole flat push is
+                # scaled by its own 0/1 mask entry before any collective —
+                # exclusion is bitwise (+0.0 contributions) and the mean
+                # below renormalizes over n_live
+                w = jnp.asarray(mask)[flat_rank(axes, sizes)]
+                fg = {k: v * w.astype(v.dtype) for k, v in fg.items()}
+            new_fp, new_opt = self.exchange_flats(fg, fp, opt, rank,
+                                                  n_live=n_live)
             new_params = (new_fp if flat
                           else chunking.unflatten_groups(cp, new_fp,
                                                          self.grads_like))

@@ -143,6 +143,38 @@ def tenant_accounting(domain, strategy: str, n_workers: int,
     return out
 
 
+# --------------------------------------------------- rebalance accounting
+
+def rebalance_traffic(plan, slot_specs=(), mo: int = 1) -> dict:
+    """Migration traffic of one chunk-domain rebalance (DESIGN.md §12).
+
+    ``plan``: an elastic.RebalancePlan; ``slot_specs``: the exchange slot
+    set riding the domain (optimizer slots + ``wire_ef``) — every moved
+    chunk drags its parameter bytes plus one stripe per slot (at the
+    slot's resolved dtype); ``mo``: model-parallel ranks — the plan moves
+    every row of each (mo, padded) buffer, so bytes scale by it.  Only
+    the delta runs count: chunks whose packed position is unchanged cost
+    nothing, which is the minimal-movement property the plan
+    guarantees."""
+    import numpy as np
+    per_group = {}
+    moved_total = resident_total = 0.0
+    for key, g in plan.groups.items():
+        param_b = np.dtype(g.dtype).itemsize
+        slot_b = sum(np.dtype(s.resolve_dtype(g.dtype)).itemsize
+                     for s in slot_specs)
+        moved = g.moved_elems() * (param_b + slot_b) * max(mo, 1)
+        resident = g.total_elems() * (param_b + slot_b) * max(mo, 1)
+        per_group[key] = {"moved_bytes": moved, "resident_bytes": resident,
+                          "moved_elems": g.moved_elems(),
+                          "total_elems": g.total_elems()}
+        moved_total += moved
+        resident_total += resident
+    return {"moved_bytes": moved_total, "resident_bytes": resident_total,
+            "moved_fraction": moved_total / max(resident_total, 1e-9),
+            "per_group": per_group}
+
+
 # ---------------------------------------------------------------- §4.9
 
 @dataclass(frozen=True)

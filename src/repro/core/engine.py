@@ -335,11 +335,43 @@ class PHubEngine:
                      else self.exchange_axes)
         return compat.manual_axis_rank(rank_axes, self.axis_sizes, self.mesh)
 
-    def exchange_stage(self, grads, params, opt):
+    def worker_rank(self):
+        """Flat worker index over ALL exchange axes (the elastic
+        membership's rank space), computed in the outer scope."""
+        return compat.manual_axis_rank(self.exchange_axes, self.axis_sizes,
+                                       self.mesh)
+
+    def elastic_mask(self, membership):
+        """(mask, n_live) for an elastic membership, or (None, None) on
+        the static full-rack fast path — the all-live case must produce
+        the *identical* trace to the pre-elastic step (the bitwise parity
+        oracle, tests/multidevice/check_elastic.py), so it takes the fast
+        path too (DESIGN.md §12)."""
+        if membership is None or membership.all_live:
+            return None, None
+        if self.tc.strategy == "fsdp_stream":
+            raise ValueError(
+                "elastic membership needs a chunk-domain strategy: "
+                "fsdp_stream reduce-scatters gradients inside the backward "
+                "scan, before the push site where the worker mask applies")
+        membership.validate_world(self.ctx.n_workers)
+        membership.require_quorum()
+        return membership.mask(), float(membership.n_live)
+
+    def _masked_grads(self, grads, mask):
+        """Scale this worker's whole push by its 0/1 mask entry (the
+        k-of-n push gate): exclusion is bitwise — an all-zero push adds
+        exactly nothing to any downstream reduction."""
+        w = jnp.asarray(mask)[self.worker_rank()]
+        return jax.tree.map(lambda g: g * w.astype(g.dtype), grads)
+
+    def exchange_stage(self, grads, params, opt, n_live=None):
         """Tree-state exchange: flatten local TP slices into the chunk
         domain, run the collective schedule + fused agg+opt, rebuild the
         tree (shared by the solo train step, the zero-compute step, and —
-        per tenant — nothing: co-scheduling packs across tenants instead)."""
+        per tenant — nothing: co-scheduling packs across tenants instead).
+        ``n_live`` renormalizes the mean over the elastic live-contributor
+        count (the caller already masked non-live pushes; DESIGN.md §12)."""
         tc, mesh, pl = self.tc, self.mesh, self.plan
         if tc.strategy == "fsdp_stream":
             from ..optim.protocol import tuple_update
@@ -374,7 +406,8 @@ class PHubEngine:
             flats_g = chunking.flatten_groups(cp, grads)
             flats_p = chunking.flatten_groups(cp, params)
             new_p, new_m = self.client.exchange_flats(flats_g, flats_p,
-                                                      opt, rank)
+                                                      opt, rank,
+                                                      n_live=n_live)
             return (chunking.unflatten_groups(cp, new_p, self.params_shapes),
                     new_m)
 
@@ -391,7 +424,7 @@ class PHubEngine:
             axis_names={"model"}, check_vma=False,
             nested=True)(grads, params, opt, rank)
 
-    def exchange_stage_flat(self, gstore, pstore, opt):
+    def exchange_stage_flat(self, gstore, pstore, opt, n_live=None):
         """Chunk-domain exchange on per-dtype flat stores (mo, padded):
         no tree flatten/unflatten — the stores ARE the exchange domain
         (DESIGN.md §8)."""
@@ -400,7 +433,8 @@ class PHubEngine:
         rank = self.exchange_rank()
 
         def inner(fg, fp, opt, rank):
-            return self.client.exchange_flats(fg, fp, opt, rank)
+            return self.client.exchange_flats(fg, fp, opt, rank,
+                                              n_live=n_live)
 
         mspec = "model" if self.mo_eff > 1 else None
         s_spec = {str(g.dtype): P(mspec, None) for g in cp.groups}
@@ -414,14 +448,22 @@ class PHubEngine:
             axis_names={"model"}, check_vma=False,
             nested=True)(gstore, pstore, opt, rank)
 
-    def make_train_step(self, batch_shapes: dict[str, jax.ShapeDtypeStruct]):
+    def make_train_step(self, batch_shapes: dict[str, jax.ShapeDtypeStruct],
+                        membership=None):
+        """``membership``: an elastic live set (repro.elastic) baked into
+        the compiled step — non-live workers' pushes are excluded bitwise
+        and the aggregation mean renormalizes over the live count.  The
+        caller re-keys its step cache by membership signature (epoch);
+        None or all-live compiles the identical pre-elastic program."""
         tc = self.tc
         mesh = self.mesh
         manual_axes = set(self.exchange_axes)
         pl = self.plan
         loss_fn = self.build_loss_fn(batch_shapes)
-        exchange_stage = self.exchange_stage
-        exchange_stage_flat = self.exchange_stage_flat
+        mask, n_live = self.elastic_mask(membership)
+        exchange_stage = partial(self.exchange_stage, n_live=n_live)
+        exchange_stage_flat = partial(self.exchange_stage_flat,
+                                      n_live=n_live)
 
         flat = tc.flat_residency
         if flat:
@@ -437,6 +479,8 @@ class PHubEngine:
 
         def local_step(params, opt, batch):
             tot, loss, grads = self._local_grads(loss_fn_used, params, batch)
+            if mask is not None:
+                grads = self._masked_grads(grads, mask)
             new_p, new_m = (exchange_stage_flat(grads, params, opt) if flat
                             else exchange_stage(grads, params, opt))
             metrics = {"loss": jax.lax.pmean(loss, self.exchange_axes),
@@ -465,7 +509,7 @@ class PHubEngine:
             axis_names=manual_axes, check_vma=False)
         return _MeshScopedJit(jax.jit(step, donate_argnums=(0, 1)), mesh)
 
-    def make_zero_compute_step(self):
+    def make_zero_compute_step(self, membership=None):
         """ZeroComputeEngine (§4.4): the full exchange pipeline with fwd/bwd
         replaced by a synthetic push — pure PS throughput.  One call = one
         exchange step over this engine's whole chunk domain."""
@@ -474,10 +518,13 @@ class PHubEngine:
             raise ValueError("zero-compute step covers the tree-state chunk "
                              "strategies")
         mesh = self.mesh
+        mask, n_live = self.elastic_mask(membership)
 
         def local_step(params, opt):
             grads = jax.tree.map(lambda x: x * 1e-4, params)
-            return self.exchange_stage(grads, params, opt)
+            if mask is not None:
+                grads = self._masked_grads(grads, mask)
+            return self.exchange_stage(grads, params, opt, n_live=n_live)
 
         manual_p = self.plan.manual_specs(self.exchange_axes)
         m_outer = self._outer_m_specs()
@@ -625,7 +672,7 @@ def co_opt_state_shardings(e0: PHubEngine, domain, slots=None) -> dict:
 
 
 def make_co_train_step(tenants: dict, domain, batch_shapes: dict,
-                       zero_compute: bool = False):
+                       zero_compute: bool = False, membership=None):
     """One jointly compiled train step over every attached tenant (§3.1
     multi-tenancy, DESIGN.md §9).
 
@@ -647,6 +694,11 @@ def make_co_train_step(tenants: dict, domain, batch_shapes: dict,
     push (the §4.4 ZeroComputeEngine, multi-tenant edition): one call = one
     co-scheduled exchange of every tenant's whole chunk domain.
 
+    ``membership``: the rack's elastic live set (DESIGN.md §12) — one
+    worker mask for every tenant (the rack's workers straggle together,
+    not per job): each tenant's push is gated at its own push site and the
+    single shared aggregation renormalizes over the live count.
+
     Returns a jitted ``step(params_by_ns, packed_opt, batch_by_ns) ->
     (new_params_by_ns, new_packed_opt, metrics_by_ns)``.
     """
@@ -654,6 +706,7 @@ def make_co_train_step(tenants: dict, domain, batch_shapes: dict,
     e0 = tenants[names[0]]
     tc0, mesh = e0.tc, e0.mesh
     manual_axes = set(e0.exchange_axes)
+    mask, n_live = e0.elastic_mask(membership)
     loss_fns = ({} if zero_compute
                 else {ns: tenants[ns].build_loss_fn(batch_shapes[ns])
                       for ns in names})
@@ -724,7 +777,7 @@ def make_co_train_step(tenants: dict, domain, batch_shapes: dict,
             p2, new_m = e0.client.exchange_flats(
                 packed_g, packed_p, opt, rank, groups=domain.groups,
                 slot_specs=slot_specs, update_by_key=upd_by_key,
-                aux_by_key=aux_by_key)
+                aux_by_key=aux_by_key, n_live=n_live)
             new_flats = {ns: {} for ns in names}
             for key, pg in domain.groups.items():
                 for s in pg.slots:
@@ -763,6 +816,9 @@ def make_co_train_step(tenants: dict, domain, batch_shapes: dict,
             metrics[ns] = {
                 "loss": jax.lax.pmean(loss, e0.exchange_axes),
                 "total_loss": jax.lax.pmean(tot, e0.exchange_axes)}
+        if mask is not None:
+            grads_by = {ns: e0._masked_grads(g, mask)
+                        for ns, g in grads_by.items()}
         new_p, new_m = exchange_stage(grads_by, params_by, opt)
         return new_p, new_m, metrics
 

@@ -37,7 +37,7 @@ Strategies:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -85,7 +85,8 @@ class ExchangeContext:
 
 def exchange_group(strategy: str, ctx: ExchangeContext, g: jax.Array,
                    p: jax.Array, slots: tuple, update_fn: UpdateFn,
-                   rank: jax.Array, aux: tuple = ()
+                   rank: jax.Array, aux: tuple = (),
+                   n_live: Optional[float] = None
                    ) -> tuple[jax.Array, tuple]:
     """g, p: (padded,) local vectors; ``slots``: tuple of (state_len,)
     optimizer-state buffers (already this shard's slice); rank: this
@@ -93,9 +94,13 @@ def exchange_group(strategy: str, ctx: ExchangeContext, g: jax.Array,
     outer scope).  ``aux`` is a tuple of (padded,) per-position side tables
     (e.g. the co-scheduled domain's per-tenant coefficient/mask vectors)
     sliced alongside ``p`` and forwarded to ``update_fn(p, g, slots,
-    *aux)``.  Returns (p', slots')."""
+    *aux)``.  ``n_live``: the elastic live-contributor count (DESIGN.md
+    §12) — masked workers push exact zeros and the mean renormalizes over
+    the contributors that actually arrived; None (the default) is the
+    static full-rack path, byte-for-byte the pre-elastic schedule.
+    Returns (p', slots')."""
     axes = ctx.data_axes
-    N = ctx.n_workers
+    N = ctx.n_workers if n_live is None else n_live
 
     if strategy == "allreduce":
         ga = jax.lax.psum(g, axes) / N

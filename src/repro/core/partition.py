@@ -46,6 +46,23 @@ def makespan_ratio(costs: Sequence[int], assign: Sequence[int], n_bins: int) -> 
     return max(loads) / ideal
 
 
+def quota_movement(counts_a: Sequence[Sequence[int]],
+                   counts_b: Sequence[Sequence[int]]) -> int:
+    """Shard-level lower bound on the chunks a re-quota must move: for
+    each tenant, the chunks that leave shards whose quota shrank
+    (``sum_s max(0, a[t][s] - b[t][s])``).  Shard counts may differ (a
+    rack resize) — the shorter quota row is zero-extended.  The elastic
+    RebalancePlan's delta is position-exact and thus >= this bound; the
+    resilience benchmark reports both."""
+    moved = 0
+    for row_a, row_b in zip(counts_a, counts_b):
+        n = max(len(row_a), len(row_b))
+        a = list(row_a) + [0] * (n - len(row_a))
+        b = list(row_b) + [0] * (n - len(row_b))
+        moved += sum(max(0, x - y) for x, y in zip(a, b))
+    return moved
+
+
 def cochunk_counts(chunks_per_tenant: Sequence[int], n_shards: int
                    ) -> tuple[list[list[int]], list[int]]:
     """Cross-tenant chunk->shard quotas for the packed rack domain.

@@ -50,7 +50,7 @@ dimension to window — callers fall back to the monolithic schedule.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -125,7 +125,8 @@ def _ring_window_rs(g: jax.Array, L: int, start, Lw: int,
 
 def pipelined_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
                        p: jax.Array, slots: tuple, update_fn: UpdateFn,
-                       rank: jax.Array, windows: int, aux: tuple = ()
+                       rank: jax.Array, windows: int, aux: tuple = (),
+                       n_live: Optional[float] = None
                        ) -> tuple[jax.Array, tuple]:
     """Windowed counterpart of ``exchange_group`` for the strategies with a
     shard dimension.  g, p: (padded,) local vectors; ``slots``: tuple of
@@ -134,14 +135,15 @@ def pipelined_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
     strategy's ring axes; ``aux``: (padded,) per-position side tables
     sliced window-by-window alongside ``p`` (this is how co-scheduled
     windows span tenant boundaries — the coefficient slice follows the
-    window, not the tenant).  Returns (p', slots') bit-identical in layout
-    to the monolithic schedule.
+    window, not the tenant).  ``n_live``: elastic live-contributor count
+    (None = the static full-rack divisor; see exchange_group).  Returns
+    (p', slots') bit-identical in layout to the monolithic schedule.
     """
     if strategy not in PIPELINED_STRATEGIES:
         raise ValueError(f"strategy {strategy!r} has no shard dimension to "
                          f"window; use exchange_group")
     axes = ctx.data_axes
-    N = ctx.n_workers
+    N = ctx.n_workers if n_live is None else n_live
     if strategy == "hierarchical":
         ring_axes: tuple[str, ...] = ("data",)
         S = ctx.axis_sizes["data"]
@@ -192,7 +194,8 @@ def pipelined_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
 def run_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
                  p: jax.Array, slots: tuple, update_fn: UpdateFn,
                  rank: jax.Array, group: GroupPlan, windows: int,
-                 aux: tuple = ()) -> tuple[jax.Array, tuple]:
+                 aux: tuple = (), n_live: Optional[float] = None
+                 ) -> tuple[jax.Array, tuple]:
     """Dispatch one dtype group: the windowed pipeline when the strategy has
     a shard dimension and >1 effective windows, else the monolithic
     schedule.  ``group`` needs only a ``chunks_per_shard`` property (a
@@ -207,8 +210,9 @@ def run_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
         w = effective_windows(group, windows)
         if w > 1:
             return pipelined_exchange(strategy, ctx, g, p, slots, update_fn,
-                                      rank, w, aux)
-    return exchange_group(strategy, ctx, g, p, slots, update_fn, rank, aux)
+                                      rank, w, aux, n_live)
+    return exchange_group(strategy, ctx, g, p, slots, update_fn, rank, aux,
+                          n_live)
 
 
 # ------------------------------------------------------ encoded-wire path
@@ -218,7 +222,8 @@ def pipelined_wire_exchange(strategy: str, ctx: ExchangeContext,
                             update_fn: UpdateFn, rank: jax.Array,
                             windows: int, wire, ce: int,
                             residual: jax.Array, aux: tuple = (),
-                            fused_dequant=None):
+                            fused_dequant=None,
+                            n_live: Optional[float] = None):
     """The windowed schedule over *encoded* payloads (DESIGN.md §11).
 
     Same double-buffered structure as ``pipelined_exchange``, but every
@@ -250,9 +255,11 @@ def pipelined_wire_exchange(strategy: str, ctx: ExchangeContext,
     is ``upd(p_w, parts, g_own, slots_w) -> (p', slots')`` fusing the
     final decode into the optimizer kernel (skipped for the cross-pod
     hierarchical reduction, which needs the decoded value first).
+    ``n_live``: elastic live-contributor count (None = full rack; masked
+    workers' zero rows ride the ring unchanged — see exchange_group).
     Returns (p', slots', residual')."""
     axes = ctx.data_axes
-    N = ctx.n_workers
+    N = ctx.n_workers if n_live is None else n_live
     if strategy == "hierarchical":
         ring_axes: tuple[str, ...] = ("data",)
         S = ctx.axis_sizes["data"]
@@ -350,7 +357,7 @@ def run_wire_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
                       p: jax.Array, slots: tuple, update_fn: UpdateFn,
                       rank: jax.Array, group: GroupPlan, windows: int,
                       wire, residual: jax.Array, aux: tuple = (),
-                      fused_dequant=None):
+                      fused_dequant=None, n_live: Optional[float] = None):
     """Dispatch one dtype group over a non-identity wire.  Monolithic is
     just W=1 of the windowed schedule here — encoded partials need the
     per-hop decode/re-encode ring, which psum_scatter cannot express, and
@@ -367,4 +374,4 @@ def run_wire_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
     w = effective_windows(group, windows)
     return pipelined_wire_exchange(strategy, ctx, g, p, slots, update_fn,
                                    rank, w, wire, group.chunk_elems,
-                                   residual, aux, fused_dequant)
+                                   residual, aux, fused_dequant, n_live)

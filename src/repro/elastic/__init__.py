@@ -1,0 +1,7 @@
+"""Elastic rack subsystem (DESIGN.md §12): live worker membership,
+straggler-tolerant k-of-n exchange, and chunk-domain rebalancing."""
+from .membership import DEAD, LIVE, SLOW, Membership, WorkerState
+from .rebalance import (GroupRebalance, RebalancePlan, SOLO_TENANT,
+                        domain_placements, plan_placements, plan_rebalance,
+                        solo_resize_plan)
+from .chaos import ChaosEvent, ChaosSchedule

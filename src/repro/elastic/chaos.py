@@ -1,0 +1,116 @@
+"""Deterministic failure injection for elastic racks (DESIGN.md §12).
+
+Tests and benchmarks need *reproducible* churn: the same seed must produce
+the same kill/slow/rejoin schedule on every run, or the 8-device oracle
+and the BENCH trajectories stop being comparable across commits.  A
+``ChaosSchedule`` is a seeded, precomputed event list over a fixed number
+of steps:
+
+    sched = ChaosSchedule.seeded(seed=7, world=8, steps=40)
+    for step in range(40):
+        membership = sched.apply(membership, step)   # may bump the epoch
+        ...train step under `membership`...
+
+Events never violate quorum: the generator tracks the live set and only
+emits kills/slowdowns while more than ``min_live`` contributors remain,
+and every kill is eventually matched by a rejoin candidate so long runs
+don't drain the rack.  Slowdown factors are drawn from ``slow_factors``
+— they matter to the *benchmark* emulation (a straggler's latency factor
+is how the resilience benchmark models the push the barrier would have
+waited for), not to the masked arithmetic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .membership import DEAD, SLOW, Membership
+
+KILL, SLOW_EV, REJOIN, RECOVER = "kill", "slow", "rejoin", "recover"
+
+
+@dataclass(frozen=True)
+class ChaosEvent:
+    step: int
+    kind: str                       # kill | slow | rejoin | recover
+    worker: int
+    factor: float = 1.0             # slowdown factor (kind == "slow")
+
+
+@dataclass(frozen=True)
+class ChaosSchedule:
+    events: tuple[ChaosEvent, ...]
+    world: int
+
+    @classmethod
+    def seeded(cls, *, seed: int, world: int, steps: int,
+               event_every: int = 5, min_live: int | None = None,
+               slow_factors: tuple[float, ...] = (2.0, 4.0, 8.0)
+               ) -> "ChaosSchedule":
+        """Deterministic schedule: roughly one event per ``event_every``
+        steps, alternating pressure (kill/slow) with relief
+        (rejoin/recover), never dropping the live set below ``min_live``
+        (default: world // 2 + 1 — a majority quorum)."""
+        if min_live is None:
+            min_live = world // 2 + 1
+        rng = np.random.default_rng(seed)
+        status = {r: "live" for r in range(world)}
+        events: list[ChaosEvent] = []
+        for step in range(event_every, steps, event_every):
+            live = [r for r, s in status.items() if s == "live"]
+            downed = [r for r, s in status.items() if s != "live"]
+            can_press = len(live) > min_live
+            press = can_press and (not downed or rng.random() < 0.5)
+            if press:
+                w = int(rng.choice(live))
+                if rng.random() < 0.5:
+                    events.append(ChaosEvent(step, KILL, w))
+                    status[w] = DEAD
+                else:
+                    f = float(rng.choice(slow_factors))
+                    events.append(ChaosEvent(step, SLOW_EV, w, f))
+                    status[w] = SLOW
+            elif downed:
+                w = int(rng.choice(downed))
+                kind = REJOIN if status[w] == DEAD else RECOVER
+                events.append(ChaosEvent(step, kind, w))
+                status[w] = "live"
+        return cls(events=tuple(events), world=world)
+
+    def events_at(self, step: int) -> tuple[ChaosEvent, ...]:
+        return tuple(e for e in self.events if e.step == step)
+
+    def apply(self, membership: Membership, step: int) -> Membership:
+        """Fold this step's events into ``membership`` (no-op — same
+        object, same epoch — when the step has none)."""
+        membership.validate_world(self.world)
+        for e in self.events_at(step):
+            if e.kind == KILL:
+                membership = membership.leave(e.worker)
+            elif e.kind == SLOW_EV:
+                membership = membership.mark_slow(e.worker, e.factor)
+            elif e.kind == REJOIN:
+                membership = membership.join(e.worker)
+            elif e.kind == RECOVER:
+                membership = membership.mark_recovered(e.worker)
+            else:
+                raise ValueError(f"unknown chaos event kind {e.kind!r}")
+        return membership
+
+    def latency_factors(self, step: int) -> np.ndarray:
+        """(world,) per-worker latency factors in force *after* the events
+        up to and including ``step`` — the resilience benchmark's input
+        for emulating how long a full barrier would wait (dead workers
+        report inf: a barrier never commits without them)."""
+        f = np.ones((self.world,), np.float64)
+        for e in self.events:
+            if e.step > step:
+                break
+            if e.kind == KILL:
+                f[e.worker] = np.inf
+            elif e.kind == SLOW_EV:
+                f[e.worker] = e.factor
+            else:
+                f[e.worker] = 1.0
+        return f

@@ -1,0 +1,325 @@
+"""Chunk-domain rebalancing: minimal-movement delta plans between two
+partitions of the rack's chunk domain (DESIGN.md §12).
+
+A rack resize (8 → 6 workers) changes ``n_shards`` of every chunk domain:
+the shared ``TenantPackedDomain`` re-packs with different LPT quotas and a
+solo engine's ``ChunkPlan`` re-pads to the new shard granularity.  The
+optimizer-protocol slots (momentum, adam's four, the int8 ``wire_ef``
+residual) live *in* that domain, so a resize must migrate every slot
+buffer from the old placement to the new one.
+
+``plan_rebalance(old, new)`` computes the delta plan between two
+partitions of the *same* tenant chunk set:
+
+  * every tenant chunk appears in exactly one run — a chunk is moved at
+    most once (the minimal-movement property; hypothesis-tested in
+    tests/test_elastic.py);
+  * the runs with ``src != dst`` cover exactly the symmetric difference
+    of the two placements — chunks whose packed position is unchanged
+    cost no movement (and no migration traffic in the cost model);
+  * plans compose: ``plan(a→b) ∘ plan(b→c)`` lands every chunk on its
+    ``plan(a→c)`` placement.
+
+Coordinates are *packed element offsets* (chunk-granular).  Rack padding
+belongs to no tenant and is never moved: the new buffer's pad regions
+start from zero, exactly like the attach/detach migration drops the dead
+rack-pad tail (DESIGN.md §9/§10 — adam's k slots tick on dead tails by
+design; their values there are semantically inert).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import numpy as np
+
+SOLO_TENANT = "__solo__"
+
+
+@dataclass(frozen=True)
+class GroupRebalance:
+    """One dtype group's delta plan.  ``moves[tenant]`` is a tuple of
+    ``(toff, src, dst, length)`` runs — tenant-offset, old packed offset,
+    new packed offset, element length — chunk-granular, toff-ascending,
+    tiling the tenant's chunk extent exactly once."""
+    dtype: Any
+    chunk_elems: int
+    old_padded: int
+    new_padded: int
+    moves: dict
+
+    def delta(self, tenant: str) -> tuple:
+        """The runs that actually move (``src != dst``)."""
+        return tuple(r for r in self.moves[tenant] if r[1] != r[2])
+
+    def moved_elems(self) -> int:
+        return sum(r[3] for t in self.moves for r in self.delta(t))
+
+    def total_elems(self) -> int:
+        return sum(r[3] for t in self.moves for r in self.moves[t])
+
+
+@dataclass(frozen=True)
+class RebalancePlan:
+    """Delta plans for every dtype group of a domain resize."""
+    groups: dict                     # dtype_key -> GroupRebalance
+
+    # ------------------------------------------------------------- apply
+
+    def apply(self, key: str, rows: np.ndarray) -> np.ndarray:
+        """Migrate one flat buffer (``(mo, old_padded)``) into the new
+        placement.  Runs once per resize on host (the migration path of
+        the attach/detach machinery), not in the train step."""
+        g = self.groups[key]
+        rows = np.asarray(rows)
+        if rows.ndim != 2 or rows.shape[1] != g.old_padded:
+            raise ValueError(
+                f"group {key!r}: expected (mo, {g.old_padded}) rows, got "
+                f"{rows.shape}")
+        out = np.zeros((rows.shape[0], g.new_padded), rows.dtype)
+        for tenant in g.moves:
+            for _, src, dst, ln in g.moves[tenant]:
+                out[:, dst:dst + ln] = rows[:, src:src + ln]
+        return out
+
+    # -------------------------------------------------------- introspection
+
+    def chunk_placements(self, key: str) -> dict:
+        """{tenant: list of (src_chunk, dst_chunk)} per tenant chunk,
+        tenant-chunk-ordered — the per-chunk expansion the property tests
+        and ``compose`` work over."""
+        g = self.groups[key]
+        ce = g.chunk_elems
+        out = {}
+        for tenant, runs in g.moves.items():
+            pairs = []
+            for toff, src, dst, ln in runs:
+                for k in range(ln // ce):
+                    pairs.append(((src + k * ce) // ce, (dst + k * ce) // ce))
+            out[tenant] = pairs
+        return out
+
+    def compose(self, other: "RebalancePlan") -> "RebalancePlan":
+        """``self`` (a→b) composed with ``other`` (b→c): the a→c plan.
+        Fails fast when the intermediate placements disagree (``self``'s
+        destinations must be ``other``'s sources chunk for chunk)."""
+        groups = {}
+        if set(self.groups) != set(other.groups):
+            raise ValueError(
+                f"plans cover different dtype groups: "
+                f"{sorted(self.groups)} vs {sorted(other.groups)}")
+        for key, ga in self.groups.items():
+            gb = other.groups[key]
+            if ga.new_padded != gb.old_padded:
+                raise ValueError(
+                    f"group {key!r}: intermediate domain sizes disagree "
+                    f"({ga.new_padded} vs {gb.old_padded})")
+            if set(ga.moves) != set(gb.moves):
+                raise ValueError(
+                    f"group {key!r}: plans cover different tenants")
+            ce = ga.chunk_elems
+            moves = {}
+            pa = self.chunk_placements(key)
+            pb = other.chunk_placements(key)
+            for tenant in ga.moves:
+                via = dict(pb[tenant])           # b_chunk -> c_chunk
+                runs = []
+                toff = 0
+                for src_a, dst_b in pa[tenant]:
+                    if dst_b not in via:
+                        raise ValueError(
+                            f"group {key!r} tenant {tenant!r}: chunk at "
+                            f"b-offset {dst_b * ce} has no onward "
+                            f"placement in the second plan")
+                    run = (toff, src_a * ce, via[dst_b] * ce, ce)
+                    if (runs and runs[-1][0] + runs[-1][3] == run[0]
+                            and runs[-1][1] + runs[-1][3] == run[1]
+                            and runs[-1][2] + runs[-1][3] == run[2]):
+                        prev = runs.pop()
+                        run = (prev[0], prev[1], prev[2], prev[3] + ce)
+                    runs.append(run)
+                    toff += ce
+                moves[tenant] = tuple(runs)
+            groups[key] = GroupRebalance(
+                dtype=ga.dtype, chunk_elems=ce, old_padded=ga.old_padded,
+                new_padded=gb.new_padded, moves=moves)
+        return RebalancePlan(groups=groups)
+
+    def moved_elems(self) -> dict:
+        return {key: g.moved_elems() for key, g in self.groups.items()}
+
+
+# -------------------------------------------------------------- placements
+
+def domain_placements(domain) -> dict:
+    """TenantPackedDomain -> {key: (dtype, ce, padded,
+    {tenant: ((toff, poff, len), ...)})} — each tenant's chunk-granular
+    residency, toff-ascending."""
+    out = {}
+    for key, g in domain.groups.items():
+        runs = {s.tenant: tuple(sorted(s.runs)) for s in g.slots}
+        out[key] = (g.dtype, g.chunk_elems, g.padded, runs)
+    return out
+
+
+def plan_placements(chunk_plan) -> dict:
+    """ChunkPlan -> single-tenant placements: a solo engine's chunk domain
+    is identity-placed (element *positions* never depend on the shard
+    count; only the rack-granularity pad tail does), so its runs are one
+    identity span over the chunk-ceiled live extent."""
+    out = {}
+    for g in chunk_plan.groups:
+        out[str(g.dtype)] = (g.dtype, g.chunk_elems, g.padded,
+                             {SOLO_TENANT: ((0, 0, g.live_elems),)})
+    return out
+
+
+def _placements_of(obj) -> dict:
+    if hasattr(obj, "tenants"):                 # TenantPackedDomain
+        return domain_placements(obj)
+    return plan_placements(obj)                 # ChunkPlan
+
+
+def _merge_segments(runs_old, runs_new):
+    """Intersect two run lists tiling the same tenant-offset extent into
+    maximal (toff, src, dst, len) segments, coalescing runs whose
+    displacement continues contiguously."""
+    out: list[tuple[int, int, int, int]] = []
+    io = ino = 0
+    while io < len(runs_old) and ino < len(runs_new):
+        to, po, lo = runs_old[io]
+        tn, pn, ln = runs_new[ino]
+        start = max(to, tn)
+        end = min(to + lo, tn + ln)
+        if end > start:
+            seg = (start, po + (start - to), pn + (start - tn), end - start)
+            if (out and out[-1][0] + out[-1][3] == seg[0]
+                    and out[-1][1] + out[-1][3] == seg[1]
+                    and out[-1][2] + out[-1][3] == seg[2]):
+                prev = out.pop()
+                seg = (prev[0], prev[1], prev[2], prev[3] + seg[3])
+            out.append(seg)
+        if to + lo <= tn + ln:
+            io += 1
+        if tn + ln <= to + lo:
+            ino += 1
+    return tuple(out)
+
+
+def plan_rebalance(old, new) -> RebalancePlan:
+    """Delta plan between two partitions of the same tenant chunk set.
+
+    ``old`` / ``new``: TenantPackedDomain or ChunkPlan (a solo engine's
+    domain is the single-tenant identity placement).  Fails fast when the
+    two sides disagree on dtype groups, tenants, chunk size, or any
+    tenant's chunk extent — those are different *models*, not different
+    placements of one."""
+    po, pn = _placements_of(old), _placements_of(new)
+    if set(po) != set(pn):
+        raise ValueError(f"partitions cover different dtype groups: "
+                         f"{sorted(po)} vs {sorted(pn)}")
+    groups = {}
+    for key in po:
+        dt_o, ce_o, pad_o, runs_o = po[key]
+        dt_n, ce_n, pad_n, runs_n = pn[key]
+        if ce_o != ce_n:
+            raise ValueError(f"group {key!r}: chunk_elems {ce_o} != {ce_n};"
+                             f" partitions must share chunk_size_bytes")
+        if set(runs_o) != set(runs_n):
+            raise ValueError(f"group {key!r}: tenant sets differ "
+                             f"({sorted(runs_o)} vs {sorted(runs_n)})")
+        moves = {}
+        for tenant in runs_o:
+            ext_o = sum(r[2] for r in runs_o[tenant])
+            ext_n = sum(r[2] for r in runs_n[tenant])
+            if ext_o != ext_n:
+                raise ValueError(
+                    f"group {key!r} tenant {tenant!r}: chunk extents "
+                    f"differ ({ext_o} vs {ext_n} elems) — not two "
+                    f"placements of one model")
+            moves[tenant] = _merge_segments(runs_o[tenant], runs_n[tenant])
+        groups[key] = GroupRebalance(dtype=dt_o, chunk_elems=ce_o,
+                                     old_padded=pad_o, new_padded=pad_n,
+                                     moves=moves)
+    return RebalancePlan(groups=groups)
+
+
+def solo_resize_plan(dtype, chunk_elems: int, live: int, old_padded: int,
+                     new_padded: int) -> RebalancePlan:
+    """The identity-placement resize plan for one solo dtype group (the
+    checkpoint cross-rack-size restore path, where the writing engine is
+    gone and only the buffer shapes survive): live chunks stay in place,
+    the rack pad tail is re-cut for the new shard count."""
+    if live <= 0 or live % chunk_elems or live > min(old_padded, new_padded):
+        raise ValueError(
+            f"live extent {live} incompatible with chunk_elems "
+            f"{chunk_elems} and padded sizes {old_padded}/{new_padded}")
+    g = GroupRebalance(dtype=dtype, chunk_elems=chunk_elems,
+                       old_padded=old_padded, new_padded=new_padded,
+                       moves={SOLO_TENANT: ((0, 0, 0, live),)})
+    return RebalancePlan(groups={str(dtype): g})
+
+
+# ---------------------------------------------------------- state migration
+
+def migrate_engine_state(old_eng, new_eng, params, opt):
+    """Migrate one solo service's caller-held (params, opt) from
+    ``old_eng``'s rack size to ``new_eng``'s through the rebalance plan
+    (host-side, once per resize — the same roundtrip the attach/detach
+    machinery uses).
+
+    Every declared exchange slot — optimizer state and the ``wire_ef``
+    residual — survives bitwise on its chunk-granular live region; the
+    old rack-pad tail is dropped and the new one starts from zero (it
+    never receives gradient).  Returns (params', opt') placed with
+    ``new_eng``'s planned shardings."""
+    import jax
+
+    if old_eng.tc.exchange_signature() != new_eng.tc.exchange_signature():
+        raise ValueError(
+            f"resize changed the exchange signature "
+            f"({old_eng.tc.exchange_signature()} -> "
+            f"{new_eng.tc.exchange_signature()}); a resize migrates state "
+            f"across rack sizes, not across exchange configurations")
+    if old_eng.tc.strategy == "fsdp_stream":
+        # leaves are globally unchanged; only the per-device shard cuts
+        # move — device_put re-lays them out
+        new_params = jax.tree.map(
+            lambda v, s: jax.device_put(
+                np.asarray(jax.device_get(v)), s),
+            params, new_eng.param_shardings())
+        new_opt = jax.tree.map(
+            lambda v, s: jax.device_put(
+                np.asarray(jax.device_get(v)), s),
+            opt, new_eng.opt_state_shardings())
+        return new_params, new_opt
+    if old_eng.mo_eff != new_eng.mo_eff:
+        raise ValueError(
+            f"resize changed the model-parallel degree "
+            f"({old_eng.mo_eff} -> {new_eng.mo_eff}); only the worker "
+            f"(data/pod) extent of the rack is elastic")
+    plan = plan_rebalance(old_eng.chunk_plan, new_eng.chunk_plan)
+
+    if old_eng.tc.flat_residency:
+        shards = new_eng.store_shardings()
+        new_params = {
+            k: jax.device_put(
+                plan.apply(k, np.asarray(jax.device_get(v))), shards[k])
+            for k, v in params.items()}
+    else:
+        new_params = jax.tree.map(
+            lambda v, s: jax.device_put(np.asarray(jax.device_get(v)), s),
+            params, new_eng.param_shardings())
+
+    oshapes = new_eng.opt_state_shapes()
+    oshards = new_eng.opt_state_shardings()
+    new_opt = {}
+    for key, slots in opt.items():
+        new_opt[key] = {}
+        for name, arr in slots.items():
+            rows = np.asarray(jax.device_get(arr))
+            moved = plan.apply(key, rows.reshape(rows.shape[0], -1))
+            sd = oshapes[key][name]
+            new_opt[key][name] = jax.device_put(
+                moved.reshape(sd.shape), oshards[key][name])
+    return new_params, new_opt

@@ -41,7 +41,20 @@ def main(argv=None):
     ap.add_argument("--tenants", type=int, default=1,
                     help="co-schedule N identical jobs (different seeds/lr) "
                          "onto one shared rack chunk domain")
+    ap.add_argument("--elastic", action="store_true",
+                    help="enable live worker membership: kill/slow/rejoin "
+                         "events re-key the compiled step and the exchange "
+                         "renormalizes over the live contributors "
+                         "(DESIGN.md §12)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject a deterministic seeded schedule of worker "
+                         "kill/slow/rejoin events (implies --elastic)")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--chaos-every", type=int, default=5,
+                    help="roughly one chaos event per this many steps")
     args = ap.parse_args(argv)
+    if args.chaos:
+        args.elastic = True
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -78,11 +91,33 @@ def main(argv=None):
     shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
               for k, v in data.batch_at(0).items()}
 
+    sched = None
+    if args.elastic:
+        world = engine.ctx.n_workers
+        print(f"[train] elastic rack: world={world} "
+              f"epoch={cm.membership.epoch}"
+              + (f" chaos seed={args.chaos_seed}" if args.chaos else ""))
+        if args.chaos:
+            from ..elastic import ChaosSchedule
+            sched = ChaosSchedule.seeded(seed=args.chaos_seed, world=world,
+                                         steps=args.steps,
+                                         event_every=args.chaos_every)
+
     print(f"[train] arch={cfg.arch_id} params={cfg.n_params()/1e6:.1f}M "
           f"mesh={dict(zip(axes, shp))} strategy={tc.strategy}")
     losses = []
     t0 = time.time()
     for step in range(args.steps):
+        if sched is not None:
+            for ev in sched.events_at(step):
+                print(f"[train] chaos step {step}: {ev.kind} "
+                      f"worker {ev.worker}"
+                      + (f" x{ev.factor:g}" if ev.kind == "slow" else ""))
+            m2 = sched.apply(cm.membership, step)
+            if m2 is not cm.membership:
+                cm.set_membership(m2)
+                print(f"[train] membership epoch {m2.epoch}: "
+                      f"{m2.n_live}/{m2.world} live")
         batch = data.device_batch(step, mesh=mesh,
                                   data_axes=engine.data_axes or ("data",))
         params, opt, metrics = cm.push_pull(handle, params, opt, batch,
@@ -97,7 +132,9 @@ def main(argv=None):
         if (args.checkpoint_dir and args.checkpoint_every
                 and (step + 1) % args.checkpoint_every == 0):
             save_checkpoint(args.checkpoint_dir, step + 1,
-                            {"params": params, "opt": opt})
+                            {"params": params, "opt": opt},
+                            membership=(cm.membership if args.elastic
+                                        else None))
     print(f"[train] done: first-5 mean {sum(losses[:5])/5:.4f} -> "
           f"last-5 mean {sum(losses[-5:])/5:.4f}")
     return losses

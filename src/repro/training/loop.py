@@ -21,12 +21,18 @@ class TrainState:
 def fit(engine, state: TrainState, data, *, steps: int,
         log_every: int = 10, log_fn: Callable[[str], None] = print,
         checkpoint_dir: str = "", checkpoint_every: int = 0,
-        hooks: Optional[list[Callable[[TrainState, dict], None]]] = None
+        hooks: Optional[list[Callable[[TrainState, dict], None]]] = None,
+        membership_fn: Optional[Callable[[int], object]] = None
         ) -> TrainState:
     """Run ``steps`` PHub train steps from ``state``.
 
     data: SyntheticTokens-like (device_batch(step, mesh, data_axes)).
     hooks: callables (state, metrics) invoked every step.
+    membership_fn: step -> elastic Membership (repro.elastic) or None; a
+    signature change (a worker killed, straggling, or rejoined — e.g. a
+    ChaosSchedule folding events in) rebuilds the compiled step against
+    the new live set, cached per signature so recurring memberships
+    don't retrace.
 
     The loss is materialized on host (a blocking device sync) only at log
     boundaries, on the final step, and when hooks are installed — otherwise
@@ -35,11 +41,24 @@ def fit(engine, state: TrainState, data, *, steps: int,
     batch0 = data.batch_at(state.step)
     shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
               for k, v in batch0.items()}
-    step_fn = engine.make_train_step(shapes)
+    step_cache = {None: engine.make_train_step(shapes)}
+    step_fn = step_cache[None]
     t0 = time.time()
     tokens = 0
     last = state.step + steps - 1
+    membership = None
     for i in range(state.step, state.step + steps):
+        if membership_fn is not None:
+            # called exactly once per step (a stateful provider — e.g. a
+            # closure folding ChaosSchedule events — must not see the
+            # same step twice); the checkpoint below reuses this value
+            membership = membership_fn(i)
+            key = (None if membership is None or membership.all_live
+                   else membership.program_key())
+            if key not in step_cache:
+                step_cache[key] = engine.make_train_step(
+                    shapes, membership=membership)
+            step_fn = step_cache[key]
         batch = data.device_batch(i, mesh=engine.mesh,
                                   data_axes=engine.data_axes or ("data",))
         state.params, state.opt, metrics = step_fn(state.params, state.opt,
@@ -58,5 +77,6 @@ def fit(engine, state: TrainState, data, *, steps: int,
         if (checkpoint_dir and checkpoint_every
                 and state.step % checkpoint_every == 0):
             save_checkpoint(checkpoint_dir, state.step,
-                            {"params": state.params, "opt": state.opt})
+                            {"params": state.params, "opt": state.opt},
+                            membership=membership)
     return state

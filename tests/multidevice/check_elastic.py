@@ -1,0 +1,492 @@
+"""Elastic rack oracle check (run in a subprocess: 12 fake devices — the
+cross-rack-size checkpoint case restores a world-8 run at world 12; every
+other case runs on device subsets of 8 or 6).
+
+Four claims (DESIGN.md §12):
+
+  parity     With every worker live and no resize, the elastic datapath is
+             BITWISE equal to the PR-4 exchange — for nesterov/sgd/adam ×
+             sharded_ps/hierarchical × pipeline_windows {1, 2} × wire
+             {identity, int8}.  The all-live membership must take the
+             static fast path (no mask ops, full-rack divisor), so the
+             compiled program is *identical*, not merely equivalent.
+
+  straggler  A masked-straggler step equals a reference computed over only
+             the live workers' gradients.  With integer-valued pushes and
+             a power-of-two live count (k=4 of 8) the claim is BITWISE
+             (sums exact, divisor exact); at k=7 the non-power-of-two
+             divisor is fused into the update chain differently across
+             compiled programs (the §10/§11 XLA:CPU contraction caveat) —
+             asserted to 1e-4 tolerance, with layout/masking bugs O(1)
+             above it.  An int8-wire masked run must agree between
+             windowed and monolithic schedules within one quantization
+             grid step (same caveat as check_client's wire determinism).
+
+  resize     An 8→6→8 worker resize migrates every declared exchange slot
+             — adam's (m, v, k1, k2) plus the int8 ``wire_ef`` residual —
+             BITWISE on chunk-granular live regions, for a solo service
+             (caller-held state through PHubConnectionManager.resize) and
+             for two co-scheduled tenants (packed slots migrated
+             internally through the extract/re-pack machinery).
+
+  checkpoint A checkpoint saved at world=8 restores at world=6 and
+             world=12 through the rebalance plan, bitwise on live regions,
+             and training continues; restoring against a rack whose
+             membership epoch differs at the same world fails fast naming
+             both epochs.
+
+  chaos      A seeded 8-device kill/slow/rejoin schedule drives a solo job
+             and a 2-tenant co-scheduled domain end to end: every loss
+             finite, epochs advance, and the whole run is bitwise
+             reproducible from the seed.
+
+Usage: python tests/multidevice/check_elastic.py [case ...]
+Cases: parity straggler resize checkpoint chaos
+Prints "OK <case>" lines; exits nonzero on failure.
+"""
+import os
+import sys
+import tempfile
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=12"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.configs import ARCHS, TrainConfig, reduced  # noqa: E402
+from repro.core import (PHubClient, PHubConnectionManager,  # noqa: E402
+                        PHubEngine)
+from repro.checkpoint import (restore_train_state,  # noqa: E402
+                              save_checkpoint)
+from repro.data import SyntheticTokens  # noqa: E402
+from repro.elastic import ChaosSchedule, Membership  # noqa: E402
+from repro.optim import make_optimizer  # noqa: E402
+
+CASES = sys.argv[1:] or ["parity", "straggler", "resize", "checkpoint",
+                         "chaos"]
+failures = 0
+W = 8                                   # rack size for the exchange cases
+STEPS = 3
+B, T = 24, 32                           # batch divides worlds 6, 8, 12
+
+
+def report(ok, name, detail=""):
+    global failures
+    print(f"{'OK' if ok else 'FAIL'} {name} {detail}")
+    failures += 0 if ok else 1
+
+
+def mismatches(a, b):
+    errs = jax.tree.map(
+        lambda x, y: int((np.asarray(x) != np.asarray(y)).sum()), a, b)
+    return sum(jax.tree.leaves(errs))
+
+
+def max_err(a, b):
+    errs = jax.tree.map(
+        lambda x, y: float(np.abs(np.asarray(x, np.float32)
+                                  - np.asarray(y, np.float32)).max()), a, b)
+    return max(jax.tree.leaves(errs))
+
+
+def mesh_of(n, shape=None, axes=("data", "model")):
+    shape = shape or (n, 1)
+    return jax.sharding.Mesh(
+        np.array(jax.devices()[:n]).reshape(shape), axes)
+
+
+def external_pytree():
+    """check_client's external pytree: mixed dtypes, odd shapes, windows=2
+    divides the per-shard chunk count for S=8 and S=4."""
+    return {
+        "conv": {"w": jax.ShapeDtypeStruct((3, 3, 8, 16), jnp.float32),
+                 "b": jax.ShapeDtypeStruct((16,), jnp.float32)},
+        "head": jax.ShapeDtypeStruct((47, 33), jnp.float32),
+        "body": jax.ShapeDtypeStruct((188, 199), jnp.float32),
+        "emb": jax.ShapeDtypeStruct((120, 130), jnp.bfloat16),
+        "bias": jax.ShapeDtypeStruct((47,), jnp.bfloat16),
+    }
+
+
+def int_tree(like, rng, lo, hi, lead=None):
+    def mk(s):
+        shape = ((lead,) + s.shape) if lead else s.shape
+        return jnp.asarray(rng.integers(lo, hi, shape).astype(np.float32)
+                           ).astype(s.dtype)
+    return jax.tree.map(mk, like,
+                        is_leaf=lambda t: isinstance(t, jax.ShapeDtypeStruct))
+
+
+def float_tree(like, rng, lead=None):
+    def mk(s):
+        shape = ((lead,) + s.shape) if lead else s.shape
+        return jnp.asarray(rng.normal(size=shape)).astype(s.dtype)
+    return jax.tree.map(mk, like,
+                        is_leaf=lambda t: isinstance(t, jax.ShapeDtypeStruct))
+
+
+def run_client(tc, mesh, like, params0, grads, membership=None):
+    client = PHubClient(tc, mesh).register(like)
+    if membership is not None:
+        client.set_membership(membership)
+    p = jax.tree.map(lambda x: x + 0, params0)
+    o = client.init_state()
+    for g in grads:
+        p, o = client.push_pull(g, p, o)
+    return p, o
+
+
+# ----------------------------------------------------------------- parity
+
+def check_parity():
+    mesh = mesh_of(8, (2, 4), ("pod", "data"))
+    like = external_pytree()
+    for wf in ("identity", "int8"):
+        for optname in ("nesterov", "sgd", "adam"):
+            for strategy in ("sharded_ps", "hierarchical"):
+                for windows in (1, 2):
+                    if wf == "int8" and (optname, strategy) not in (
+                            ("nesterov", "sharded_ps"),
+                            ("adam", "sharded_ps"),
+                            ("nesterov", "hierarchical")):
+                        continue        # keep the encoded sweep affordable
+                    tc = TrainConfig(optimizer=optname, strategy=strategy,
+                                     lr=3e-2, momentum=0.9,
+                                     chunk_size_bytes=1024,
+                                     pipeline_windows=windows,
+                                     wire_format=wf)
+                    rng = np.random.default_rng(7)
+                    mk = int_tree if wf == "identity" else float_tree
+                    if wf == "identity":
+                        params0 = mk(like, rng, -4, 5)
+                        grads = [mk(like, rng, -8, 9, lead=W)
+                                 for _ in range(STEPS)]
+                    else:
+                        params0 = mk(like, rng)
+                        grads = [mk(like, rng, lead=W)
+                                 for _ in range(STEPS)]
+                    p_ref, o_ref = run_client(tc, mesh, like, params0,
+                                              grads)
+                    p_el, o_el = run_client(tc, mesh, like, params0, grads,
+                                            membership=Membership.full(W))
+                    bad = mismatches(p_ref, p_el) + mismatches(o_ref, o_el)
+                    report(bad == 0,
+                           f"parity {wf} {strategy} opt={optname} "
+                           f"windows={windows}",
+                           f"mismatched_elems={bad}")
+
+
+# -------------------------------------------------------------- straggler
+
+def straggler_membership(kind):
+    """k4: a pow-2 live count (workers 3, 5 dead; 0, 6 straggling) —
+    exact divisor, bitwise claim.  k7: one dead worker — non-pow-2
+    divisor, tolerance claim."""
+    m = Membership.full(W)
+    if kind == "k4":
+        return (m.leave(3).leave(5).mark_slow(0, 2.0).mark_slow(6, 4.0),
+                (1, 2, 4, 7))
+    return m.leave(3), tuple(i for i in range(W) if i != 3)
+
+
+def check_straggler():
+    mesh = mesh_of(8, (2, 4), ("pod", "data"))
+    like = external_pytree()
+    for kind, bitwise in (("k4", True), ("k7", False)):
+        membership, live = straggler_membership(kind)
+        for optname in ("nesterov", "sgd", "adam"):
+            for strategy in ("sharded_ps", "hierarchical"):
+                for windows in (1, 2):
+                    tc = TrainConfig(optimizer=optname, strategy=strategy,
+                                     lr=3e-2, momentum=0.9,
+                                     chunk_size_bytes=1024,
+                                     pipeline_windows=windows,
+                                     wire_format="identity")
+                    rng = np.random.default_rng(11)
+                    params0 = int_tree(like, rng, -4, 5)
+                    grads = [int_tree(like, rng, -8, 9, lead=W)
+                             for _ in range(STEPS)]
+                    p, o = run_client(tc, mesh, like, params0, grads,
+                                      membership=membership)
+                    # reference: the jitted tree-level rule on the mean of
+                    # ONLY the live workers' pushes (exact integer sums)
+                    init_fn, upd_fn = make_optimizer(tc)
+                    upd_jit = jax.jit(upd_fn)
+                    pr, st = params0, init_fn(params0)
+                    for g in grads:
+                        gm = jax.tree.map(
+                            lambda v: (np.asarray(v, np.float32)[list(live)]
+                                       .sum(0) / len(live)).astype(v.dtype),
+                            g)
+                        pr, st = upd_jit(pr, gm, st)
+                    if bitwise:
+                        bad = mismatches(p, pr)
+                        report(bad == 0,
+                               f"straggler {kind} {strategy} opt={optname} "
+                               f"windows={windows}",
+                               f"mismatched_elems={bad}")
+                    else:
+                        err = max_err(p, pr)
+                        report(err < 1e-4,
+                               f"straggler {kind} {strategy} opt={optname} "
+                               f"windows={windows}", f"max_err={err:.2e}")
+
+    # int8 wire under a masked straggler: windowed == monolithic within
+    # one quantization grid step (check_client's cross-program caveat),
+    # and error feedback still accumulates
+    membership, live = straggler_membership("k7")
+    rng = np.random.default_rng(13)
+    params0 = float_tree(like, rng)
+    grads = [float_tree(like, rng, lead=W) for _ in range(STEPS)]
+    GRID = 0.03
+    outs = []
+    for windows in (1, 2):
+        tc = TrainConfig(optimizer="nesterov", strategy="sharded_ps",
+                         lr=3e-2, momentum=0.9, chunk_size_bytes=1024,
+                         pipeline_windows=windows, wire_format="int8")
+        p, o = run_client(tc, mesh, like, params0, grads,
+                          membership=membership)
+        outs.append((jax.tree.map(np.asarray, p),
+                     jax.tree.map(np.asarray, o)))
+    (p1, o1), (p2, o2) = outs
+    bad = sum(jax.tree.leaves(jax.tree.map(
+        lambda a, b: int((np.abs(np.asarray(a, np.float32)
+                                 - np.asarray(b, np.float32))
+                          > GRID).sum()), p1, p2)))
+    res = float(max(np.abs(v["wire_ef"]).max() for v in o1.values()))
+    report(bad == 0 and res > 0, "straggler int8 windowed==monolithic",
+           f"mismatched_elems={bad} max_residual={res:.2e}")
+
+
+# ----------------------------------------------------------------- resize
+
+def _device_batch(eng, cfg, seed):
+    data = SyntheticTokens(cfg, B, T, seed=seed)
+    b = data.batch_at(0)
+    shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in b.items()}
+    return {k: jax.device_put(v, s) for (k, v), s in
+            zip(b.items(), eng.batch_shardings(shapes).values())}
+
+
+def _slot_live_mismatches(eng, a, b):
+    bad = 0
+    for g in eng.chunk_plan.groups:
+        key = str(g.dtype)
+        for slot in a[key]:
+            x = np.asarray(a[key][slot])
+            x = x.reshape(x.shape[0], -1)[:, :g.live_elems]
+            y = np.asarray(b[key][slot])
+            y = y.reshape(y.shape[0], -1)[:, :g.live_elems]
+            bad += int((x != y).sum())
+    return bad
+
+
+def check_resize():
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    tc = TrainConfig(strategy="sharded_ps", optimizer="adam", lr=1e-3,
+                     loss_chunk=32, pipeline_windows=2, wire_format="int8",
+                     chunk_size_bytes=1024)
+
+    # solo: caller-held state through manager.resize, 8 -> 6 -> 8
+    cm = PHubConnectionManager()
+    h = cm.create_service("job", cfg, tc, mesh_of(8))
+    eng = cm.connect_service(h)
+    p, o = cm.init_service(h, jax.random.PRNGKey(0))
+    batch = _device_batch(eng, cfg, 0)
+    for _ in range(2):
+        p, o, m = cm.push_pull(h, p, o, batch)
+    pre = jax.tree.map(np.asarray, o)
+    res = max(float(np.abs(v["wire_ef"]).max()) for v in pre.values())
+    report(res > 0, "resize solo residual nonzero before resize",
+           f"max_residual={res:.2e}")
+    s = cm.resize(mesh_of(6), states={"job": (p, o)})
+    p, o = s["job"]
+    s = cm.resize(mesh_of(8), states={"job": (p, o)})
+    p, o = s["job"]
+    eng = cm.connect_service(h)
+    bad = _slot_live_mismatches(eng, o, pre)
+    names = {n for key in o for n in o[key]}
+    report(bad == 0 and names == {"m", "v", "k1", "k2", "wire_ef"},
+           "resize solo 8->6->8 slots bitwise on live regions",
+           f"mismatched_elems={bad} slots={sorted(names)}")
+    epoch = cm.membership.epoch
+    p, o, m = cm.push_pull(h, p, o, _device_batch(eng, cfg, 0))
+    report(np.isfinite(float(m["loss"])) and epoch == 2,
+           "resize solo training continues",
+           f"loss={float(m['loss']):.4f} epoch={epoch}")
+
+    # and a step AT world 6, mid-cycle (not just pure migration)
+    cm2 = PHubConnectionManager()
+    h2 = cm2.create_service("mid", cfg, tc, mesh_of(8))
+    e2 = cm2.connect_service(h2)
+    p2, o2 = cm2.init_service(h2, jax.random.PRNGKey(1))
+    p2, o2, _ = cm2.push_pull(h2, p2, o2, _device_batch(e2, cfg, 1))
+    s = cm2.resize(mesh_of(6), states={"mid": (p2, o2)})
+    p2, o2 = s["mid"]
+    e2 = cm2.connect_service(h2)
+    p2, o2, m2 = cm2.push_pull(h2, p2, o2, _device_batch(e2, cfg, 1))
+    s = cm2.resize(mesh_of(8), states={"mid": (p2, o2)})
+    p2, o2 = s["mid"]
+    e2 = cm2.connect_service(h2)
+    p2, o2, m2 = cm2.push_pull(h2, p2, o2, _device_batch(e2, cfg, 1))
+    report(np.isfinite(float(m2["loss"])),
+           "resize solo trains at worlds 8/6/8",
+           f"loss={float(m2['loss']):.4f}")
+
+    # 2-tenant co-scheduled domain: packed slots migrate internally
+    cm = PHubConnectionManager()
+    handles, params, opts, batches = [], {}, {}, {}
+    for i, (ns, lr) in enumerate((("jobA", 1e-3), ("jobB", 3e-3))):
+        tci = TrainConfig(strategy="sharded_ps", optimizer="adam", lr=lr,
+                          loss_chunk=32, pipeline_windows=2,
+                          wire_format="int8", chunk_size_bytes=1024)
+        hh = cm.create_service(ns, cfg, tci, mesh_of(8))
+        e = cm.connect_service(hh)
+        params[ns], opts[ns] = cm.init_service(hh, jax.random.PRNGKey(i))
+        batches[ns] = _device_batch(e, cfg, i)
+        handles.append(hh)
+    for hh in handles:
+        ns = hh.namespace
+        for _ in range(2):
+            params[ns], opts[ns], _ = cm.push_pull(hh, params[ns],
+                                                   opts[ns], batches[ns])
+    cm.attach_services(handles, opts)
+    pre = {hh.namespace: jax.tree.map(np.asarray, opts[hh.namespace])
+           for hh in handles}
+    cm.resize(mesh_of(6))
+    moved = cm.last_rebalance["co"]["moved_bytes"]
+    cm.resize(mesh_of(8))
+    report(moved > 0, "resize co domain moved chunks at world 6",
+           f"moved_bytes={moved:.0f} "
+           f"frac={cm.last_rebalance['co']['moved_fraction']:.3f}")
+    bad = 0
+    for hh in handles:
+        ns = hh.namespace
+        back = cm.detach_service(hh)
+        bad += _slot_live_mismatches(cm.connect_service(hh), back, pre[ns])
+        opts[ns] = back
+    report(bad == 0, "resize co 8->6->8 slots bitwise on live regions",
+           f"mismatched_elems={bad}")
+    # re-attach and run a co round at the restored world
+    cm.attach_services(handles, opts)
+    for _ in range(2):
+        new_b = {hh.namespace: _device_batch(cm.connect_service(hh), cfg, 0)
+                 for hh in handles}
+        params, metrics = cm.co_step(handles, params, new_b)
+    ok = all(np.isfinite(float(mm["loss"])) for mm in metrics.values())
+    report(ok, "resize co domain steps after resize cycle", "")
+
+
+# ------------------------------------------------------------- checkpoint
+
+def check_checkpoint():
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    tc = TrainConfig(strategy="sharded_ps", optimizer="adam", lr=1e-3,
+                     loss_chunk=32, pipeline_windows=2,
+                     chunk_size_bytes=1024)
+    eng8 = PHubEngine(cfg=cfg, tc=tc, mesh=mesh_of(8))
+    p, o = eng8.init_state(jax.random.PRNGKey(0))
+    b = _device_batch(eng8, cfg, 0)
+    shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in b.items()}
+    step = eng8.make_train_step(shapes)
+    for _ in range(2):
+        p, o, _ = step(p, o, b)
+    ref = jax.tree.map(np.asarray, o)
+    d = tempfile.mkdtemp()
+    m8 = Membership.full(8).leave(2).join(2)        # epoch 2
+    save_checkpoint(d, 2, {"params": p, "opt": o}, membership=m8)
+
+    for world in (6, 12):
+        engN = PHubEngine(cfg=cfg, tc=tc, mesh=mesh_of(world))
+        st, pN, oN = restore_train_state(d, engN)
+        bad = _slot_live_mismatches(engN, oN, ref)
+        bN = _device_batch(engN, cfg, 0)
+        shapesN = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                   for k, v in bN.items()}
+        pN, oN, mN = engN.make_train_step(shapesN)(pN, oN, bN)
+        report(bad == 0 and st == 2 and np.isfinite(float(mN["loss"])),
+               f"checkpoint world 8->{world} restore",
+               f"mismatched_elems={bad} loss={float(mN['loss']):.4f}")
+
+    # wrong membership at the SAME world: fail fast naming both epochs
+    try:
+        restore_train_state(d, eng8, membership=Membership.full(8))
+        report(False, "checkpoint wrong-membership fail-fast",
+               "no error raised")
+    except ValueError as e:
+        msg = str(e)
+        report("epoch 2" in msg and "epoch 0" in msg,
+               "checkpoint wrong-membership fail-fast", msg[:70])
+    # ...but a resize (different world) is legitimate, not membership drift
+    eng6 = PHubEngine(cfg=cfg, tc=tc, mesh=mesh_of(6))
+    st, _, _ = restore_train_state(d, eng6, membership=Membership.full(6))
+    report(st == 2, "checkpoint cross-world restore with membership", "")
+
+
+# ------------------------------------------------------------------ chaos
+
+def check_chaos():
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+
+    def run(seed):
+        cm = PHubConnectionManager()
+        handles, params, opts, batches = [], {}, {}, {}
+        for i, (ns, lr) in enumerate((("jobA", 3e-2), ("jobB", 1e-2))):
+            tci = TrainConfig(strategy="sharded_ps", lr=lr, momentum=0.9,
+                              loss_chunk=32, pipeline_windows=2,
+                              chunk_size_bytes=1024)
+            hh = cm.create_service(ns, cfg, tci, mesh_of(8))
+            e = cm.connect_service(hh)
+            params[ns], opts[ns] = cm.init_service(hh,
+                                                   jax.random.PRNGKey(i))
+            batches[ns] = _device_batch(e, cfg, i)
+            handles.append(hh)
+        cm.attach_services(handles)
+        sched = ChaosSchedule.seeded(seed=seed, world=8, steps=15,
+                                     event_every=3)
+        losses = []
+        for s in range(15):
+            m2 = sched.apply(cm.membership, s)
+            if m2 is not cm.membership:
+                cm.set_membership(m2)
+            params_new, metrics = cm.co_step(handles, params, batches)
+            params = params_new
+            losses.append([float(metrics[ns]["loss"])
+                           for ns in ("jobA", "jobB")])
+        return losses, cm.membership.epoch, len(sched.events)
+
+    l1, epoch1, n_ev = run(21)
+    l2, epoch2, _ = run(21)
+    flat = [x for row in l1 for x in row]
+    report(all(np.isfinite(flat)) and n_ev > 0 and epoch1 > 0,
+           "chaos co-scheduled run finite under churn",
+           f"events={n_ev} final_epoch={epoch1}")
+    report(l1 == l2 and epoch1 == epoch2,
+           "chaos run bitwise reproducible from seed",
+           f"losses_equal={l1 == l2}")
+
+
+def main():
+    for case in CASES:
+        if case == "parity":
+            check_parity()
+        elif case == "straggler":
+            check_straggler()
+        elif case == "resize":
+            check_resize()
+        elif case == "checkpoint":
+            check_checkpoint()
+        elif case == "chaos":
+            check_chaos()
+        else:
+            raise SystemExit(f"unknown case {case!r}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,238 @@
+"""Elastic rack subsystem (DESIGN.md §12).
+
+Fast tests cover the membership state machine (epochs, quorum, masks),
+the chaos schedule's determinism and quorum safety, and the rebalance
+plan's apply/accounting edges (the move-once / symmetric-difference /
+composition contracts are hypothesis-tested in
+tests/test_elastic_properties.py).
+
+The 12-device oracle (all-live elastic BITWISE == the PR-4 exchange;
+masked-straggler == live-only reference; 8→6→8 resize migrating every
+slot bitwise on live regions; cross-rack-size checkpoint restore; the
+seeded chaos schedule end to end) runs in a subprocess like
+tests/test_client.py.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+import jax
+
+from repro.core.chunking import build_plan, pack_domains
+from repro.core import cost_model
+from repro.elastic import (ChaosSchedule, Membership, SOLO_TENANT,
+                           plan_rebalance, solo_resize_plan)
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+# ------------------------------------------------------------- membership
+
+def test_membership_transitions_bump_epoch():
+    m = Membership.full(8)
+    assert m.epoch == 0 and m.all_live and m.n_live == 8
+    m = m.leave(3)
+    assert m.epoch == 1 and m.n_live == 7 and not m.all_live
+    assert m.live_ranks == (0, 1, 2, 4, 5, 6, 7)
+    m = m.mark_slow(5, 4.0)
+    assert m.epoch == 2 and m.n_live == 6
+    assert m.workers[5].latency == 4.0
+    m = m.mark_recovered(5)
+    m = m.join(3)
+    assert m.epoch == 4 and m.all_live
+    # all-live again, but the epoch history is preserved in the signature
+    assert m.signature()[0] == 4
+
+
+def test_membership_mask_matches_live_set():
+    m = Membership.full(4).leave(1).mark_slow(2, 2.0)
+    assert m.mask().tolist() == [1.0, 0.0, 0.0, 1.0]
+    assert m.mask().dtype == np.float32
+
+
+def test_membership_invalid_transitions():
+    m = Membership.full(4)
+    with pytest.raises(ValueError, match="already live"):
+        m.join(0)
+    with pytest.raises(ValueError, match="outside rack"):
+        m.leave(7)
+    m2 = m.leave(2)
+    with pytest.raises(ValueError, match="already left"):
+        m2.leave(2)
+    with pytest.raises(ValueError, match="join it back"):
+        m2.mark_slow(2, 2.0)
+    with pytest.raises(ValueError, match=">= 1.0"):
+        m.mark_slow(1, 0.5)
+
+
+def test_membership_quorum_floor():
+    m = Membership.full(4, min_live=3)
+    m = m.leave(0)
+    with pytest.raises(RuntimeError, match="below quorum"):
+        m.leave(1)
+    m.require_quorum()
+    with pytest.raises(RuntimeError, match="below quorum"):
+        m.require_quorum(4)
+
+
+def test_membership_world_validation_and_resize():
+    m = Membership.full(8).leave(1)
+    with pytest.raises(ValueError, match="resize the rack"):
+        m.validate_world(6)
+    r = m.resized(6)
+    assert r.world == 6 and r.all_live and r.epoch == m.epoch + 1
+
+
+def test_membership_program_key_ignores_epoch():
+    """Compiled steps depend on (world, live set), not the epoch: a
+    worker dying, rejoining, and dying again must reuse the first
+    compilation (program_key equal), while the full signature still
+    tells the two epochs apart (provenance)."""
+    m1 = Membership.full(8).leave(3)
+    m2 = m1.join(3).leave(3)
+    assert m1.epoch != m2.epoch
+    assert m1.signature() != m2.signature()
+    assert m1.program_key() == m2.program_key()
+    assert m1.program_key() != Membership.full(8).leave(4).program_key()
+
+
+def test_client_step_cache_reuses_recurring_live_sets():
+    """PHubClient keys push_pull steps by program key and folds all-live
+    to the static entry — churn that revisits a live set never
+    retraces."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import TrainConfig
+    from repro.core import PHubClient
+    like = {"w": jax.ShapeDtypeStruct((64, 48), jnp.float32)}
+    mesh = jax.make_mesh((1,), ("data",))
+    client = PHubClient(TrainConfig(chunk_size_bytes=1024),
+                        mesh).register(like)
+    grads = jax.tree.map(lambda s: jnp.zeros((1,) + s.shape), like,
+                         is_leaf=lambda t: isinstance(t,
+                                                      jax.ShapeDtypeStruct))
+    params = jax.tree.map(lambda s: jnp.zeros(s.shape), like,
+                          is_leaf=lambda t: isinstance(t,
+                                                       jax.ShapeDtypeStruct))
+    o = client.init_state()
+    params, o = client.push_pull(grads, params, o)        # static entry
+    client.set_membership(Membership.full(1))             # all-live folds
+    params, o = client.push_pull(grads, params, o)
+    assert len(client._steps) == 1
+    client.set_membership(Membership.full(1).resized(1))  # epoch 1, all
+    params, o = client.push_pull(grads, params, o)        # live: reused
+    assert len(client._steps) == 1
+
+
+# ------------------------------------------------------------------ chaos
+
+def test_chaos_schedule_deterministic_and_quorum_safe():
+    a = ChaosSchedule.seeded(seed=5, world=8, steps=60, event_every=3)
+    b = ChaosSchedule.seeded(seed=5, world=8, steps=60, event_every=3)
+    assert a.events == b.events and len(a.events) > 0
+    m = Membership.full(8, min_live=5)
+    for step in range(60):
+        m = a.apply(m, step)        # must never violate quorum
+        assert m.n_live >= 5
+    f = a.latency_factors(59)
+    assert f.shape == (8,) and (f >= 1.0).all()
+
+
+def test_chaos_apply_is_noop_on_eventless_steps():
+    sched = ChaosSchedule.seeded(seed=5, world=8, steps=30, event_every=10)
+    m = Membership.full(8)
+    assert sched.apply(m, 1) is m           # same object, same epoch
+
+
+# -------------------------------------------------------- rebalance plans
+
+def _domain(chunks_per_tenant, n_shards, ce=256):
+    """A packed domain with the given per-tenant chunk counts (float32,
+    chunk_bytes = ce * 4)."""
+    plans = {}
+    for i, c in enumerate(chunks_per_tenant):
+        tree = {"w": jax.ShapeDtypeStruct((c * ce,), jnp.float32)}
+        plans[f"t{i}"] = build_plan(tree, chunk_bytes=ce * 4,
+                                    n_shards=n_shards)
+    return pack_domains(plans, n_shards=n_shards, chunk_bytes=ce * 4)
+
+
+def test_apply_scatters_tenant_content_exactly():
+    old, new = _domain([3, 5], 4), _domain([3, 5], 2)
+    plan = plan_rebalance(old, new)
+    (key,) = plan.groups
+    g = old.groups[key]
+    rows = np.arange(g.padded, dtype=np.float32)[None]
+    out = plan.apply(key, rows)
+    for tenant in ("t0", "t1"):
+        a = np.asarray(old.unpack(key, jnp.asarray(rows[0]), tenant))
+        b = np.asarray(new.unpack(key, jnp.asarray(out[0]), tenant))
+        np.testing.assert_array_equal(a, b)
+
+
+def test_plan_rejects_mismatched_partitions():
+    old = _domain([3, 5], 4)
+    with pytest.raises(ValueError, match="tenant sets differ"):
+        plan_rebalance(old, _domain([3, 5, 2], 4))
+    with pytest.raises(ValueError, match="extents"):
+        plan_rebalance(old, _domain([3, 6], 4))
+
+
+def test_solo_resize_plan_is_identity_on_live():
+    plan = solo_resize_plan(np.dtype(np.float32), 256, 1024, 2048, 1536)
+    (g,) = plan.groups.values()
+    assert g.moves[SOLO_TENANT] == ((0, 0, 0, 1024),)
+    rows = np.arange(2048, dtype=np.float32)[None]
+    out = plan.apply(str(np.dtype(np.float32)), rows)
+    assert out.shape == (1, 1536)
+    np.testing.assert_array_equal(out[0, :1024], rows[0, :1024])
+    assert (out[0, 1024:] == 0).all()
+
+
+def test_rebalance_traffic_charges_only_the_delta():
+    old, new = _domain([3, 5], 4), _domain([3, 5], 2)
+    plan = plan_rebalance(old, new)
+    from repro.optim.protocol import SlotSpec
+    acct = cost_model.rebalance_traffic(
+        plan, (SlotSpec("m"), SlotSpec("wire_ef", "float32")))
+    (key,) = plan.groups
+    moved = plan.groups[key].moved_elems()
+    assert acct["moved_bytes"] == moved * 4 * 3       # param + 2 slots
+    assert 0.0 <= acct["moved_fraction"] <= 1.0
+    ident = plan_rebalance(old, old)
+    acct0 = cost_model.rebalance_traffic(ident, ())
+    assert acct0["moved_bytes"] == 0.0                # no-op resize is free
+
+
+def test_quota_movement_lower_bound():
+    from repro.core.partition import quota_movement
+    a = [[3, 1], [0, 4]]
+    b = [[2, 2], [2, 2]]
+    assert quota_movement(a, b) == 1 + 2
+    assert quota_movement(a, a) == 0
+    # resize: shard counts differ
+    assert quota_movement([[4, 4]], [[3, 3, 2]]) == 2
+
+
+# ----------------------------------------------------------- multi-device
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case", ["parity", "straggler", "resize",
+                                  "checkpoint", "chaos"])
+def test_multidevice_elastic_oracle(case):
+    """The elastic datapath is bitwise the PR-4 exchange when all workers
+    are live; masked stragglers equal the live-only reference; 8→6→8
+    resizes migrate every slot bitwise on live regions; checkpoints
+    restore across rack sizes; a seeded chaos schedule runs end to end —
+    12 forced host devices."""
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "multidevice",
+                                      "check_elastic.py"), case],
+        capture_output=True, text=True, timeout=1500,
+        env={**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")})
+    assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-3000:]
+    assert "FAIL" not in proc.stdout

@@ -1,0 +1,121 @@
+"""Hypothesis property tests for rebalance delta plans (DESIGN.md §12).
+
+The three contracts the resize machinery rests on:
+  * a plan moves each tenant chunk at most once (every chunk appears in
+    exactly one run; run sources and destinations each tile the tenant's
+    extent exactly once);
+  * the delta runs (src != dst) cover exactly the symmetric difference of
+    the two placements — an unchanged chunk never costs movement, which
+    is the minimal-movement property cost_model.rebalance_traffic
+    charges by;
+  * plans compose: plan(a→b) ∘ plan(b→c) == plan(a→c) on final placement,
+    and applying the composition equals applying the two in sequence.
+"""
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.chunking import build_plan, pack_domains  # noqa: E402
+from repro.elastic import plan_rebalance  # noqa: E402
+
+
+def _domain(chunks_per_tenant, n_shards, ce=256):
+    """A packed domain with the given per-tenant chunk counts (float32,
+    chunk_bytes = ce * 4)."""
+    plans = {}
+    for i, c in enumerate(chunks_per_tenant):
+        tree = {"w": jax.ShapeDtypeStruct((c * ce,), jnp.float32)}
+        plans[f"t{i}"] = build_plan(tree, chunk_bytes=ce * 4,
+                                    n_shards=n_shards)
+    return pack_domains(plans, n_shards=n_shards, chunk_bytes=ce * 4)
+
+
+def _placement_map(domain, key):
+    """{tenant: {tenant_chunk: packed_chunk}} ground truth from the
+    domain's own offset tables."""
+    g = domain.groups[key]
+    ce = g.chunk_elems
+    out = {}
+    for s in g.slots:
+        m = {}
+        for toff, poff, ln in s.runs:
+            for k in range(ln // ce):
+                m[(toff + k * ce) // ce] = (poff + k * ce) // ce
+        out[s.tenant] = m
+    return out
+
+
+chunk_counts = st.lists(st.integers(1, 23), min_size=1, max_size=4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(chunk_counts, st.integers(2, 9), st.integers(2, 9))
+def test_plan_moves_each_chunk_at_most_once(counts, s_old, s_new):
+    """Every tenant chunk appears in exactly one run; run sources and
+    destinations each tile the tenant's extent exactly once."""
+    old, new = _domain(counts, s_old), _domain(counts, s_new)
+    plan = plan_rebalance(old, new)
+    for key, g in plan.groups.items():
+        ce = g.chunk_elems
+        for tenant, runs in g.moves.items():
+            toffs, srcs, dsts = set(), set(), set()
+            ext = 0
+            for toff, src, dst, ln in runs:
+                assert ln % ce == 0 and ln > 0
+                for k in range(0, ln, ce):
+                    for acc, v in ((toffs, toff + k), (srcs, src + k),
+                                   (dsts, dst + k)):
+                        assert v not in acc          # at most once
+                        acc.add(v)
+                ext += ln
+            slot = old.groups[key].slot(tenant)
+            assert ext == slot.padded                # exactly once
+
+
+@settings(max_examples=40, deadline=None)
+@given(chunk_counts, st.integers(2, 9), st.integers(2, 9))
+def test_plan_delta_is_exactly_the_symmetric_difference(counts, s_old,
+                                                        s_new):
+    """Chunks in delta runs (src != dst) == chunks whose placement differs
+    between the partitions; everything else stays put."""
+    old, new = _domain(counts, s_old), _domain(counts, s_new)
+    plan = plan_rebalance(old, new)
+    for key in plan.groups:
+        pm_old = _placement_map(old, key)
+        pm_new = _placement_map(new, key)
+        placements = plan.chunk_placements(key)
+        for tenant, pairs in placements.items():
+            changed_ref = {c for c in pm_old[tenant]
+                           if pm_old[tenant][c] != pm_new[tenant][c]}
+            moved = set()
+            for i, (src, dst) in enumerate(pairs):
+                assert pm_old[tenant][i] == src
+                assert pm_new[tenant][i] == dst
+                if src != dst:
+                    moved.add(i)
+            assert moved == changed_ref
+
+
+@settings(max_examples=25, deadline=None)
+@given(chunk_counts, st.integers(2, 9), st.integers(2, 9),
+       st.integers(2, 9))
+def test_plans_compose(counts, s_a, s_b, s_c):
+    """plan(a→b) ∘ plan(b→c) == plan(a→c) on final placement, and
+    applying the composed plan equals applying the two in sequence."""
+    da, db, dc = (_domain(counts, s) for s in (s_a, s_b, s_c))
+    p_ab, p_bc = plan_rebalance(da, db), plan_rebalance(db, dc)
+    p_ac = plan_rebalance(da, dc)
+    comp = p_ab.compose(p_bc)
+    for key in p_ac.groups:
+        assert comp.chunk_placements(key) == p_ac.chunk_placements(key)
+        rng = np.random.default_rng(0)
+        rows = rng.normal(size=(1, p_ac.groups[key].old_padded)
+                          ).astype(np.float32)
+        via = p_bc.apply(key, p_ab.apply(key, rows))
+        direct = p_ac.apply(key, rows)
+        np.testing.assert_array_equal(via, direct)
