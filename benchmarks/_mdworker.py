@@ -651,13 +651,136 @@ def bench_elastic_resize(p):
             "slot_mismatches": bad}
 
 
+def bench_fault_recovery(p):
+    """Self-healing cost model (DESIGN.md §13), three measurements on a
+    GoogleNet-class parameter budget:
+
+      1. clean-path sanity overhead: the in-graph NaN/Inf + norm gate
+         added to the train step (fused health scan, one (world,) psum,
+         the where-mask) vs the plain step — the accepted budget is 3%;
+      2. supervised steps/s vs a plain loop that also host-syncs its
+         loss every step (isolates the supervisor's host digest);
+      3. recovery latency after a rack-wide NaN storm: detection steps,
+         rollback restore latency, and replayed steps.
+    """
+    import tempfile
+
+    import jax
+    import numpy as np
+    from repro.configs import ARCHS, TrainConfig, reduced
+    from repro.core import PHubEngine
+    from repro.data import SyntheticTokens
+    from repro.elastic import FaultEvent, FaultSchedule, NAN_PUSH
+    from repro.resilience import (SanityConfig, SupervisorConfig,
+                                  TrainSupervisor)
+    from repro.training.loop import TrainState
+
+    world = p["data_size"]
+    reps = p.get("reps", 7)
+    seq = p.get("seq", 64)
+    batch_n = p.get("batch", 2 * world)
+    mesh = jax.make_mesh((world, 1), ("data", "model"))
+    cfg = reduced(ARCHS[p.get("arch", "llama3.2-1b")],
+                  d_model=p.get("d_model", 256))
+    tc = TrainConfig(lr=1e-2, loss_chunk=seq,
+                     chunk_size_bytes=p.get("chunk_kb", 32) * 1024)
+    eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
+    data = SyntheticTokens(cfg, batch_n, seq, seed=0)
+    batch0 = data.batch_at(0)
+    shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in batch0.items()}
+
+    def feed(i):
+        return data.device_batch(i, mesh=mesh,
+                                 data_axes=eng.data_axes or ("data",))
+
+    def med_step_us(step, extra=()):
+        """Median wall time per committed step (donated state threads
+        through; first two steps are compile+warmup, dropped)."""
+        params, opt = eng.init_state(jax.random.PRNGKey(0))
+        ts = []
+        for i in range(reps + 2):
+            t0 = time.perf_counter()
+            params, opt, m = step(params, opt, feed(i), *extra)
+            jax.block_until_ready(m["loss"])
+            ts.append(time.perf_counter() - t0)
+        ts = sorted(ts[2:])
+        return ts[len(ts) // 2] * 1e6
+
+    # 1 — clean-path gate overhead (no injection input: the deploy config)
+    us_plain = med_step_us(eng.make_train_step(shapes))
+    h = {"norm_hi": np.float32(np.inf)}
+    us_sanity = med_step_us(
+        eng.make_train_step(shapes, sanity=SanityConfig()), extra=(h,))
+
+    # 2 — supervised loop vs a plain loop with the same per-step host sync
+    def run_plain(steps):
+        params, opt = eng.init_state(jax.random.PRNGKey(0))
+        step = eng.make_train_step(shapes)
+        params, opt, m = step(params, opt, feed(0))     # compile
+        float(m["loss"])
+        t0 = time.perf_counter()
+        for i in range(1, steps + 1):
+            params, opt, m = step(params, opt, feed(i))
+            float(m["loss"])                            # host sync
+        return steps / (time.perf_counter() - t0)
+
+    def make_supervised(d, every=0):
+        sup = TrainSupervisor(
+            eng, SupervisorConfig(
+                sanity=SanityConfig(allow_injection=True, warmup=2),
+                checkpoint_dir=d, checkpoint_every=every, keep_k=3,
+                divergence_patience=2),
+            faults=None, log_fn=None)
+        params, opt = eng.init_state(jax.random.PRNGKey(0))
+        return sup, TrainState(params=params, opt=opt)
+
+    steps = p.get("steps", 10)
+    sps_plain = run_plain(steps)
+    with tempfile.TemporaryDirectory() as d:
+        sup, st = make_supervised(d)
+        sup.run_step(st, feed(0), shapes)               # compile
+        t0 = time.perf_counter()
+        while st.step <= steps:
+            sup.run_step(st, feed(st.step), shapes)
+        sps_sup = steps / (time.perf_counter() - t0)
+
+    # 3 — recovery latency after a rack-wide NaN storm (2 dead steps ->
+    #     divergence verdict -> rollback to the last durable snapshot)
+    with tempfile.TemporaryDirectory() as d:
+        sup, st = make_supervised(d, every=2)
+        sup.faults = FaultSchedule(
+            [FaultEvent(step=6, kind=NAN_PUSH, worker=w, duration=2)
+             for w in range(world)], world=world)
+        storm_t0 = None
+        while st.step < 10 and not sup.rollbacks:
+            if st.step == 6:
+                storm_t0 = time.perf_counter()
+            sup.run_step(st, feed(st.step), shapes)
+        detect_recover_s = time.perf_counter() - storm_t0
+        rolled_from = 8                                  # storm at 6,7
+        replayed = rolled_from - st.step
+
+    return {"us_plain": us_plain, "us_sanity": us_sanity,
+            "sanity_overhead": us_sanity / us_plain - 1.0,
+            "n_params": cfg.n_params(),
+            "steps_per_s_plain": sps_plain,
+            "steps_per_s_supervised": sps_sup,
+            "supervisor_overhead": sps_plain / sps_sup - 1.0,
+            "rollbacks": sup.rollbacks,
+            "rollback_restore_ms": sup.last_rollback_s * 1e3,
+            "detect_recover_ms": detect_recover_s * 1e3,
+            "replayed_steps": replayed}
+
+
 BENCHES = {"exchange_only": bench_exchange_only,
            "train_step": bench_train_step,
            "pipeline_exchange": bench_pipeline_exchange,
            "wire_exchange": bench_wire_exchange,
            "multitenant": bench_multitenant,
            "elastic_straggler": bench_elastic_straggler,
-           "elastic_resize": bench_elastic_resize}
+           "elastic_resize": bench_elastic_resize,
+           "fault_recovery": bench_fault_recovery}
 
 
 def main():

@@ -21,6 +21,9 @@ Prints ``name,us_per_call,derived`` CSV rows (plus section markers).
   elastic_resilience  D §12            k-of-n vs full-barrier exchange under
                                        stragglers; throughput vs resize
                                        frequency
+  fault_recovery      D §13            sanity-gate overhead on the clean
+                                       path; supervised steps/s; recovery
+                                       latency after a NaN storm
 
 Run all: PYTHONPATH=src python -m benchmarks.run
 Subset:  PYTHONPATH=src python -m benchmarks.run tall_vs_wide roofline
@@ -39,7 +42,8 @@ MODULES = ["bandwidth_table2", "cost_table5", "comm_schemes", "hierarchical",
            "key_balance",
            "tall_vs_wide", "caching", "overhead_breakdown", "roofline",
            "chunk_size", "zero_compute", "pipeline_overlap", "multitenant",
-           "optimizer_sweep", "wire_sweep", "elastic_resilience"]
+           "optimizer_sweep", "wire_sweep", "elastic_resilience",
+           "fault_recovery"]
 
 
 def select_modules(args: list) -> tuple:

@@ -1,2 +1,5 @@
-from .checkpointer import (save_checkpoint, load_checkpoint, load_manifest,
-                           latest_step, restore_train_state)
+from .checkpointer import (CheckpointCorruptError, CheckpointError,
+                           checkpoint_steps, latest_step, load_checkpoint,
+                           load_manifest, prune_checkpoints,
+                           restore_latest_valid, restore_train_state,
+                           save_checkpoint, verify_checkpoint)

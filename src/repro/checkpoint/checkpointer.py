@@ -29,9 +29,25 @@ from __future__ import annotations
 import json
 import os
 import re
+import shutil
+import zlib
 
 import jax
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """Base class for checkpoint read/write failures."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """A checkpoint on disk is truncated, bit-flipped, or half-written.
+
+    Raised *by name* from every load path — a partial write must never
+    surface as a raw zipfile/unpickle/shape traceback — so callers
+    (``restore_latest_valid``, the resilience supervisor) can skip to the
+    previous good snapshot instead of dying on an opaque exception.
+    """
 
 
 def _flatten(tree, prefix=""):
@@ -65,24 +81,144 @@ def _unflatten(flat: dict):
     return fix(tree)
 
 
-def save_checkpoint(directory: str, step: int, tree, membership=None) -> str:
-    """``membership``: the rack's elastic Membership at save time — its
+def _array_crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _fsync_path(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def save_checkpoint(directory: str, step: int, tree, membership=None, *,
+                    keep_k: int | None = None) -> str:
+    """Durable two-phase write: arrays + manifest land in a hidden tmp
+    directory (whose name never matches the ``step_*`` pattern, so a
+    crash mid-write is invisible to ``latest_step``), every file is
+    fsync'd, and only then is the tmp dir atomically renamed into place
+    — a checkpoint either exists completely or not at all.  The manifest
+    carries a per-array CRC32 so any later truncation or bit-flip is
+    detected by ``verify_checkpoint``/``load_checkpoint`` instead of
+    surfacing as silently-wrong weights.
+
+    ``membership``: the rack's elastic Membership at save time — its
     (epoch, world) is recorded in the manifest so a restore into a
     different rack can tell a legitimate resize (world changed: migrate
     through the rebalance plan) from membership drift (same world,
-    different epoch: fail fast naming both epochs)."""
-    path = os.path.join(directory, f"step_{step:08d}")
-    os.makedirs(path, exist_ok=True)
+    different epoch: fail fast naming both epochs).
+
+    ``keep_k``: after a successful commit, prune to the newest ``keep_k``
+    snapshots (None keeps everything)."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = os.path.join(directory, f".tmp-step_{step:08d}-{os.getpid()}")
+    os.makedirs(directory, exist_ok=True)
+    if os.path.isdir(tmp):                       # stale tmp from a crash
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     flat = _flatten(tree)
     arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
-    np.savez(os.path.join(path, "arrays.npz"), **arrays)
-    manifest = {"step": step, "keys": sorted(arrays)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    _fsync_path(os.path.join(tmp, "arrays.npz"))
+    manifest = {"step": step, "keys": sorted(arrays),
+                "checksums": {k: _array_crc(v) for k, v in arrays.items()},
+                "shapes": {k: list(v.shape) for k, v in arrays.items()},
+                "dtypes": {k: str(v.dtype) for k, v in arrays.items()}}
     if membership is not None:
         manifest["membership"] = {"epoch": membership.epoch,
                                   "world": membership.world}
-    with open(os.path.join(path, "manifest.json"), "w") as f:
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
-    return path
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.isdir(final):                     # re-save of the same step
+        trash = final + ".stale"
+        if os.path.isdir(trash):
+            shutil.rmtree(trash)
+        os.rename(final, trash)
+        os.rename(tmp, final)
+        shutil.rmtree(trash)
+    else:
+        os.rename(tmp, final)                    # the commit point
+    _fsync_path(directory)
+    if keep_k is not None:
+        prune_checkpoints(directory, keep_k)
+    return final
+
+
+def checkpoint_steps(directory: str) -> list[int]:
+    """All committed snapshot steps under ``directory``, ascending."""
+    if not os.path.isdir(directory):
+        return []
+    return sorted(int(m.group(1)) for d in os.listdir(directory)
+                  if (m := re.fullmatch(r"step_(\d+)", d)))
+
+
+def prune_checkpoints(directory: str, keep_k: int) -> list[int]:
+    """Delete all but the newest ``keep_k`` snapshots; returns the steps
+    removed."""
+    if keep_k < 1:
+        raise ValueError(f"keep_k must be >= 1, got {keep_k}")
+    victims = checkpoint_steps(directory)[:-keep_k]
+    for s in victims:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"))
+    return victims
+
+
+def verify_checkpoint(directory: str, step: int | None = None) -> dict:
+    """Validate one snapshot end to end: manifest present and parseable,
+    archive readable, every manifest key present with the recorded shape,
+    and — when the manifest carries checksums (every durable write does)
+    — a per-array CRC32 match.  Returns the manifest on success; raises
+    ``CheckpointCorruptError`` naming the first failure otherwise.
+    Pre-durability snapshots without checksums verify structurally only.
+    """
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    mpath = os.path.join(path, "manifest.json")
+    if not os.path.exists(mpath):
+        raise CheckpointCorruptError(
+            f"checkpoint step_{step:08d}: manifest.json missing "
+            f"(half-written snapshot?)")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (ValueError, OSError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint step_{step:08d}: manifest.json unreadable: "
+            f"{e}") from e
+    checksums = manifest.get("checksums", {})
+    shapes = manifest.get("shapes", {})
+    try:
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            files = set(data.files)
+            for key in manifest.get("keys", sorted(files)):
+                if key not in files:
+                    raise CheckpointCorruptError(
+                        f"checkpoint step_{step:08d}: array {key!r} listed "
+                        f"in manifest but missing from archive (truncated "
+                        f"write)")
+                arr = data[key]                  # decompress => CRC-checked
+                if key in shapes and list(arr.shape) != shapes[key]:
+                    raise CheckpointCorruptError(
+                        f"checkpoint step_{step:08d}: array {key!r} shape "
+                        f"{list(arr.shape)} != manifest {shapes[key]}")
+                if key in checksums and _array_crc(arr) != checksums[key]:
+                    raise CheckpointCorruptError(
+                        f"checkpoint step_{step:08d}: array {key!r} fails "
+                        f"CRC32 (bit-flip or partial write)")
+    except CheckpointCorruptError:
+        raise
+    except Exception as e:   # BadZipFile, zlib.error, EOFError, OSError...
+        raise CheckpointCorruptError(
+            f"checkpoint step_{step:08d}: arrays.npz unreadable "
+            f"({type(e).__name__}: {e}) — truncated or corrupt "
+            f"archive") from e
+    return manifest
 
 
 def load_manifest(directory: str, step: int | None = None) -> dict:
@@ -104,13 +240,26 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
-def load_checkpoint(directory: str, step: int | None = None):
+def load_checkpoint(directory: str, step: int | None = None, *,
+                    verify: bool = True):
+    """Load one snapshot; with ``verify`` (default) the read is gated on
+    ``verify_checkpoint`` so a truncated archive or a bit-flipped array
+    raises ``CheckpointCorruptError`` by name instead of leaking a raw
+    zipfile/shape traceback mid-restore."""
     step = step if step is not None else latest_step(directory)
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {directory}")
+    if verify:
+        verify_checkpoint(directory, step)
     path = os.path.join(directory, f"step_{step:08d}")
-    data = np.load(os.path.join(path, "arrays.npz"))
-    return step, _unflatten({k: data[k] for k in data.files})
+    try:
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            flat = {k: data[k] for k in data.files}
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"checkpoint step_{step:08d}: arrays.npz unreadable "
+            f"({type(e).__name__}: {e})") from e
+    return step, _unflatten(flat)
 
 
 def _is_flat_store(params) -> bool:
@@ -168,6 +317,10 @@ def restore_train_state(directory: str, engine, step: int | None = None,
                 f"(membership=None)")
     step, tree = load_checkpoint(directory, step)
     params, opt = tree["params"], tree.get("opt", {})
+    if engine is None:
+        # host-side inspection / stub engines: hand back the verified
+        # arrays as saved, no resharding or slot reconciliation
+        return step, params, opt
     flat_ckpt = _is_flat_store(params)
     if engine.tc.flat_residency and not flat_ckpt:
         params = engine.store_from_params(params)
@@ -258,6 +411,33 @@ def restore_train_state(directory: str, engine, step: int | None = None,
             f"{[s.name for s in engine.sopt.slots]}) does not declare; "
             f"restoring would silently drop optimizer state")
     return step, params, _rebuild_like(oshapes, vals)
+
+
+def restore_latest_valid(directory: str, engine, membership=None):
+    """Walk snapshots newest-first and restore the first one that passes
+    verification — the recovery entry point after a crash or a detected
+    corruption.  Corrupt/partial snapshots (``CheckpointCorruptError``)
+    are skipped; non-corruption failures (membership drift, optimizer
+    slot mismatch) propagate, because an *older* snapshot would fail the
+    same way and silently resuming it would hide a real configuration
+    bug.  Returns (step, params, opt, skipped) where ``skipped`` lists
+    the corrupt steps passed over; raises ``CheckpointError`` when no
+    valid snapshot survives."""
+    steps = checkpoint_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    skipped = []
+    for s in reversed(steps):
+        try:
+            step, params, opt = restore_train_state(
+                directory, engine, step=s, membership=membership)
+            return step, params, opt, skipped
+        except CheckpointCorruptError:
+            skipped.append(s)
+    raise CheckpointError(
+        f"no valid checkpoint under {directory}: all of "
+        f"{[f'step_{s:08d}' for s in reversed(steps)]} failed "
+        f"verification")
 
 
 def _rebuild_like(shapes_tree, vals: dict, prefix=""):

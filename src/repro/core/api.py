@@ -75,6 +75,9 @@ class PHubConnectionManager:
         # and recurring live sets reuse their first compilation
         self._membership: Optional[Membership] = None
         self.last_rebalance: Optional[dict] = None
+        # resilience (DESIGN.md §13): an optional ExchangeWatchdog wraps
+        # every compiled-step dispatch (push_pull and co_step)
+        self._watchdog = None
 
     # ------------------------------------------------------ elastic rack
 
@@ -119,6 +122,34 @@ class PHubConnectionManager:
     def mark_recovered(self, rank: int) -> Membership:
         self._membership = self._require_membership().mark_recovered(rank)
         return self._membership
+
+    def demote(self, rank: int) -> Membership:
+        """Escalate worker ``rank`` one notch (live→slow→dead) — the
+        supervisor's containment transition for repeat offenders and
+        stalled exchanges."""
+        self._membership = self._require_membership().demote(rank)
+        return self._membership
+
+    # ------------------------------------------------------- resilience
+
+    @property
+    def watchdog(self):
+        return self._watchdog
+
+    def set_watchdog(self, watchdog):
+        """Install an ``ExchangeWatchdog`` (resilience.watchdog) around
+        every subsequent ``push_pull``/``co_step`` dispatch; pass None to
+        remove.  Returns self (chainable)."""
+        self._watchdog = watchdog
+        return self
+
+    def _dispatch(self, fn, *args):
+        """Run one compiled exchange step, under the watchdog if one is
+        installed (deadline + retry with backoff; see §13 for the
+        donated-buffer caveat on committed-step overruns)."""
+        if self._watchdog is None:
+            return fn(*args)
+        return self._watchdog.run(fn, *args)
 
     def _membership_key(self):
         """Step-cache key component: the live-set program key (NOT the
@@ -186,7 +217,7 @@ class PHubConnectionManager:
         if key not in svc.steps:
             svc.steps[key] = svc.engine.make_train_step(
                 shapes, membership=self._step_membership())
-        return svc.steps[key](params, opt, batch)
+        return self._dispatch(svc.steps[key], params, opt, batch)
 
     def destroy_service(self, handle: ServiceHandle):
         self._auth(handle)
@@ -289,7 +320,8 @@ class PHubConnectionManager:
             co.steps[key] = make_co_train_step(
                 {ns: self._services[ns].engine for ns in self._attached},
                 co.domain, shapes, membership=self._step_membership())
-        new_p, co.opt, metrics = co.steps[key](params_by, co.opt, batches)
+        new_p, co.opt, metrics = self._dispatch(co.steps[key], params_by,
+                                                co.opt, batches)
         for ns in self._attached:
             t = co.traffic.setdefault(
                 ns, {"steps": 0, "push_bytes": 0.0, "pull_bytes": 0.0,

@@ -122,6 +122,7 @@ class PHubClient:
         self.plan = plan
         self.grads_like = None
         self.membership = None          # elastic live set (DESIGN.md §12)
+        self.watchdog = None            # exchange deadline (DESIGN.md §13)
         self._steps: dict = {}
 
     # ------------------------------------------------------------- register
@@ -156,6 +157,16 @@ class PHubClient:
         if membership is not None:
             membership.validate_world(self.ctx.n_workers)
         self.membership = membership
+        return self
+
+    def set_watchdog(self, watchdog) -> "PHubClient":
+        """Install an ``ExchangeWatchdog`` (repro.resilience): every
+        standalone ``push_pull``/``push_pull_flat`` dispatch then runs
+        under its deadline with retry + exponential backoff, and a hung
+        or injected-fault exchange surfaces as ``WatchdogExhausted``
+        naming the implicated worker instead of blocking the rack
+        forever (DESIGN.md §13).  ``None`` uninstalls.  Returns self."""
+        self.watchdog = watchdog
         return self
 
     def _elastic(self):
@@ -247,9 +258,14 @@ class PHubClient:
 
     def _fused_dequant(self, group, n_live: Optional[float] = None):
         """The wire-tail dequant+agg+opt kernel for one group, or None
-        (jnp decode + update_fn; XLA fuses that too)."""
+        (jnp decode + update_fn; XLA fuses that too).  A *traced* n_live
+        (the sanity gate's dynamic live count) also returns None: the
+        kernel bakes 1/n as a static parameter, so the dynamic-divisor
+        path must take the jnp tail."""
         if not (self.tc.use_pallas and self.tc.fused_agg_opt
                 and self.wire.has_scales):
+            return None
+        if n_live is not None and not isinstance(n_live, (int, float)):
             return None
         return self.sopt.pallas_dequant_update(
             group.chunk_elems, self.sopt.coefs(self.tc),
@@ -336,14 +352,19 @@ class PHubClient:
         worker's local push; ``params`` is the replicated parameter
         pytree; ``opt`` the slot state from ``init_state``.  Returns
         (params', opt')."""
-        return self._step("tree")(grads, params, opt)
+        return self._dispatch(self._step("tree"), grads, params, opt)
 
     def push_pull_flat(self, gstore, pstore, opt):
         """Flat-residency PushPull: ``pstore`` is the {dtype_key:
         (padded,)} chunk-domain store (``flatten``), ``gstore`` the same
         with a leading worker axis (n_workers, padded).  No per-step
         flatten/unflatten runs — the stores ARE the exchange domain."""
-        return self._step("flat")(gstore, pstore, opt)
+        return self._dispatch(self._step("flat"), gstore, pstore, opt)
+
+    def _dispatch(self, fn, *args):
+        if self.watchdog is not None:
+            return self.watchdog.run(fn, *args)
+        return fn(*args)
 
     def _step(self, mode: str):
         if self.plan is None:

@@ -365,6 +365,21 @@ class PHubEngine:
         w = jnp.asarray(mask)[self.worker_rank()]
         return jax.tree.map(lambda g: g * w.astype(g.dtype), grads)
 
+    def grad_sumsq(self, grads):
+        """Sum of squares of this worker's whole local gradient, in f32 —
+        the resilience sanity scan's one reduction: a NaN/Inf anywhere in
+        the push propagates into the scalar, and its square root is the
+        flat gradient norm tested against the supervisor's running-median
+        threshold.  Uses the fused Pallas scan (kernels/agg_opt) when the
+        config runs Pallas kernels and every leaf is local to the outer
+        manual region (no auto model dim — ``mo_eff == 1``)."""
+        leaves = jax.tree.leaves(grads)
+        if self.tc.use_pallas and self.mo_eff == 1:
+            from ..kernels.agg_opt.ops import fused_health_scan
+            return sum(fused_health_scan(v) for v in leaves)
+        return sum(jnp.sum(jnp.square(v.astype(jnp.float32)))
+                   for v in leaves)
+
     def exchange_stage(self, grads, params, opt, n_live=None):
         """Tree-state exchange: flatten local TP slices into the chunk
         domain, run the collective schedule + fused agg+opt, rebuild the
@@ -401,28 +416,35 @@ class PHubEngine:
 
         cp = self.chunk_plan
         rank = self.exchange_rank()
+        # a *traced* n_live (the sanity gate's dynamic live count) cannot
+        # be closed over by the nested shard_map — thread it as an
+        # explicit replicated operand instead
+        dyn = n_live is not None and not isinstance(n_live, (int, float))
 
-        def inner(grads, params, opt, rank):
+        def inner(grads, params, opt, rank, *extra):
+            nl = extra[0] if dyn else n_live
             flats_g = chunking.flatten_groups(cp, grads)
             flats_p = chunking.flatten_groups(cp, params)
             new_p, new_m = self.client.exchange_flats(flats_g, flats_p,
                                                       opt, rank,
-                                                      n_live=n_live)
+                                                      n_live=nl)
             return (chunking.unflatten_groups(cp, new_p, self.params_shapes),
                     new_m)
 
+        extra = (n_live,) if dyn else ()
         inner_in_p = pl.specs()           # full specs: model dims manual now
         m_spec = self._inner_m_specs()
         if not self._model_nesting():
             # 'model' is already manual in the outer shard_map (or absent)
             # and the params are fully local — no nested shard_map needed
-            return inner(grads, params, opt, rank)
+            return inner(grads, params, opt, rank, *extra)
         return compat.shard_map(
             inner, mesh=compat.current_mesh(mesh),
-            in_specs=(inner_in_p, inner_in_p, m_spec, P()),
+            in_specs=(inner_in_p, inner_in_p, m_spec, P())
+            + ((P(),) if dyn else ()),
             out_specs=(inner_in_p, m_spec),
             axis_names={"model"}, check_vma=False,
-            nested=True)(grads, params, opt, rank)
+            nested=True)(grads, params, opt, rank, *extra)
 
     def exchange_stage_flat(self, gstore, pstore, opt, n_live=None):
         """Chunk-domain exchange on per-dtype flat stores (mo, padded):
@@ -431,36 +453,67 @@ class PHubEngine:
         tc, mesh = self.tc, self.mesh
         cp = self.chunk_plan
         rank = self.exchange_rank()
+        dyn = n_live is not None and not isinstance(n_live, (int, float))
 
-        def inner(fg, fp, opt, rank):
+        def inner(fg, fp, opt, rank, *extra):
+            nl = extra[0] if dyn else n_live
             return self.client.exchange_flats(fg, fp, opt, rank,
-                                              n_live=n_live)
+                                              n_live=nl)
 
+        extra = (n_live,) if dyn else ()
         mspec = "model" if self.mo_eff > 1 else None
         s_spec = {str(g.dtype): P(mspec, None) for g in cp.groups}
         m_spec = self._inner_m_specs()
         if not self._model_nesting():
-            return inner(gstore, pstore, opt, rank)
+            return inner(gstore, pstore, opt, rank, *extra)
         return compat.shard_map(
             inner, mesh=compat.current_mesh(mesh),
-            in_specs=(s_spec, s_spec, m_spec, P()),
+            in_specs=(s_spec, s_spec, m_spec, P())
+            + ((P(),) if dyn else ()),
             out_specs=(s_spec, m_spec),
             axis_names={"model"}, check_vma=False,
-            nested=True)(gstore, pstore, opt, rank)
+            nested=True)(gstore, pstore, opt, rank, *extra)
 
     def make_train_step(self, batch_shapes: dict[str, jax.ShapeDtypeStruct],
-                        membership=None):
+                        membership=None, sanity=None):
         """``membership``: an elastic live set (repro.elastic) baked into
         the compiled step — non-live workers' pushes are excluded bitwise
         and the aggregation mean renormalizes over the live count.  The
         caller re-keys its step cache by membership signature (epoch);
-        None or all-live compiles the identical pre-elastic program."""
+        None or all-live compiles the identical pre-elastic program.
+
+        ``sanity``: a resilience ``SanityConfig`` (repro.resilience).
+        The step grows a pre-exchange health gate and a fourth argument:
+        ``step(params, opt, batch, health)`` where ``health`` carries the
+        supervisor's *traced* inputs — ``norm_hi`` (f32 gradient-norm
+        ceiling from the running-median tracker; thresholds change every
+        step without recompiling) and, when ``sanity.allow_injection``,
+        ``inject`` ((world,) f32 gradient multipliers from a chaos
+        FaultSchedule: 1.0 clean, NaN poisons the push, large values blow
+        it up).  Each worker squares-and-sums its own post-injection
+        gradient (one fused reduction — ``grad_sumsq``), derives a 0/1
+        health verdict (finite AND norm <= norm_hi), folds it into the
+        static membership mask, and zeroes its whole push via
+        ``jnp.where`` *before any collective* (where, not multiply: g*0
+        is NaN when g is NaN — the poison must not survive its own
+        containment).  The live-contributor count becomes a traced scalar
+        ``psum`` of the verdicts (floored at 1), so the renormalized mean
+        divides by the count of pushes that actually joined; metrics gain
+        replicated per-worker ``ok_mask``/``grad_norms`` vectors (each
+        worker one-hot-psums its own entry) plus the scalar ``n_live``
+        the supervisor reads to attribute faults and demote offenders.
+        """
         tc = self.tc
         mesh = self.mesh
         manual_axes = set(self.exchange_axes)
         pl = self.plan
         loss_fn = self.build_loss_fn(batch_shapes)
         mask, n_live = self.elastic_mask(membership)
+        if sanity is not None and tc.strategy == "fsdp_stream":
+            raise ValueError(
+                "gradient sanity masking needs a chunk-domain strategy: "
+                "fsdp_stream reduce-scatters gradients inside the backward "
+                "scan, before the push site where the health gate applies")
         exchange_stage = partial(self.exchange_stage, n_live=n_live)
         exchange_stage_flat = partial(self.exchange_stage_flat,
                                       n_live=n_live)
@@ -487,6 +540,43 @@ class PHubEngine:
                        "total_loss": jax.lax.pmean(tot, self.exchange_axes)}
             return new_p, new_m, metrics
 
+        def sane_step(params, opt, batch, health):
+            tot, loss, grads = self._local_grads(loss_fn_used, params, batch)
+            wrank = self.worker_rank()
+            world = self.ctx.n_workers
+            if sanity.allow_injection:
+                inj = jnp.asarray(health["inject"], jnp.float32)[wrank]
+                grads = jax.tree.map(lambda g: g * inj.astype(g.dtype),
+                                     grads)
+            sumsq = self.grad_sumsq(grads)
+            norm = jnp.sqrt(sumsq)
+            norm_hi = jnp.asarray(health["norm_hi"], jnp.float32)
+            okf = (jnp.isfinite(sumsq) & (norm <= norm_hi)
+                   ).astype(jnp.float32)
+            if mask is not None:
+                okf = okf * jnp.asarray(mask)[wrank]
+            bad = okf == 0.0
+            grads = jax.tree.map(
+                lambda g: jnp.where(bad, jnp.zeros_like(g), g), grads)
+            nl = jnp.maximum(jax.lax.psum(okf, self.exchange_axes), 1.0)
+            new_p, new_m = (
+                self.exchange_stage_flat(grads, params, opt, n_live=nl)
+                if flat
+                else self.exchange_stage(grads, params, opt, n_live=nl))
+            onehot = (jax.lax.broadcasted_iota(jnp.int32, (world,), 0)
+                      == wrank)
+            metrics = {
+                "loss": jax.lax.pmean(loss, self.exchange_axes),
+                "total_loss": jax.lax.pmean(tot, self.exchange_axes),
+                "ok_mask": jax.lax.psum(
+                    okf * onehot.astype(jnp.float32), self.exchange_axes),
+                # keep a poisoned worker's NaN confined to its own entry:
+                # where(onehot), never onehot * norm (0 * NaN = NaN)
+                "grad_norms": jax.lax.psum(
+                    jnp.where(onehot, norm, 0.0), self.exchange_axes),
+                "n_live": nl}
+            return new_p, new_m, metrics
+
         if flat:
             # store rows are replicated over the manual data axes; the
             # model row dim stays auto (manualized by the nested shard_map)
@@ -502,9 +592,20 @@ class PHubEngine:
                    if tc.strategy == "fsdp_stream"
                    else self._outer_m_specs())
 
+        if sanity is None:
+            step = compat.shard_map(
+                local_step, mesh=mesh,
+                in_specs=(manual_p, m_outer, batch_spec),
+                out_specs=(manual_p, m_outer, P()),
+                axis_names=manual_axes, check_vma=False)
+            return _MeshScopedJit(jax.jit(step, donate_argnums=(0, 1)),
+                                  mesh)
+        health_spec = {"norm_hi": P()}
+        if sanity.allow_injection:
+            health_spec["inject"] = P()
         step = compat.shard_map(
-            local_step, mesh=mesh,
-            in_specs=(manual_p, m_outer, batch_spec),
+            sane_step, mesh=mesh,
+            in_specs=(manual_p, m_outer, batch_spec, health_spec),
             out_specs=(manual_p, m_outer, P()),
             axis_names=manual_axes, check_vma=False)
         return _MeshScopedJit(jax.jit(step, donate_argnums=(0, 1)), mesh)

@@ -4,4 +4,7 @@ from .membership import DEAD, LIVE, SLOW, Membership, WorkerState
 from .rebalance import (GroupRebalance, RebalancePlan, SOLO_TENANT,
                         domain_placements, plan_placements, plan_rebalance,
                         solo_resize_plan)
-from .chaos import ChaosEvent, ChaosSchedule
+from .chaos import (CKPT_CORRUPT, ChaosEvent, ChaosSchedule,
+                    FAULT_KINDS, FaultEvent, FaultSchedule,
+                    GRAD_BLOWUP, NAN_PUSH, STALL,
+                    corrupt_checkpoint)

@@ -195,6 +195,21 @@ class Membership:
                              f", not slow (epoch {self.epoch})")
         return self._with(rank, WorkerState())
 
+    def demote(self, rank: int, factor: float = 8.0) -> "Membership":
+        """Escalating demotion for repeat offenders (the resilience
+        supervisor's containment path): a live worker is first marked
+        slow — its pushes stop joining the aggregation but it may still
+        recover — and a worker demoted *again* while slow leaves the rack
+        outright.  Quorum is enforced by the underlying transition."""
+        self._check_rank(rank)
+        status = self.workers[rank].status
+        if status == LIVE:
+            return self.mark_slow(rank, factor)
+        if status == SLOW:
+            return self.leave(rank)
+        raise ValueError(f"worker {rank} already left the rack "
+                         f"(epoch {self.epoch}); nothing to demote")
+
     def resized(self, world: int) -> "Membership":
         """Fresh all-live membership over a different rack size; the epoch
         counter carries over (+1) so every step cache re-keys."""

@@ -152,6 +152,32 @@ def dequant_agg_opt_chunks(p: jax.Array, q: jax.Array, scales: jax.Array,
     )(p, q, scales, g_own, m)
 
 
+def _health_body(g_ref, s_ref):
+    """Fused isfinite+norm pass (DESIGN.md §13): one grid step reduces one
+    chunk to its f32 sum of squares.  NaN/Inf anywhere in the chunk
+    propagates into the partial (IEEE: NaN poisons the sum, huge values
+    overflow it), so the caller's single finiteness test on the total
+    covers the whole gradient — no separate isnan scan, and the chunk
+    crosses HBM exactly once, piggybacking on the agg_opt residency
+    argument."""
+    g = g_ref[...].astype(jnp.float32)
+    s_ref[0, 0] = jnp.sum(g * g)
+
+
+def health_chunks(g: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """g: (nc, ce). Returns (nc, 1) f32 per-chunk sum-of-squares partials
+    (sum them outside for the flat-gradient norm²)."""
+    nc, ce = g.shape
+    return pl.pallas_call(
+        _health_body,
+        grid=(nc,),
+        in_specs=[pl.BlockSpec((1, ce), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nc, 1), jnp.float32),
+        interpret=interpret,
+    )(g)
+
+
 def multi_agg_opt_chunks(p: jax.Array, g: jax.Array, m: jax.Array, *,
                          lr: float, momentum: float,
                          interpret: bool = False) -> tuple:

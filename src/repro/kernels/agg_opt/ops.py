@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import (adam_opt_chunks, agg_opt_chunks, dequant_agg_opt_chunks,
-                     multi_agg_opt_chunks, sgd_opt_chunks)
+                     health_chunks, multi_agg_opt_chunks, sgd_opt_chunks)
 
 _LANE = 128
 
@@ -101,6 +101,20 @@ def fused_dequant_agg_opt(p: jax.Array, q: jax.Array, scales: jax.Array,
         g_own.reshape(nc, ce), m.reshape(nc, ce), lr=lr, momentum=momentum,
         inv_n=inv_n, interpret=interpret)
     return p2.reshape(-1), m2.reshape(-1)
+
+
+@partial(jax.jit, static_argnames=("chunk_elems", "interpret"))
+def fused_health_scan(g: jax.Array, *, chunk_elems: int = 8192,
+                      interpret: bool | None = None) -> jax.Array:
+    """Scalar f32 sum of squares of ``g`` (any shape) via the fused
+    per-chunk health pass — the sanity gate's one reduction (DESIGN.md
+    §13).  The zero pad tail contributes exactly 0; NaN/Inf anywhere in
+    ``g`` propagates to the scalar, so ``isfinite(result)`` is the
+    whole-gradient finiteness verdict and ``sqrt(result)`` the flat
+    norm."""
+    interpret = _default_interpret() if interpret is None else interpret
+    _, gc, _, _ = _to_chunks(g, chunk_elems)
+    return jnp.sum(health_chunks(gc, interpret=interpret))
 
 
 @partial(jax.jit, static_argnames=("lr", "momentum", "chunk_elems",

@@ -35,6 +35,12 @@ def adam_opt_ref(p, g, m, v, k1, k2, *, lr: float, b1: float = 0.9,
             k1n.astype(k1.dtype), k2n.astype(k2.dtype))
 
 
+def health_scan_ref(g):
+    """Oracle for the fused health pass: f32 sum of squares (NaN/Inf
+    propagates — finiteness of the scalar == finiteness of the push)."""
+    return jnp.sum(jnp.square(g.astype(jnp.float32)))
+
+
 def dequant_agg_opt_ref(p, q, scales, g_own, m, *, lr: float,
                         momentum: float, inv_n: float, chunk_elems: int):
     """Oracle for the fused int8-wire dequant + mean + Nesterov tail:

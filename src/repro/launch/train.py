@@ -52,7 +52,22 @@ def main(argv=None):
     ap.add_argument("--chaos-seed", type=int, default=0)
     ap.add_argument("--chaos-every", type=int, default=5,
                     help="roughly one chaos event per this many steps")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under the self-healing TrainSupervisor: "
+                         "gradient sanity masking, repeat-offender "
+                         "demotion, durable verified checkpoints with "
+                         "auto-rollback, and the exchange watchdog "
+                         "(DESIGN.md §13)")
+    ap.add_argument("--keep-k", type=int, default=3,
+                    help="good snapshots retained by the supervisor")
+    ap.add_argument("--chaos-faults", action="store_true",
+                    help="inject a seeded FaultSchedule (NaN pushes, "
+                         "gradient blow-ups, checkpoint corruption, step "
+                         "stalls) for the supervisor to absorb (implies "
+                         "--supervise)")
     args = ap.parse_args(argv)
+    if args.chaos_faults:
+        args.supervise = True
     if args.chaos:
         args.elastic = True
 
@@ -82,6 +97,9 @@ def main(argv=None):
 
     cm = PHubConnectionManager()
     if args.tenants > 1:
+        if args.supervise:
+            sys.exit("--supervise drives a solo engine; --tenants > 1 is "
+                     "not supervised (run the jobs separately)")
         return _train_multitenant(cm, cfg, tc, mesh, args)
     handle = cm.create_service("train-job", cfg, tc, mesh)
     engine = cm.connect_service(handle)
@@ -90,6 +108,9 @@ def main(argv=None):
     data = SyntheticTokens(cfg, args.batch, args.seq, seed=tc.seed)
     shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
               for k, v in data.batch_at(0).items()}
+
+    if args.supervise:
+        return _train_supervised(engine, params, opt, data, args)
 
     sched = None
     if args.elastic:
@@ -137,6 +158,45 @@ def main(argv=None):
                                         else None))
     print(f"[train] done: first-5 mean {sum(losses[:5])/5:.4f} -> "
           f"last-5 mean {sum(losses[-5:])/5:.4f}")
+    return losses
+
+
+def _train_supervised(engine, params, opt, data, args):
+    """Self-healing loop: the TrainSupervisor owns membership, durable
+    checkpoints, and rollback; --chaos-faults feeds it a seeded
+    FaultSchedule to absorb unattended."""
+    from ..elastic import FaultSchedule
+    from ..resilience import (SanityConfig, SupervisorConfig,
+                              TrainSupervisor, WatchdogConfig)
+    from ..training.loop import TrainState, fit
+
+    world = engine.ctx.n_workers
+    faults = None
+    if args.chaos_faults:
+        faults = FaultSchedule.seeded(seed=args.chaos_seed, world=world,
+                                      steps=args.steps,
+                                      fault_every=args.chaos_every)
+        print(f"[train] fault schedule: seed={args.chaos_seed} "
+              f"{len(faults.events)} events over {args.steps} steps")
+    sup = TrainSupervisor(
+        engine,
+        SupervisorConfig(
+            sanity=SanityConfig(allow_injection=args.chaos_faults),
+            watchdog=WatchdogConfig(),
+            checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=args.checkpoint_every,
+            keep_k=args.keep_k),
+        faults=faults)
+    print(f"[train] supervised: world={world} keep_k={args.keep_k} "
+          f"checkpoints="
+          f"{args.checkpoint_dir or '(none: rollback disabled)'}")
+    state = fit(engine, TrainState(params=params, opt=opt), data,
+                steps=args.steps, log_every=args.log_every, supervisor=sup)
+    losses = state.losses
+    print(f"[train] done: first-5 mean {sum(losses[:5])/5:.4f} -> "
+          f"last-5 mean {sum(losses[-5:])/5:.4f}; "
+          f"{sup.rollbacks} rollbacks, "
+          f"{sum(1 for k in sup.event_kinds() if k == 'demote')} demotions")
     return losses
 
 

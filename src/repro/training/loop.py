@@ -22,8 +22,8 @@ def fit(engine, state: TrainState, data, *, steps: int,
         log_every: int = 10, log_fn: Callable[[str], None] = print,
         checkpoint_dir: str = "", checkpoint_every: int = 0,
         hooks: Optional[list[Callable[[TrainState, dict], None]]] = None,
-        membership_fn: Optional[Callable[[int], object]] = None
-        ) -> TrainState:
+        membership_fn: Optional[Callable[[int], object]] = None,
+        supervisor=None) -> TrainState:
     """Run ``steps`` PHub train steps from ``state``.
 
     data: SyntheticTokens-like (device_batch(step, mesh, data_axes)).
@@ -33,11 +33,25 @@ def fit(engine, state: TrainState, data, *, steps: int,
     ChaosSchedule folding events in) rebuilds the compiled step against
     the new live set, cached per signature so recurring memberships
     don't retrace.
+    supervisor: a resilience ``TrainSupervisor`` (DESIGN.md §13) — the
+    loop then runs sanity-gated steps through it (mutually exclusive
+    with membership_fn: the supervisor owns membership, and with the
+    checkpoint args: the supervisor owns the durable snapshot cadence).
 
     The loss is materialized on host (a blocking device sync) only at log
     boundaries, on the final step, and when hooks are installed — otherwise
-    step dispatch stays fully asynchronous.
+    step dispatch stays fully asynchronous (the supervised path host-syncs
+    its health metrics every step; that sync is the detector).
     """
+    if supervisor is not None:
+        if membership_fn is not None or checkpoint_dir or checkpoint_every:
+            raise ValueError(
+                "fit(supervisor=...) owns membership and checkpointing; "
+                "drop membership_fn/checkpoint_dir/checkpoint_every and "
+                "configure them on SupervisorConfig instead")
+        return _fit_supervised(engine, state, data, steps=steps,
+                               log_every=log_every, log_fn=log_fn,
+                               hooks=hooks, supervisor=supervisor)
     batch0 = data.batch_at(state.step)
     shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
               for k, v in batch0.items()}
@@ -79,4 +93,40 @@ def fit(engine, state: TrainState, data, *, steps: int,
             save_checkpoint(checkpoint_dir, state.step,
                             {"params": state.params, "opt": state.opt},
                             membership=membership)
+    return state
+
+
+def _fit_supervised(engine, state: TrainState, data, *, steps: int,
+                    log_every: int, log_fn, hooks, supervisor) -> TrainState:
+    """The supervised loop body: a while-loop because rollback moves
+    ``state.step`` backward.  Bounded by a progress guard sized from the
+    supervisor's own rollback budget — a supervisor that keeps rolling
+    back past ``max_rollbacks`` raises before the guard trips, so the
+    guard only catches a supervisor that loops without progress."""
+    batch0 = data.batch_at(state.step)
+    shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in batch0.items()}
+    end = state.step + steps
+    t0 = time.time()
+    tokens = 0
+    budget = steps * (supervisor.cfg.max_rollbacks + 2) + 16
+    iters = 0
+    while state.step < end:
+        iters += 1
+        if iters > budget:
+            raise RuntimeError(
+                f"supervised fit exceeded its progress budget "
+                f"({budget} iterations for {steps} steps) — the "
+                f"supervisor is rolling back without making progress")
+        i = state.step
+        batch = data.device_batch(i, mesh=engine.mesh,
+                                  data_axes=engine.data_axes or ("data",))
+        host = supervisor.run_step(state, batch, shapes)
+        tokens += batch0["tokens"].size
+        for h in hooks or ():
+            h(state, host)
+        if bool(log_every) and (i % log_every == 0 or state.step >= end):
+            log_fn(f"[fit] step {i:5d} loss {host['loss']:.4f} "
+                   f"n_live {host['n_live']:g} "
+                   f"({tokens / (time.time() - t0):,.0f} tok/s)")
     return state

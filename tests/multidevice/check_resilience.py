@@ -1,0 +1,331 @@
+"""Self-healing training oracle check (run in a subprocess: 12 fake
+devices — the e2e case drives a 12-worker rack; the exchange-parity
+cases run on an 8-device subset).
+
+Four claims (DESIGN.md §13):
+
+  nanmask   A sanity-gated step that masks NaN-injected workers is
+            BITWISE the PR-5 static-membership step with those workers
+            dead, when the surviving count is a power of two (exact
+            divisor; both programs see exactly-zero masked pushes).  At
+            a non-power-of-two survivor count the traced divisor and the
+            baked reciprocal round differently (the §10/§11 XLA:CPU
+            caveat) — asserted to 1e-4, layout/masking bugs O(1) above.
+
+  rollback  A supervised run whose rack diverges (every push masked for
+            ``divergence_patience`` steps) after its newest snapshot was
+            corrupted on disk rolls back to the last *verified* snapshot
+            — params and every optimizer slot BITWISE equal to what
+            ``load_checkpoint`` returns for that step — and completes.
+
+  stallpath A stall burst within the retry budget is absorbed (no
+            demotion, no state change beyond the committed steps); a
+            burst past the budget demotes the implicated worker, flushes
+            its queued faults, and the re-entered k-of-n step completes.
+
+  e2e       The acceptance oracle: a 12-worker rack with a NaN-pushing
+            worker, a mid-run checkpoint corruption, and a step stall
+            completes unattended — the offender is demoted, the rollback
+            rewinds at most ``checkpoint_every`` steps, and the final
+            loss lands within 1e-3 of a fault-free reference run that
+            never had the offender (the demoted worker's shard is the
+            only trajectory difference, and the supervised paths are
+            identical programs).
+
+Usage: python tests/multidevice/check_resilience.py [case ...]
+Cases: nanmask rollback stallpath e2e
+Prints "OK <case>" lines; exits nonzero on failure.
+"""
+import os
+import sys
+import tempfile
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=12"
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.configs import ARCHS, TrainConfig, reduced  # noqa: E402
+from repro.core import PHubEngine  # noqa: E402
+from repro.checkpoint import load_checkpoint  # noqa: E402
+from repro.data import SyntheticTokens  # noqa: E402
+from repro.elastic import (CKPT_CORRUPT, FaultEvent, FaultSchedule,  # noqa: E402
+                           Membership, NAN_PUSH, STALL)
+from repro.resilience import (SanityConfig, SupervisorConfig,  # noqa: E402
+                              TrainSupervisor, WatchdogConfig)
+from repro.training.loop import TrainState, fit  # noqa: E402
+
+CASES = sys.argv[1:] or ["nanmask", "rollback", "stallpath", "e2e"]
+failures = 0
+
+
+def report(ok, name, detail=""):
+    global failures
+    print(f"{'OK' if ok else 'FAIL'} {name} {detail}")
+    failures += 0 if ok else 1
+
+
+def mismatches(a, b):
+    errs = jax.tree.map(
+        lambda x, y: int((np.asarray(x) != np.asarray(y)).sum()), a, b)
+    return sum(jax.tree.leaves(errs))
+
+
+def max_err(a, b):
+    errs = jax.tree.map(
+        lambda x, y: float(np.abs(np.asarray(x, np.float32)
+                                  - np.asarray(y, np.float32)).max()), a, b)
+    return max(jax.tree.leaves(errs))
+
+
+def make_engine(world, d_model=64, lr=1e-2, **tc_kw):
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=d_model)
+    tc = TrainConfig(lr=lr, loss_chunk=32, **tc_kw)
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:world]).reshape(world, 1),
+        ("data", "model"))
+    eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
+    return eng, cfg
+
+
+STEPS = 3
+
+
+# ---------------------------------------------------------------- nanmask
+
+def check_nanmask():
+    world = 8
+    for dead, bitwise in (((1, 4, 6, 7), True),     # 4 survivors: pow-2
+                          ((3,), False)):           # 7 survivors
+        eng, cfg = make_engine(world)
+        data = SyntheticTokens(cfg, 2 * world, 32, seed=0)
+        shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                  for k, v in data.batch_at(0).items()}
+        inject = np.ones((world,), np.float32)
+        inject[list(dead)] = np.nan
+
+        # sanity-gated run: the NaN pushes are masked in-graph
+        p, o = eng.init_state(jax.random.PRNGKey(0))
+        step = eng.make_train_step(
+            shapes, sanity=SanityConfig(allow_injection=True))
+        for i in range(STEPS):
+            h = {"norm_hi": np.float32(np.inf), "inject": inject}
+            p, o, m = step(p, o, data.device_batch(i), h)
+        ok = np.asarray(m["ok_mask"])
+
+        # PR-5 reference: the same workers statically dead
+        memb = Membership.full(world)
+        for r in dead:
+            memb = memb.leave(r)
+        pr, orr = eng.init_state(jax.random.PRNGKey(0))
+        ref = eng.make_train_step(shapes, membership=memb)
+        for i in range(STEPS):
+            pr, orr, _ = ref(pr, orr, data.device_batch(i))
+
+        mask_ok = (ok.astype(int).tolist()
+                   == [0 if r in dead else 1 for r in range(world)])
+        if bitwise:
+            bad = mismatches(p, pr) + mismatches(o, orr)
+            report(mask_ok and bad == 0,
+                   f"nanmask k={world - len(dead)} bitwise",
+                   f"mismatched_elems={bad} ok_mask={ok.astype(int)}")
+        else:
+            err = max_err(p, pr)
+            report(mask_ok and err < 1e-4,
+                   f"nanmask k={world - len(dead)}",
+                   f"max_err={err:.2e} ok_mask={ok.astype(int)}")
+
+
+# --------------------------------------------------------------- rollback
+
+def check_rollback():
+    world = 8
+    eng, cfg = make_engine(world)
+    data = SyntheticTokens(cfg, 2 * world, 32, seed=0)
+    with tempfile.TemporaryDirectory() as d:
+        # storm: every worker NaN at steps 6-8; the newest snapshot
+        # (step 6) is corrupted right before the divergence verdict
+        faults = FaultSchedule(
+            [FaultEvent(step=6, kind=NAN_PUSH, worker=w, duration=3)
+             for w in range(world)]
+            + [FaultEvent(step=6, kind=CKPT_CORRUPT)], world=world)
+        sup = TrainSupervisor(
+            eng,
+            SupervisorConfig(
+                sanity=SanityConfig(allow_injection=True, warmup=2),
+                checkpoint_dir=d, checkpoint_every=2, keep_k=3,
+                demote_after=100, divergence_patience=2),
+            faults=faults, log_fn=None)
+        p, o = eng.init_state(jax.random.PRNGKey(0))
+        state = TrainState(params=p, opt=o)
+        state = fit(eng, state, data, steps=12, log_every=0,
+                    supervisor=sup)
+        ks = sup.event_kinds()
+        rb = [e for e in sup.events if e[1] == "rollback"]
+        report(bool(rb) and "restored step 4" in rb[0][2]
+               and "skipped" in rb[0][2], "rollback skips corrupt snapshot",
+               rb[0][2] if rb else f"events={ks}")
+        report(state.step == 12 and np.isfinite(state.losses[-1])
+               and len(state.losses) == 12,
+               "rollback run completes",
+               f"step={state.step} loss={state.losses[-1]:.4f}")
+
+    # direct bitwise claim: the supervisor's restored state equals the
+    # last verified snapshot's content exactly (params AND every
+    # optimizer slot), with the newest snapshot corrupted on disk
+    eng2, _ = make_engine(world)
+    with tempfile.TemporaryDirectory() as d:
+        sup2 = TrainSupervisor(
+            eng2, SupervisorConfig(
+                sanity=SanityConfig(allow_injection=True),
+                checkpoint_dir=d, checkpoint_every=2, keep_k=3),
+            log_fn=None)
+        p, o = eng2.init_state(jax.random.PRNGKey(1))
+        st = TrainState(params=p, opt=o)
+        st = fit(eng2, st, data, steps=6, log_every=0, supervisor=sup2)
+        from repro.elastic.chaos import corrupt_checkpoint
+        corrupt_checkpoint(d, 6, mode="bitflip")
+        _, good = load_checkpoint(d, 4)                 # pre-rollback copy
+        sup2.rollback(6, st, "forced by the oracle")
+        bad = (mismatches(st.params, good["params"])
+               + mismatches(st.opt, good["opt"]))
+        report(st.step == 4 and bad == 0,
+               "rollback state bitwise == last verified snapshot",
+               f"step={st.step} mismatched_elems={bad}")
+
+
+# -------------------------------------------------------------- stallpath
+
+def check_stallpath():
+    world = 8
+    # burst within budget: absorbed, nobody demoted
+    eng, cfg = make_engine(world)
+    data = SyntheticTokens(cfg, 2 * world, 32, seed=0)
+    faults = FaultSchedule([FaultEvent(step=2, kind=STALL, worker=5,
+                                       magnitude=2)], world=world)
+    sup = TrainSupervisor(
+        eng, SupervisorConfig(
+            sanity=SanityConfig(allow_injection=True),
+            watchdog=WatchdogConfig(retries=3, backoff_base_s=0.0)),
+        faults=faults, log_fn=None)
+    p, o = eng.init_state(jax.random.PRNGKey(0))
+    state = fit(eng, TrainState(params=p, opt=o), data, steps=5,
+                log_every=0, supervisor=sup)
+    report(sup.membership.all_live and sup.watchdog.total_retries == 2
+           and "demote" not in sup.event_kinds(),
+           "stall within budget absorbed",
+           f"retries={sup.watchdog.total_retries} "
+           f"events={sup.event_kinds()}")
+
+    # burst past budget: demote, flush, re-enter, complete
+    eng2, _ = make_engine(world)
+    faults2 = FaultSchedule([FaultEvent(step=2, kind=STALL, worker=5,
+                                        magnitude=8)], world=world)
+    sup2 = TrainSupervisor(
+        eng2, SupervisorConfig(
+            sanity=SanityConfig(allow_injection=True),
+            watchdog=WatchdogConfig(retries=2, backoff_base_s=0.0)),
+        faults=faults2, log_fn=None)
+    p2, o2 = eng2.init_state(jax.random.PRNGKey(0))
+    state2 = fit(eng2, TrainState(params=p2, opt=o2), data, steps=5,
+                 log_every=0, supervisor=sup2)
+    ks = sup2.event_kinds()
+    report("stall_exhausted" in ks and "demote" in ks
+           and "faults_flushed" in ks
+           and sup2.membership.workers[5].status == "slow"
+           and state2.step == 5 and np.isfinite(state2.losses[-1]),
+           "stall past budget demotes and re-enters",
+           f"events={ks} w5={sup2.membership.workers[5].status}")
+
+
+# -------------------------------------------------------------------- e2e
+
+def check_e2e():
+    """The ISSUE acceptance oracle, 12 workers: a NaN-pushing worker
+    (poisoned from step 0, demoted after 2 offenses), a mid-run
+    checkpoint corruption, a rack-wide NaN storm forcing a rollback, and
+    a stall burst — completes unattended.  The fault-free reference runs
+    the same supervised program with worker 7 dead from the start: the
+    offender's pushes were masked *before any collective* on every step
+    it was live, so the two runs see identical effective contributor
+    sets throughout, and the final losses must agree to 1e-3 (the
+    residual is fp drift between the dynamic-divisor and baked-divisor
+    programs at the non-pow-2 live count, plus the rolled-back steps'
+    replay)."""
+    world = 12
+    steps = 30
+    ckpt_every = 3
+
+    def run(faulted):
+        eng, cfg = make_engine(world, lr=5e-3)
+        data = SyntheticTokens(cfg, 2 * world, 32, seed=0)
+        with tempfile.TemporaryDirectory() as d:
+            faults = None
+            membership = None
+            if faulted:
+                faults = FaultSchedule(
+                    # poisoned from step 0: masked in-graph both steps,
+                    # then demoted (2 consecutive offenses) — worker 7
+                    # never contributes a gradient to any collective
+                    [FaultEvent(step=0, kind=NAN_PUSH, worker=7,
+                                duration=2),
+                     FaultEvent(step=11, kind=CKPT_CORRUPT),
+                     # the storm that forces divergence + rollback after
+                     # the newest snapshot was damaged
+                     ] + [FaultEvent(step=12, kind=NAN_PUSH, worker=w,
+                                     duration=2) for w in range(world)]
+                    + [FaultEvent(step=20, kind=STALL, worker=3,
+                                  magnitude=2)],
+                    world=world)
+            else:
+                membership = Membership.full(world).leave(7)
+            sup = TrainSupervisor(
+                eng,
+                SupervisorConfig(
+                    sanity=SanityConfig(allow_injection=True, warmup=2),
+                    watchdog=WatchdogConfig(retries=3, backoff_base_s=0.0),
+                    checkpoint_dir=d, checkpoint_every=ckpt_every,
+                    keep_k=3, demote_after=2, divergence_patience=2),
+                membership=membership, faults=faults, log_fn=None)
+            p, o = eng.init_state(jax.random.PRNGKey(0))
+            state = fit(eng, TrainState(params=p, opt=o), data,
+                        steps=steps, log_every=0, supervisor=sup)
+            return state, sup
+
+    state_f, sup_f = run(faulted=True)
+    ks = sup_f.event_kinds()
+    demoted = sup_f.membership.workers[7].status != "live"
+    rb = [e for e in sup_f.events if e[1] == "rollback"]
+    rolled_back_ok = False
+    if rb:
+        at, _, detail = rb[0]
+        restored = int(detail.split("restored step ")[1].split(" ")[0])
+        rolled_back_ok = (at + 1) - restored <= ckpt_every + 1
+    report(state_f.step == steps and np.isfinite(state_f.losses[-1]),
+           "e2e completes unattended",
+           f"step={state_f.step} loss={state_f.losses[-1]:.4f}")
+    report(demoted, "e2e demotes the NaN pusher",
+           f"worker7={sup_f.membership.workers[7].status} "
+           f"epoch={sup_f.membership.epoch}")
+    report(bool(rb) and rolled_back_ok, "e2e rolls back <= k steps",
+           rb[0][2] if rb else f"events={ks}")
+    report("ckpt_corrupt_injected" in ks and "stall_injected" in ks,
+           "e2e absorbed ckpt corruption and stall", f"events={ks}")
+
+    state_r, _ = run(faulted=False)
+    gap = abs(state_f.losses[-1] - state_r.losses[-1])
+    report(gap <= 1e-3, "e2e final loss within 1e-3 of fault-free ref",
+           f"faulted={state_f.losses[-1]:.6f} "
+           f"ref={state_r.losses[-1]:.6f} gap={gap:.2e}")
+
+
+CHECKS = {"nanmask": check_nanmask, "rollback": check_rollback,
+          "stallpath": check_stallpath, "e2e": check_e2e}
+
+for case in CASES:
+    CHECKS[case]()
+
+print("ALL OK" if failures == 0 else f"{failures} FAILURES")
+sys.exit(1 if failures else 0)
