@@ -1,0 +1,58 @@
+"""Chunk-ready backward-overlap step vs the post-backward baseline
+(DESIGN.md §14).
+
+``overlap_backward`` rebuilds the train step so each exchange window's
+reduce-scatter depends only on the cotangents of the leaves it covers —
+the compiler may launch window rings while the rest of the backward is
+still running.  The arithmetic is bitwise-identical to the post-backward
+schedule (tests/multidevice/check_overlap.py); this benchmark measures
+what the reordering buys:
+
+  * full step wall time, overlap on/off, interleaved in one subprocess
+    rep loop so machine drift cancels;
+  * the exchange-only budget (zero-compute step) the overlap can hide;
+  * the modeled overlap fraction from measured inputs
+    (cost_model.backward_overlap_fraction x chunk_ready_schedule's
+    per-window readiness).
+
+Shapes: reduced llama3.2-1b dryrun configs at d_model 256 (~GoogleNet-
+class tens-of-MB exchange groups, same budget class as
+pipeline_overlap).  The synchronous host-CPU backend serializes
+collectives with compute, so step_ratio ~ 1.0 here (bitwise-identical
+math, reordered); the modeled fraction reports the hideable share that
+asynchronous-collective hardware realizes.
+"""
+from __future__ import annotations
+
+from .common import Row, run_multidevice
+
+CONFIGS = [
+    # windows=3 divides the 27 chunks/shard of the d_model-256 reduced
+    # llama group on 8 shards, so the chunk-ready path is actually
+    # windowed (effective_windows would silently fold 2 -> 1 here)
+    ("8w_nesterov_w3", {"data_size": 8, "optimizer": "nesterov",
+                        "windows": 3}),
+    ("8w_adam_w3", {"data_size": 8, "optimizer": "adam", "windows": 3}),
+    ("8w_nesterov_w3_int8", {"data_size": 8, "optimizer": "nesterov",
+                             "windows": 3, "wire": "int8"}),
+]
+
+
+def run() -> list[Row]:
+    rows = []
+    for name, cfg in CONFIGS:
+        r = run_multidevice(
+            {"bench": "backward_overlap", "strategy": "sharded_ps",
+             "reps": 7, **cfg}, n_devices=8)
+        rows.append(Row(
+            f"backward_overlap/{name}/baseline", r["us_baseline"],
+            f"model_bytes={r['model_bytes']} "
+            f"eff_windows={r['eff_windows']}"))
+        rows.append(Row(
+            f"backward_overlap/{name}/overlap", r["us_overlap"],
+            f"step_ratio={r['step_ratio']:.3f} "
+            f"overlap_fraction={r['overlap_fraction']:.3f} "
+            f"hidden_ms={r['hidden_ms']:.2f} "
+            f"modeled_fraction={r['modeled_fraction']:.3f} "
+            f"exchange_us={r['us_exchange']:.0f}"))
+    return rows

@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV rows (plus section markers).
   key_balance         §3.2.4           LPT chunk->core load balance
   roofline            §Roofline        per (arch x shape) terms from dry-run
   pipeline_overlap    §3.2 / D §8      windowed pipeline vs monolithic
+  backward_overlap    §3.2 / D §14     chunk-ready dispatch: exchange
+                                       launched mid-backward vs
+                                       post-backward baseline
   multitenant         §3.1 / D §9      co-scheduled tenants vs serial engines
   optimizer_sweep     D §10            nesterov/sgd/adam exchange cost,
                                        solo + 2-tenant co (mixed rules)
@@ -41,7 +44,8 @@ import traceback
 MODULES = ["bandwidth_table2", "cost_table5", "comm_schemes", "hierarchical",
            "key_balance",
            "tall_vs_wide", "caching", "overhead_breakdown", "roofline",
-           "chunk_size", "zero_compute", "pipeline_overlap", "multitenant",
+           "chunk_size", "zero_compute", "pipeline_overlap",
+           "backward_overlap", "multitenant",
            "optimizer_sweep", "wire_sweep", "elastic_resilience",
            "fault_recovery"]
 

@@ -1,0 +1,15 @@
+"""Root pytest config shim.
+
+pytest.ini sets a per-test ``timeout`` for the pytest-timeout plugin
+(a CI dependency, requirements-dev.txt).  When the plugin is absent —
+a bare local checkout — pytest would warn about the unknown ini key,
+so register it here as a no-op; the budget is then simply unenforced.
+"""
+
+
+def pytest_addoption(parser):
+    try:
+        import pytest_timeout  # noqa: F401
+    except ImportError:
+        parser.addini("timeout", "per-test timeout in seconds "
+                      "(unenforced: pytest-timeout not installed)")

@@ -147,6 +147,13 @@ class TrainConfig:
                                       # w-1's fused agg+opt (1 = monolithic
                                       # collectives, today's behavior);
                                       # sharded_ps / hierarchical only
+    overlap_backward: bool = False    # chunk-ready dispatch (DESIGN.md §14):
+                                      # each window's reduce-scatter depends
+                                      # only on the cotangents of the leaves
+                                      # it covers, so XLA can start window
+                                      # rings while the rest of the backward
+                                      # is still running; sharded_ps /
+                                      # hierarchical, single model shard
     flat_residency: bool = False      # params live as flat chunk-domain
                                       # vectors across steps: the forward
                                       # pass consumes per-leaf slice views
@@ -187,7 +194,7 @@ class TrainConfig:
         coefficient tables; optim/protocol.py)."""
         return (self.strategy, self.chunk_size_bytes, self.pipeline_windows,
                 self.dp_over_model, self.flat_residency, self.use_pallas,
-                self.fused_agg_opt, self.wire_format)
+                self.fused_agg_opt, self.wire_format, self.overlap_backward)
 
 
 def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 256,

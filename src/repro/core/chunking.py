@@ -140,6 +140,86 @@ def shard_matrix(plan_group: GroupPlan, flat: jax.Array) -> jax.Array:
     return flat.reshape(plan_group.n_shards, plan_group.shard_len)
 
 
+# ------------------------------------------------ chunk-ready planning (§14)
+
+def split_windows(flat: jax.Array, group: GroupPlan,
+                  windows: int) -> tuple:
+    """(padded,) flat vector -> tuple of ``windows`` per-window buffers in
+    the window_flats layout: buffer w has shape (S*Lw,) with row j's strip
+    [j*L + w*Lw, j*L + (w+1)*Lw) at [j*Lw, (j+1)*Lw).  windows == 1
+    returns the flat vector itself (the monolithic schedule's input).
+    Static strided reshape — no data-dependent work."""
+    if windows <= 1:
+        return (flat,)
+    S, L = group.n_shards, group.shard_len
+    if L % windows:
+        raise ValueError(
+            f"{windows} windows do not tile shard_len {L}")
+    m = flat.reshape(S, windows, L // windows)
+    return tuple(m[:, w, :].reshape(-1) for w in range(windows))
+
+
+def window_chunks(group: GroupPlan, windows: int) -> tuple:
+    """Chunk indices of the padded domain covered by each window, in
+    layer (flat-domain) order within the window: window w covers chunks
+    ``j*cps + w*cpw + c`` for every shard row j.  The union over the
+    layer-order window schedule (w = 0..W-1) tiles range(n_chunks)
+    exactly once — the invariant the chunk-ready dispatch permutes but
+    must not break (property-tested in tests/test_overlap_schedule.py)."""
+    cps = group.chunks_per_shard
+    if windows < 1 or cps % windows:
+        raise ValueError(
+            f"{windows} windows do not tile {cps} chunks per shard")
+    cpw = cps // windows
+    return tuple(
+        tuple(j * cps + w * cpw + c
+              for j in range(group.n_shards) for c in range(cpw))
+        for w in range(windows))
+
+
+def chunk_ready_schedule(group: GroupPlan, windows: int) -> tuple:
+    """Static readiness analysis for the chunk-ready dispatch.
+
+    The backward pass materializes leaf cotangents in *reverse* concat
+    order (last layer first), so the leaf at flat offset ``off`` closes
+    after fraction ``(M - off) / M`` of the backward (element count as
+    the time proxy, M = live elements).  Window w is ready once every
+    leaf intersecting one of its strips has closed — i.e. at the ready
+    fraction of its *earliest-offset* intersecting leaf.  Returns
+    ``(order, ready)``: ``ready[w]`` is that fraction (0.0 for windows
+    covering only rack padding), and ``order`` is the dispatch order —
+    windows sorted by ascending readiness, ties in ascending window
+    index.  Because row 0's strip of window w starts at ``w*Lw``, the
+    earliest intersecting offset is non-decreasing in w, so ``ready`` is
+    non-increasing in w and the dispatch order is the *reverse* of the
+    layer-order window schedule — up to ties: a leaf spanning several
+    windows gives them all its own ready fraction, and tied windows
+    dispatch in ascending index order."""
+    W = windows
+    S, L = group.n_shards, group.shard_len
+    if W < 1 or L % W:
+        raise ValueError(f"{W} windows do not tile shard_len {L}")
+    Lw = L // W
+    M = max(group.total, 1)
+    spans = []
+    off = 0
+    for size in group.sizes:
+        spans.append((off, size))
+        off += size
+    ready = []
+    for w in range(W):
+        min_off = None
+        for j in range(S):
+            lo = j * L + w * Lw
+            for o, sz in spans:          # ascending offsets: first
+                if o < lo + Lw and o + sz > lo:   # intersector is minimal
+                    min_off = o if min_off is None else min(min_off, o)
+                    break
+        ready.append(0.0 if min_off is None else (M - min_off) / M)
+    order = tuple(sorted(range(W), key=lambda w: (ready[w], w)))
+    return order, tuple(ready)
+
+
 # ------------------------------------------------------- flat param residency
 
 @dataclass(frozen=True)
@@ -270,6 +350,65 @@ class FlatParamStore:
 
         read.defvjp(fwd, bwd)
         return read
+
+    def window_flats(self, ct_tree, windows: dict) -> dict:
+        """Per-window flat cotangent assembly — the readiness hook of the
+        chunk-ready exchange (DESIGN.md §14).
+
+        ``grad_from_tree`` funnels every leaf cotangent into one (padded,)
+        buffer, so the first byte of the exchange data-depends on the last
+        leaf of the backward.  This variant instead builds, per dtype
+        group, ``windows[key]`` separate buffers: window w's buffer holds
+        only the strips ``[j*L + w*Lw, j*L + (w+1)*Lw)`` of the flat
+        domain (shape ``(S*Lw,)``, row j's strip at ``[j*Lw, (j+1)*Lw)``),
+        assembled by copying exactly the leaf pieces that intersect those
+        strips.  A window whose leaves all have cotangents therefore has a
+        complete buffer *before the rest of the backward finishes* — the
+        readiness analysis is pure dataflow, no runtime hooks — and the
+        per-window ring (pipeline.chunk_ready_exchange) can start as soon
+        as its buffer closes.  Rack padding past ``total`` stays zero,
+        exactly as grad_from_tree leaves it.
+
+        Only the single-model-shard layout is supported (mo == 1); the
+        engine gates ``overlap_backward`` accordingly."""
+        if self.mo != 1:
+            raise ValueError(
+                "chunk-ready window assembly requires a single model "
+                f"shard per store row (mo == 1, got mo={self.mo}); "
+                "overlap_backward is incompatible with nested tensor-"
+                "model sharding")
+        cts = dict(_leaf_paths(ct_tree))
+        out = {}
+        for g in self.plan.groups:
+            key = str(g.dtype)
+            W = windows[key]
+            S, L = g.n_shards, g.shard_len
+            if W < 1 or L % W:
+                raise ValueError(
+                    f"group {key}: {W} windows do not tile shard_len {L}")
+            Lw = L // W
+            offs = self.offsets[key]
+            flat_leaves: dict = {}
+            bufs = []
+            for w in range(W):
+                buf = jnp.zeros((S * Lw,), g.dtype)
+                for path, size, off in zip(g.paths, g.sizes, offs):
+                    for j in range(S):
+                        lo = j * L + w * Lw
+                        a, b = max(off, lo), min(off + size, lo + Lw)
+                        if a >= b:
+                            continue
+                        leaf = flat_leaves.get(path)
+                        if leaf is None:
+                            leaf = cts[path].reshape(-1).astype(g.dtype)
+                            flat_leaves[path] = leaf
+                        piece = jax.lax.dynamic_slice(leaf, (a - off,),
+                                                      (b - a,))
+                        buf = jax.lax.dynamic_update_slice(
+                            buf, piece, (j * Lw + (a - lo),))
+                bufs.append(buf)
+            out[key] = tuple(bufs)
+        return out
 
 
 # ----------------------------------------------------- multi-tenant packing

@@ -51,7 +51,10 @@ from ..optim.protocol import (ShardedOptimizer, SlotSpec,
 from ..utils import compat
 from . import chunking
 from .exchange import ExchangeContext, flat_rank
-from .pipeline import PIPELINED_STRATEGIES, run_exchange, run_wire_exchange
+from .pipeline import (PIPELINED_STRATEGIES, effective_windows,
+                       run_chunk_ready_exchange,
+                       run_chunk_ready_wire_exchange, run_exchange,
+                       run_wire_exchange)
 from .wire import WIRE_EF_SLOT, WireFormat, make_wire_format
 
 
@@ -108,6 +111,10 @@ class PHubClient:
                 f"wire format {tc.wire_format!r} needs a strategy with a "
                 f"shard dimension {PIPELINED_STRATEGIES}; {tc.strategy!r} "
                 f"exchanges full vectors in the state dtype")
+        if tc.overlap_backward and tc.strategy not in PIPELINED_STRATEGIES:
+            raise ValueError(
+                f"overlap_backward windows the shard dimension; "
+                f"{tc.strategy!r} has none ({PIPELINED_STRATEGIES})")
         if ctx is None:
             if mesh is None:
                 raise ValueError("PHubClient needs a mesh or an "
@@ -287,6 +294,13 @@ class PHubClient:
         client's own plan, slots, and update rules — the co-scheduler's
         hook for packed tenant domains with mask/coefficient tables.
 
+        A ``fg`` value may also be a *tuple* of per-window buffers in the
+        ``window_flats`` layout (chunk-ready dispatch, DESIGN.md §14):
+        the exchange then rings each window off its own buffer so window
+        rings can start while the backward is still producing other
+        windows' cotangents.  The tuple's length IS the window count —
+        the caller already applied ``effective_windows``.
+
         Under an encoded wire format the slot tuple's LAST entry is the
         ``wire_ef`` error-feedback residual: it is split off here and
         threaded to the wire exchange as the pull-delta residual rather
@@ -320,21 +334,38 @@ class PHubClient:
             upd = (update_by_key[key] if update_by_key is not None
                    else self.update_fn(grp))
             aux = aux_by_key[key] if aux_by_key is not None else ()
+            gk = fg[key]
+            ready = isinstance(gk, tuple)
+            if ready:
+                gk = tuple(v.reshape(-1) for v in gk)
             if self.wire.is_identity:
-                p2, s2 = run_exchange(
-                    self.tc.strategy, self.ctx, fg[key].reshape(-1),
-                    fp[key].reshape(-1), slots, upd, rank, grp,
-                    self.tc.pipeline_windows, aux, n_live)
+                if ready:
+                    p2, s2 = run_chunk_ready_exchange(
+                        self.tc.strategy, self.ctx, gk,
+                        fp[key].reshape(-1), slots, upd, rank, grp, aux,
+                        n_live)
+                else:
+                    p2, s2 = run_exchange(
+                        self.tc.strategy, self.ctx, gk.reshape(-1),
+                        fp[key].reshape(-1), slots, upd, rank, grp,
+                        self.tc.pipeline_windows, aux, n_live)
                 r2 = None
             else:
                 residual = opt[key][WIRE_EF_SLOT].reshape(-1)
                 fd = (self._fused_dequant(grp, n_live)
                       if update_by_key is None and not aux else None)
-                p2, s2, r2 = run_wire_exchange(
-                    self.tc.strategy, self.ctx, fg[key].reshape(-1),
-                    fp[key].reshape(-1), slots, upd, rank, grp,
-                    self.tc.pipeline_windows, self.wire, residual, aux,
-                    fused_dequant=fd, n_live=n_live)
+                if ready:
+                    p2, s2, r2 = run_chunk_ready_wire_exchange(
+                        self.tc.strategy, self.ctx, gk,
+                        fp[key].reshape(-1), slots, upd, rank, grp,
+                        self.wire, residual, aux, fused_dequant=fd,
+                        n_live=n_live)
+                else:
+                    p2, s2, r2 = run_wire_exchange(
+                        self.tc.strategy, self.ctx, gk.reshape(-1),
+                        fp[key].reshape(-1), slots, upd, rank, grp,
+                        self.tc.pipeline_windows, self.wire, residual, aux,
+                        fused_dequant=fd, n_live=n_live)
             new_p[key] = p2.reshape(fp[key].shape)
             new_o[key] = {s.name: v.reshape(opt[key][s.name].shape)
                           for s, v in zip(opt_specs, s2)}
@@ -404,6 +435,17 @@ class PHubClient:
                 # below renormalizes over n_live
                 w = jnp.asarray(mask)[flat_rank(axes, sizes)]
                 fg = {k: v * w.astype(v.dtype) for k, v in fg.items()}
+            if tc.overlap_backward:
+                # chunk-ready: hand each group to the exchange as per-
+                # window buffers (strided split — standalone callers push
+                # a finished flat gradient, so this only exercises the
+                # dispatch; the engine's window_flats path is where the
+                # buffers close mid-backward)
+                grps = self._groups()
+                fg = {k: chunking.split_windows(
+                          v, grps[k],
+                          effective_windows(grps[k], tc.pipeline_windows))
+                      for k, v in fg.items()}
             new_fp, new_opt = self.exchange_flats(fg, fp, opt, rank,
                                                   n_live=n_live)
             new_params = (new_fp if flat

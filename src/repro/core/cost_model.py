@@ -175,6 +175,49 @@ def rebalance_traffic(plan, slot_specs=(), mo: int = 1) -> dict:
             "per_group": per_group}
 
 
+# ------------------------------------------------ backward-overlap (§14)
+
+def backward_overlap_fraction(ready_fracs, window_comm_s,
+                              backward_s: float) -> dict:
+    """Overlap accounting for the chunk-ready dispatch (DESIGN.md §14).
+
+    ``ready_fracs``: per-window readiness fractions in *dispatch order*
+    (chunking.chunk_ready_schedule's ``ready`` reordered by its
+    ``order``); ``window_comm_s``: each window's exchange time in the
+    same order; ``backward_s``: backward-pass duration.  Windows launch
+    when ready and serialize on the exchange resource:
+    ``start_w = max(end_{w-1}, ready_w * backward_s)``.  The portion of
+    each window's transfer that lands before ``backward_s`` is hidden.
+
+    Returns ``overlap_fraction`` (hidden comm / total comm, 0 when there
+    is no comm), ``exposed_s`` (comm past the backward edge — the step-
+    time tail), and ``step_overhead_s`` relative to a perfectly
+    overlapped schedule (exposed comm of a hypothetical dispatch at
+    readiness with no serialization)."""
+    ready = list(ready_fracs)
+    comm = list(window_comm_s)
+    if len(ready) != len(comm):
+        raise ValueError(
+            f"{len(ready)} readiness fractions vs {len(comm)} windows")
+    total = sum(comm)
+    if total <= 0.0:
+        return {"overlap_fraction": 0.0, "hidden_s": 0.0, "exposed_s": 0.0,
+                "total_comm_s": 0.0, "step_overhead_s": 0.0}
+    hidden = 0.0
+    end = 0.0
+    for r, c in zip(ready, comm):
+        start = max(end, r * backward_s)
+        end = start + c
+        hidden += min(max(backward_s - start, 0.0), c)
+    # ideal: every window starts exactly at readiness (infinite links)
+    ideal_exposed = max((max(r * backward_s + c - backward_s, 0.0)
+                         for r, c in zip(ready, comm)), default=0.0)
+    exposed = max(end - backward_s, 0.0)
+    return {"overlap_fraction": hidden / total, "hidden_s": hidden,
+            "exposed_s": exposed, "total_comm_s": total,
+            "step_overhead_s": exposed - ideal_exposed}
+
+
 # ---------------------------------------------------------------- §4.9
 
 @dataclass(frozen=True)

@@ -47,7 +47,7 @@ from ..models import (init as model_init, forward, prefill, init_cache,
 from . import chunking
 from .client import PHubClient, _MeshScopedJit
 from .exchange import ExchangeContext
-from .pipeline import PIPELINED_STRATEGIES
+from .pipeline import PIPELINED_STRATEGIES, effective_windows
 from .sharding import ShardingPlan, plan_params, local_shapes, make_gather_fn
 from .wire import make_wire_format
 
@@ -75,6 +75,12 @@ class PHubEngine:
                 f"strategy with a shard dimension {PIPELINED_STRATEGIES}; "
                 f"{self.tc.strategy!r} exchanges leaves or full vectors "
                 f"in the state dtype")
+        if self.tc.overlap_backward and self.tc.strategy not in \
+                PIPELINED_STRATEGIES:
+            raise ValueError(
+                f"overlap_backward windows the shard dimension "
+                f"({PIPELINED_STRATEGIES}); {self.tc.strategy!r} has no "
+                f"chunk-ready seam")
         self.axis_sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
         self.data_axes = tuple(a for a in self.mesh.axis_names
                                if a in ("pod", "data"))
@@ -97,6 +103,13 @@ class PHubEngine:
         self.local_param_shapes = local_shapes(self.params_shapes, self.plan,
                                                plan_sizes)
         self.mo_eff = plan_sizes.get("model", 1)
+        if self.tc.overlap_backward and self.mo_eff > 1:
+            raise ValueError(
+                "overlap_backward needs a single model shard per store "
+                f"row (mo == 1, got {self.mo_eff}): per-window cotangent "
+                "assembly (chunking.window_flats) does not thread the "
+                "nested tensor-model shard_map; replicate weights "
+                "(dp_over_model) or drop the 'model' axis")
         if self.tc.strategy != "fsdp_stream":
             self.chunk_plan = chunking.build_plan(
                 self.local_param_shapes,
@@ -474,6 +487,30 @@ class PHubEngine:
             axis_names={"model"}, check_vma=False,
             nested=True)(gstore, pstore, opt, rank, *extra)
 
+    def exchange_stage_ready(self, grads, params, opt, n_live=None,
+                             flat: bool = False):
+        """Chunk-ready exchange (DESIGN.md §14): ``grads`` is the *tree*
+        of per-leaf cotangents (the step differentiated w.r.t. the tree,
+        not the flat store), and per-window buffers are assembled with
+        ``window_flats`` so each window's ring depends only on the leaves
+        it covers — windows whose layers finished their backward can ring
+        while the rest of the backward still runs.  ``flat`` selects
+        whether ``params`` is the flat store ({key: (1, padded)}) or the
+        tree.  Requires mo_eff == 1 (gated in __post_init__), so no
+        nested model shard_map ever wraps this path."""
+        cp = self.chunk_plan
+        rank = self.exchange_rank()
+        wins = {str(g.dtype): effective_windows(g, self.tc.pipeline_windows)
+                for g in cp.groups}
+        fg = self.store_layout.window_flats(grads, wins)
+        fp = params if flat else chunking.flatten_groups(cp, params)
+        new_p, new_m = self.client.exchange_flats(fg, fp, opt, rank,
+                                                  n_live=n_live)
+        if flat:
+            return new_p, new_m
+        return (chunking.unflatten_groups(cp, new_p, self.params_shapes),
+                new_m)
+
     def make_train_step(self, batch_shapes: dict[str, jax.ShapeDtypeStruct],
                         membership=None, sanity=None):
         """``membership``: an elastic live set (repro.elastic) baked into
@@ -514,34 +551,56 @@ class PHubEngine:
                 "gradient sanity masking needs a chunk-domain strategy: "
                 "fsdp_stream reduce-scatters gradients inside the backward "
                 "scan, before the push site where the health gate applies")
-        exchange_stage = partial(self.exchange_stage, n_live=n_live)
-        exchange_stage_flat = partial(self.exchange_stage_flat,
-                                      n_live=n_live)
-
         flat = tc.flat_residency
-        if flat:
-            read_store = self.store_layout.reader(self.params_shapes)
+        overlap = tc.overlap_backward
+        if overlap:
+            # Chunk-ready (DESIGN.md §14): differentiate w.r.t. the *tree*
+            # so every leaf keeps its own cotangent — window_flats then
+            # builds per-window buffers whose dataflow IS the readiness
+            # signal.  Under flat residency the store->tree read happens
+            # OUTSIDE value_and_grad (no gradient flows through it; the
+            # exchange writes the new store directly).
+            def local_grads(params, batch):
+                tree = (self.store_layout.to_tree(params, self.params_shapes)
+                        if flat else params)
+                return self._local_grads(loss_fn, tree, batch)
 
-            def loss_fn_used(store, batch):
-                # Differentiate w.r.t. the flat store: leaves are slice
-                # views and the reader's custom VJP assembles the cotangent
-                # already flat — no concatenate, one write per element.
-                return loss_fn(read_store(store), batch)
+            def run_exchange(grads, params, opt, nl):
+                return self.exchange_stage_ready(grads, params, opt,
+                                                 n_live=nl, flat=flat)
         else:
-            loss_fn_used = loss_fn
+            if flat:
+                read_store = self.store_layout.reader(self.params_shapes)
+
+                def loss_fn_used(store, batch):
+                    # Differentiate w.r.t. the flat store: leaves are slice
+                    # views and the reader's custom VJP assembles the
+                    # cotangent already flat — no concatenate, one write
+                    # per element.
+                    return loss_fn(read_store(store), batch)
+            else:
+                loss_fn_used = loss_fn
+
+            def local_grads(params, batch):
+                return self._local_grads(loss_fn_used, params, batch)
+
+            def run_exchange(grads, params, opt, nl):
+                return (self.exchange_stage_flat(grads, params, opt,
+                                                 n_live=nl)
+                        if flat else
+                        self.exchange_stage(grads, params, opt, n_live=nl))
 
         def local_step(params, opt, batch):
-            tot, loss, grads = self._local_grads(loss_fn_used, params, batch)
+            tot, loss, grads = local_grads(params, batch)
             if mask is not None:
                 grads = self._masked_grads(grads, mask)
-            new_p, new_m = (exchange_stage_flat(grads, params, opt) if flat
-                            else exchange_stage(grads, params, opt))
+            new_p, new_m = run_exchange(grads, params, opt, n_live)
             metrics = {"loss": jax.lax.pmean(loss, self.exchange_axes),
                        "total_loss": jax.lax.pmean(tot, self.exchange_axes)}
             return new_p, new_m, metrics
 
         def sane_step(params, opt, batch, health):
-            tot, loss, grads = self._local_grads(loss_fn_used, params, batch)
+            tot, loss, grads = local_grads(params, batch)
             wrank = self.worker_rank()
             world = self.ctx.n_workers
             if sanity.allow_injection:
@@ -559,10 +618,11 @@ class PHubEngine:
             grads = jax.tree.map(
                 lambda g: jnp.where(bad, jnp.zeros_like(g), g), grads)
             nl = jnp.maximum(jax.lax.psum(okf, self.exchange_axes), 1.0)
-            new_p, new_m = (
-                self.exchange_stage_flat(grads, params, opt, n_live=nl)
-                if flat
-                else self.exchange_stage(grads, params, opt, n_live=nl))
+            # note: the scalar verdict reduced over ALL leaves makes every
+            # window's buffer depend on the whole backward — under sanity
+            # the chunk-ready schedule degenerates to post-backward
+            # dispatch, but stays value-exact (DESIGN.md §14)
+            new_p, new_m = run_exchange(grads, params, opt, nl)
             onehot = (jax.lax.broadcasted_iota(jnp.int32, (world,), 0)
                       == wrank)
             metrics = {
@@ -806,6 +866,12 @@ def make_co_train_step(tenants: dict, domain, batch_shapes: dict,
     names = list(tenants)
     e0 = tenants[names[0]]
     tc0, mesh = e0.tc, e0.mesh
+    if tc0.overlap_backward:
+        raise ValueError(
+            "co-scheduled tenants pack every tenant's full flat gradient "
+            "into one shared domain before the exchange; the chunk-ready "
+            "per-window assembly (overlap_backward) has no packed-domain "
+            "seam yet — train tenants solo or drop overlap_backward")
     manual_axes = set(e0.exchange_axes)
     mask, n_live = e0.elastic_mask(membership)
     loss_fns = ({} if zero_compute

@@ -215,6 +215,105 @@ def run_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
                           n_live)
 
 
+# --------------------------------------------- chunk-ready dispatch (§14)
+
+def chunk_ready_exchange(strategy: str, ctx: ExchangeContext,
+                         g_wins: tuple, p: jax.Array, slots: tuple,
+                         update_fn: UpdateFn, rank: jax.Array,
+                         aux: tuple = (),
+                         n_live: Optional[float] = None
+                         ) -> tuple[jax.Array, tuple]:
+    """``pipelined_exchange`` fed *per-window* gradient buffers instead of
+    one flat vector — the identity-wire half of the chunk-ready dispatch
+    (DESIGN.md §14).
+
+    ``g_wins``: tuple of W buffers in the ``window_flats`` layout — buffer
+    w is (S*Lw,) with shard row j's strip at [j*Lw, (j+1)*Lw).  Because
+    window w's ring touches only ``g_wins[w]``, and that buffer data-
+    depends only on the cotangents of the leaves it covers, the compiler
+    can launch window w's reduce-scatter while the backward pass is still
+    producing earlier layers' cotangents.  The window loop is UNROLLED on
+    purpose: a ``lax.scan`` would need the buffers stacked into one array,
+    and that stack would re-merge the very dependencies the split buffers
+    exist to keep apart.
+
+    Per element the arithmetic is identical to ``pipelined_exchange`` —
+    same ring hop order (``_ring_window_rs`` over each buffer), same /N,
+    same update — so the result is bitwise the monolithic schedule's
+    (oracle: tests/multidevice/check_overlap.py)."""
+    if strategy not in PIPELINED_STRATEGIES:
+        raise ValueError(f"strategy {strategy!r} has no shard dimension to "
+                         f"window; use exchange_group")
+    axes = ctx.data_axes
+    N = ctx.n_workers if n_live is None else n_live
+    if strategy == "hierarchical":
+        ring_axes: tuple[str, ...] = ("data",)
+        S = ctx.axis_sizes["data"]
+        cross_pod = "pod" in axes
+    else:
+        ring_axes = tuple(axes)
+        S = ctx.n_shards(strategy)
+        cross_pod = False
+
+    W = len(g_wins)
+    Lw = g_wins[0].size // S
+    L = Lw * W                          # stride of p's shard rows
+
+    def rs_window(w):
+        r = _ring_window_rs(g_wins[w], Lw, 0, Lw, ring_axes, rank, S)
+        if cross_pod:
+            r = jax.lax.psum(r, "pod")      # cross-rack on the owner only
+        return r / N
+
+    def opt_window(w, r):
+        pw = jax.lax.dynamic_slice(p, (rank * L + w * Lw,), (Lw,))
+        sw = tuple(jax.lax.dynamic_slice(s, (w * Lw,), (Lw,))
+                   for s in slots)
+        auxw = tuple(jax.lax.dynamic_slice(a, (rank * L + w * Lw,), (Lw,))
+                     for a in aux)
+        return update_fn(pw, r, sw, *auxw)
+
+    carry = rs_window(0)
+    p_wins: list = []
+    s_wins: list = []
+    for w in range(W - 1):
+        nxt = rs_window(w + 1)              # window w+1 on the wire ...
+        p2, s2 = opt_window(w, carry)       # ... while window w optimizes
+        p_wins.append(p2)
+        s_wins.append(s2)
+        carry = nxt
+    p_l, s_l = opt_window(W - 1, carry)
+    shard = jnp.concatenate(p_wins + [p_l]) if p_wins else p_l
+    s_out = tuple(
+        (jnp.concatenate([sw[i] for sw in s_wins] + [s_l[i]])
+         if s_wins else s_l[i])
+        for i in range(len(slots)))
+    p_out = jax.lax.all_gather(shard, ring_axes, tiled=True)
+    return p_out, s_out
+
+
+def run_chunk_ready_exchange(strategy: str, ctx: ExchangeContext,
+                             g_wins: tuple, p: jax.Array, slots: tuple,
+                             update_fn: UpdateFn, rank: jax.Array,
+                             group: GroupPlan, aux: tuple = (),
+                             n_live: Optional[float] = None
+                             ) -> tuple[jax.Array, tuple]:
+    """Identity-wire chunk-ready dispatch for one dtype group.  ``g_wins``
+    already has the *effective* window count (the caller split it); W == 1
+    means the single buffer IS the (padded,) flat vector, and delegating
+    to the monolithic ``exchange_group`` keeps that case bitwise on the
+    psum_scatter program."""
+    if strategy not in PIPELINED_STRATEGIES:
+        raise ValueError(f"strategy {strategy!r} has no shard dimension to "
+                         f"window; use exchange_group")
+    if len(g_wins) == 1:
+        from .exchange import exchange_group
+        return exchange_group(strategy, ctx, g_wins[0], p, slots, update_fn,
+                              rank, aux, n_live)
+    return chunk_ready_exchange(strategy, ctx, g_wins, p, slots, update_fn,
+                                rank, aux, n_live)
+
+
 # ------------------------------------------------------ encoded-wire path
 
 def pipelined_wire_exchange(strategy: str, ctx: ExchangeContext,
@@ -223,7 +322,8 @@ def pipelined_wire_exchange(strategy: str, ctx: ExchangeContext,
                             windows: int, wire, ce: int,
                             residual: jax.Array, aux: tuple = (),
                             fused_dequant=None,
-                            n_live: Optional[float] = None):
+                            n_live: Optional[float] = None,
+                            g_wins: Optional[tuple] = None):
     """The windowed schedule over *encoded* payloads (DESIGN.md §11).
 
     Same double-buffered structure as ``pipelined_exchange``, but every
@@ -257,6 +357,12 @@ def pipelined_wire_exchange(strategy: str, ctx: ExchangeContext,
     hierarchical reduction, which needs the decoded value first).
     ``n_live``: elastic live-contributor count (None = full rack; masked
     workers' zero rows ride the ring unchanged — see exchange_group).
+    ``g_wins``: optional chunk-ready per-window buffers (window_flats
+    layout); when given, window w's rows are read from ``g_wins[w]``
+    instead of the flat ``g`` (which may be None) — same values, but each
+    window's ring depends only on its own buffer, so the rings can start
+    mid-backward (DESIGN.md §14).  The hop/window loops being already
+    unrolled here, the g_wins variant changes nothing but the row reads.
     Returns (p', slots', residual')."""
     axes = ctx.data_axes
     N = ctx.n_workers if n_live is None else n_live
@@ -269,9 +375,16 @@ def pipelined_wire_exchange(strategy: str, ctx: ExchangeContext,
         S = ctx.n_shards(strategy)
         cross_pod = False
 
-    L = g.size // S
     W = windows
-    Lw = L // W
+    if g_wins is not None:
+        if len(g_wins) != W:
+            raise ValueError(f"g_wins has {len(g_wins)} buffers for "
+                             f"{W} windows")
+        Lw = g_wins[0].size // S
+        L = Lw * W
+    else:
+        L = g.size // S
+        Lw = L // W
     axis = tuple(ring_axes) if len(ring_axes) > 1 else ring_axes[0]
     perm = [(i, (i + 1) % S) for i in range(S)]
 
@@ -290,9 +403,16 @@ def pipelined_wire_exchange(strategy: str, ctx: ExchangeContext,
         for a lax.scan to pay for itself (DESIGN.md §11)."""
         start = w * Lw
 
-        def row(j):
-            return jax.lax.dynamic_slice(g, (j * L + start,), (Lw,)
-                                         ).astype(jnp.float32)
+        if g_wins is None:
+            def row(j):
+                return jax.lax.dynamic_slice(g, (j * L + start,), (Lw,)
+                                             ).astype(jnp.float32)
+        else:
+            gw = g_wins[w]
+
+            def row(j):
+                return jax.lax.dynamic_slice(gw, (j * Lw,), (Lw,)
+                                             ).astype(jnp.float32)
 
         if S == 1:
             return None, row(jnp.zeros((), jnp.int32))
@@ -375,3 +495,29 @@ def run_wire_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
     return pipelined_wire_exchange(strategy, ctx, g, p, slots, update_fn,
                                    rank, w, wire, group.chunk_elems,
                                    residual, aux, fused_dequant, n_live)
+
+
+def run_chunk_ready_wire_exchange(strategy: str, ctx: ExchangeContext,
+                                  g_wins: tuple, p: jax.Array,
+                                  slots: tuple, update_fn: UpdateFn,
+                                  rank: jax.Array, group: GroupPlan,
+                                  wire, residual: jax.Array,
+                                  aux: tuple = (), fused_dequant=None,
+                                  n_live: Optional[float] = None):
+    """Encoded-wire chunk-ready dispatch: ``pipelined_wire_exchange`` fed
+    per-window buffers.  ``g_wins`` already has the effective window
+    count; W == 1 reads the single (padded,) buffer through the same row
+    slices as the flat path, so that case lowers to the identical encoded
+    program."""
+    if wire.is_identity:
+        raise ValueError("identity wire travels run_chunk_ready_exchange; "
+                         "run_chunk_ready_wire_exchange is the encoded "
+                         "datapath")
+    if strategy not in PIPELINED_STRATEGIES:
+        raise ValueError(
+            f"wire format {wire.name!r} needs a strategy with a shard "
+            f"dimension {PIPELINED_STRATEGIES}; {strategy!r} has none")
+    return pipelined_wire_exchange(strategy, ctx, None, p, slots, update_fn,
+                                   rank, len(g_wins), wire,
+                                   group.chunk_elems, residual, aux,
+                                   fused_dequant, n_live, g_wins=g_wins)

@@ -23,8 +23,12 @@ partitions of the *same* tenant chunk set:
 Coordinates are *packed element offsets* (chunk-granular).  Rack padding
 belongs to no tenant and is never moved: the new buffer's pad regions
 start from zero, exactly like the attach/detach migration drops the dead
-rack-pad tail (DESIGN.md §9/§10 — adam's k slots tick on dead tails by
-design; their values there are semantically inert).
+rack-pad tail (DESIGN.md §9/§10).  Every optimizer slot — including
+adam's k1/k2, whose tick is gated to positions that have seen gradient
+(optim/protocol) — holds exactly 0 on dead tails, so zero-initializing
+the new pad is not just semantically inert but *state-exact*: a resize
+round trip that re-promotes former pad into a live domain starts it
+fresh, with no stale ``1-b^t`` bias correction.
 """
 from __future__ import annotations
 

@@ -77,13 +77,19 @@ def _adam_body(p_ref, g_ref, m_ref, v_ref, k1_ref, k2_ref, po_ref, mo_ref,
     g = g_ref[...].astype(jnp.float32)
     m = m_ref[...].astype(jnp.float32)
     v = v_ref[...].astype(jnp.float32)
-    k1n = b1 * k1_ref[...].astype(jnp.float32) + (1 - b1)   # = 1 - b1^t
-    k2n = b2 * k2_ref[...].astype(jnp.float32) + (1 - b2)
+    k1 = k1_ref[...].astype(jnp.float32)
+    k2 = k2_ref[...].astype(jnp.float32)
+    # k tick gated to positions that have seen gradient, so dead rack-pad
+    # tails keep the zero fixed point (matches optim/protocol's jnp body)
+    alive = (g != 0) | (k1 != 0)
+    k1n = jnp.where(alive, b1 * k1 + (1 - b1), k1)      # = 1 - b1^t
+    k2n = jnp.where(alive, b2 * k2 + (1 - b2), k2)
     m2 = b1 * m + (1 - b1) * g
     v2 = b2 * v + (1 - b2) * g * g
     rk2 = jnp.sqrt(k2n)
     # epsilon-hat form, matching the protocol's jnp body (optim/protocol)
     step = (lr * (1.0 / k1n) * rk2 * m2) / (jnp.sqrt(v2) + eps * rk2)
+    step = jnp.where(k1n > 0, step, jnp.zeros_like(step))  # mask dead NaN
     po_ref[...] = (p_ref[...].astype(jnp.float32) - step).astype(po_ref.dtype)
     mo_ref[...] = m2.astype(mo_ref.dtype)
     vo_ref[...] = v2.astype(vo_ref.dtype)

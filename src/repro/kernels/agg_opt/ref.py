@@ -24,12 +24,15 @@ def adam_opt_ref(p, g, m, v, k1, k2, *, lr: float, b1: float = 0.9,
                  b2: float = 0.999, eps: float = 1e-8):
     g = g.astype(jnp.float32)
     m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
-    k1n = b1 * k1.astype(jnp.float32) + (1 - b1)
-    k2n = b2 * k2.astype(jnp.float32) + (1 - b2)
+    k1f, k2f = k1.astype(jnp.float32), k2.astype(jnp.float32)
+    alive = (g != 0) | (k1f != 0)
+    k1n = jnp.where(alive, b1 * k1f + (1 - b1), k1f)
+    k2n = jnp.where(alive, b2 * k2f + (1 - b2), k2f)
     m2 = b1 * m32 + (1 - b1) * g
     v2 = b2 * v32 + (1 - b2) * g * g
     rk2 = jnp.sqrt(k2n)
     step = (lr * (1.0 / k1n) * rk2 * m2) / (jnp.sqrt(v2) + eps * rk2)
+    step = jnp.where(k1n > 0, step, jnp.zeros_like(step))
     return ((p.astype(jnp.float32) - step).astype(p.dtype),
             m2.astype(m.dtype), v2.astype(v.dtype),
             k1n.astype(k1.dtype), k2n.astype(k2.dtype))

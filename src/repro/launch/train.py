@@ -19,6 +19,37 @@ import sys
 import time
 
 
+def resolve_mode_flags(supervise, elastic, chaos, chaos_faults):
+    """Apply the launcher's flag implications and reject combinations
+    that would silently discard a requested behavior.
+
+    ``--chaos-faults`` implies ``--supervise`` (the supervisor absorbs
+    the injected faults); ``--chaos`` implies ``--elastic`` (membership
+    events need the elastic datapath).  The supervised loop hands worker
+    membership to the TrainSupervisor, so a ``--chaos``/``--elastic``
+    membership schedule under ``--supervise`` would be constructed and
+    then never consulted — the launcher used to branch into the
+    supervised loop *before* building the schedule and trained without
+    chaos.  That combination now fails fast, naming both sides.
+
+    Returns ``(supervise, elastic)`` with implications applied; raises
+    SystemExit on conflict.  Pure — unit-tested over every flag pair in
+    tests/test_train_cli.py.
+    """
+    supervise = supervise or chaos_faults
+    elastic = elastic or chaos
+    if supervise and elastic:
+        sup_src = "--chaos-faults" if chaos_faults else "--supervise"
+        el_src = "--chaos" if chaos else "--elastic"
+        raise SystemExit(
+            f"{sup_src} runs the self-healing TrainSupervisor, which owns "
+            f"worker membership (DESIGN.md §13) — the {el_src} membership "
+            f"schedule would be silently discarded before reaching the "
+            f"supervised loop. Run {el_src} without {sup_src}, or use "
+            f"--chaos-faults alone for supervised fault injection.")
+    return supervise, elastic
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
@@ -30,6 +61,11 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=5e-3)
     ap.add_argument("--strategy", default="sharded_ps")
     ap.add_argument("--chunk-kb", type=int, default=32)
+    ap.add_argument("--windows", type=int, default=1,
+                    help="pipeline windows per dtype group")
+    ap.add_argument("--overlap", action="store_true",
+                    help="chunk-ready dispatch: window rings launch "
+                         "mid-backward (DESIGN.md §14)")
     ap.add_argument("--use-pallas", action="store_true")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (CPU testing); 0 = as-is")
@@ -66,10 +102,8 @@ def main(argv=None):
                          "stalls) for the supervisor to absorb (implies "
                          "--supervise)")
     args = ap.parse_args(argv)
-    if args.chaos_faults:
-        args.supervise = True
-    if args.chaos:
-        args.elastic = True
+    args.supervise, args.elastic = resolve_mode_flags(
+        args.supervise, args.elastic, args.chaos, args.chaos_faults)
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -93,6 +127,8 @@ def main(argv=None):
     tc = TrainConfig(strategy=args.strategy, lr=args.lr,
                      chunk_size_bytes=args.chunk_kb * 1024,
                      use_pallas=args.use_pallas,
+                     pipeline_windows=args.windows,
+                     overlap_backward=args.overlap,
                      loss_chunk=min(1024, args.seq))
 
     cm = PHubConnectionManager()

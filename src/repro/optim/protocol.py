@@ -33,7 +33,12 @@ through the identical machinery as every other slot with no special
 cases, and — unlike ``b ** t`` — the recurrence uses only exactly-rounded
 mul/add, so the windowed (lax.scan) and monolithic compilations of the
 rule produce bitwise-identical corrections (XLA's pow approximation is
-not stable across fusion contexts; the oracle caught this).
+not stable across fusion contexts; the oracle caught this).  The tick is
+gated to positions that have ever seen gradient: ``k' = b*k + (1-b)``
+has no zero fixed point, and an ungated tick would advance dead rack-pad
+tails to ``1-b^t`` — state a resize/repack could later promote into a
+live domain with a stale correction.  With the gate, pad tails hold
+exactly 0 like every other slot.
 """
 from __future__ import annotations
 
@@ -198,14 +203,27 @@ class AdamOptimizer(ShardedOptimizer):
         m, v, k1, k2 = slots
         (lr,) = coefs
         g = self._decayed(p, g.astype(m.dtype))
-        k1n = self.b1 * k1 + (1 - self.b1)        # = 1 - b1^t, exactly-
-        k2n = self.b2 * k2 + (1 - self.b2)        # rounded recurrence
+        # The k recurrence `b*k + (1-b)` has no zero fixed point, so an
+        # ungated tick would advance dead rack-pad tails to 1-b^t.  A
+        # later resize/repack (DESIGN.md §9/§10) can promote formerly-pad
+        # positions into a live domain, which would then start with a
+        # stale bias correction.  Gate the tick to positions that have
+        # ever seen gradient: dead tails hold exactly 0 like every other
+        # slot, making optimizer state migration-invariant.  Live
+        # positions select the identical computed float, so the gate is
+        # bitwise-invisible where it doesn't apply.
+        alive = (g != 0) | (k1 != 0)
+        k1n = jnp.where(alive, self.b1 * k1 + (1 - self.b1), k1)
+        k2n = jnp.where(alive, self.b2 * k2 + (1 - self.b2), k2)
         m2 = self.b1 * m + (1 - self.b1) * g
         v2 = self.b2 * v + (1 - self.b2) * g * g
         m2, v2, k1n, k2n = jax.lax.optimization_barrier((m2, v2, k1n, k2n))
         q1, rk2 = jax.lax.optimization_barrier(
             (1.0 / k1n.astype(m.dtype), jnp.sqrt(k2n).astype(m.dtype)))
         step = (lr * q1 * rk2 * m2) / (jnp.sqrt(v2) + self.eps * rk2)
+        # Dead positions have k1n == 0, so q1 is inf and step is NaN —
+        # mask to an exact no-op (p - 0 is p, bitwise).
+        step = jnp.where(k1n > 0, step, jnp.zeros_like(step))
         return p - step.astype(p.dtype), (m2, v2, k1n, k2n)
 
     def pallas_update(self, chunk_elems, coefs):
@@ -292,7 +310,8 @@ def make_combined_update(bindings: Sequence[RuleBinding]) -> Callable:
     program*; positions owned by nobody (rack padding) keep their inputs
     untouched in the multi-rule case and rely on the rules' zero fixed
     points in the single-rule case (zero gradient into zero state moves
-    nothing).
+    nothing — including adam's k1/k2, whose tick is gated to positions
+    that have ever seen gradient).
 
     Cross-program caveat: a single-rule combined update compiles to the
     same arithmetic as the solo engines (co-scheduled == solo is enforced

@@ -40,8 +40,17 @@ Four claims (DESIGN.md §12):
              finite, epochs advance, and the whole run is bitwise
              reproducible from the seed.
 
+  padtail    Adam's k1/k2 bias-correction slots hold exactly 0 on the
+             dead rack-pad tail (the tick is gated to positions that have
+             seen gradient, optim/protocol), so an 8->6->8 resize round
+             trip followed by more training is bitwise equal to a
+             never-resized run on the FULL buffers — pad included.
+             Pre-gate, the ungated ``k' = b*k + (1-b)`` recurrence
+             advanced pad tails to 1-b^t, which a repack could promote
+             into a live domain as a stale correction.
+
 Usage: python tests/multidevice/check_elastic.py [case ...]
-Cases: parity straggler resize checkpoint chaos
+Cases: parity straggler resize checkpoint chaos padtail
 Prints "OK <case>" lines; exits nonzero on failure.
 """
 import os
@@ -66,7 +75,7 @@ from repro.elastic import ChaosSchedule, Membership  # noqa: E402
 from repro.optim import make_optimizer  # noqa: E402
 
 CASES = sys.argv[1:] or ["parity", "straggler", "resize", "checkpoint",
-                         "chaos"]
+                         "chaos", "padtail"]
 failures = 0
 W = 8                                   # rack size for the exchange cases
 STEPS = 3
@@ -381,6 +390,65 @@ def check_resize():
     report(ok, "resize co domain steps after resize cycle", "")
 
 
+# ---------------------------------------------------------------- padtail
+
+def _slot_pad_nonzero(eng, o, slots=("k1", "k2")):
+    """Count nonzero elements of the named slots on the dead rack-pad
+    tail (the region past live_elems — the complement of
+    _slot_live_mismatches' slice)."""
+    bad = 0
+    for g in eng.chunk_plan.groups:
+        key = str(g.dtype)
+        for slot in slots:
+            if slot not in o[key]:
+                continue
+            x = np.asarray(o[key][slot])
+            x = x.reshape(x.shape[0], -1)[:, g.live_elems:]
+            bad += int((x != 0).sum())
+    return bad
+
+
+def check_padtail():
+    cfg = reduced(ARCHS["llama3.2-1b"], d_model=64)
+    tc = TrainConfig(strategy="sharded_ps", optimizer="adam", lr=1e-3,
+                     loss_chunk=32, pipeline_windows=2, wire_format="int8",
+                     chunk_size_bytes=1024)
+
+    def train(cm, h, p, o, n, seed=0):
+        b = _device_batch(cm.connect_service(h), cfg, seed)
+        for _ in range(n):
+            p, o, _ = cm.push_pull(h, p, o, b)
+        return p, o
+
+    # reference: never resized, 4 steps at world 8
+    cmr = PHubConnectionManager()
+    hr = cmr.create_service("pad", cfg, tc, mesh_of(8))
+    pr, orr = cmr.init_service(hr, jax.random.PRNGKey(0))
+    pr, orr = train(cmr, hr, pr, orr, 4)
+    engr = cmr.connect_service(hr)
+    report(_slot_pad_nonzero(engr, orr) == 0,
+           "padtail k slots zero on dead tail after training",
+           f"nonzero={_slot_pad_nonzero(engr, orr)}")
+
+    # resize round trip mid-run: 2 steps, 8->6->8 migration, 2 more steps
+    cm = PHubConnectionManager()
+    h = cm.create_service("pad", cfg, tc, mesh_of(8))
+    p, o = cm.init_service(h, jax.random.PRNGKey(0))
+    p, o = train(cm, h, p, o, 2)
+    s = cm.resize(mesh_of(6), states={"pad": (p, o)})
+    s = cm.resize(mesh_of(8), states={"pad": s["pad"]})
+    p, o = s["pad"]
+    p, o = train(cm, h, p, o, 2)
+
+    # FULL-buffer comparison, pad tail included: migration zero-fills the
+    # new pad, so this only holds if the never-resized run's pad is also
+    # exactly zero — i.e. the k tick is gated off dead tails.
+    bad = mismatches(p, pr) + mismatches(o, orr)
+    report(bad == 0,
+           "padtail resize round trip bitwise vs never-resized, full "
+           "buffers", f"mismatched_elems={bad}")
+
+
 # ------------------------------------------------------------- checkpoint
 
 def check_checkpoint():
@@ -483,6 +551,8 @@ def main():
             check_checkpoint()
         elif case == "chaos":
             check_chaos()
+        elif case == "padtail":
+            check_padtail()
         else:
             raise SystemExit(f"unknown case {case!r}")
     sys.exit(1 if failures else 0)

@@ -1,0 +1,195 @@
+"""Chunk-ready backward-overlap bitwise oracle (8 forced host devices).
+
+The chunk-ready exchange (``TrainConfig.overlap_backward``, DESIGN.md
+§14) restructures the train step so each window's reduce-scatter depends
+only on the cotangents of the leaves it covers — the compiler may start
+window rings mid-backward.  The schedule is a pure reordering: every
+element sees the identical ring hop order, /N, and update arithmetic, so
+the overlapped step must be *bitwise* the post-backward step.  This
+oracle asserts exactly that (mismatch counts, not tolerances) over:
+
+  matrix   nesterov/sgd/adam x sharded_ps/hierarchical x windows {1, 2}
+           x wire {identity, int8}, tree-state engine steps
+  flat     flat-residency steps (store differentiated via the custom-VJP
+           reader baseline vs the tree-differentiated overlap path),
+           both wires
+  client   standalone PHubClient.push_pull with overlap_backward (the
+           split-windows dispatch path), both wires
+  elastic  overlap composed with a k-of-n membership mask (bitwise vs
+           the masked non-overlap step)
+
+sharded_ps runs on a (data=8, model=1) mesh; hierarchical on
+(pod=2, data=4, model=1) — overlap_backward requires a single model
+shard (engine gate), which these meshes satisfy while still exercising
+the two-axis worker domain and the cross-pod psum.
+
+Usage: python tests/multidevice/check_overlap.py [case ...]
+Cases: nesterov sgd adam flat client elastic   (each optimizer case runs
+       its full strategy x windows x wire sub-matrix)
+Prints "OK <case> mismatches=0" lines; exits nonzero on any FAIL.
+"""
+import dataclasses
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.configs import ARCHS, TrainConfig, reduced  # noqa: E402
+from repro.core import PHubEngine  # noqa: E402
+from repro.core.client import PHubClient  # noqa: E402
+from repro.data import SyntheticTokens  # noqa: E402
+
+CASES = sys.argv[1:] or ["nesterov", "sgd", "adam", "flat", "client",
+                         "elastic"]
+B, T = 8, 32
+STEPS = 2
+failures = 0
+
+
+def report(ok, name, detail=""):
+    global failures
+    print(f"{'OK' if ok else 'FAIL'} {name} {detail}")
+    failures += 0 if ok else 1
+
+
+def mismatches(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return sum(int(np.sum(np.asarray(x) != np.asarray(y)))
+               for x, y in zip(la, lb))
+
+
+def mesh_for(strategy):
+    if strategy == "hierarchical":
+        return jax.make_mesh((2, 4, 1), ("pod", "data", "model"))
+    return jax.make_mesh((8, 1), ("data", "model"))
+
+
+def base_tc(strategy, optimizer, windows, wire, **kw):
+    return TrainConfig(strategy=strategy, optimizer=optimizer, lr=1e-3,
+                       loss_chunk=32, pipeline_windows=windows,
+                       wire_format=wire, chunk_size_bytes=1024, **kw)
+
+
+CFG = reduced(ARCHS["llama3.2-1b"], d_model=64)
+DATA = SyntheticTokens(CFG, B, T, seed=3)
+
+
+def run_steps(tc, mesh, membership=None, n_steps=STEPS):
+    eng = PHubEngine(cfg=CFG, tc=tc, mesh=mesh)
+    params, opt = eng.init_state(jax.random.PRNGKey(0))
+    batch_np = DATA.batch_at(0)
+    shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in batch_np.items()}
+    step = eng.make_train_step(shapes, membership=membership)
+    batch = {k: jax.device_put(v, s) for (k, v), s in
+             zip(batch_np.items(), eng.batch_shardings(shapes).values())}
+    for _ in range(n_steps):
+        params, opt, m = step(params, opt, batch)
+    return params, opt, float(m["loss"])
+
+
+def check_matrix(optimizer):
+    """overlap == baseline, bitwise, per strategy x windows x wire."""
+    for strategy in ("sharded_ps", "hierarchical"):
+        mesh = mesh_for(strategy)
+        for wire in ("identity", "int8"):
+            for w in (1, 2):
+                tc = base_tc(strategy, optimizer, w, wire)
+                p0, o0, l0 = run_steps(tc, mesh)
+                p1, o1, l1 = run_steps(
+                    dataclasses.replace(tc, overlap_backward=True), mesh)
+                mm = mismatches(p0, p1) + mismatches(o0, o1)
+                report(mm == 0 and l0 == l1,
+                       f"{optimizer}/{strategy}/{wire}/w{w}",
+                       f"mismatches={mm} loss={l0:.6f}/{l1:.6f}")
+
+
+def check_flat():
+    """Flat residency: the overlap path differentiates the tree (to_tree
+    outside value_and_grad) while the baseline differentiates the store
+    through the custom-VJP reader — same cotangent values, so the stores
+    must still agree bitwise."""
+    mesh = mesh_for("sharded_ps")
+    for wire in ("identity", "int8"):
+        tc = base_tc("sharded_ps", "adam", 2, wire, flat_residency=True)
+        p0, o0, l0 = run_steps(tc, mesh)
+        p1, o1, l1 = run_steps(
+            dataclasses.replace(tc, overlap_backward=True), mesh)
+        mm = mismatches(p0, p1) + mismatches(o0, o1)
+        report(mm == 0 and l0 == l1, f"flat/{wire}",
+               f"mismatches={mm} loss={l0:.6f}/{l1:.6f}")
+
+
+def check_client():
+    """Standalone push_pull: overlap_backward routes the finished flat
+    gradient through split_windows + the chunk-ready entry points — the
+    dispatch must be bitwise the flat-path program."""
+    mesh = jax.make_mesh((8,), ("data",))
+    rng = np.random.default_rng(0)
+    like = {"w": jax.ShapeDtypeStruct((3000,), jnp.float32),
+            "b": jax.ShapeDtypeStruct((700,), jnp.float32)}
+    grads = {k: jnp.asarray(rng.normal(size=(8,) + v.shape)
+                            .astype(np.float32))
+             for k, v in like.items()}
+    params_np = {k: rng.normal(size=v.shape).astype(np.float32)
+                 for k, v in like.items()}
+    for wire in ("identity", "int8"):
+        tc = base_tc("sharded_ps", "nesterov", 2, wire)
+        outs = []
+        for overlap in (False, True):
+            c = PHubClient(dataclasses.replace(tc, overlap_backward=overlap),
+                           mesh).register(like)
+            # push_pull donates (params, opt): re-materialize per run
+            p = {k: jnp.asarray(v) for k, v in params_np.items()}
+            o = c.init_state()
+            for _ in range(STEPS):
+                p, o = c.push_pull(grads, p, o)
+            outs.append((p, o))
+        (p0, o0), (p1, o1) = outs
+        mm = mismatches(p0, p1) + mismatches(o0, o1)
+        report(mm == 0, f"client/{wire}", f"mismatches={mm}")
+
+
+def check_elastic():
+    """overlap x k-of-n masking: the per-leaf 0/1 scale preserves leaf
+    independence, so masked overlap must equal masked baseline bitwise."""
+    from repro.elastic import Membership
+    mesh = mesh_for("sharded_ps")
+    membership = Membership.full(8).leave(3)
+    for wire in ("identity", "int8"):
+        tc = base_tc("sharded_ps", "adam", 2, wire)
+        p0, o0, l0 = run_steps(tc, mesh, membership=membership)
+        p1, o1, l1 = run_steps(
+            dataclasses.replace(tc, overlap_backward=True), mesh,
+            membership=membership)
+        mm = mismatches(p0, p1) + mismatches(o0, o1)
+        report(mm == 0 and l0 == l1, f"elastic/{wire}",
+               f"mismatches={mm} loss={l0:.6f}/{l1:.6f}")
+
+
+def main():
+    for case in CASES:
+        if case in ("nesterov", "sgd", "adam"):
+            check_matrix(case)
+        elif case == "flat":
+            check_flat()
+        elif case == "client":
+            check_client()
+        elif case == "elastic":
+            check_elastic()
+        else:
+            raise SystemExit(f"unknown case {case!r}")
+    if failures:
+        raise SystemExit(f"{failures} failure(s)")
+    print("all overlap checks passed")
+
+
+if __name__ == "__main__":
+    main()

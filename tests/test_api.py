@@ -137,6 +137,7 @@ def test_co_step_requires_all_attached_handles(mesh):
         cm.co_step([hA], {"A": pA}, {"A": _batch(CFG)})
 
 
+@pytest.mark.slow
 def test_co_step_matches_solo_and_accounts(mesh):
     cm = PHubConnectionManager()
     (hA, cfgA), (hB, cfgB) = _two_tenants(cm, mesh)

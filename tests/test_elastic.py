@@ -222,12 +222,13 @@ def test_quota_movement_lower_bound():
 
 @pytest.mark.slow
 @pytest.mark.parametrize("case", ["parity", "straggler", "resize",
-                                  "checkpoint", "chaos"])
+                                  "checkpoint", "chaos", "padtail"])
 def test_multidevice_elastic_oracle(case):
     """The elastic datapath is bitwise the PR-4 exchange when all workers
     are live; masked stragglers equal the live-only reference; 8→6→8
     resizes migrate every slot bitwise on live regions; checkpoints
-    restore across rack sizes; a seeded chaos schedule runs end to end —
+    restore across rack sizes; a seeded chaos schedule runs end to end;
+    adam's k slots hold 0 on dead pad tails through a resize round trip —
     12 forced host devices."""
     proc = subprocess.run(
         [sys.executable, os.path.join(ROOT, "tests", "multidevice",

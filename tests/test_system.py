@@ -18,6 +18,7 @@ def mesh11():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+@pytest.mark.slow
 def test_training_reduces_loss(mesh11):
     """~1M-param llama on the structured synthetic task: loss must drop."""
     cfg = reduced(ARCHS["llama3.2-1b"], d_model=128)
@@ -63,6 +64,7 @@ def test_service_api_multitenancy(mesh11):
         cm.connect_service(h2)
 
 
+@pytest.mark.slow
 def test_checkpoint_roundtrip_and_resume(mesh11):
     cfg = reduced(ARCHS["rwkv6-3b"], d_model=128)
     tc = TrainConfig(lr=1e-2, loss_chunk=32)
@@ -120,6 +122,7 @@ def test_serving_pipeline(mesh11):
     np.testing.assert_array_equal(np.asarray(run1), np.asarray(run2))
 
 
+@pytest.mark.slow
 def test_chunk_size_does_not_change_semantics(mesh11):
     """PHub §3.2.3: the chunk size is a performance knob — results must be
     bit-comparable across chunk sizes."""

@@ -77,6 +77,7 @@ def test_tenant_accounting_shares_sum_to_one():
     assert tenant_step_traffic("centralized_ps", 100.0, 4)["push_bytes"] == 100.0
 
 
+@pytest.mark.slow
 def test_single_tenant_coschedule_matches_solo():
     """K=1 co-scheduling is the solo engine in a different coat — bitwise."""
     from repro.data import SyntheticTokens

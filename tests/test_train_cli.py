@@ -1,0 +1,52 @@
+"""Launcher flag-conflict matrix (launch/train.py).
+
+The supervised loop hands worker membership to the TrainSupervisor, so a
+``--chaos``/``--elastic`` membership schedule combined with
+``--supervise``/``--chaos-faults`` used to be silently discarded (the
+launcher branched into the supervised loop before constructing the
+schedule).  ``resolve_mode_flags`` now fails fast on every such pair —
+this matrix pins the exact accept/reject decision for all 16 flag
+combinations, plus the two implications (--chaos-faults => --supervise,
+--chaos => --elastic).
+"""
+import itertools
+
+import pytest
+
+from repro.launch.train import resolve_mode_flags
+
+ALL_COMBOS = list(itertools.product((False, True), repeat=4))
+
+
+@pytest.mark.parametrize(
+    "supervise,elastic,chaos,chaos_faults", ALL_COMBOS,
+    ids=["+".join(n for n, v in zip(("sup", "ela", "cha", "flt"), c) if v)
+         or "none" for c in ALL_COMBOS])
+def test_flag_matrix(supervise, elastic, chaos, chaos_faults):
+    wants_supervisor = supervise or chaos_faults
+    wants_membership = elastic or chaos
+    if wants_supervisor and wants_membership:
+        with pytest.raises(SystemExit) as e:
+            resolve_mode_flags(supervise, elastic, chaos, chaos_faults)
+        msg = str(e.value)
+        # the error names BOTH sides of the conflict, preferring the
+        # flag the user actually typed over the implied one
+        assert ("--chaos-faults" if chaos_faults else "--supervise") in msg
+        assert ("--chaos" if chaos else "--elastic") in msg
+    else:
+        sup, ela = resolve_mode_flags(supervise, elastic, chaos,
+                                      chaos_faults)
+        assert sup == wants_supervisor     # --chaos-faults => --supervise
+        assert ela == wants_membership     # --chaos => --elastic
+
+
+def test_valid_modes_pass_through():
+    # the three supported launch modes resolve without error
+    assert resolve_mode_flags(False, False, False, False) == (False, False)
+    assert resolve_mode_flags(False, False, True, False) == (False, True)
+    assert resolve_mode_flags(True, False, False, True) == (True, False)
+
+
+def test_conflict_message_names_silent_discard():
+    with pytest.raises(SystemExit, match="silently discarded"):
+        resolve_mode_flags(True, False, True, False)
