@@ -16,7 +16,6 @@ multi-device zero_compute bench instead).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from .common import Row, timeit
 

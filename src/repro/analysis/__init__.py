@@ -1,0 +1,38 @@
+"""rack-lint: static conformance analysis of compiled exchange programs
+(DESIGN.md §15).
+
+The exchange core promises a *provably* balanced program: the cost model
+predicts every byte on the wire, step caches promise no silent retraces,
+donation promises in-place state, the chunk-ready schedule promises
+race-free exactly-once coverage.  This package turns those promises into
+checkable rules over lowered/compiled artifacts:
+
+  R1 traffic-conformance — HLO collective link bytes match
+     cost_model.predicted_exchange_hlo per (kind, tier)
+  R2 retrace-detector   — membership epochs, tenant attach/detach, and
+     sanity thresholds reuse cached program keys
+  R3 donation-audit     — every donated buffer aliases an output
+  R4 overlap verifier   — chunk-ready schedule: no early ring, exactly-
+     once coverage, padding never aggregated live
+  R5 hygiene            — no f64, no model-scale concat under flat
+     residency, no host callbacks, wire collectives carry the wire dtype
+
+``python -m repro.launch.lint`` sweeps the config matrix and writes the
+JSON report under results/lint/.
+"""
+from .diagnostics import Diagnostic, LintReport
+from .rules import (check_donation, check_hygiene, check_schedule,
+                    check_traffic, lint_artifact)
+from .artifact import (StepArtifact, artifact_from_co_step,
+                       artifact_from_engine)
+from .retrace import (check_retrace_client, check_retrace_co,
+                      check_retrace_manager, check_retrace_sanity)
+from . import fixtures
+
+__all__ = [
+    "Diagnostic", "LintReport", "StepArtifact",
+    "artifact_from_engine", "artifact_from_co_step",
+    "check_traffic", "check_donation", "check_schedule", "check_hygiene",
+    "check_retrace_client", "check_retrace_co", "check_retrace_manager",
+    "check_retrace_sanity", "lint_artifact", "fixtures",
+]

@@ -1,0 +1,121 @@
+"""StepArtifact: everything rack-lint needs from one lowered step.
+
+Rules consume this plain record — HLO text, chunk groups, wire/window
+config, donation expectations — rather than live engines, so seeded
+known-bad fixtures (fixtures.py) can corrupt an artifact and regression-
+test the rules without compiling anything.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class StepArtifact:
+    tag: str
+    hlo_text: str
+    groups: tuple             # duck-typed chunk groups (GroupPlan-like)
+    strategy: str
+    wire: object              # core/wire.WireFormat (identity included)
+    windows: int              # requested pipeline windows
+    n_workers: int
+    pod_size: int = 1
+    pod_stride: int = 0
+    flat: bool = False
+    overlap: bool = False
+    donated_count: int = 0
+    donated_bytes: int = 0
+    alias_bytes: int = 0
+    memory: dict = field(default_factory=dict)
+    config: dict = field(default_factory=dict)
+
+    @property
+    def wire_name(self) -> str:
+        return getattr(self.wire, "name", "identity")
+
+
+def _mem_dict(compiled) -> dict:
+    mem = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes")
+    return {k: int(getattr(mem, k, 0) or 0) for k in keys}
+
+
+def _finish(tag, engine, compiled, arg_specs, *, config) -> StepArtifact:
+    txt = compiled.as_text()
+    mem = _mem_dict(compiled)
+    count, donated_b = engine.donated_arg_stats(arg_specs)
+    return StepArtifact(
+        tag=tag, hlo_text=txt, groups=tuple(engine.chunk_plan.groups),
+        strategy=engine.tc.strategy, wire=engine.wire,
+        windows=engine.tc.pipeline_windows, n_workers=engine.ctx.n_workers,
+        pod_size=engine.pod_size, pod_stride=engine.pod_stride,
+        flat=engine.tc.flat_residency, overlap=engine.tc.overlap_backward,
+        donated_count=count, donated_bytes=donated_b,
+        alias_bytes=mem["alias_size_in_bytes"], memory=mem, config=config)
+
+
+def artifact_from_engine(engine, tag: str, *, kind: str = "zero",
+                         batch_shapes=None, membership=None,
+                         sanity=None) -> StepArtifact:
+    """Compile one solo step (``kind``: "zero" = exchange-only
+    ZeroComputeEngine step, "train" = full fwd/bwd train step) and package
+    it for the rules."""
+    if kind == "zero":
+        lowered = engine.lower_zero_compute_step(membership=membership)
+        arg_specs = engine.zero_step_arg_specs()
+    elif kind == "train":
+        if batch_shapes is None:
+            raise ValueError("train artifacts need batch_shapes")
+        lowered = engine.lower_train_step(batch_shapes,
+                                          membership=membership,
+                                          sanity=sanity)
+        arg_specs = engine.train_step_arg_specs(batch_shapes, sanity=sanity)
+    else:
+        raise ValueError(f"unknown artifact kind {kind!r}")
+    config = {"kind": kind, "strategy": engine.tc.strategy,
+              "wire": engine.tc.wire_format,
+              "windows": engine.tc.pipeline_windows,
+              "flat": engine.tc.flat_residency,
+              "overlap": engine.tc.overlap_backward,
+              "sanity": sanity is not None,
+              "membership": (None if membership is None
+                             else list(membership.live_ranks)),
+              "n_workers": engine.ctx.n_workers}
+    return _finish(tag, engine, lowered.compile(), arg_specs, config=config)
+
+
+def artifact_from_co_step(tenants: dict, domain, tag: str, *,
+                          batch_shapes=None, zero_compute: bool = True,
+                          membership=None) -> StepArtifact:
+    """Compile one jointly compiled multi-tenant step over the packed
+    domain; the artifact's groups are the PackedGroups (duck-typed like
+    GroupPlans for the traffic model)."""
+    import jax
+
+    from ..core.engine import co_step_arg_specs, lower_co_train_step
+    e0 = next(iter(tenants.values()))
+    if batch_shapes is None:
+        batch_shapes = {ns: {} for ns in tenants}
+    lowered = lower_co_train_step(tenants, domain, batch_shapes,
+                                  zero_compute=zero_compute,
+                                  membership=membership)
+    compiled = lowered.compile()
+    arg_specs = co_step_arg_specs(tenants, domain, batch_shapes)
+    txt = compiled.as_text()
+    mem = _mem_dict(compiled)
+    import numpy as np
+    leaves = (jax.tree.leaves(arg_specs[0]) + jax.tree.leaves(arg_specs[1]))
+    donated_b = sum(int(np.prod(v.shape)) * v.dtype.itemsize
+                    for v in leaves)
+    config = {"kind": "co", "strategy": e0.tc.strategy,
+              "wire": e0.tc.wire_format, "windows": e0.tc.pipeline_windows,
+              "tenants": sorted(tenants), "zero_compute": zero_compute,
+              "n_workers": e0.ctx.n_workers}
+    return StepArtifact(
+        tag=tag, hlo_text=txt, groups=tuple(domain.groups.values()),
+        strategy=e0.tc.strategy, wire=e0.wire,
+        windows=e0.tc.pipeline_windows, n_workers=e0.ctx.n_workers,
+        pod_size=e0.pod_size, pod_stride=e0.pod_stride,
+        donated_count=len(leaves), donated_bytes=donated_b,
+        alias_bytes=mem["alias_size_in_bytes"], memory=mem, config=config)

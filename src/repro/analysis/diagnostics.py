@@ -1,0 +1,91 @@
+"""Structured rack-lint diagnostics (DESIGN.md §15).
+
+Every rule emits ``Diagnostic`` records — rule id, severity, the config
+cell it fired on, a human message, and machine-readable evidence — and a
+``LintReport`` aggregates them across the swept config matrix into the
+results/lint/ JSON artifact CI gates on.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+
+SEVERITIES = ("error", "warning", "info")
+
+
+@dataclass
+class Diagnostic:
+    rule: str                 # "R1".."R5"
+    severity: str             # "error" | "warning" | "info"
+    config: str               # matrix-cell tag the rule ran against
+    message: str
+    evidence: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"unknown severity {self.severity!r}; "
+                             f"expected one of {SEVERITIES}")
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "severity": self.severity,
+                "config": self.config, "message": self.message,
+                "evidence": self.evidence}
+
+    def __str__(self) -> str:
+        return (f"[{self.rule}:{self.severity}] {self.config}: "
+                f"{self.message}")
+
+
+@dataclass
+class LintReport:
+    """Diagnostics plus per-cell records for one lint sweep."""
+    diagnostics: list = field(default_factory=list)
+    cells: list = field(default_factory=list)
+    meta: dict = field(default_factory=dict)
+
+    def add(self, diag: Diagnostic):
+        self.diagnostics.append(diag)
+
+    def extend(self, diags):
+        self.diagnostics.extend(diags)
+
+    def record_cell(self, cell: dict):
+        self.cells.append(cell)
+
+    def count(self, severity: str) -> int:
+        return sum(1 for d in self.diagnostics if d.severity == severity)
+
+    @property
+    def errors(self) -> list:
+        return [d for d in self.diagnostics if d.severity == "error"]
+
+    def by_rule(self) -> dict:
+        out: dict = {}
+        for d in self.diagnostics:
+            r = out.setdefault(d.rule, {s: 0 for s in SEVERITIES})
+            r[d.severity] += 1
+        return out
+
+    def to_dict(self) -> dict:
+        return {
+            "meta": self.meta,
+            "summary": {
+                "cells": len(self.cells),
+                **{s: self.count(s) for s in SEVERITIES},
+                "by_rule": self.by_rule(),
+            },
+            "cells": self.cells,
+            "diagnostics": [d.to_dict() for d in self.diagnostics],
+        }
+
+    def save(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1)
+        return path
+
+    def summary_line(self) -> str:
+        return (f"{len(self.cells)} cells: {self.count('error')} errors, "
+                f"{self.count('warning')} warnings, "
+                f"{self.count('info')} info")

@@ -1,0 +1,264 @@
+"""Seeded known-bad fixtures for the rack-lint rules (DESIGN.md §15).
+
+Each fixture is a pair: a conforming synthetic artifact the rule must
+pass, and a deliberately corrupted twin the rule must flag — an inflated
+ring payload, a dropped donation alias, a reordered/understated overlap
+schedule, a smuggled f64, a raw-dtype leak past the wire encoder, a host
+callback in the hot step.  They regression-test the rules themselves (a
+lint that never fires is worse than none) without compiling anything:
+groups come from the real chunk planner, HLO text is synthesized in the
+exact surface form utils/hlo.py parses.
+
+``python -m repro.launch.lint`` runs them alongside the real config
+matrix and fails if any corrupted twin goes unflagged (or any clean twin
+is flagged).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from ..configs.base import TrainConfig
+from ..core import chunking
+from ..core.wire import make_wire_format
+from .artifact import StepArtifact
+from .rules import (check_donation, check_hygiene, check_schedule,
+                    check_traffic)
+
+
+@dataclass
+class Fixture:
+    name: str
+    rule: str                     # the rule that must flag the bad twin
+    bad: list                     # diagnostics from the corrupted artifact
+    clean: list = field(default_factory=list)   # from the conforming twin
+
+    @property
+    def flagged(self) -> bool:
+        return any(d.rule == self.rule and d.severity == "error"
+                   for d in self.bad)
+
+    @property
+    def false_positive(self) -> bool:
+        return any(d.severity == "error" for d in self.clean)
+
+    @property
+    def ok(self) -> bool:
+        return self.flagged and not self.false_positive
+
+
+# ----------------------------------------------------------- scaffolding
+
+_S = 4          # shards in every synthetic cell
+_CHUNK_B = 2048
+
+
+def _group(sizes: dict):
+    """One f32 GroupPlan from the real planner over named leaf sizes."""
+    tree = {k: jax.ShapeDtypeStruct((n,), np.float32)
+            for k, n in sizes.items()}
+    plan = chunking.build_plan(tree, chunk_bytes=_CHUNK_B, n_shards=_S)
+    return plan.groups[0]
+
+
+def _replica_groups(n: int) -> str:
+    return "{{" + ",".join(str(i) for i in range(n)) + "}}"
+
+
+def _hlo_sharded_identity(group, *, rs_scale: float = 1.0,
+                          extra_ops: str = "") -> str:
+    """The identity W=1 sharded_ps exchange in the textual form the HLO
+    parser consumes: one reduce-scatter to the shard, one all-gather of
+    the padded domain.  ``rs_scale`` inflates the ring payload for the
+    traffic fixture; ``extra_ops`` splices corrupted lines."""
+    rg = _replica_groups(_S)
+    shard = group.shard_len
+    rs_out = int(shard * rs_scale)
+    return f"""HloModule jit_step, entry_computation_layout={{(f32[{group.padded}]{{0}})->f32[{group.padded}]{{0}}}}
+
+ENTRY %main.1 (p0: f32[{group.padded}]) -> f32[{group.padded}] {{
+  %p0 = f32[{group.padded}]{{0}} parameter(0)
+  %rs = f32[{rs_out}]{{0}} reduce-scatter(f32[{rs_out * _S}]{{0}} %p0), channel_id=1, replica_groups={rg}, dimensions={{0}}, to_apply=%add
+  %upd = f32[{shard}]{{0}} multiply(f32[{shard}]{{0}} %rs, f32[{shard}]{{0}} %rs)
+{extra_ops}  %ag = f32[{group.padded}]{{0}} all-gather(f32[{shard}]{{0}} %upd), channel_id=2, replica_groups={rg}, dimensions={{0}}, use_global_device_ids=true
+  ROOT %out = f32[{group.padded}]{{0}} copy(f32[{group.padded}]{{0}} %ag)
+}}
+"""
+
+
+def _with_aliases(hlo: str, params: tuple) -> str:
+    pairs = ", ".join(f"{{{i}}}: ({p}, {{}}, may-alias)"
+                      for i, p in enumerate(params))
+    return hlo.replace(
+        "HloModule jit_step,",
+        f"HloModule jit_step, input_output_alias={{ {pairs} }},", 1)
+
+
+def _artifact(group, hlo: str, *, wire_format: str = "identity",
+              overlap: bool = False, flat: bool = False,
+              donated_count: int = 0, tag: str) -> StepArtifact:
+    wire = make_wire_format(TrainConfig(wire_format=wire_format))
+    return StepArtifact(
+        tag=tag, hlo_text=hlo, groups=(group,), strategy="sharded_ps",
+        wire=wire, windows=1, n_workers=_S, flat=flat, overlap=overlap,
+        donated_count=donated_count, config={"fixture": True})
+
+
+# -------------------------------------------------------------- fixtures
+
+def inflated_traffic() -> Fixture:
+    """R1: the ring reduce-scatter moves 2x the predicted shard payload."""
+    g = _group({"w": 4096})
+    good = _artifact(g, _hlo_sharded_identity(g), tag="fixture/traffic")
+    bad = _artifact(g, _hlo_sharded_identity(g, rs_scale=2.0),
+                    tag="fixture/traffic-inflated")
+    return Fixture("inflated_traffic", "R1",
+                   check_traffic(bad), check_traffic(good))
+
+
+def dropped_donation() -> Fixture:
+    """R3: three buffers donated, the module aliases only two."""
+    g = _group({"w": 4096})
+    base = _hlo_sharded_identity(g)
+    good = _artifact(g, _with_aliases(base, (0, 1, 2)), donated_count=3,
+                     tag="fixture/donation")
+    bad = _artifact(g, _with_aliases(base, (0, 2)), donated_count=3,
+                    tag="fixture/donation-dropped")
+    return Fixture("dropped_donation", "R3",
+                   check_donation(bad), check_donation(good))
+
+
+def reordered_schedule() -> Fixture:
+    """R4: windows dispatched in layer order against their readiness
+    (the early-closing window serializes behind a later-ready one)."""
+    g = _group({"a": 512, "b": 3584})      # ready differs across windows
+    W = 2
+    _, ready = chunking.chunk_ready_schedule(g, W)
+    assert ready[0] != ready[1]
+    tag = "fixture/schedule"
+    good = check_schedule(tag, g, W)
+    bad = check_schedule(tag + "-reordered", g, W,
+                         order=tuple(sorted(range(W))))
+    return Fixture("reordered_schedule", "R4", bad, good)
+
+
+def racing_schedule() -> Fixture:
+    """R4: window readiness understated — the ring would read a cotangent
+    its backward segment has not produced yet."""
+    g = _group({"a": 512, "b": 3584})
+    W = 2
+    order, ready = chunking.chunk_ready_schedule(g, W)
+    tag = "fixture/schedule-race"
+    bad = check_schedule(tag, g, W, order=order,
+                         ready=tuple(max(0.0, r - 0.5) for r in ready))
+    return Fixture("racing_schedule", "R4", bad,
+                   check_schedule("fixture/schedule", g, W))
+
+
+def pad_aggregated_live() -> Fixture:
+    """R4: a rewritten window map leaves the tail window covering only
+    rack padding, yet still gates it on live backward progress."""
+    g = _group({"a": 512, "b": 3072})      # total 3584, one pad chunk
+    W = 2
+    order, ready = chunking.chunk_ready_schedule(g, W)
+    sets = [list(s) for s in chunking.window_chunks(g, W)]
+    pad_chunk = g.n_chunks - 1             # tail of the flat domain
+    sets[1].remove(pad_chunk)
+    bad_sets = (tuple(sets[0]) + tuple(sets[1]), (pad_chunk,))
+    bad_ready = (ready[0], max(ready[1], 0.8))
+    tag = "fixture/schedule-pad"
+    bad = check_schedule(tag, g, W, order=order, ready=bad_ready,
+                         window_chunk_sets=bad_sets)
+    return Fixture("pad_aggregated_live", "R4", bad,
+                   check_schedule("fixture/schedule", g, W))
+
+
+def dropped_chunk_coverage() -> Fixture:
+    """R4: one chunk exchanged twice and another never."""
+    g = _group({"w": 4096})
+    W = 2
+    sets = [list(s) for s in chunking.window_chunks(g, W)]
+    sets[1][0] = sets[0][0]                # duplicate one, drop one
+    bad = check_schedule("fixture/schedule-coverage", g, W,
+                         window_chunk_sets=tuple(tuple(s) for s in sets))
+    return Fixture("dropped_chunk_coverage", "R4", bad,
+                   check_schedule("fixture/schedule", g, W))
+
+
+def smuggled_f64() -> Fixture:
+    """R5: an f64 widening in the middle of the f32 exchange."""
+    g = _group({"w": 4096})
+    wide = (f"  %cvt = f64[{g.shard_len}]{{0}} convert("
+            f"f32[{g.shard_len}]{{0}} %rs)\n")
+    good = _artifact(g, _hlo_sharded_identity(g), tag="fixture/hygiene")
+    bad = _artifact(g, _hlo_sharded_identity(g, extra_ops=wide),
+                    tag="fixture/hygiene-f64")
+    return Fixture("smuggled_f64", "R5",
+                   check_hygiene(bad), check_hygiene(good))
+
+
+def raw_wire_leak() -> Fixture:
+    """R5: an int8 wire whose pull all-gather carries raw f32 chunks —
+    the payload skipped the encoder."""
+    g = _group({"w": 4096})
+    # conforming: ring + pull carry packed u32 words + f32 scale sidecars
+    words = g.shard_len // 4
+    n_scales = g.shard_len // g.chunk_elems
+    rg = _replica_groups(_S)
+    good_hlo = f"""HloModule jit_step
+
+ENTRY %main.1 (p0: u32[{words}]) -> u32[{words * _S}] {{
+  %p0 = u32[{words}]{{0}} parameter(0)
+  %s0 = f32[{n_scales}]{{0}} parameter(1)
+  %cp = u32[{words}]{{0}} collective-permute(u32[{words}]{{0}} %p0), channel_id=1, source_target_pairs={{{{0,1}},{{1,2}},{{2,3}},{{3,0}}}}
+  %cps = f32[{n_scales}]{{0}} collective-permute(f32[{n_scales}]{{0}} %s0), channel_id=2, source_target_pairs={{{{0,1}},{{1,2}},{{2,3}},{{3,0}}}}
+  ROOT %ag = u32[{words * _S}]{{0}} all-gather(u32[{words}]{{0}} %cp), channel_id=3, replica_groups={rg}, dimensions={{0}}
+}}
+"""
+    bad_hlo = good_hlo.replace(
+        f"ROOT %ag = u32[{words * _S}]{{0}} all-gather(u32[{words}]{{0}} "
+        f"%cp)",
+        f"ROOT %ag = f32[{g.padded}]{{0}} all-gather(f32[{g.shard_len}]"
+        f"{{0}} %cp)")
+    good = _artifact(g, good_hlo, wire_format="int8",
+                     tag="fixture/wire")
+    bad = _artifact(g, bad_hlo, wire_format="int8",
+                    tag="fixture/wire-leak")
+    return Fixture("raw_wire_leak", "R5",
+                   check_hygiene(bad), check_hygiene(good))
+
+
+def host_callback() -> Fixture:
+    """R5: a python host callback spliced into the hot step."""
+    g = _group({"w": 4096})
+    cb = (f"  %cb = f32[1]{{0}} custom-call(f32[{g.shard_len}]{{0}} %rs), "
+          f"custom_call_target=\"xla_ffi_python_cpu_callback\"\n")
+    good = _artifact(g, _hlo_sharded_identity(g), tag="fixture/callback")
+    bad = _artifact(g, _hlo_sharded_identity(g, extra_ops=cb),
+                    tag="fixture/callback-host")
+    return Fixture("host_callback", "R5",
+                   check_hygiene(bad), check_hygiene(good))
+
+
+def flat_concat() -> Fixture:
+    """R5: a flat-residency step gathering the whole padded domain."""
+    g = _group({"w": 4096})
+    cat = (f"  %cat = f32[{g.padded}]{{0}} concatenate("
+           + ", ".join(f"f32[{g.shard_len}]{{0}} %upd" for _ in range(_S))
+           + "), dimensions={0}\n")
+    good = _artifact(g, _hlo_sharded_identity(g), flat=True,
+                     tag="fixture/flat")
+    bad = _artifact(g, _hlo_sharded_identity(g, extra_ops=cat), flat=True,
+                    tag="fixture/flat-concat")
+    return Fixture("flat_concat", "R5",
+                   check_hygiene(bad), check_hygiene(good))
+
+
+def all_fixtures() -> list:
+    """Every seeded fixture, evaluated."""
+    return [inflated_traffic(), dropped_donation(), reordered_schedule(),
+            racing_schedule(), pad_aggregated_live(),
+            dropped_chunk_coverage(), smuggled_f64(), raw_wire_leak(),
+            host_callback(), flat_concat()]

@@ -1,0 +1,206 @@
+"""rack-lint R2: retrace-detector (DESIGN.md §15).
+
+A retrace is a silent recompile: the rack takes a multi-second compile
+stall (and a fresh XLA program) on a transition that should have hit a
+step cache.  The invariants under audit:
+
+  * membership epochs never enter a program key — recurring live sets
+    (leave, recover, leave the same worker again) reuse their first
+    compilation, and recovery to all-live reuses the pre-elastic program;
+  * tenant detach + re-attach landing on the identical packed domain
+    reuses the co-step cache (the manager's domain-keyed memo);
+  * sanity thresholds are *traced* inputs — changing ``norm_hi`` between
+    steps must not grow the jit cache.
+
+Unlike R1/R3/R4/R5 these checks cannot read a static artifact: they
+drive live caches (PHubConnectionManager / PHubClient / a compiled
+sanity step) through the transitions and count build events via the
+``compile_count`` instrumentation those caches expose.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .diagnostics import Diagnostic
+
+
+def _jit_cache_size(step):
+    """Compiled-trace count of a _MeshScopedJit (or raw jit) step; -1 if
+    this jax version does not expose it."""
+    fn = getattr(step, "_fn", step)
+    try:
+        return int(fn._cache_size())
+    except Exception:
+        return -1
+
+
+# -------------------------------------------------- manager: membership
+
+def check_retrace_manager(mgr, handle, params, opt, batch, *,
+                          tag: str) -> list:
+    """Drive one solo service through a leave/recover/re-leave membership
+    cycle and audit the manager's compile counter.  Consumes ``params``/
+    ``opt`` (steps donate them); use throwaway state."""
+    diags = []
+    world = mgr.connect_service(handle).ctx.n_workers
+    victim = world - 1
+
+    def run():
+        nonlocal params, opt
+        params, opt, _ = mgr.push_pull(handle, params, opt, batch)
+
+    run()                                   # full-rack program
+    base = mgr.compile_count
+    mgr.leave(victim)
+    run()                                   # masked program: one new build
+    after_leave = mgr.compile_count
+    if after_leave != base + 1:
+        diags.append(Diagnostic(
+            "R2", "error", tag,
+            f"membership leave({victim}) built {after_leave - base} "
+            f"programs (expected exactly 1 re-keyed build)",
+            {"base": base, "after_leave": after_leave}))
+    mgr.join(victim)
+    run()                                   # all-live again: cached
+    if mgr.compile_count != after_leave:
+        diags.append(Diagnostic(
+            "R2", "error", tag,
+            f"recovery to the full rack recompiled "
+            f"(+{mgr.compile_count - after_leave}): all-live must fold "
+            f"back onto the pre-elastic cached program",
+            {"after_leave": after_leave, "now": mgr.compile_count}))
+    mgr.leave(victim)
+    run()                                   # recurring live set: cached
+    if mgr.compile_count != after_leave:
+        diags.append(Diagnostic(
+            "R2", "error", tag,
+            f"recurring live set retraced "
+            f"(+{mgr.compile_count - after_leave}): the epoch leaked into "
+            f"the program key (must key on the live-set program_key)",
+            {"after_leave": after_leave, "now": mgr.compile_count,
+             "epoch": mgr.membership.epoch}))
+    mgr.join(victim)
+    return diags
+
+
+# ------------------------------------------- manager: tenant co-schedule
+
+def check_retrace_co(mgr, handles, params_by, batches, *, tag: str) -> list:
+    """Attach the tenants, step, then detach + re-attach the last tenant
+    (identical re-packed domain) and audit that both the steady-state
+    co_step and the round trip reuse the compiled-step cache."""
+    diags = []
+    mgr.attach_services(handles)
+
+    def run():
+        nonlocal params_by
+        params_by, _ = mgr.co_step(handles, params_by, batches)
+
+    run()                                   # joint program
+    base = mgr.compile_count
+    run()                                   # steady state: cached
+    if mgr.compile_count != base:
+        diags.append(Diagnostic(
+            "R2", "error", tag,
+            f"steady-state co_step retraced (+{mgr.compile_count - base})",
+            {"base": base, "now": mgr.compile_count}))
+        base = mgr.compile_count
+    last = handles[-1]
+    opt_back = mgr.detach_service(last)
+    mgr.attach_service(last, opt=opt_back)
+    run()                                   # identical domain: cached
+    if mgr.compile_count != base:
+        diags.append(Diagnostic(
+            "R2", "error", tag,
+            f"detach + re-attach of {last.namespace!r} landed on the "
+            f"identical packed domain yet recompiled "
+            f"(+{mgr.compile_count - base}): the domain-keyed step memo "
+            f"was dropped",
+            {"base": base, "now": mgr.compile_count,
+             "tenants": list(mgr.attached)}))
+    for h in handles:
+        mgr.detach_service(h)
+    return diags
+
+
+# ----------------------------------------------------- client: push_pull
+
+def check_retrace_client(client, grads, params, opt, *, tag: str) -> list:
+    """The same membership-cycle audit against a standalone PHubClient's
+    per-mode step cache.  Consumes ``params``/``opt``."""
+    from ..elastic import Membership
+    diags = []
+    world = client.ctx.n_workers
+    victim = world - 1
+
+    def run():
+        nonlocal params, opt
+        params, opt = client.push_pull(grads, params, opt)
+
+    run()
+    base = client.compile_count
+    m1 = Membership.full(world).leave(victim)
+    client.set_membership(m1)
+    run()
+    after_leave = client.compile_count
+    if after_leave != base + 1:
+        diags.append(Diagnostic(
+            "R2", "error", tag,
+            f"client leave({victim}) built {after_leave - base} programs "
+            f"(expected exactly 1)",
+            {"base": base, "after_leave": after_leave}))
+    m2 = m1.join(victim)                    # all-live again, higher epoch
+    client.set_membership(m2)
+    run()
+    if client.compile_count != after_leave:
+        diags.append(Diagnostic(
+            "R2", "error", tag,
+            f"client recovery to all-live recompiled "
+            f"(+{client.compile_count - after_leave})",
+            {"after_leave": after_leave, "now": client.compile_count}))
+    client.set_membership(m2.leave(victim))  # same live set, epoch +2
+    run()
+    if client.compile_count != after_leave:
+        diags.append(Diagnostic(
+            "R2", "error", tag,
+            f"client recurring live set retraced "
+            f"(+{client.compile_count - after_leave}): epoch leaked into "
+            f"the step key",
+            {"after_leave": after_leave, "now": client.compile_count}))
+    client.set_membership(None)
+    return diags
+
+
+# ------------------------------------------------- sanity threshold knob
+
+def check_retrace_sanity(engine, batch_shapes, params, opt, batch, sanity,
+                         *, tag: str) -> list:
+    """Sanity thresholds ride the traced ``health`` argument: stepping
+    with two different ``norm_hi`` values must leave the jit cache at one
+    entry.  Consumes ``params``/``opt``."""
+    diags = []
+    step = engine.make_train_step(batch_shapes, sanity=sanity)
+
+    def health(hi):
+        h = {"norm_hi": jnp.float32(hi)}
+        if sanity.allow_injection:
+            h["inject"] = jnp.ones((engine.ctx.n_workers,), jnp.float32)
+        return h
+
+    params, opt, _ = step(params, opt, batch, health(1e9))
+    size0 = _jit_cache_size(step)
+    params, opt, _ = step(params, opt, batch, health(12.5))
+    size1 = _jit_cache_size(step)
+    if size0 < 0:
+        diags.append(Diagnostic(
+            "R2", "info", tag,
+            "jit cache size not exposed by this jax; sanity-threshold "
+            "retrace check skipped"))
+    elif size1 != size0:
+        diags.append(Diagnostic(
+            "R2", "error", tag,
+            f"changing the sanity norm_hi threshold grew the jit cache "
+            f"{size0} -> {size1}: thresholds must stay traced inputs, "
+            f"never baked constants",
+            {"cache_before": size0, "cache_after": size1}))
+    return diags

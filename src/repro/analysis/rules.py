@@ -1,0 +1,289 @@
+"""rack-lint rules R1/R3/R4/R5 (R2 lives in retrace.py — it drives live
+step caches rather than a static artifact).
+
+Every rule takes a StepArtifact (or, for R4, a chunk group) and returns a
+list of Diagnostics; an empty list means the artifact conforms.  Rules
+never raise on bad programs — seeded fixtures corrupt artifacts on
+purpose and the rules must *flag*, not crash.
+"""
+from __future__ import annotations
+
+from ..core import cost_model
+from ..core.chunking import chunk_ready_schedule, window_chunks
+from ..core.pipeline import effective_windows
+from ..utils.hlo import (parse_collectives, parse_concat_sizes,
+                         parse_donated_params, parse_host_callbacks)
+from .diagnostics import Diagnostic
+
+# widths the exchange state actually lives in — anything this wide on an
+# encoded wire's ring means raw state leaked past the encoder
+_WIDE_DTYPES = ("f64", "f32", "bf16", "f16")
+
+
+def _parsed_link_bytes(hlo_text: str, pod_stride: int):
+    """{kind: {tier: link bytes}} plus the raw op stats."""
+    stats = parse_collectives(hlo_text, pod_stride=pod_stride)
+    out: dict = {}
+    for s in stats:
+        tier = "dcn" if s.spans_pod else "ici"
+        d = out.setdefault(s.kind, {"ici": 0.0, "dcn": 0.0})
+        d[tier] += s.link_bytes() * s.count
+    return out, stats
+
+
+# ------------------------------------------------------------------- R1
+
+def check_traffic(artifact, *, rel_tol: float = 0.02,
+                  abs_tol: float = 4096.0) -> list:
+    """R1 traffic-conformance: per-(kind, tier) link bytes parsed from the
+    optimized HLO must match cost_model.predicted_exchange_hlo within
+    ``rel_tol`` (+``abs_tol`` absorbing the scalar loss/health pmeans the
+    model deliberately ignores)."""
+    try:
+        pred = cost_model.predicted_exchange_hlo(
+            artifact.groups, strategy=artifact.strategy, wire=artifact.wire,
+            windows=artifact.windows, n_workers=artifact.n_workers,
+            pod_size=artifact.pod_size)
+    except ValueError as e:
+        return [Diagnostic("R1", "info", artifact.tag,
+                           f"traffic model does not cover this cell: {e}")]
+    parsed, _ = _parsed_link_bytes(artifact.hlo_text, artifact.pod_stride)
+    diags = []
+    for kind in sorted(set(pred["by_kind"]) | set(parsed)):
+        for tier in ("ici", "dcn"):
+            want = pred["by_kind"].get(kind, {}).get(tier, 0.0)
+            got = parsed.get(kind, {}).get(tier, 0.0)
+            if want == 0.0:
+                if got > abs_tol:
+                    diags.append(Diagnostic(
+                        "R1", "error", artifact.tag,
+                        f"unmodeled {kind} traffic on {tier}: "
+                        f"{got:.0f} link bytes (model predicts none)",
+                        {"kind": kind, "tier": tier, "parsed_bytes": got}))
+                continue
+            if abs(got - want) > rel_tol * want + abs_tol:
+                diags.append(Diagnostic(
+                    "R1", "error", artifact.tag,
+                    f"{kind} on {tier}: parsed {got:.0f} link bytes vs "
+                    f"predicted {want:.0f} "
+                    f"({(got - want) / want:+.1%})",
+                    {"kind": kind, "tier": tier, "parsed_bytes": got,
+                     "predicted_bytes": want,
+                     "runtime_bytes": pred["runtime_by_kind"]
+                     .get(kind, {}).get(tier, 0.0)}))
+    return diags
+
+
+# ------------------------------------------------------------------- R3
+
+def check_donation(artifact, *, bytes_slack: float = 0.25) -> list:
+    """R3 donation-audit: every donated buffer (params/store + opt, entry
+    parameters 0..donated_count-1) must alias an output in the compiled
+    module — the watchdog's no-redispatch safety and the 2x-memory budget
+    both rest on this."""
+    diags = []
+    aliased = parse_donated_params(artifact.hlo_text)
+    expected = set(range(artifact.donated_count))
+    missing = sorted(expected - aliased)
+    if missing:
+        diags.append(Diagnostic(
+            "R3", "error", artifact.tag,
+            f"{len(missing)} of {artifact.donated_count} donated buffers "
+            f"never alias an output (entry params {missing[:8]}"
+            f"{'...' if len(missing) > 8 else ''}): donation was "
+            f"silently dropped",
+            {"missing_params": missing,
+             "aliased_params": sorted(aliased)}))
+    if (artifact.donated_bytes and artifact.alias_bytes
+            and artifact.alias_bytes < bytes_slack * artifact.donated_bytes):
+        diags.append(Diagnostic(
+            "R3", "warning", artifact.tag,
+            f"aliased bytes {artifact.alias_bytes} cover under "
+            f"{bytes_slack:.0%} of the {artifact.donated_bytes} donated "
+            f"bytes",
+            {"alias_bytes": artifact.alias_bytes,
+             "donated_bytes": artifact.donated_bytes}))
+    return diags
+
+
+# ------------------------------------------------------------------- R4
+
+def check_schedule(tag: str, group, windows: int, *, order=None,
+                   ready=None, window_chunk_sets=None,
+                   tol: float = 1e-9) -> list:
+    """R4 overlap-schedule verifier over the chunk-ready dispatch
+    (DESIGN.md §14): (a) no window ring may launch before its producing
+    backward segment closes (readiness must not be understated vs the
+    independent recomputation), (b) dispatch order must follow readiness,
+    (c) the window schedule must cover every chunk of the padded domain
+    exactly once, and (d) pad-only windows must never be gated as if they
+    carried live cotangent.  ``order``/``ready``/``window_chunk_sets``
+    default to the real schedule; fixtures pass corrupted ones."""
+    W = effective_windows(group, windows)
+    ref_order, ref_ready = chunk_ready_schedule(group, W)
+    ref_sets = window_chunks(group, W)
+    order = tuple(ref_order if order is None else order)
+    ready = tuple(ref_ready if ready is None else ready)
+    sets = tuple(tuple(s) for s in (ref_sets if window_chunk_sets is None
+                                    else window_chunk_sets))
+    diags = []
+
+    # (c) exactly-once coverage of the padded chunk domain
+    n_chunks = group.padded // group.chunk_elems
+    seen: dict = {}
+    for w, chunks in enumerate(sets):
+        for c in chunks:
+            seen[c] = seen.get(c, 0) + 1
+    dup = sorted(c for c, n in seen.items() if n > 1)
+    missing = sorted(set(range(n_chunks)) - set(seen))
+    if dup:
+        diags.append(Diagnostic(
+            "R4", "error", tag,
+            f"{len(dup)} chunks exchanged more than once "
+            f"(first: {dup[:6]})", {"duplicated_chunks": dup[:32]}))
+    if missing:
+        diags.append(Diagnostic(
+            "R4", "error", tag,
+            f"{len(missing)} chunks never exchanged "
+            f"(first: {missing[:6]})", {"missing_chunks": missing[:32]}))
+
+    # (a) races: readiness understated vs the independent recomputation
+    for w in range(W):
+        if w < len(ready) and ready[w] < ref_ready[w] - tol:
+            diags.append(Diagnostic(
+                "R4", "error", tag,
+                f"window {w} ring launches at backward fraction "
+                f"{ready[w]:.3f} but its producing backward segment "
+                f"closes at {ref_ready[w]:.3f}: the ring would read an "
+                f"unwritten cotangent",
+                {"window": w, "scheduled_ready": ready[w],
+                 "required_ready": ref_ready[w]}))
+
+    # (b) dispatch order must be a permutation consistent with readiness
+    if sorted(order) != list(range(W)):
+        diags.append(Diagnostic(
+            "R4", "error", tag,
+            f"dispatch order {order} is not a permutation of "
+            f"{W} windows", {"order": list(order)}))
+    else:
+        for a, b in zip(order, order[1:]):
+            if ready[a] > ready[b] + tol:
+                diags.append(Diagnostic(
+                    "R4", "error", tag,
+                    f"window {a} (ready {ready[a]:.3f}) dispatched before "
+                    f"window {b} (ready {ready[b]:.3f}): the exchange "
+                    f"resource serializes on a later-ready window",
+                    {"before": a, "after": b,
+                     "ready": [ready[a], ready[b]]}))
+                break
+
+    # (d) rack padding never aggregated live: a window covering only pad
+    # chunks has no producing backward segment — it must dispatch free
+    # (ready 0.0), not gate the ring on live cotangent it does not carry
+    live_elems = getattr(group, "total", None)
+    if live_elems is not None:
+        ce = group.chunk_elems
+        for w, chunks in enumerate(sets):
+            if not chunks or w >= len(ready):
+                continue
+            if all(c * ce >= live_elems for c in chunks) and ready[w] > tol:
+                diags.append(Diagnostic(
+                    "R4", "error", tag,
+                    f"window {w} covers only rack padding yet is gated at "
+                    f"backward fraction {ready[w]:.3f}: padding must "
+                    f"never be aggregated as live gradient",
+                    {"window": w, "ready": ready[w],
+                     "pad_chunks": list(chunks)[:16]}))
+    return diags
+
+
+# ------------------------------------------------------------------- R5
+
+def check_hygiene(artifact, *, concat_frac: float = 0.5,
+                  scale_slack: float = 2.0, wire_rule: bool = True) -> list:
+    """R5 hygiene: no f64 widening anywhere in the step, no model-scale
+    concatenate under flat residency (generalizing the §8 assertion), no
+    host callbacks in the hot step, and — on an encoded wire — ring/pull
+    collectives carry only the packed wire payload (u32 words) plus the
+    per-chunk f32 scale sidecar, never raw state-dtype chunks."""
+    import numpy as np
+    diags = []
+    txt = artifact.hlo_text
+
+    # f64 widening
+    n_f64 = txt.count("f64[")
+    if n_f64:
+        first = next((ln.strip() for ln in txt.splitlines()
+                      if "f64[" in ln), "")
+        diags.append(Diagnostic(
+            "R5", "error", artifact.tag,
+            f"{n_f64} f64 shapes in the compiled step (no f64 belongs in "
+            f"the f32 exchange): {first[:120]}",
+            {"count": n_f64, "first": first[:200]}))
+
+    # host callbacks
+    callbacks = parse_host_callbacks(txt)
+    for target in sorted(set(callbacks)):
+        diags.append(Diagnostic(
+            "R5", "error", artifact.tag,
+            f"host callback {target!r} in the hot step "
+            f"(x{callbacks.count(target)})", {"target": target}))
+
+    # flat residency must stay concat-free at model scale (§8)
+    if artifact.flat and artifact.groups:
+        max_group_b = max(g.padded * np.dtype(g.dtype).itemsize
+                          for g in artifact.groups)
+        bound = concat_frac * max_group_b
+        big = [c for c in parse_concat_sizes(txt) if c >= bound]
+        if big:
+            diags.append(Diagnostic(
+                "R5", "error", artifact.tag,
+                f"{len(big)} model-scale concatenates in a flat-residency "
+                f"step (max {max(big)} B >= {bound:.0f} B): the zero-copy "
+                f"store round-trips through a gather",
+                {"concat_bytes": sorted(big, reverse=True)[:8],
+                 "bound": bound}))
+
+    # wire-dtype conformance on the encoded ring/pull path (disabled by
+    # the caller on model-sharded meshes, where TP legitimately
+    # all-gathers f32 activations/params outside the exchange)
+    if wire_rule and artifact.wire_name != "identity" and artifact.groups:
+        scale_bound = scale_slack * max(
+            (g.padded // g.chunk_elems) * 4 for g in artifact.groups)
+        own = {"bfloat16": "bf16", "float16": "f16"}.get(
+            np.dtype(artifact.wire.wire_dtype(np.float32)).name)
+        wide_set = tuple(d for d in _WIDE_DTYPES if d != own)
+        _, stats = _parsed_link_bytes(txt, artifact.pod_stride)
+        for s in stats:
+            if s.kind not in ("collective-permute", "all-gather"):
+                continue
+            wide = {dt: b for dt, b in s.by_dtype
+                    if dt in wide_set and b > scale_bound}
+            if wide:
+                diags.append(Diagnostic(
+                    "R5", "error", artifact.tag,
+                    f"{s.kind} carries {wide} bytes of state-width dtype "
+                    f"on a {artifact.wire_name!r} wire (scale sidecar "
+                    f"bound {scale_bound} B): raw chunks leaked past the "
+                    f"encoder",
+                    {"kind": s.kind, "wide_bytes": wide,
+                     "scale_bound": scale_bound}))
+    return diags
+
+
+# ------------------------------------------------------------ aggregate
+
+def lint_artifact(artifact, *, traffic: bool = True, donation: bool = True,
+                  hygiene: bool = True, schedule: bool = True) -> list:
+    """Run every static rule that applies to one artifact."""
+    diags = []
+    if traffic:
+        diags.extend(check_traffic(artifact))
+    if donation:
+        diags.extend(check_donation(artifact))
+    if hygiene:
+        diags.extend(check_hygiene(artifact))
+    if schedule and artifact.overlap:
+        for g in artifact.groups:
+            diags.extend(check_schedule(artifact.tag, g, artifact.windows))
+    return diags

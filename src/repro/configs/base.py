@@ -7,8 +7,8 @@ paper's subject); ``InputShape`` describes one of the assigned workload shapes.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional
 
 
 @dataclass(frozen=True)

@@ -52,6 +52,19 @@ class _Service:
     steps: dict = field(default_factory=dict)
 
 
+def _domain_key(domain: TenantPackedDomain) -> tuple:
+    """Hashable fingerprint of a packed domain's program-relevant layout.
+    Two domains with equal keys compile byte-identical co-steps, so the
+    manager memoizes compiled steps per key and a detach + re-attach that
+    round-trips back to the same layout reuses its programs (rack-lint
+    R2, DESIGN.md §15)."""
+    return (domain.tenants, domain.n_shards, domain.chunk_bytes,
+            tuple((key, str(g.dtype), g.chunk_elems, g.shard_len,
+                   tuple((s.tenant, s.total, s.padded, s.runs)
+                         for s in g.slots))
+                  for key, g in sorted(domain.groups.items())))
+
+
 @dataclass
 class _CoSchedule:
     """Shared rack chunk domain state for the attached tenants."""
@@ -78,6 +91,15 @@ class PHubConnectionManager:
         # resilience (DESIGN.md §13): an optional ExchangeWatchdog wraps
         # every compiled-step dispatch (push_pull and co_step)
         self._watchdog = None
+        # step-build events across every cache (solo + co), audited by
+        # rack-lint R2 (DESIGN.md §15): recompiles without a program-key
+        # change are a silent retrace and fail the lint
+        self.compile_count: int = 0
+        # compiled co-steps memoized per packed-domain fingerprint, so a
+        # re-pack landing on a previously seen layout (detach + re-attach
+        # of the same tenant, resize back to the same world) restores its
+        # step cache instead of silently retracing
+        self._co_memo: dict = {}
 
     # ------------------------------------------------------ elastic rack
 
@@ -217,6 +239,7 @@ class PHubConnectionManager:
         if key not in svc.steps:
             svc.steps[key] = svc.engine.make_train_step(
                 shapes, membership=self._step_membership())
+            self.compile_count += 1
         return self._dispatch(svc.steps[key], params, opt, batch)
 
     def destroy_service(self, handle: ServiceHandle):
@@ -320,6 +343,7 @@ class PHubConnectionManager:
             co.steps[key] = make_co_train_step(
                 {ns: self._services[ns].engine for ns in self._attached},
                 co.domain, shapes, membership=self._step_membership())
+            self.compile_count += 1
         new_p, co.opt, metrics = self._dispatch(co.steps[key], params_by,
                                                 co.opt, batches)
         for ns in self._attached:
@@ -401,6 +425,8 @@ class PHubConnectionManager:
         self._membership = (self._membership.resized(world)
                             if self._membership
                             else Membership.full(world))
+        # memoized co-steps close over the OLD engines; drop them all
+        self._co_memo.clear()
         self._repack(flats)                   # re-pack at the new n_shards
         co_traffic = None
         if old_domain is not None and self._co is not None:
@@ -496,10 +522,15 @@ class PHubConnectionManager:
                      for n, b in bufs[key].items()}
                for key in domain.groups}
         traffic = self._co.traffic if self._co else {}
+        # a re-pack landing on a previously seen layout (e.g. detaching a
+        # tenant and re-attaching it) compiles byte-identical programs:
+        # restore that layout's compiled-step cache from the memo instead
+        # of silently retracing (rack-lint R2); unseen layouts start empty
+        steps = self._co_memo.setdefault(_domain_key(domain), {})
         acct = cost_model.tenant_accounting(      # static per domain: once
             domain, e0.tc.strategy, e0.ctx.n_workers, wire=e0.wire)
         self._co = _CoSchedule(domain=domain, opt=opt, acct=acct,
-                               traffic=traffic)
+                               traffic=traffic, steps=steps)
 
     def _extract_all(self) -> dict:
         """Packed opt slots -> {ns: {key: {slot: (mo, slot.padded) np}}}."""

@@ -14,7 +14,6 @@ every shard's group (their update is identical everywhere).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any
 

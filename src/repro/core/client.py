@@ -131,6 +131,9 @@ class PHubClient:
         self.membership = None          # elastic live set (DESIGN.md §12)
         self.watchdog = None            # exchange deadline (DESIGN.md §13)
         self._steps: dict = {}
+        # build events, audited by rack-lint R2 (DESIGN.md §15): a healthy
+        # client never builds more steps than distinct (mode, program_key)s
+        self.compile_count: int = 0
 
     # ------------------------------------------------------------- register
 
@@ -407,6 +410,7 @@ class PHubClient:
         key = (mode, None if m is None or m.all_live else m.program_key())
         if key not in self._steps:
             self._steps[key] = self._build_step(mode)
+            self.compile_count += 1
         return self._steps[key]
 
     def _build_step(self, mode: str):

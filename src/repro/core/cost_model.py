@@ -175,6 +175,99 @@ def rebalance_traffic(plan, slot_specs=(), mo: int = 1) -> dict:
             "per_group": per_group}
 
 
+# ------------------------------------- rack-lint traffic model (§15, R1)
+
+def predicted_exchange_hlo(groups, *, strategy: str, wire=None,
+                           windows: int = 1, n_workers: int = 1,
+                           pod_size: int = 1) -> dict:
+    """Per-collective-kind link bytes one exchange step should lower to,
+    in the same convention as utils.hlo.summarize_collectives — the R1
+    traffic-conformance oracle (DESIGN.md §15).
+
+    Two figures per (kind, tier): ``by_kind`` predicts what a *static*
+    parse of the optimized HLO sees (the identity windowed ring rolls its
+    hops into one lax.scan body, so its collective-permute appears once
+    per window), while ``runtime_by_kind`` scales loop-carried collectives
+    by their trip count — the bytes the links actually carry.
+
+    ``groups``: duck-typed chunk groups (GroupPlan / PackedGroup:
+    ``padded``, ``shard_len``, ``chunk_elems``, ``n_shards``, ``dtype``);
+    ``wire``: core/wire.WireFormat or None (identity); ``pod_size``:
+    cross-pod factor for the hierarchical strategy's DCN tier (1 = single
+    pod).  Only the strategies the pipelined exchange emits deterministic
+    programs for are modeled; others raise ValueError.
+    """
+    import numpy as np
+
+    from .pipeline import effective_windows
+
+    identity = wire is None or getattr(wire, "name", "identity") == "identity"
+    if strategy not in ("sharded_ps", "hierarchical", "allreduce"):
+        raise ValueError(f"strategy {strategy!r} has no HLO traffic model")
+    if not identity and strategy == "allreduce":
+        raise ValueError("wire encoding rides the pipelined ring "
+                         "strategies only")
+
+    hlo: dict = {}
+    runtime: dict = {}
+    per_group = []
+
+    def add(kind, tier, hlo_b, runtime_b=None):
+        hlo.setdefault(kind, {"ici": 0.0, "dcn": 0.0})[tier] += hlo_b
+        runtime.setdefault(kind, {"ici": 0.0, "dcn": 0.0})[tier] += (
+            hlo_b if runtime_b is None else runtime_b)
+        detail.append({"kind": kind, "tier": tier, "hlo_bytes": hlo_b,
+                       "runtime_bytes": hlo_b if runtime_b is None
+                       else runtime_b})
+
+    for g in groups:
+        detail: list = []
+        item = np.dtype(g.dtype).itemsize
+        S = max(int(g.n_shards), 1)
+        padded_b = g.padded * item
+        shard_b = g.shard_len * item
+        if strategy == "allreduce":
+            N = max(n_workers, 1)
+            add("all-reduce", "ici", 2.0 * padded_b * (N - 1) / N)
+            per_group.append({"dtype": str(np.dtype(g.dtype)),
+                              "windows": 1, "ops": detail})
+            continue
+        W = effective_windows(g, windows)
+        Lw = g.shard_len // W
+        ring_tier = ("dcn" if strategy == "sharded_ps" and pod_size > 1
+                     else "ici")
+        if identity:
+            if S > 1 and W == 1:
+                add("reduce-scatter", ring_tier, float(shard_b) * (S - 1))
+            elif S > 1:
+                # lax.scan ring: one ppermute in HLO, S-1 hops at runtime
+                add("collective-permute", ring_tier, float(W * Lw * item),
+                    float(W * (S - 1) * Lw * item))
+            if S > 1:
+                add("all-gather", ring_tier, padded_b * (S - 1) / S)
+            if strategy == "hierarchical" and pod_size > 1:
+                P = pod_size
+                add("all-reduce", "dcn", 2.0 * shard_b * (P - 1) / P)
+        else:
+            hop_b = wire.payload_bytes(Lw, g.dtype, g.chunk_elems)
+            wire_padded_b = wire.payload_bytes(g.padded, g.dtype,
+                                               g.chunk_elems)
+            if S > 1:
+                # unrolled encoded ring: every hop is its own ppermute pair
+                add("collective-permute", ring_tier,
+                    float(W * (S - 1)) * hop_b)
+                add("all-gather", ring_tier, wire_padded_b * (S - 1) / S)
+            if strategy == "hierarchical" and pod_size > 1:
+                P = pod_size
+                # cross-pod psum runs on the decoded f32 window
+                add("all-reduce", "dcn", 2.0 * (g.shard_len * 4)
+                    * (P - 1) / P)
+        per_group.append({"dtype": str(np.dtype(g.dtype)), "windows": W,
+                          "ops": detail})
+    return {"by_kind": hlo, "runtime_by_kind": runtime,
+            "per_group": per_group}
+
+
 # ------------------------------------------------ backward-overlap (§14)
 
 def backward_overlap_fraction(ready_fracs, window_comm_s,

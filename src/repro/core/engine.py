@@ -27,10 +27,8 @@ and passed into the inner computation as values.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from functools import cached_property, partial
-from typing import Any, Optional
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -48,8 +46,17 @@ from . import chunking
 from .client import PHubClient, _MeshScopedJit
 from .exchange import ExchangeContext
 from .pipeline import PIPELINED_STRATEGIES, effective_windows
-from .sharding import ShardingPlan, plan_params, local_shapes, make_gather_fn
+from .sharding import plan_params, local_shapes, make_gather_fn
 from .wire import make_wire_format
+
+
+def spec_args(shapes, shardings):
+    """ShapeDtypeStruct stand-ins carrying shardings — lowering inputs for
+    the dry-run and rack-lint paths, no device allocation."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings,
+        is_leaf=lambda t: isinstance(t, jax.ShapeDtypeStruct))
 
 
 @dataclass
@@ -144,7 +151,7 @@ class PHubEngine:
         right for small archs; TP stays right for the multi-hundred-GB ones."""
         if self.tc.infer_param_layout == "replicated":
             return jax.tree.map(
-                lambda s: NamedSharding(self.mesh, P(*([None] * len(s.shape)))),
+                lambda s: NamedSharding(self.mesh, P()),
                 self.params_shapes,
                 is_leaf=lambda t: isinstance(t, jax.ShapeDtypeStruct))
         return self.plan.shardings(self.mesh)
@@ -201,9 +208,13 @@ class PHubEngine:
             shard_axes = (self.exchange_axes
                           if self.tc.strategy == "sharded_ps" else ("data",))
             ax = shard_axes[0] if len(shard_axes) == 1 else shard_axes
-            spec = P(mspec, ax, None)
+            # no trailing None — jit outputs carry the canonical short
+            # spec, and an unequal input sharding forces a second trace
+            spec = P(mspec, ax)
         else:
-            spec = P(mspec, None)
+            # canonical P() when fully replicated — matches jit outputs so
+            # donated opt slots never force a second trace
+            spec = P(mspec) if mspec is not None else P()
         return {key: {s.name: NamedSharding(self.mesh, spec) for s in slots}
                 for key in (groups or self._group_map())}
 
@@ -213,7 +224,8 @@ class PHubEngine:
 
     def store_shardings(self):
         mspec = "model" if self.mo_eff > 1 else None
-        return {str(g.dtype): NamedSharding(self.mesh, P(mspec, None))
+        spec = P(mspec) if mspec is not None else P()
+        return {str(g.dtype): NamedSharding(self.mesh, spec)
                 for g in self.chunk_plan.groups}
 
     def params_from_store(self, store):
@@ -696,6 +708,63 @@ class PHubEngine:
             axis_names=set(self.exchange_axes), check_vma=False)
         return _MeshScopedJit(jax.jit(step, donate_argnums=(0, 1)), mesh)
 
+    # ------------------------------------- lowered artifacts (§15 rack-lint)
+
+    @property
+    def pod_size(self) -> int:
+        return self.axis_sizes.get("pod", 1)
+
+    @property
+    def pod_stride(self) -> int:
+        """Devices per pod for utils.hlo's ICI/DCN tier classifier ('pod'
+        is the leading mesh axis); 0 on a single-pod mesh."""
+        if self.pod_size <= 1:
+            return 0
+        return int(self.mesh.devices.size) // self.pod_size
+
+    def train_step_arg_specs(self, batch_shapes, sanity=None) -> tuple:
+        """ShapeDtypeStruct+sharding stand-ins for one ``make_train_step``
+        call — lowering inputs without allocating (dry-run / rack-lint)."""
+        p = (spec_args(self.store_shapes(), self.store_shardings())
+             if self.tc.flat_residency else
+             spec_args(self.params_shapes, self.param_shardings()))
+        o = spec_args(self.opt_state_shapes(), self.opt_state_shardings())
+        b = spec_args(batch_shapes, self.batch_shardings(batch_shapes))
+        args = [p, o, b]
+        if sanity is not None:
+            health = {"norm_hi": jax.ShapeDtypeStruct((), jnp.float32)}
+            if sanity.allow_injection:
+                health["inject"] = jax.ShapeDtypeStruct(
+                    (self.ctx.n_workers,), jnp.float32)
+            args.append(health)
+        return tuple(args)
+
+    def zero_step_arg_specs(self) -> tuple:
+        return (spec_args(self.params_shapes, self.param_shardings()),
+                spec_args(self.opt_state_shapes(),
+                          self.opt_state_shardings()))
+
+    def donated_arg_stats(self, arg_specs) -> tuple[int, int]:
+        """(leaf count, bytes) of a step's donated buffers — the first two
+        args (params/store + opt), per ``donate_argnums=(0, 1)``.  The R3
+        donation audit requires every one of these to alias an output in
+        the compiled module."""
+        leaves = jax.tree.leaves(arg_specs[0]) + jax.tree.leaves(arg_specs[1])
+        return len(leaves), sum(
+            int(np.prod(v.shape)) * v.dtype.itemsize for v in leaves)
+
+    def lower_train_step(self, batch_shapes, membership=None, sanity=None):
+        """Lower (no execution) the production train step against spec
+        args — the rack-lint / dry-run artifact source."""
+        step = self.make_train_step(batch_shapes, membership=membership,
+                                    sanity=sanity)
+        return step.lower(*self.train_step_arg_specs(batch_shapes,
+                                                     sanity=sanity))
+
+    def lower_zero_compute_step(self, membership=None):
+        step = self.make_zero_compute_step(membership=membership)
+        return step.lower(*self.zero_step_arg_specs())
+
     def _outer_m_specs(self, groups=None, slots=None):
         """Opt-slot specs at the outer (data-manual) shard_map boundary."""
         S = self.ctx.n_shards(self.tc.strategy)
@@ -830,6 +899,28 @@ def co_opt_state_shapes(e0: PHubEngine, domain, slots=None) -> dict:
 
 def co_opt_state_shardings(e0: PHubEngine, domain, slots=None) -> dict:
     return e0.opt_state_shardings(domain.groups, slots)
+
+
+def co_step_arg_specs(tenants: dict, domain, batch_shapes: dict) -> tuple:
+    """Spec args for one ``make_co_train_step`` call (rack-lint/dry-run)."""
+    e0 = next(iter(tenants.values()))
+    params_by = {ns: spec_args(e.params_shapes, e.param_shardings())
+                 for ns, e in tenants.items()}
+    opt = spec_args(co_opt_state_shapes(e0, domain),
+                    co_opt_state_shardings(e0, domain))
+    batch_by = {ns: spec_args(batch_shapes[ns],
+                              tenants[ns].batch_shardings(batch_shapes[ns]))
+                for ns in tenants}
+    return params_by, opt, batch_by
+
+
+def lower_co_train_step(tenants: dict, domain, batch_shapes: dict,
+                        zero_compute: bool = False, membership=None):
+    """Lower (no execution) the jointly compiled multi-tenant step."""
+    step = make_co_train_step(tenants, domain, batch_shapes,
+                              zero_compute=zero_compute,
+                              membership=membership)
+    return step.lower(*co_step_arg_specs(tenants, domain, batch_shapes))
 
 
 def make_co_train_step(tenants: dict, domain, batch_shapes: dict,

@@ -16,7 +16,6 @@ replicated (device_put forbids uneven shardings).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Optional
 
@@ -24,7 +23,6 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..configs.base import ModelConfig
 
 # leaf-name -> candidate shard dim for the model axis, indexed from the END
 # of the shape (block leaves carry a leading layer dim).  -1 = last dim.
@@ -133,7 +131,13 @@ def plan_params(params_shapes, *, mesh_axes: tuple[str, ...],
             entries[model_dim] = "model"
         if fsdp_dim is not None:
             entries[fsdp_dim] = "data"
-        leaves[path] = LeafPlan(spec=P(*entries), model_dim=model_dim,
+        # Canonicalize: drop trailing None entries (P() when fully
+        # replicated) — jit emits the short spec on its outputs, and a
+        # NamedSharding-unequal input forces a spurious second trace.
+        while entries and entries[-1] is None:
+            entries.pop()
+        spec = P(*entries)
+        leaves[path] = LeafPlan(spec=spec, model_dim=model_dim,
                                 fsdp_dim=fsdp_dim)
     plan = ShardingPlan(mesh_axes=tuple(mesh_axes), layout=layout,
                         leaves=leaves, treedef=treedef)

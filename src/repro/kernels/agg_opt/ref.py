@@ -1,7 +1,6 @@
 """Pure-jnp oracle for the fused agg+opt kernel."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -1,7 +1,6 @@
 """Oracle: the model's blockwise attention at T=1 with a position-tagged cache."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from ...models.attention import blockwise_attention
 

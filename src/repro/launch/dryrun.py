@@ -158,6 +158,41 @@ def _wire_record(eng: "PHubEngine") -> dict:
             **traffic}
 
 
+def _lint_record(eng: "PHubEngine", compiled, shape: InputShape,
+                 tag: str) -> dict:
+    """rack-lint hygiene (+ donation, train only) over the compiled step
+    (DESIGN.md §15).  The full R1-R5 matrix lives in launch/lint.py; this
+    embeds the per-combination verdict in every dry-run record so the
+    roofline tables carry conformance alongside cost."""
+    from ..analysis import StepArtifact
+    from ..analysis.rules import check_donation, check_hygiene
+    mem = compiled.memory_analysis()
+    donated_count = donated_b = 0
+    if shape.kind == "train":
+        specs = make_batch_specs(eng.cfg, shape)
+        donated_count, donated_b = eng.donated_arg_stats(
+            eng.train_step_arg_specs(specs))
+    art = StepArtifact(
+        tag=tag, hlo_text=compiled.as_text(),
+        groups=tuple(eng.chunk_plan.groups) if eng.chunk_plan else (),
+        strategy=eng.tc.strategy, wire=eng.wire,
+        windows=eng.tc.pipeline_windows, n_workers=eng.ctx.n_workers,
+        pod_size=eng.pod_size, pod_stride=eng.pod_stride,
+        flat=eng.tc.flat_residency, overlap=eng.tc.overlap_backward,
+        donated_count=donated_count, donated_bytes=donated_b,
+        alias_bytes=int(getattr(mem, "alias_size_in_bytes", 0) or 0))
+    # a model-sharded mesh legitimately all-gathers raw f32 activations /
+    # TP shards, so the wire-dtype rule only binds when model is unsharded
+    diags = check_hygiene(art, wire_rule=eng.mo_eff == 1)
+    if donated_count:
+        diags += check_donation(art)
+    return {
+        "errors": sum(1 for d in diags if d.severity == "error"),
+        "warnings": sum(1 for d in diags if d.severity == "warning"),
+        "diagnostics": [d.to_dict() for d in diags],
+    }
+
+
 def dryrun_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
                strategy: str, save: bool = True, verbose: bool = True,
                probe: bool = True, infer_layout: str = "tp",
@@ -210,6 +245,8 @@ def dryrun_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
         # compressed wire bytes alongside the raw figures: the exchange
         # bytes the rack carries under this wire format (DESIGN.md §11)
         rec["wire"] = _wire_record(eng)
+    # static-conformance verdict over the compiled program (DESIGN.md §15)
+    rec["rack_lint"] = _lint_record(eng, compiled, shape, tag)
     if probe:
         # trip-count-corrected metrics (scan bodies are counted once by
         # XLA's cost analysis — see _probe_costs)
@@ -226,6 +263,9 @@ def dryrun_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
                      f"{wr['raw_bytes']/2**20:.1f} MiB "
                      f"({wr['compression']:.2f}x)"
                      if wr.get("raw_bytes") else "")
+        ln = rec["rack_lint"]
+        if ln["errors"] or ln["warnings"]:
+            wire_note += f", lint {ln['errors']}E/{ln['warnings']}W"
         print(f"[dryrun] OK {tag}: {mem['total_bytes_per_device']/2**30:.2f} "
               f"GiB/device, flops/dev {pr.get('flops', cost.get('flops', 0)):.3e}, "
               f"hbm {pr.get('bytes', 0)/2**30:.1f} GiB, "

@@ -1,0 +1,353 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+"""rack-lint CLI: sweep a representative config matrix, lint every
+lowered/compiled step, and run the seeded known-bad fixtures
+(DESIGN.md §15).
+
+For each matrix cell (strategy x wire format x windows x flat residency
+x tenants x membership) the production step is compiled on a small CPU
+rack and checked against the static rules:
+
+  R1 traffic-conformance   (vs cost_model.predicted_exchange_hlo)
+  R3 donation-audit        (input_output_alias covers every donation)
+  R4 overlap verifier      (chunk-ready schedule, overlap cells)
+  R5 hygiene               (f64 / concat / callbacks / wire dtype)
+
+plus the live-cache R2 retrace scenarios (membership cycles, tenant
+detach/re-attach, sanity-threshold knob).  The seeded fixtures then
+regression-test the rules themselves: every corrupted artifact must be
+flagged, every clean twin must pass.
+
+The JSON report lands in results/lint/report.json; exit status is
+nonzero on any matrix/retrace error or any fixture miss — the CI gate.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.lint [--only SUBSTR]
+      [--skip-retrace] [--skip-matrix] [--skip-fixtures] [--out PATH]
+"""
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+import numpy as np  # noqa: E402
+
+from ..analysis import (Diagnostic, LintReport,  # noqa: E402
+                        artifact_from_co_step, artifact_from_engine,
+                        check_retrace_client, check_retrace_co,
+                        check_retrace_manager, check_retrace_sanity,
+                        fixtures as fixture_mod, lint_artifact)
+from ..configs import ARCHS, TrainConfig        # noqa: E402
+from ..configs.base import InputShape, reduced  # noqa: E402
+from ..core import PHubClient, PHubEngine       # noqa: E402
+from ..core.api import PHubConnectionManager    # noqa: E402
+from ..core.chunking import pack_domains        # noqa: E402
+from ..data.synthetic import make_batch_specs   # noqa: E402
+from ..elastic import Membership                # noqa: E402
+from ..resilience import SanityConfig           # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "lint")
+
+CFG = reduced(ARCHS["llama3.2-1b"])                     # ~1.7M params
+SHAPE = InputShape(name="lint", seq_len=16, global_batch=8, kind="train")
+# 64 KiB chunks give this model an even chunks-per-shard on 8 shards, so
+# windowed cells genuinely run W=2 instead of folding back to W=1
+_W2_CHUNK = 64 * 1024
+
+
+def _mesh(kind: str = "data"):
+    if kind == "pod":
+        return jax.make_mesh((2, 4, 1), ("pod", "data", "model"))
+    return jax.make_mesh((8, 1), ("data", "model"))
+
+
+# ------------------------------------------------------------ the matrix
+
+def matrix_cells() -> list:
+    """(tag, step kind, TrainConfig kwargs, mesh kind, extras) — the
+    representative sweep.  Zero-compute cells isolate the exchange for
+    the strategy x wire x windows traffic axes; train cells add the
+    fwd/bwd program around it for residency / overlap / sanity /
+    membership; the co cell covers the packed multi-tenant domain."""
+    leave7 = Membership.full(8).leave(7)
+    return [
+        # strategy x wire x windows (exchange-only)
+        ("zero/sps-id-w1", "zero", {}, "data", {}),
+        ("zero/sps-id-w2", "zero",
+         dict(pipeline_windows=2, chunk_size_bytes=_W2_CHUNK), "data", {}),
+        ("zero/sps-int8-w2", "zero",
+         dict(wire_format="int8", pipeline_windows=2,
+              chunk_size_bytes=_W2_CHUNK), "data", {}),
+        ("zero/sps-bf16-w1", "zero", dict(wire_format="bf16"), "data", {}),
+        ("zero/hier-id-w1", "zero", dict(strategy="hierarchical"),
+         "pod", {}),
+        ("zero/hier-int8-w1", "zero",
+         dict(strategy="hierarchical", wire_format="int8"), "pod", {}),
+        ("zero/allreduce", "zero", dict(strategy="allreduce"), "data", {}),
+        # full train programs
+        ("train/sps-id-w1", "train", {}, "data", {}),
+        ("train/flat", "train", dict(flat_residency=True), "data", {}),
+        ("train/overlap-flat-w2", "train",
+         dict(flat_residency=True, overlap_backward=True,
+              pipeline_windows=2, chunk_size_bytes=_W2_CHUNK), "data", {}),
+        ("train/int8-w2", "train",
+         dict(wire_format="int8", pipeline_windows=2,
+              chunk_size_bytes=_W2_CHUNK), "data", {}),
+        ("train/sanity", "train", {}, "data",
+         {"sanity": SanityConfig(allow_injection=True)}),
+        ("train/member-leave7", "train", {}, "data",
+         {"membership": leave7}),
+    ]
+
+
+def run_cell(tag, kind, tc_kwargs, mesh_kind, extras, report: LintReport):
+    t0 = time.time()
+    mesh = _mesh(mesh_kind)
+    tc = TrainConfig(**tc_kwargs)
+    eng = PHubEngine(cfg=CFG, tc=tc, mesh=mesh)
+    batch_shapes = (make_batch_specs(CFG, SHAPE) if kind == "train"
+                    else None)
+    art = artifact_from_engine(eng, tag, kind=kind,
+                               batch_shapes=batch_shapes,
+                               membership=extras.get("membership"),
+                               sanity=extras.get("sanity"))
+    diags = lint_artifact(art)
+    report.extend(diags)
+    report.record_cell({
+        "tag": tag, "status": "ok", "kind": kind,
+        "config": art.config, "seconds": round(time.time() - t0, 2),
+        "errors": sum(1 for d in diags if d.severity == "error"),
+        "memory": art.memory,
+        "donated": {"count": art.donated_count,
+                    "bytes": art.donated_bytes,
+                    "alias_bytes": art.alias_bytes},
+    })
+
+
+def run_co_cell(report: LintReport, tag: str = "co/two-tenant-zero"):
+    """Jointly compiled two-tenant step over the packed rack domain."""
+    t0 = time.time()
+    mesh = _mesh("data")
+    tc = TrainConfig()
+    tenants = {
+        "a": PHubEngine(cfg=CFG, tc=tc, mesh=mesh),
+        "b": PHubEngine(cfg=reduced(ARCHS["llama3.2-1b"], d_model=128),
+                        tc=tc, mesh=mesh),
+    }
+    e0 = tenants["a"]
+    domain = pack_domains(
+        {ns: e.chunk_plan for ns, e in tenants.items()},
+        n_shards=max(e0.ctx.n_shards(tc.strategy), 1),
+        chunk_bytes=tc.chunk_size_bytes)
+    art = artifact_from_co_step(tenants, domain, tag, zero_compute=True)
+    diags = lint_artifact(art)
+    report.extend(diags)
+    report.record_cell({
+        "tag": tag, "status": "ok", "kind": "co", "config": art.config,
+        "seconds": round(time.time() - t0, 2),
+        "errors": sum(1 for d in diags if d.severity == "error"),
+        "memory": art.memory,
+        "donated": {"count": art.donated_count,
+                    "bytes": art.donated_bytes,
+                    "alias_bytes": art.alias_bytes},
+    })
+
+
+# -------------------------------------------------------------- retrace
+
+def _device_batch(eng, data, shapes):
+    b = data.batch_at(0)
+    sh = eng.batch_shardings(shapes)
+    return {k: jax.device_put(v, sh[k]) for k, v in b.items()}
+
+
+def run_retrace(report: LintReport):
+    """R2 scenarios against live step caches (see analysis/retrace.py)."""
+    from ..data import SyntheticTokens
+    mesh = _mesh("data")
+    data = SyntheticTokens(CFG, SHAPE.global_batch, SHAPE.seq_len, seed=0)
+    shapes = make_batch_specs(CFG, SHAPE)
+
+    # manager: membership leave/recover/re-leave cycle on a solo service
+    t0 = time.time()
+    mgr = PHubConnectionManager()
+    h = mgr.create_service("lint", CFG, TrainConfig(), mesh)
+    eng = mgr.connect_service(h)
+    params, opt = mgr.init_service(h, jax.random.PRNGKey(0))
+    batch = _device_batch(eng, data, shapes)
+    diags = check_retrace_manager(mgr, h, params, opt, batch,
+                                  tag="retrace/manager-membership")
+    report.extend(diags)
+    report.record_cell({"tag": "retrace/manager-membership", "status": "ok",
+                        "kind": "retrace",
+                        "seconds": round(time.time() - t0, 2),
+                        "errors": sum(1 for d in diags
+                                      if d.severity == "error")})
+
+    # manager: tenant detach + re-attach onto the identical packed domain
+    t0 = time.time()
+    mgr2 = PHubConnectionManager()
+    cfg_b = reduced(ARCHS["llama3.2-1b"], d_model=128)
+    ha = mgr2.create_service("ca", CFG, TrainConfig(), mesh)
+    hb = mgr2.create_service("cb", cfg_b, TrainConfig(), mesh)
+    pa, _ = mgr2.init_service(ha, jax.random.PRNGKey(1))
+    pb, _ = mgr2.init_service(hb, jax.random.PRNGKey(2))
+    data_b = SyntheticTokens(cfg_b, SHAPE.global_batch, SHAPE.seq_len,
+                             seed=3)
+    batches = {"ca": _device_batch(mgr2.connect_service(ha), data, shapes),
+               "cb": _device_batch(mgr2.connect_service(hb), data_b,
+                                   shapes)}
+    diags = check_retrace_co(mgr2, [ha, hb], {"ca": pa, "cb": pb}, batches,
+                             tag="retrace/co-detach-reattach")
+    report.extend(diags)
+    report.record_cell({"tag": "retrace/co-detach-reattach", "status": "ok",
+                        "kind": "retrace",
+                        "seconds": round(time.time() - t0, 2),
+                        "errors": sum(1 for d in diags
+                                      if d.severity == "error")})
+
+    # client: the same membership cycle on the standalone push/pull API
+    t0 = time.time()
+    cmesh = jax.make_mesh((8,), ("data",))
+    client = PHubClient(TrainConfig(chunk_size_bytes=2048), cmesh).register(
+        {"w": jax.ShapeDtypeStruct((4096,), np.float32),
+         "b": jax.ShapeDtypeStruct((1000,), np.float32)})
+    grads = {"w": np.ones((8, 4096), np.float32),
+             "b": np.ones((8, 1000), np.float32)}
+    cparams = {"w": np.zeros(4096, np.float32),
+               "b": np.zeros(1000, np.float32)}
+    diags = check_retrace_client(client, grads, cparams,
+                                 client.init_state(),
+                                 tag="retrace/client-membership")
+    report.extend(diags)
+    report.record_cell({"tag": "retrace/client-membership", "status": "ok",
+                        "kind": "retrace",
+                        "seconds": round(time.time() - t0, 2),
+                        "errors": sum(1 for d in diags
+                                      if d.severity == "error")})
+
+    # sanity thresholds must ride the traced health input
+    t0 = time.time()
+    sanity = SanityConfig()
+    eng2 = PHubEngine(cfg=CFG, tc=TrainConfig(), mesh=mesh)
+    params2, opt2 = eng2.init_state(jax.random.PRNGKey(4))
+    batch2 = _device_batch(eng2, data, shapes)
+    diags = check_retrace_sanity(eng2, shapes, params2, opt2, batch2,
+                                 sanity, tag="retrace/sanity-threshold")
+    report.extend(diags)
+    report.record_cell({"tag": "retrace/sanity-threshold", "status": "ok",
+                        "kind": "retrace",
+                        "seconds": round(time.time() - t0, 2),
+                        "errors": sum(1 for d in diags
+                                      if d.severity == "error")})
+
+
+# -------------------------------------------------------------- fixtures
+
+def run_fixtures(report: LintReport) -> int:
+    """Every corrupted fixture must be flagged by its rule; every clean
+    twin must pass.  Returns the number of misbehaving fixtures."""
+    misses = 0
+    for f in fixture_mod.all_fixtures():
+        ok = f.ok
+        misses += 0 if ok else 1
+        report.record_cell({
+            "tag": f"fixture/{f.name}", "status": "ok" if ok else "MISS",
+            "kind": "fixture", "rule": f.rule, "flagged": f.flagged,
+            "false_positive": f.false_positive,
+            "errors": 0 if ok else 1,
+        })
+        if not f.flagged:
+            report.add(Diagnostic(
+                "LINT", "error", f"fixture/{f.name}",
+                f"seeded {f.rule} defect went unflagged — the rule is "
+                f"blind to its own fixture"))
+        if f.false_positive:
+            report.add(Diagnostic(
+                "LINT", "error", f"fixture/{f.name}",
+                f"clean twin flagged by "
+                f"{sorted({d.rule for d in f.clean})} — false positive",
+                {"clean": [d.to_dict() for d in f.clean]}))
+    return misses
+
+
+# ------------------------------------------------------------------ main
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run only matrix cells whose tag contains this")
+    ap.add_argument("--skip-matrix", action="store_true")
+    ap.add_argument("--skip-retrace", action="store_true")
+    ap.add_argument("--skip-fixtures", action="store_true")
+    ap.add_argument("--out", default=os.path.join(RESULTS_DIR,
+                                                  "report.json"))
+    args = ap.parse_args(argv)
+
+    report = LintReport(meta={
+        "arch": CFG.arch_id, "n_params": CFG.n_params(),
+        "devices": jax.device_count(), "backend": jax.default_backend(),
+    })
+    crashed = []
+
+    if not args.skip_matrix:
+        cells = [c for c in matrix_cells()
+                 if args.only is None or args.only in c[0]]
+        for tag, kind, tc_kwargs, mesh_kind, extras in cells:
+            try:
+                run_cell(tag, kind, tc_kwargs, mesh_kind, extras, report)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                crashed.append(tag)
+                report.record_cell({"tag": tag, "status": "crashed",
+                                    "kind": kind, "error": str(e)[:500]})
+            else:
+                last = report.cells[-1]
+                print(f"[lint] {tag}: {last['errors']} errors "
+                      f"({last['seconds']}s)")
+        if args.only is None or args.only in "co/two-tenant-zero":
+            try:
+                run_co_cell(report)
+                print(f"[lint] co/two-tenant-zero: "
+                      f"{report.cells[-1]['errors']} errors "
+                      f"({report.cells[-1]['seconds']}s)")
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                crashed.append("co/two-tenant-zero")
+                report.record_cell({"tag": "co/two-tenant-zero",
+                                    "status": "crashed", "kind": "co",
+                                    "error": str(e)[:500]})
+
+    if not args.skip_retrace and args.only is None:
+        try:
+            run_retrace(report)
+            print("[lint] retrace scenarios done")
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            crashed.append("retrace")
+            report.record_cell({"tag": "retrace", "status": "crashed",
+                                "kind": "retrace", "error": str(e)[:500]})
+
+    fixture_misses = 0
+    if not args.skip_fixtures:
+        fixture_misses = run_fixtures(report)
+        print(f"[lint] fixtures: {fixture_misses} misses")
+
+    report.meta["crashed"] = crashed
+    path = report.save(args.out)
+    print(f"[lint] {report.summary_line()} -> {path}")
+    for d in report.errors:
+        print("  ", d)
+
+    if report.errors or crashed or fixture_misses:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

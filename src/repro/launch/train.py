@@ -109,7 +109,6 @@ def main(argv=None):
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
     import jax
-    import jax.numpy as jnp
     from ..configs import ARCHS, TrainConfig, reduced
     from ..core import PHubConnectionManager
     from ..data import SyntheticTokens

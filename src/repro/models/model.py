@@ -15,8 +15,6 @@ Structure
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, Callable, Optional
 
 import jax

@@ -6,6 +6,11 @@ collective-permute op's result shape gives its payload, the replica groups
 give the ring size, and the device-id span classifies the op as in-pod
 (ICI) or cross-pod (DCN) for the two-tier bandwidth model.
 
+Async pairs: an ``X-start`` op carries the payload once (its result tuple
+echoes the operands, so only the output half is counted); the matching
+``X-done`` carries nothing.  Variadic (tuple-result) collectives count
+every result element.  Sub-byte dtypes (s4/u4) are accounted in bits.
+
 Per-device link-bytes conventions (ring algorithms):
   all-reduce  (out N, group S): 2 * N * (S-1)/S
   all-gather  (out N, group S): N * (S-1)/S
@@ -16,36 +21,92 @@ Per-device link-bytes conventions (ring algorithms):
 from __future__ import annotations
 
 import re
-from collections import defaultdict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1,
+_DTYPE_BITS = {
+    "f64": 64, "f32": 32, "f16": 16, "bf16": 16,
+    "f8e4m3fn": 8, "f8e5m2": 8,
+    "s64": 64, "u64": 64, "s32": 32, "u32": 32, "s16": 16, "u16": 16,
+    "s8": 8, "u8": 8, "s4": 4, "u4": 4, "pred": 8,
 }
+# byte view kept for callers that index whole-byte dtypes directly
+_DTYPE_BYTES = {k: v // 8 for k, v in _DTYPE_BITS.items() if v >= 8}
 
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
 _COLL_RE = re.compile(
     r"=\s+(?:\(([^)]*)\)|(\S+))\s+"
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?\(", )
+    r"(-start)?\(", )
 _SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
-                       r"s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+                       r"s16|u16|s8|u8|s4|u4|pred)\[([0-9,]*)\]")
 _GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\]"
                              r"(?:T\(([0-9,]+)\))?")
 
+# ``X-start`` kinds whose result tuple is (operands..., results..., ctx...):
+# counting every element would double the payload.
+_ECHOES_OPERANDS = {"all-gather", "collective-permute", "all-to-all"}
 
-def _shape_bytes(type_str: str) -> int:
-    total = 0
+
+def _shape_parts(type_str: str) -> list[tuple[str, int]]:
+    """[(dtype, bytes)] for every shape literal in ``type_str`` (bit-exact
+    for sub-byte dtypes: s4[8] is 4 bytes, not 8)."""
+    parts = []
     for m in _SHAPE_RE.finditer(type_str):
         dt, dims = m.group(1), m.group(2)
         n = 1
         if dims:
             for d in dims.split(","):
                 n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
+        parts.append((dt, (n * _DTYPE_BITS[dt] + 7) // 8))
+    return parts
+
+
+def _shape_bytes(type_str: str) -> int:
+    return sum(b for _, b in _shape_parts(type_str))
+
+
+def _split_tuple(type_str: str) -> list[str]:
+    """Split a tuple-type string on top-level commas (commas inside
+    ``[...]`` dims or ``{...}`` layouts are not separators)."""
+    out, depth, cur = [], 0, []
+    for ch in type_str:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return [s.strip() for s in out if s.strip()]
+
+
+def _is_context_elem(elem: str) -> bool:
+    """Scalar u32/s32 elements in ``-start`` tuples are async context
+    tokens, not payload."""
+    m = _SHAPE_RE.search(elem)
+    return bool(m) and m.group(1) in ("u32", "s32") and m.group(2) == ""
+
+
+def _start_result_parts(tuple_str: str, kind: str) -> list[tuple[str, int]]:
+    """Payload parts of an ``X-start`` result tuple, without operand echo.
+
+    all-gather/collective-permute/all-to-all-start tuples are
+    ``(operand..., result..., [context...])``: drop contexts, keep the
+    result half.  all-reduce/reduce-scatter-start results carry each
+    payload once already."""
+    elems = [e for e in _split_tuple(tuple_str) if not _is_context_elem(e)]
+    if kind in _ECHOES_OPERANDS and len(elems) >= 2 and len(elems) % 2 == 0:
+        elems = elems[len(elems) // 2:]
+    parts: list[tuple[str, int]] = []
+    for e in elems:
+        parts.extend(_shape_parts(e))
+    return parts
 
 
 @dataclass
@@ -55,6 +116,7 @@ class CollectiveStats:
     group_size: int
     spans_pod: bool
     count: int = 1
+    by_dtype: tuple = ()      # ((dtype, bytes), ...) of one op instance
 
     def link_bytes(self) -> float:
         S = max(self.group_size, 1)
@@ -97,6 +159,13 @@ def _parse_groups(line: str, pod_stride: int):
     return 1, False
 
 
+def _dtype_key(parts: list[tuple[str, int]]) -> tuple:
+    agg: dict[str, int] = {}
+    for dt, b in parts:
+        agg[dt] = agg.get(dt, 0) + b
+    return tuple(sorted(agg.items()))
+
+
 def parse_collectives(hlo_text: str, *, pod_stride: int = 0
                       ) -> list[CollectiveStats]:
     """pod_stride: devices per pod (0 = single-pod mesh)."""
@@ -105,16 +174,22 @@ def parse_collectives(hlo_text: str, *, pod_stride: int = 0
         m = _COLL_RE.search(line)
         if not m:
             continue
-        type_str = m.group(1) or m.group(2)
         kind = m.group(3)
-        payload = _shape_bytes(type_str)
+        is_start = m.group(4) is not None
+        if m.group(1) is not None and is_start:
+            parts = _start_result_parts(m.group(1), kind)
+        else:
+            parts = _shape_parts(m.group(1) or m.group(2))
+        payload = sum(b for _, b in parts)
         size, spans = _parse_groups(line, pod_stride)
-        key = (kind, payload, size, spans)
+        by_dtype = _dtype_key(parts)
+        key = (kind, payload, size, spans, by_dtype)
         if key in agg:
             agg[key].count += 1
         else:
             agg[key] = CollectiveStats(kind=kind, payload_bytes=payload,
-                                       group_size=size, spans_pod=spans)
+                                       group_size=size, spans_pod=spans,
+                                       by_dtype=by_dtype)
     return list(agg.values())
 
 
@@ -131,6 +206,45 @@ def parse_concat_sizes(hlo_text: str) -> list[int]:
     step must contain none at model scale."""
     return [_shape_bytes(m.group(1))
             for m in _CONCAT_RE.finditer(hlo_text)]
+
+
+_ALIAS_RE = re.compile(
+    r"input_output_alias=\{((?:[^{}]|\{[^{}]*\})*)\}")
+_ALIAS_PAIR_RE = re.compile(
+    r"\{[0-9,\s]*\}:\s*\((\d+)\s*,\s*\{[0-9,\s]*\}\s*,\s*"
+    r"(may-alias|must-alias)\)")
+
+
+def parse_donated_params(hlo_text: str) -> set[int]:
+    """Entry-parameter numbers that alias an output in the compiled
+    module's ``input_output_alias`` header — the buffers XLA will actually
+    donate.  Empty set when the module declares no aliasing."""
+    m = _ALIAS_RE.search(hlo_text)
+    if not m:
+        return set()
+    return {int(p.group(1)) for p in _ALIAS_PAIR_RE.finditer(m.group(1))}
+
+
+_CUSTOM_CALL_RE = re.compile(
+    r"custom-call\([^)]*\).*?custom_call_target=\"([^\"]+)\"")
+_HOST_MARKERS = ("callback", "python", "infeed", "outfeed", "send", "recv",
+                 "host")
+
+
+def parse_host_callbacks(hlo_text: str) -> list[str]:
+    """custom-call targets that round-trip through the host (io_callback /
+    pure_callback / infeed-outfeed), plus bare infeed/outfeed ops — none of
+    which belong in a hot train step."""
+    out = []
+    for m in _CUSTOM_CALL_RE.finditer(hlo_text):
+        target = m.group(1)
+        low = target.lower()
+        if any(k in low for k in _HOST_MARKERS):
+            out.append(target)
+    for op in ("infeed(", "outfeed("):
+        n = hlo_text.count(" " + op)
+        out.extend([op.rstrip("(")] * n)
+    return out
 
 
 def summarize_collectives(stats: list[CollectiveStats]) -> dict:

@@ -1,5 +1,4 @@
 """Property tests for fine-grained key chunking (§3.2.3)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

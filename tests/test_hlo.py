@@ -2,6 +2,7 @@
 import textwrap
 
 from repro.utils.hlo import (parse_collectives, parse_concat_sizes,
+                             parse_donated_params, parse_host_callbacks,
                              summarize_collectives, CollectiveStats)
 
 SAMPLE = textwrap.dedent("""\
@@ -65,3 +66,69 @@ def test_iota_groups_transpose():
     (s,) = parse_collectives(txt, pod_stride=256)
     # groups pair device i with i+256 -> spans pods
     assert s.group_size == 2 and s.spans_pod
+
+
+def test_async_start_done_counts_once():
+    """``X-start`` tuples echo the operand; only the output half is
+    payload, and the matching ``-done`` carries nothing."""
+    txt = textwrap.dedent("""\
+        %ags = (f32[32,64]{1,0}, f32[512,64]{1,0}) all-gather-start(f32[32,64]{1,0} %y), replica_groups={{0,1}}, dimensions={0}
+        %agd = f32[512,64]{1,0} all-gather-done((f32[32,64]{1,0}, f32[512,64]{1,0}) %ags)
+        %cps = (u32[128]{0}, u32[128]{0}, u32[], u32[]) collective-permute-start(u32[128]{0} %p), source_target_pairs={{0,1},{1,0}}
+        %cpd = u32[128]{0} collective-permute-done((u32[128]{0}, u32[128]{0}, u32[], u32[]) %cps)
+    """)
+    kinds = {s.kind: s for s in parse_collectives(txt)}
+    assert set(kinds) == {"all-gather", "collective-permute"}
+    assert kinds["all-gather"].count == 1
+    assert kinds["all-gather"].payload_bytes == 512 * 64 * 4
+    assert kinds["collective-permute"].count == 1
+    assert kinds["collective-permute"].payload_bytes == 128 * 4
+
+
+def test_all_reduce_start_no_halving():
+    """all-reduce-start results carry each payload once (no operand
+    echo): a variadic start tuple counts every element."""
+    txt = ("%ars = (f32[8]{0}, s32[4]{0}) all-reduce-start("
+           "f32[8]{0} %a, s32[4]{0} %b), replica_groups={{0,1,2,3}}, "
+           "to_apply=%add\n")
+    (s,) = parse_collectives(txt)
+    assert s.kind == "all-reduce"
+    assert s.payload_bytes == 8 * 4 + 4 * 4
+
+
+def test_variadic_tuple_collective():
+    txt = ("%var = (f32[16]{0}, bf16[32]{0}, s8[8]{0}) all-reduce("
+           "f32[16]{0} %a, bf16[32]{0} %b, s8[8]{0} %c), "
+           "replica_groups={{0,1}}, to_apply=%add\n")
+    (s,) = parse_collectives(txt)
+    assert s.payload_bytes == 16 * 4 + 32 * 2 + 8
+    assert dict(s.by_dtype) == {"f32": 64, "bf16": 64, "s8": 8}
+
+
+def test_subbyte_dtypes():
+    """s4/u4 payloads account in bits: 8 nibbles = 4 bytes."""
+    txt = textwrap.dedent("""\
+        %q = s4[8,16]{1,0} all-gather(s4[1,16]{1,0} %a), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+        %r = u4[64]{0} collective-permute(u4[64]{0} %b), source_target_pairs={{0,1}}
+    """)
+    kinds = {s.kind: s for s in parse_collectives(txt)}
+    assert kinds["all-gather"].payload_bytes == 8 * 16 // 2
+    assert kinds["collective-permute"].payload_bytes == 32
+    assert dict(kinds["all-gather"].by_dtype) == {"s4": 64}
+
+
+def test_parse_donated_params():
+    txt = ("HloModule jit_step, input_output_alias={ {0}: (0, {}, "
+           "may-alias), {2}: (3, {}, must-alias) }, "
+           "entry_computation_layout={(f32[4]{0})->f32[4]{0}}\n")
+    assert parse_donated_params(txt) == {0, 3}
+    assert parse_donated_params("HloModule jit_step\n") == set()
+
+
+def test_parse_host_callbacks():
+    txt = textwrap.dedent("""\
+        %cc = f32[4]{0} custom-call(f32[4]{0} %x), custom_call_target="xla_ffi_python_cpu_callback"
+        %ok = f32[4]{0} custom-call(f32[4]{0} %y), custom_call_target="TopK"
+    """)
+    hits = parse_host_callbacks(txt)
+    assert hits == ["xla_ffi_python_cpu_callback"]

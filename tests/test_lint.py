@@ -1,0 +1,230 @@
+"""rack-lint (DESIGN.md §15): rules, seeded fixtures, diagnostics, and
+the single-device slices of the R2 retrace scenarios.
+
+The full 8-device matrix sweep lives in ``python -m repro.launch.lint``
+(CI's lint job); here every rule is exercised at unit level and every
+seeded known-bad fixture must be flagged by exactly its rule.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import (Diagnostic, LintReport, artifact_from_engine,
+                            check_donation, check_hygiene,
+                            check_retrace_co, check_retrace_sanity,
+                            check_schedule, check_traffic, fixtures,
+                            lint_artifact)
+from repro.analysis.fixtures import (_artifact, _group,
+                                     _hlo_sharded_identity, _with_aliases)
+from repro.configs import ARCHS, TrainConfig
+from repro.configs.base import InputShape, reduced
+from repro.core import PHubEngine, chunking
+from repro.core.api import PHubConnectionManager
+from repro.data import SyntheticTokens
+from repro.data.synthetic import make_batch_specs
+from repro.resilience import SanityConfig
+
+CFG = reduced(ARCHS["llama3.2-1b"])
+SHAPE = InputShape(name="lint-t", seq_len=16, global_batch=4, kind="train")
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# ------------------------------------------------------------ diagnostics
+
+def test_diagnostic_serialization_and_severity_gate():
+    d = Diagnostic("R1", "error", "cell/a", "boom", {"got": 2, "want": 1})
+    round_trip = d.to_dict()
+    assert round_trip["rule"] == "R1"
+    assert round_trip["evidence"] == {"got": 2, "want": 1}
+    assert "cell/a" in str(d) and "boom" in str(d)
+    with pytest.raises(ValueError):
+        Diagnostic("R1", "fatal", "cell/a", "bad severity")
+
+
+def test_lint_report_counts_and_save(tmp_path):
+    rep = LintReport()
+    rep.add(Diagnostic("R1", "error", "c", "x"))
+    rep.extend([Diagnostic("R5", "warning", "c", "y"),
+                Diagnostic("R5", "info", "c", "z")])
+    rep.record_cell({"tag": "c", "status": "ok"})
+    assert rep.count("error") == 1 and len(rep.errors) == 1
+    assert rep.by_rule()["R5"]["warning"] == 1
+    path = rep.save(str(tmp_path / "sub" / "report.json"))
+    loaded = json.load(open(path))
+    assert loaded["summary"]["error"] == 1
+    assert loaded["summary"]["cells"] == 1
+    assert len(loaded["diagnostics"]) == 3
+
+
+# --------------------------------------------------- seeded fixtures (R*)
+
+@pytest.mark.parametrize("fixture_fn", [
+    fixtures.inflated_traffic, fixtures.dropped_donation,
+    fixtures.reordered_schedule, fixtures.racing_schedule,
+    fixtures.pad_aggregated_live, fixtures.dropped_chunk_coverage,
+    fixtures.smuggled_f64, fixtures.raw_wire_leak, fixtures.host_callback,
+    fixtures.flat_concat,
+], ids=lambda f: f.__name__)
+def test_fixture_flagged_by_its_rule_and_clean_twin_passes(fixture_fn):
+    f = fixture_fn()
+    assert f.flagged, (f"{f.name}: seeded {f.rule} defect went unflagged: "
+                       f"{[str(d) for d in f.bad]}")
+    assert not f.false_positive, (
+        f"{f.name}: clean twin flagged: {[str(d) for d in f.clean]}")
+    assert f.ok
+
+
+def test_all_fixtures_enumerates_every_rule():
+    rules = {f.rule for f in fixtures.all_fixtures()}
+    assert rules == {"R1", "R3", "R4", "R5"}
+
+
+# ------------------------------------------------------------ R1 traffic
+
+def test_traffic_unmodeled_strategy_is_info_not_error():
+    g = _group({"w": 4096})
+    art = _artifact(g, _hlo_sharded_identity(g), tag="t/unmodeled")
+    art.strategy = "centralized_ps"
+    diags = check_traffic(art)
+    assert [d.severity for d in diags] == ["info"]
+
+
+def test_traffic_tolerance_absorbs_scalar_noise():
+    # a 4-byte scalar pmean riding the step must stay inside abs_tol
+    g = _group({"w": 4096})
+    noisy = _hlo_sharded_identity(g, extra_ops=(
+        "  %pm = f32[1]{0} all-reduce(f32[1]{0} %upd), channel_id=9, "
+        "replica_groups={{0,1,2,3}}, to_apply=%add\n"))
+    art = _artifact(g, noisy, tag="t/scalar-noise")
+    assert not [d for d in check_traffic(art) if d.severity == "error"]
+
+
+# ----------------------------------------------------------- R3 donation
+
+def test_donation_counts_and_missing_alias():
+    g = _group({"w": 4096})
+    base = _hlo_sharded_identity(g)
+    good = _artifact(g, _with_aliases(base, (0, 1)), donated_count=2,
+                     tag="t/donation")
+    assert not [d for d in check_donation(good) if d.severity == "error"]
+    bad = _artifact(g, base, donated_count=2, tag="t/donation-none")
+    errs = [d for d in check_donation(bad) if d.severity == "error"]
+    assert errs and errs[0].rule == "R3"
+    assert errs[0].evidence["missing_params"] == [0, 1]
+
+
+# ----------------------------------------------------------- R4 schedule
+
+def test_schedule_clean_windows_have_no_diags():
+    g = _group({"a": 512, "b": 3584})
+    assert check_schedule("t/sched", g, 2) == []
+
+
+def test_schedule_flags_duplicate_and_dropped_chunks():
+    g = _group({"w": 4096})
+    sets = [list(s) for s in chunking.window_chunks(g, 2)]
+    sets[1][0] = sets[0][0]
+    diags = check_schedule("t/sched-cov", g, 2,
+                           window_chunk_sets=tuple(tuple(s) for s in sets))
+    errs = [d for d in diags if d.severity == "error"]
+    assert errs and all(d.rule == "R4" for d in errs)
+
+
+def test_schedule_flags_understated_readiness():
+    g = _group({"a": 512, "b": 3584})
+    order, ready = chunking.chunk_ready_schedule(g, 2)
+    diags = check_schedule("t/sched-race", g, 2, order=order,
+                           ready=tuple(max(0.0, r - 0.25) for r in ready))
+    assert any(d.rule == "R4" and d.severity == "error" for d in diags)
+
+
+# ------------------------------------------------------------ R5 hygiene
+
+def test_hygiene_wire_rule_toggle():
+    # the raw f32 leak past an int8 encoder is an error with the wire
+    # rule on, and deliberately tolerated when the caller disables it
+    # (model-sharded meshes legitimately all-gather raw activations)
+    g = _group({"w": 4096})
+    rg = "{{0,1,2,3}}"
+    leak = (f"ENTRY %main.1 (p0: f32[{g.shard_len}]) -> "
+            f"f32[{g.padded}] {{\n"
+            f"  %p0 = f32[{g.shard_len}]{{0}} parameter(0)\n"
+            f"  %ag = f32[{g.padded}]{{0}} all-gather("
+            f"f32[{g.shard_len}]{{0}} %p0), channel_id=1, "
+            f"replica_groups={rg}, dimensions={{0}}\n"
+            f"  ROOT %o = f32[{g.padded}]{{0}} copy(f32[{g.padded}]{{0}} "
+            f"%ag)\n}}\n")
+    bad = _artifact(g, leak, wire_format="int8", tag="t/wire-toggle")
+    assert any(d.severity == "error" for d in check_hygiene(bad))
+    assert not check_hygiene(bad, wire_rule=False)
+
+
+def test_hygiene_flags_f64_and_host_callback():
+    g = _group({"w": 4096})
+    wide = (f"  %c = f64[{g.shard_len}]{{0}} convert("
+            f"f32[{g.shard_len}]{{0}} %rs)\n"
+            f"  %cb = f32[1]{{0}} custom-call(f32[1]{{0}} %c), "
+            f"custom_call_target=\"xla_ffi_python_cpu_callback\"\n")
+    art = _artifact(g, _hlo_sharded_identity(g, extra_ops=wide),
+                    tag="t/hygiene-both")
+    msgs = [d.message for d in check_hygiene(art) if d.severity == "error"]
+    assert len(msgs) == 2
+
+
+# ----------------------------------- live artifacts + retrace (1 device)
+
+def test_single_device_zero_artifact_lints_clean():
+    eng = PHubEngine(cfg=CFG, tc=TrainConfig(), mesh=_mesh())
+    art = artifact_from_engine(eng, "t/solo-zero", kind="zero")
+    assert art.donated_count == len(
+        jax.tree.leaves((eng.params_shapes, eng.opt_state_shapes())))
+    assert not [d for d in lint_artifact(art) if d.severity == "error"]
+
+
+def _batch_for(eng, shapes):
+    data = SyntheticTokens(CFG, SHAPE.global_batch, SHAPE.seq_len, seed=0)
+    sh = eng.batch_shardings(shapes)
+    return {k: jax.device_put(v, sh[k]) for k, v in data.batch_at(0).items()}
+
+
+def test_retrace_sanity_threshold_rides_traced_input():
+    eng = PHubEngine(cfg=CFG, tc=TrainConfig(), mesh=_mesh())
+    shapes = make_batch_specs(CFG, SHAPE)
+    p, o = eng.init_state(jax.random.PRNGKey(0))
+    diags = check_retrace_sanity(eng, shapes, p, o, _batch_for(eng, shapes),
+                                 SanityConfig(), tag="t/sanity")
+    assert diags == [], [str(d) for d in diags]
+
+
+def test_retrace_co_detach_reattach_reuses_step_cache():
+    mgr = PHubConnectionManager()
+    cfg_b = reduced(ARCHS["llama3.2-1b"], d_model=128)
+    mesh = _mesh()
+    ha = mgr.create_service("a", CFG, TrainConfig(), mesh)
+    hb = mgr.create_service("b", cfg_b, TrainConfig(), mesh)
+    pa, _ = mgr.init_service(ha, jax.random.PRNGKey(1))
+    pb, _ = mgr.init_service(hb, jax.random.PRNGKey(2))
+    batches = {
+        "a": SyntheticTokens(CFG, 4, 16, seed=3).batch_at(0),
+        "b": SyntheticTokens(cfg_b, 4, 16, seed=4).batch_at(0),
+    }
+    diags = check_retrace_co(mgr, [ha, hb], {"a": pa, "b": pb}, batches,
+                             tag="t/co")
+    assert diags == [], [str(d) for d in diags]
+
+
+def test_replicated_shardings_are_canonical_rank_free():
+    # the retrace guarantee hinges on init-state shardings matching jit
+    # outputs: fully-replicated leaves carry P() (never P(None, ...)),
+    # sharded specs carry no trailing None
+    from jax.sharding import PartitionSpec as P
+    eng = PHubEngine(cfg=CFG, tc=TrainConfig(), mesh=_mesh())
+    for s in jax.tree.leaves(eng.param_shardings()):
+        assert s.spec == P()
+    for s in jax.tree.leaves(eng.opt_state_shardings()):
+        assert len(s.spec) == 0 or s.spec[-1] is not None

@@ -1,5 +1,4 @@
 """LPT 4/3-approximation set partition (§3.2.4) property tests."""
-import numpy as np
 import pytest
 
 hyp = pytest.importorskip("hypothesis")

@@ -1,6 +1,5 @@
 """Single-device smoke tests for the serving launcher (launch/serve.py)."""
 import numpy as np
-import pytest
 
 from repro.launch.serve import main as serve_main
 

@@ -1,5 +1,4 @@
 """End-to-end behaviour tests for the PHub training/serving system."""
-import os
 import tempfile
 
 import jax
