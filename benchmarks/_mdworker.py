@@ -881,7 +881,52 @@ def bench_backward_overlap(p):
             "modeled_exposed_ms": acct["exposed_s"] * 1e3}
 
 
+def bench_tuner_candidate(p):
+    """One autotuner candidate timed through the real PHubClient
+    datapath (repro/tuning, DESIGN.md §16): build the candidate's mesh
+    shape, register the caller's gradient pytree shapes, and time
+    push_pull — the same compiled program ``launch/train.py`` would run
+    with this config, so the measured order is the order that matters."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import TrainConfig
+    from repro.core import PHubClient
+
+    pods, data = int(p.get("pods", 1)), int(p["data"])
+    if pods > 1:
+        mesh = jax.make_mesh((pods, data), ("pod", "data"))
+    else:
+        mesh = jax.make_mesh((data,), ("data",))
+    like = {name: jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dt))
+            for name, shape, dt in p["specs"]}
+    tc = TrainConfig(strategy=p["strategy"],
+                     optimizer=p.get("optimizer", "nesterov"),
+                     pipeline_windows=int(p.get("windows", 1)),
+                     wire_format=p.get("wire") or "identity",
+                     wire_format_dcn=p.get("wire_dcn"),
+                     chunk_size_bytes=int(p.get("chunk_kb", 32)) * 1024)
+    client = PHubClient(tc, mesh).register(like)
+    W = pods * data
+    rng = np.random.default_rng(0)
+    grads = {k: jnp.asarray(rng.normal(size=(W,) + tuple(s.shape))
+                            .astype(np.float32)).astype(s.dtype)
+             for k, s in like.items()}
+    params = {k: jnp.asarray(rng.normal(size=s.shape)
+                             .astype(np.float32)).astype(s.dtype)
+              for k, s in like.items()}
+
+    def step(pv, opt):
+        return client.push_pull(grads, pv, opt)
+
+    us, _ = _timeit_state(step, (params, client.init_state()),
+                          warmup=int(p.get("warmup", 2)),
+                          reps=int(p.get("reps", 5)))
+    return {"us": us, "bytes": client.registered_bytes()}
+
+
 BENCHES = {"exchange_only": bench_exchange_only,
+           "tuner_candidate": bench_tuner_candidate,
            "backward_overlap": bench_backward_overlap,
            "train_step": bench_train_step,
            "pipeline_exchange": bench_pipeline_exchange,

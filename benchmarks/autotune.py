@@ -1,0 +1,64 @@
+"""Autotuner validation: tuned vs hand-picked vs worst-quartile
+(DESIGN.md §16).
+
+Runs the exchange autotuner for the reduced llama3.2-1b gradient pytree
+on the 8-device host mesh (cache-aware: a prior ``launch/tune.py`` run
+makes this a zero-timed-step cache hit), then times two fixed foils
+through the identical ``tuner_candidate`` seam:
+
+  * ``hand_picked`` — the repo's historical default exchange config
+    (sharded_ps, monolithic, identity wire, 32 KB chunks, flat 8-worker
+    mesh): what a careful human would have picked without the tuner;
+  * ``worst_quartile`` — the candidate at the 75th percentile of the
+    analytic ranking: what a careless pick from the valid space costs.
+
+Derived columns carry the speedups, so the BENCH trajectory records
+whether the tuner keeps beating the hand-picked config as the exchange
+code evolves.
+"""
+from __future__ import annotations
+
+from .common import Row
+
+
+def _desc(c) -> str:
+    return (f"{c['strategy']}/W{c['pipeline_windows']}/{c['wire_format']}"
+            f"+{c['wire_format_dcn'] or '-'}/"
+            f"{c['chunk_size_bytes'] // 1024}KB/{c['pods']}x{c['data']}")
+
+
+def run() -> list[Row]:
+    from repro.configs import TrainConfig
+    from repro.launch.tune import model_grads_like
+    from repro.tuning import autotune, enumerate_space, rank_candidates
+    from repro.tuning.space import Candidate
+    from repro.tuning.tuner import _specs, time_candidate
+
+    n, steps = 8, 5
+    _, like = model_grads_like("llama3.2-1b", 256)
+    report = autotune(like, TrainConfig(), n, top_k=3, steps=steps,
+                      arch="llama3.2-1b", d_model=256)
+    specs = _specs(like)
+    tuned_us = report["measured_us"]
+
+    hand = Candidate(strategy="sharded_ps", pipeline_windows=1,
+                     wire_format="identity", wire_format_dcn=None,
+                     chunk_size_bytes=32 * 1024, pods=1, data=n)
+    hand_us = time_candidate(specs, hand, n, steps=steps)
+
+    ranked = rank_candidates(like, enumerate_space(n))
+    worst = ranked[(3 * len(ranked)) // 4][0]
+    worst_us = time_candidate(specs, worst, n, steps=steps)
+
+    return [
+        Row("autotune/tuned", tuned_us,
+            f"cand={_desc(report['candidate'])} "
+            f"cache_hit={report['cache_hit']} "
+            f"predicted_us={report['predicted']['seconds'] * 1e6:.0f}"),
+        Row("autotune/hand_picked", hand_us,
+            f"cand={_desc(hand.to_dict())} "
+            f"tuned_speedup={hand_us / tuned_us:.2f}x"),
+        Row("autotune/worst_quartile", worst_us,
+            f"cand={_desc(worst.to_dict())} "
+            f"tuned_speedup={worst_us / tuned_us:.2f}x"),
+    ]

@@ -27,6 +27,9 @@ Prints ``name,us_per_call,derived`` CSV rows (plus section markers).
   fault_recovery      D §13            sanity-gate overhead on the clean
                                        path; supervised steps/s; recovery
                                        latency after a NaN storm
+  autotune            D §16            tuned vs hand-picked vs
+                                       worst-quartile exchange config
+                                       through the tuner_candidate seam
 
 Run all: PYTHONPATH=src python -m benchmarks.run
 Subset:  PYTHONPATH=src python -m benchmarks.run tall_vs_wide roofline
@@ -35,8 +38,14 @@ JSON:    PYTHONPATH=src python -m benchmarks.run --json out.json [modules]
 Repeat:  PYTHONPATH=src python -m benchmarks.run --repeat 5 --json out.json
          (each module runs 5 times; rows report the median us, and the JSON
          record carries every sample — BENCH trajectories stay noise-robust)
+Trajectory: PYTHONPATH=src python -m benchmarks.run --trajectory
+         (times the canonical pipeline_overlap / wire_sweep /
+         backward_overlap cells and snapshots their medians to a
+         top-level BENCH_<date>.json — the cross-PR perf trajectory)
 """
+import datetime
 import json
+import os
 import sys
 import time
 import traceback
@@ -47,7 +56,7 @@ MODULES = ["bandwidth_table2", "cost_table5", "comm_schemes", "hierarchical",
            "chunk_size", "zero_compute", "pipeline_overlap",
            "backward_overlap", "multitenant",
            "optimizer_sweep", "wire_sweep", "elastic_resilience",
-           "fault_recovery"]
+           "fault_recovery", "autotune"]
 
 
 def select_modules(args: list) -> tuple:
@@ -78,8 +87,57 @@ def median(xs: list) -> float:
     return (xs[n // 2] if n % 2 else (xs[n // 2 - 1] + xs[n // 2]) / 2.0)
 
 
+def run_trajectory(out_path: str = None) -> dict:
+    """Median step times for the canonical exchange cells, snapshotted to
+    a top-level ``BENCH_<date>.json``: one windowed-pipeline cell, one
+    wire-format cell, one chunk-ready-overlap cell — the three numbers a
+    perf regression in the exchange machinery cannot hide from.  Each
+    payload mirrors the corresponding module's first configuration
+    (reduced reps — this is a snapshot, not the full sweep)."""
+    from .common import ROOT, run_multidevice
+    cells = {}
+    r = run_multidevice(
+        {"bench": "pipeline_exchange", "strategy": "sharded_ps",
+         "elems": 4 * (1 << 20) + 3 * (1 << 18), "windows_list": [1, 2],
+         "reps": 5, "data_size": 8}, n_devices=8)
+    cells["pipeline_overlap/8w/gn_bf16_group_19mb/win1"] = \
+        r["us_by_window"]["1"]
+    cells["pipeline_overlap/8w/gn_bf16_group_19mb/win2"] = \
+        r["us_by_window"]["2"]
+    r = run_multidevice(
+        {"bench": "wire_exchange", "strategy": "sharded_ps",
+         "elems": 9 * (1 << 20) + (1 << 19),
+         "wires": ["identity", "int8"], "windows": 1, "reps": 5,
+         "data_size": 4}, n_devices=8)
+    cells["wire_sweep/4w/gn_dense_38mb/win1/identity"] = \
+        r["by_wire"]["identity"]["us"]
+    cells["wire_sweep/4w/gn_dense_38mb/win1/int8"] = \
+        r["by_wire"]["int8"]["us"]
+    r = run_multidevice(
+        {"bench": "backward_overlap", "strategy": "sharded_ps",
+         "data_size": 8, "optimizer": "nesterov", "windows": 3,
+         "reps": 5}, n_devices=8)
+    cells["backward_overlap/8w_nesterov_w3/baseline"] = r["us_baseline"]
+    cells["backward_overlap/8w_nesterov_w3/overlap"] = r["us_overlap"]
+
+    date = datetime.date.today().isoformat()
+    snap = {"date": date, "cells": {k: round(v, 1)
+                                    for k, v in cells.items()}}
+    out_path = out_path or os.path.join(ROOT, f"BENCH_{date}.json")
+    with open(out_path, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
+    for k in sorted(cells):
+        print(f"{k},{cells[k]:.1f},trajectory")
+    print(f"# trajectory snapshot -> {out_path}")
+    return snap
+
+
 def main() -> None:
     args = sys.argv[1:]
+    if "--trajectory" in args:
+        args.remove("--trajectory")
+        run_trajectory(args[0] if args else None)
+        return
     json_out = None
     if "--json" in args:
         i = args.index("--json")

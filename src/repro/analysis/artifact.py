@@ -21,6 +21,7 @@ class StepArtifact:
     n_workers: int
     pod_size: int = 1
     pod_stride: int = 0
+    wire_dcn: object = None   # DCN-tier WireFormat or None (DESIGN.md §16)
     flat: bool = False
     overlap: bool = False
     donated_count: int = 0
@@ -32,6 +33,11 @@ class StepArtifact:
     @property
     def wire_name(self) -> str:
         return getattr(self.wire, "name", "identity")
+
+    @property
+    def wire_dcn_name(self) -> str:
+        return ("identity" if self.wire_dcn is None
+                else getattr(self.wire_dcn, "name", "identity"))
 
 
 def _mem_dict(compiled) -> dict:
@@ -50,6 +56,7 @@ def _finish(tag, engine, compiled, arg_specs, *, config) -> StepArtifact:
         strategy=engine.tc.strategy, wire=engine.wire,
         windows=engine.tc.pipeline_windows, n_workers=engine.ctx.n_workers,
         pod_size=engine.pod_size, pod_stride=engine.pod_stride,
+        wire_dcn=engine.wire_dcn,
         flat=engine.tc.flat_residency, overlap=engine.tc.overlap_backward,
         donated_count=count, donated_bytes=donated_b,
         alias_bytes=mem["alias_size_in_bytes"], memory=mem, config=config)
@@ -75,6 +82,7 @@ def artifact_from_engine(engine, tag: str, *, kind: str = "zero",
         raise ValueError(f"unknown artifact kind {kind!r}")
     config = {"kind": kind, "strategy": engine.tc.strategy,
               "wire": engine.tc.wire_format,
+              "wire_dcn": engine.tc.wire_format_dcn,
               "windows": engine.tc.pipeline_windows,
               "flat": engine.tc.flat_residency,
               "overlap": engine.tc.overlap_backward,
@@ -109,7 +117,9 @@ def artifact_from_co_step(tenants: dict, domain, tag: str, *,
     donated_b = sum(int(np.prod(v.shape)) * v.dtype.itemsize
                     for v in leaves)
     config = {"kind": "co", "strategy": e0.tc.strategy,
-              "wire": e0.tc.wire_format, "windows": e0.tc.pipeline_windows,
+              "wire": e0.tc.wire_format,
+              "wire_dcn": e0.tc.wire_format_dcn,
+              "windows": e0.tc.pipeline_windows,
               "tenants": sorted(tenants), "zero_compute": zero_compute,
               "n_workers": e0.ctx.n_workers}
     return StepArtifact(
@@ -117,5 +127,6 @@ def artifact_from_co_step(tenants: dict, domain, tag: str, *,
         strategy=e0.tc.strategy, wire=e0.wire,
         windows=e0.tc.pipeline_windows, n_workers=e0.ctx.n_workers,
         pod_size=e0.pod_size, pod_stride=e0.pod_stride,
+        wire_dcn=e0.wire_dcn,
         donated_count=len(leaves), donated_bytes=donated_b,
         alias_bytes=mem["alias_size_in_bytes"], memory=mem, config=config)

@@ -43,7 +43,7 @@ def check_traffic(artifact, *, rel_tol: float = 0.02,
         pred = cost_model.predicted_exchange_hlo(
             artifact.groups, strategy=artifact.strategy, wire=artifact.wire,
             windows=artifact.windows, n_workers=artifact.n_workers,
-            pod_size=artifact.pod_size)
+            pod_size=artifact.pod_size, wire_dcn=artifact.wire_dcn)
     except ValueError as e:
         return [Diagnostic("R1", "info", artifact.tag,
                            f"traffic model does not cover this cell: {e}")]
@@ -246,27 +246,40 @@ def check_hygiene(artifact, *, concat_frac: float = 0.5,
 
     # wire-dtype conformance on the encoded ring/pull path (disabled by
     # the caller on model-sharded meshes, where TP legitimately
-    # all-gathers f32 activations/params outside the exchange)
-    if wire_rule and artifact.wire_name != "identity" and artifact.groups:
+    # all-gathers f32 activations/params outside the exchange).  The rule
+    # is PER TIER (DESIGN.md §16): a collective spanning the pod boundary
+    # is held to the DCN wire when one is engaged, in-pod collectives to
+    # the ICI wire — so identity-ICI + int8-DCN cells check exactly the
+    # cross-rack payload, while the in-rack ring legitimately carries
+    # state-width chunks
+    dcn_engaged = artifact.wire_dcn_name != "identity"
+    if wire_rule and artifact.groups and (
+            artifact.wire_name != "identity" or dcn_engaged):
         scale_bound = scale_slack * max(
             (g.padded // g.chunk_elems) * 4 for g in artifact.groups)
-        own = {"bfloat16": "bf16", "float16": "f16"}.get(
-            np.dtype(artifact.wire.wire_dtype(np.float32)).name)
-        wide_set = tuple(d for d in _WIDE_DTYPES if d != own)
         _, stats = _parsed_link_bytes(txt, artifact.pod_stride)
         for s in stats:
             if s.kind not in ("collective-permute", "all-gather"):
                 continue
+            tier = "dcn" if s.spans_pod else "ici"
+            w = (artifact.wire_dcn if tier == "dcn" and dcn_engaged
+                 else artifact.wire)
+            w_name = getattr(w, "name", "identity")
+            if w_name == "identity":
+                continue                # this tier rides raw state dtype
+            own = {"bfloat16": "bf16", "float16": "f16"}.get(
+                np.dtype(w.wire_dtype(np.float32)).name)
+            wide_set = tuple(d for d in _WIDE_DTYPES if d != own)
             wide = {dt: b for dt, b in s.by_dtype
                     if dt in wide_set and b > scale_bound}
             if wide:
                 diags.append(Diagnostic(
                     "R5", "error", artifact.tag,
-                    f"{s.kind} carries {wide} bytes of state-width dtype "
-                    f"on a {artifact.wire_name!r} wire (scale sidecar "
-                    f"bound {scale_bound} B): raw chunks leaked past the "
-                    f"encoder",
-                    {"kind": s.kind, "wide_bytes": wide,
+                    f"{s.kind} on {tier} carries {wide} bytes of "
+                    f"state-width dtype on a {w_name!r} wire (scale "
+                    f"sidecar bound {scale_bound} B): raw chunks leaked "
+                    f"past the encoder",
+                    {"kind": s.kind, "tier": tier, "wide_bytes": wide,
                      "scale_bound": scale_bound}))
     return diags
 

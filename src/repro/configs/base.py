@@ -139,6 +139,24 @@ class TrainConfig:
                                       # non-identity wires need a chunk
                                       # strategy with a shard dimension
                                       # (sharded_ps / hierarchical)
+    wire_format_dcn: Optional[str] = None
+                                      # per-tier wire format (DESIGN.md §16):
+                                      # the dtype the *cross-pod (DCN)* leg
+                                      # of the hierarchical strategy travels
+                                      # in, independent of the in-rack (ICI)
+                                      # wire_format above — e.g. identity
+                                      # in-rack + int8 across racks.  None or
+                                      # "identity" keeps the legacy psum
+                                      # datapath byte-for-byte; a non-
+                                      # identity value requires
+                                      # strategy="hierarchical" and rides the
+                                      # encoded cross-pod all-gather with a
+                                      # per-pod error-feedback residual in
+                                      # the 'wire_ef' slot (owned by the DCN
+                                      # tier only when the ICI wire is
+                                      # identity; an encoded ICI wire keeps
+                                      # the slot for its pull delta and the
+                                      # DCN leg runs scales-only)
 
     # --- gradient processing pipeline (§3.2, DESIGN.md §8) ---
     pipeline_windows: int = 1         # split each dtype group's chunk domain
@@ -194,7 +212,8 @@ class TrainConfig:
         coefficient tables; optim/protocol.py)."""
         return (self.strategy, self.chunk_size_bytes, self.pipeline_windows,
                 self.dp_over_model, self.flat_residency, self.use_pallas,
-                self.fused_agg_opt, self.wire_format, self.overlap_backward)
+                self.fused_agg_opt, self.wire_format, self.overlap_backward,
+                self.wire_format_dcn or "identity")
 
 
 def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 256,

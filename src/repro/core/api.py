@@ -476,6 +476,15 @@ class PHubConnectionManager:
                     f"rack wire format {e0.tc.wire_format!r}; co-scheduled "
                     f"tenants share one packed chunk domain per dtype and "
                     f"must exchange it over one wire")
+            if (eng.tc.wire_format_dcn or "identity") != \
+                    (e0.tc.wire_format_dcn or "identity"):
+                # same argument per tier: the cross-pod leg of the packed
+                # domain is ONE encoded payload stream
+                raise ValueError(
+                    f"tenant {ns!r} wire_format_dcn "
+                    f"{eng.tc.wire_format_dcn!r} != rack DCN wire "
+                    f"{e0.tc.wire_format_dcn!r}; co-scheduled tenants "
+                    f"share one cross-pod payload stream")
             if eng.tc.exchange_signature() != e0.tc.exchange_signature():
                 raise ValueError(
                     f"tenant {ns!r} exchange_signature "

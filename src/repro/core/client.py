@@ -52,10 +52,12 @@ from ..utils import compat
 from . import chunking
 from .exchange import ExchangeContext, flat_rank
 from .pipeline import (PIPELINED_STRATEGIES, effective_windows,
+                       run_chunk_ready_dcn_exchange,
                        run_chunk_ready_exchange,
-                       run_chunk_ready_wire_exchange, run_exchange,
-                       run_wire_exchange)
-from .wire import WIRE_EF_SLOT, WireFormat, make_wire_format
+                       run_chunk_ready_wire_exchange, run_dcn_exchange,
+                       run_exchange, run_wire_exchange)
+from .wire import (WIRE_EF_SLOT, WireFormat, exchange_extra_slots,
+                   make_dcn_wire_format, make_wire_format)
 
 
 class _MeshScopedJit:
@@ -92,11 +94,15 @@ class PHubClient:
                  data_axes: Optional[tuple] = None,
                  ctx: Optional[ExchangeContext] = None,
                  plan: Optional[chunking.ChunkPlan] = None,
-                 wire_format: Optional[str] = None):
+                 wire_format: Optional[str] = None,
+                 wire_format_dcn: Optional[str] = None):
         if wire_format is not None and wire_format != tc.wire_format:
             # per-client wire override: push_pull then travels this wire
             # (the slot layout — residual included — follows it)
             tc = dataclasses.replace(tc, wire_format=wire_format)
+        if wire_format_dcn is not None and \
+                wire_format_dcn != tc.wire_format_dcn:
+            tc = dataclasses.replace(tc, wire_format_dcn=wire_format_dcn)
         if tc.strategy == "fsdp_stream":
             raise ValueError(
                 "fsdp_stream shards leaves over 'data' and has no chunk "
@@ -105,12 +111,18 @@ class PHubClient:
         self.mesh = mesh
         self.sopt: ShardedOptimizer = make_sharded_optimizer(tc)
         self.wire: WireFormat = make_wire_format(tc)
+        self.wire_dcn = make_dcn_wire_format(tc)   # None = legacy DCN psum
         if not self.wire.is_identity and tc.strategy not in \
                 PIPELINED_STRATEGIES:
             raise ValueError(
                 f"wire format {tc.wire_format!r} needs a strategy with a "
                 f"shard dimension {PIPELINED_STRATEGIES}; {tc.strategy!r} "
                 f"exchanges full vectors in the state dtype")
+        if self.wire_dcn is not None and tc.strategy != "hierarchical":
+            raise ValueError(
+                f"wire_format_dcn {tc.wire_format_dcn!r} encodes the "
+                f"cross-pod (DCN) leg of the two-tier 'hierarchical' "
+                f"strategy; {tc.strategy!r} has no DCN leg (DESIGN.md §16)")
         if tc.overlap_backward and tc.strategy not in PIPELINED_STRATEGIES:
             raise ValueError(
                 f"overlap_backward windows the shard dimension; "
@@ -194,11 +206,14 @@ class PHubClient:
 
     @property
     def exchange_slots(self) -> tuple[SlotSpec, ...]:
-        """The optimizer's slots plus the wire's exchange-level slots
-        (the error-feedback residual for encoded wires), residual LAST so
-        optimizer-rule slot indices are position-stable
-        (optim/protocol.py, core/wire.py)."""
-        return self.sopt.slots + self.wire.extra_slots()
+        """The optimizer's slots plus the wire layer's exchange-level
+        slots (the error-feedback residual — owned by the encoded ICI
+        wire's pull delta, or by the DCN tier's push-side quantization
+        when the ICI wire is identity), residual LAST so optimizer-rule
+        slot indices are position-stable (optim/protocol.py,
+        core/wire.py)."""
+        return self.sopt.slots + exchange_extra_slots(self.wire,
+                                                      self.wire_dcn)
 
     def slot_shapes(self) -> dict:
         """{dtype_key: {slot_name: ShapeDtypeStruct}} — every exchange
@@ -321,7 +336,7 @@ class PHubClient:
         groups = self._groups() if groups is None else groups
         specs: tuple[SlotSpec, ...] = (self.exchange_slots
                                        if slot_specs is None else slot_specs)
-        ef = self.wire.error_feedback
+        ef = self.wire.error_feedback or self.wire_dcn is not None
         if ef:
             if not specs or specs[-1].name != WIRE_EF_SLOT:
                 raise ValueError(
@@ -341,7 +356,7 @@ class PHubClient:
             ready = isinstance(gk, tuple)
             if ready:
                 gk = tuple(v.reshape(-1) for v in gk)
-            if self.wire.is_identity:
+            if self.wire.is_identity and self.wire_dcn is None:
                 if ready:
                     p2, s2 = run_chunk_ready_exchange(
                         self.tc.strategy, self.ctx, gk,
@@ -353,6 +368,21 @@ class PHubClient:
                         fp[key].reshape(-1), slots, upd, rank, grp,
                         self.tc.pipeline_windows, aux, n_live)
                 r2 = None
+            elif self.wire.is_identity:
+                # per-tier: identity ICI rings + encoded DCN leg; the
+                # wire_ef slot carries this pod's push-side residual
+                residual = opt[key][WIRE_EF_SLOT].reshape(-1)
+                if ready:
+                    p2, s2, r2 = run_chunk_ready_dcn_exchange(
+                        self.tc.strategy, self.ctx, gk,
+                        fp[key].reshape(-1), slots, upd, rank, grp,
+                        self.wire_dcn, residual, aux, n_live=n_live)
+                else:
+                    p2, s2, r2 = run_dcn_exchange(
+                        self.tc.strategy, self.ctx, gk.reshape(-1),
+                        fp[key].reshape(-1), slots, upd, rank, grp,
+                        self.tc.pipeline_windows, self.wire_dcn, residual,
+                        aux, n_live=n_live)
             else:
                 residual = opt[key][WIRE_EF_SLOT].reshape(-1)
                 fd = (self._fused_dequant(grp, n_live)
@@ -362,13 +392,14 @@ class PHubClient:
                         self.tc.strategy, self.ctx, gk,
                         fp[key].reshape(-1), slots, upd, rank, grp,
                         self.wire, residual, aux, fused_dequant=fd,
-                        n_live=n_live)
+                        n_live=n_live, wire_dcn=self.wire_dcn)
                 else:
                     p2, s2, r2 = run_wire_exchange(
                         self.tc.strategy, self.ctx, gk.reshape(-1),
                         fp[key].reshape(-1), slots, upd, rank, grp,
                         self.tc.pipeline_windows, self.wire, residual, aux,
-                        fused_dequant=fd, n_live=n_live)
+                        fused_dequant=fd, n_live=n_live,
+                        wire_dcn=self.wire_dcn)
             new_p[key] = p2.reshape(fp[key].shape)
             new_o[key] = {s.name: v.reshape(opt[key][s.name].shape)
                           for s, v in zip(opt_specs, s2)}

@@ -36,11 +36,41 @@ def min_bandwidth_bits(config: str, model_bytes: float, compute_s: float,
 
 @dataclass(frozen=True)
 class RackTopology:
+    """Rack link parameters (§3.4), extended to a genuinely two-tier
+    model: the intra-rack interconnect (ICI — NVLink/PCIe/ToR in the
+    paper, the "data" mesh axis here) and the cross-rack data-center
+    network (DCN — the oversubscribed core, the "pod" axis) get distinct
+    per-link bandwidth and per-hop latency terms, which is what makes
+    per-tier wire formats (identity in-rack, int8 across racks) a
+    cost-model decision rather than a guess (DESIGN.md §16)."""
     n_workers_per_rack: int      # N
     n_racks: int                 # r
     bw_worker: float             # B_wkr  (bytes/s)
     bw_pbox: float               # B_pbox (bytes/s)
     bw_core: float               # B_core (bytes/s, oversubscribed core)
+    # --- per-tier link parameters (None: derived from the §3.4 figures) ---
+    bw_ici: float = None         # intra-rack per-link bytes/s (default B_pbox)
+    bw_dcn: float = None         # cross-rack per-link bytes/s (default B_core)
+    lat_ici: float = 1e-6        # per-collective-launch latency, ICI tier
+    lat_dcn: float = 25e-6       # per-collective-launch latency, DCN tier
+    bw_codec: float = None       # wire encode/decode throughput (bytes/s
+                                 # of RAW data through the codec; None =
+                                 # free — a NIC/accelerator codec).  On a
+                                 # CPU rack this is what decides whether a
+                                 # narrow wire pays for itself at all.
+    allreduce_factor: float = 1.0  # time multiplier on all-reduce link
+                                 # bytes: a fused psum materializes a
+                                 # reduce pass AND a broadcast pass over
+                                 # the full buffer (2.0 on the host rack);
+                                 # a switch/ring offload carries it once.
+
+    @property
+    def ici_bandwidth(self) -> float:
+        return self.bw_ici if self.bw_ici is not None else self.bw_pbox
+
+    @property
+    def dcn_bandwidth(self) -> float:
+        return self.bw_dcn if self.bw_dcn is not None else self.bw_core
 
 
 def hierarchical_beneficial(t: RackTopology, ring: bool = True) -> bool:
@@ -179,7 +209,7 @@ def rebalance_traffic(plan, slot_specs=(), mo: int = 1) -> dict:
 
 def predicted_exchange_hlo(groups, *, strategy: str, wire=None,
                            windows: int = 1, n_workers: int = 1,
-                           pod_size: int = 1) -> dict:
+                           pod_size: int = 1, wire_dcn=None) -> dict:
     """Per-collective-kind link bytes one exchange step should lower to,
     in the same convention as utils.hlo.summarize_collectives — the R1
     traffic-conformance oracle (DESIGN.md §15).
@@ -194,31 +224,41 @@ def predicted_exchange_hlo(groups, *, strategy: str, wire=None,
     ``padded``, ``shard_len``, ``chunk_elems``, ``n_shards``, ``dtype``);
     ``wire``: core/wire.WireFormat or None (identity); ``pod_size``:
     cross-pod factor for the hierarchical strategy's DCN tier (1 = single
-    pod).  Only the strategies the pipelined exchange emits deterministic
-    programs for are modeled; others raise ValueError.
+    pod); ``wire_dcn``: the DCN tier's own WireFormat or None — when
+    engaged, the hierarchical cross-pod leg is a per-window all-gather of
+    the encoded payload (``payload * (P-1)`` link bytes) instead of the
+    f32 all-reduce, and an identity-ICI schedule takes the ring flavor
+    even at W == 1 (core/pipeline.pipelined_dcn_exchange).  Only the
+    strategies the pipelined exchange emits deterministic programs for
+    are modeled; others raise ValueError.
     """
     import numpy as np
 
     from .pipeline import effective_windows
 
     identity = wire is None or getattr(wire, "name", "identity") == "identity"
+    dcn_wire = (wire_dcn is not None
+                and getattr(wire_dcn, "name", "identity") != "identity")
     if strategy not in ("sharded_ps", "hierarchical", "allreduce"):
         raise ValueError(f"strategy {strategy!r} has no HLO traffic model")
     if not identity and strategy == "allreduce":
         raise ValueError("wire encoding rides the pipelined ring "
                          "strategies only")
+    if dcn_wire and strategy != "hierarchical":
+        raise ValueError("a per-tier DCN wire rides the two-tier "
+                         "'hierarchical' strategy only")
 
     hlo: dict = {}
     runtime: dict = {}
     per_group = []
 
-    def add(kind, tier, hlo_b, runtime_b=None):
+    def add(kind, tier, hlo_b, runtime_b=None, launches=1):
         hlo.setdefault(kind, {"ici": 0.0, "dcn": 0.0})[tier] += hlo_b
         runtime.setdefault(kind, {"ici": 0.0, "dcn": 0.0})[tier] += (
             hlo_b if runtime_b is None else runtime_b)
         detail.append({"kind": kind, "tier": tier, "hlo_bytes": hlo_b,
                        "runtime_bytes": hlo_b if runtime_b is None
-                       else runtime_b})
+                       else runtime_b, "launches": launches})
 
     for g in groups:
         detail: list = []
@@ -228,26 +268,39 @@ def predicted_exchange_hlo(groups, *, strategy: str, wire=None,
         shard_b = g.shard_len * item
         if strategy == "allreduce":
             N = max(n_workers, 1)
-            add("all-reduce", "ici", 2.0 * padded_b * (N - 1) / N)
+            add("all-reduce", "ici", 2.0 * padded_b * (N - 1) / N,
+                launches=1)
             per_group.append({"dtype": str(np.dtype(g.dtype)),
                               "windows": 1, "ops": detail})
             continue
         W = effective_windows(g, windows)
         Lw = g.shard_len // W
+        P = pod_size
         ring_tier = ("dcn" if strategy == "sharded_ps" and pod_size > 1
                      else "ici")
         if identity:
-            if S > 1 and W == 1:
-                add("reduce-scatter", ring_tier, float(shard_b) * (S - 1))
+            if S > 1 and W == 1 and not dcn_wire:
+                add("reduce-scatter", ring_tier, float(shard_b) * (S - 1),
+                    launches=S - 1)
             elif S > 1:
                 # lax.scan ring: one ppermute in HLO, S-1 hops at runtime
+                # (the per-tier DCN path rings even at W == 1)
                 add("collective-permute", ring_tier, float(W * Lw * item),
-                    float(W * (S - 1) * Lw * item))
+                    float(W * (S - 1) * Lw * item), launches=W * (S - 1))
             if S > 1:
-                add("all-gather", ring_tier, padded_b * (S - 1) / S)
+                add("all-gather", ring_tier, padded_b * (S - 1) / S,
+                    launches=1)
             if strategy == "hierarchical" and pod_size > 1:
-                P = pod_size
-                add("all-reduce", "dcn", 2.0 * shard_b * (P - 1) / P)
+                if dcn_wire:
+                    # encoded cross-pod reduce: one all-gather of the
+                    # word-packed payload (+ scale sidecar) per window
+                    add("all-gather", "dcn",
+                        float(W) * wire_dcn.payload_bytes(
+                            Lw, g.dtype, g.chunk_elems) * (P - 1),
+                        launches=W)
+                else:
+                    add("all-reduce", "dcn", 2.0 * shard_b * (P - 1) / P,
+                        launches=1)
         else:
             hop_b = wire.payload_bytes(Lw, g.dtype, g.chunk_elems)
             wire_padded_b = wire.payload_bytes(g.padded, g.dtype,
@@ -255,17 +308,104 @@ def predicted_exchange_hlo(groups, *, strategy: str, wire=None,
             if S > 1:
                 # unrolled encoded ring: every hop is its own ppermute pair
                 add("collective-permute", ring_tier,
-                    float(W * (S - 1)) * hop_b)
-                add("all-gather", ring_tier, wire_padded_b * (S - 1) / S)
+                    float(W * (S - 1)) * hop_b, launches=W * (S - 1))
+                add("all-gather", ring_tier, wire_padded_b * (S - 1) / S,
+                    launches=1)
             if strategy == "hierarchical" and pod_size > 1:
-                P = pod_size
-                # cross-pod psum runs on the decoded f32 window
-                add("all-reduce", "dcn", 2.0 * (g.shard_len * 4)
-                    * (P - 1) / P)
+                if dcn_wire:
+                    # encoded cross-pod reduce of the decoded f32 window
+                    add("all-gather", "dcn",
+                        float(W) * wire_dcn.payload_bytes(
+                            Lw, "float32", g.chunk_elems) * (P - 1),
+                        launches=W)
+                else:
+                    # cross-pod psum runs on the decoded f32 window
+                    add("all-reduce", "dcn", 2.0 * (g.shard_len * 4)
+                        * (P - 1) / P, launches=1)
         per_group.append({"dtype": str(np.dtype(g.dtype)), "windows": W,
                           "ops": detail})
     return {"by_kind": hlo, "runtime_by_kind": runtime,
             "per_group": per_group}
+
+
+def predicted_step_seconds(groups, *, strategy: str, topo: RackTopology,
+                           wire=None, wire_dcn=None, windows: int = 1,
+                           n_workers: int = 1, pod_size: int = 1,
+                           compute_s: float = 0.0) -> dict:
+    """Analytic exchange-step time over a two-tier ``RackTopology`` — the
+    autotuner's ranking function (src/repro/tuning/, DESIGN.md §16).
+
+    Built on ``predicted_exchange_hlo``'s runtime link bytes plus a
+    per-launch latency term: each tier contributes
+    ``bytes / bw_tier + launches * lat_tier``, where ``launches`` counts
+    the *sequential* collective launches the schedule issues on that tier
+    (ring hops count individually — a W-window ring over S shards issues
+    W*(S-1) dependent hops, which is exactly the windowing/latency
+    trade-off the tuner must price).  The two tiers are additive: the
+    hierarchical schedule serializes each window's ICI ring against its
+    DCN reduction.  ``compute_s`` adds a flat compute floor (zero for the
+    tuner's zero-compute validation steps).
+
+    ``topo.bw_codec`` adds the wire encode/decode cost: every RAW byte a
+    non-identity wire pushes through the codec (2x per ring hop —
+    encode + decode — plus the final gathered decode; likewise per DCN
+    window) costs ``1 / bw_codec`` seconds.  ``None`` means the codec is
+    free (offloaded), which silently ranks narrow wires first even on
+    hosts where quantization compute dwarfs the link time saved — the
+    miscalibration the 8-device acceptance sweep caught.
+
+    Returns ``{"seconds", "comm_s", "ici_s", "dcn_s", "codec_s",
+    "codec_bytes", "bytes", "launches"}`` with ``bytes``/``launches``
+    keyed by tier.
+    """
+    import numpy as np
+
+    from .pipeline import effective_windows
+
+    pred = predicted_exchange_hlo(groups, strategy=strategy, wire=wire,
+                                  windows=windows, n_workers=n_workers,
+                                  pod_size=pod_size, wire_dcn=wire_dcn)
+    bytes_t = {"ici": 0.0, "dcn": 0.0}
+    time_bytes = {"ici": 0.0, "dcn": 0.0}
+    launches = {"ici": 0.0, "dcn": 0.0}
+    for gdesc in pred["per_group"]:
+        for op in gdesc["ops"]:
+            bytes_t[op["tier"]] += op["runtime_bytes"]
+            time_bytes[op["tier"]] += op["runtime_bytes"] * (
+                topo.allreduce_factor if op["kind"] == "all-reduce"
+                else 1.0)
+            launches[op["tier"]] += op["launches"]
+
+    identity = wire is None or getattr(wire, "name", "identity") == "identity"
+    dcn_wire = (wire_dcn is not None
+                and getattr(wire_dcn, "name", "identity") != "identity")
+    codec_bytes = 0.0
+    for g in groups:
+        if strategy == "allreduce":
+            continue
+        item = np.dtype(g.dtype).itemsize
+        S = max(int(g.n_shards), 1)
+        W = effective_windows(g, windows)
+        Lw = g.shard_len // W
+        if not identity and S > 1:
+            # one encode + one decode per ring hop, one decode of the
+            # gathered full-domain payload at the end
+            codec_bytes += 2.0 * W * (S - 1) * Lw * item + g.padded * item
+        if dcn_wire and strategy == "hierarchical" and pod_size > 1:
+            # encode the local f32 window, decode the P gathered payloads
+            codec_bytes += float(W) * Lw * 4.0 * (1 + pod_size)
+    codec_s = (codec_bytes / topo.bw_codec
+               if topo.bw_codec and codec_bytes else 0.0)
+
+    bw = {"ici": topo.ici_bandwidth, "dcn": topo.dcn_bandwidth}
+    lat = {"ici": topo.lat_ici, "dcn": topo.lat_dcn}
+    tier_s = {t: time_bytes[t] / max(bw[t], 1e-9) + launches[t] * lat[t]
+              for t in ("ici", "dcn")}
+    comm = tier_s["ici"] + tier_s["dcn"] + codec_s
+    return {"seconds": compute_s + comm, "comm_s": comm,
+            "ici_s": tier_s["ici"], "dcn_s": tier_s["dcn"],
+            "codec_s": codec_s, "codec_bytes": codec_bytes,
+            "bytes": bytes_t, "launches": launches}
 
 
 # ------------------------------------------------ backward-overlap (§14)

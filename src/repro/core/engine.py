@@ -47,7 +47,8 @@ from .client import PHubClient, _MeshScopedJit
 from .exchange import ExchangeContext
 from .pipeline import PIPELINED_STRATEGIES, effective_windows
 from .sharding import plan_params, local_shapes, make_gather_fn
-from .wire import make_wire_format
+from .wire import exchange_extra_slots, make_dcn_wire_format, \
+    make_wire_format
 
 
 def spec_args(shapes, shardings):
@@ -75,6 +76,7 @@ class PHubEngine:
         # the sharded-optimizer protocol and run fused inside the exchange
         self.sopt: ShardedOptimizer = make_sharded_optimizer(self.tc)
         self.wire = make_wire_format(self.tc)
+        self.wire_dcn = make_dcn_wire_format(self.tc)
         if not self.wire.is_identity and self.tc.strategy not in \
                 PIPELINED_STRATEGIES:
             raise ValueError(
@@ -82,6 +84,12 @@ class PHubEngine:
                 f"strategy with a shard dimension {PIPELINED_STRATEGIES}; "
                 f"{self.tc.strategy!r} exchanges leaves or full vectors "
                 f"in the state dtype")
+        if self.wire_dcn is not None and self.tc.strategy != "hierarchical":
+            raise ValueError(
+                f"wire_format_dcn {self.tc.wire_format_dcn!r} encodes the "
+                f"cross-pod (DCN) leg of the two-tier 'hierarchical' "
+                f"strategy; {self.tc.strategy!r} has no DCN leg "
+                f"(DESIGN.md §16)")
         if self.tc.overlap_backward and self.tc.strategy not in \
                 PIPELINED_STRATEGIES:
             raise ValueError(
@@ -171,7 +179,8 @@ class PHubEngine:
         and only ever runs the identity wire."""
         if self.tc.strategy == "fsdp_stream":
             return self.sopt.slots
-        return self.sopt.slots + self.wire.extra_slots()
+        return self.sopt.slots + exchange_extra_slots(self.wire,
+                                                      self.wire_dcn)
 
     def opt_state_shapes(self, groups=None, slots=None):
         """Exchange-slot layout: {dtype_key: {slot_name: shape}} for the
@@ -887,7 +896,7 @@ def co_slot_specs(tenants: dict) -> tuple:
     at attach (core/api.py)."""
     specs = union_slots([tenants[ns].sopt for ns in tenants])
     e0 = next(iter(tenants.values()))
-    return specs + e0.wire.extra_slots()
+    return specs + exchange_extra_slots(e0.wire, e0.wire_dcn)
 
 
 def co_opt_state_shapes(e0: PHubEngine, domain, slots=None) -> dict:

@@ -83,6 +83,40 @@ class ExchangeContext:
         return padded // self.n_shards(strategy)
 
 
+def cross_pod_reduce(x: jax.Array, wire_dcn, ce: int, pod_size: int,
+                     residual: Optional[jax.Array] = None):
+    """DCN-tier reduction of one owner-shard window across pods.
+
+    ``wire_dcn is None`` (identity DCN tier): ``psum`` over "pod" — the
+    legacy cross-rack path, byte-for-byte.  Encoded: each pod encodes its
+    partial sum (plus its carried push-side error-feedback ``residual``
+    when one is threaded), all-gathers the word-packed payload over "pod"
+    (tiled=False: one row per pod), and every pod decodes the rows and
+    adds them in *fixed pod order* — so the reduced value is bitwise
+    identical on every pod (replication-consistent, unlike a cross-pod
+    ring whose per-pod accumulation order would diverge), at
+    ``payload * (P-1)`` link bytes per pod versus ``~2 * f32 * (P-1)/P``
+    for the all-reduce.  Returns ``(sum, residual')``; ``residual'`` is
+    None iff ``residual`` was None (scales-only mode — used when the ICI
+    wire owns the ``wire_ef`` slot for its pull delta)."""
+    if wire_dcn is None:
+        return jax.lax.psum(x, "pod"), residual
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual
+    parts = wire_dcn.encode(xf, ce)
+    r_out = (xf - wire_dcn.decode(parts, ce)) if residual is not None \
+        else None
+    gathered = tuple(jax.lax.all_gather(t, "pod", tiled=False)
+                     for t in wire_dcn.pack_words(parts))
+    total = None
+    for i in range(pod_size):
+        d = wire_dcn.decode(
+            wire_dcn.unpack_words(tuple(t[i] for t in gathered)), ce)
+        total = d if total is None else total + d
+    return total, r_out
+
+
 def exchange_group(strategy: str, ctx: ExchangeContext, g: jax.Array,
                    p: jax.Array, slots: tuple, update_fn: UpdateFn,
                    rank: jax.Array, aux: tuple = (),

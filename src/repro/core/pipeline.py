@@ -56,7 +56,7 @@ import jax
 import jax.numpy as jnp
 
 from .chunking import GroupPlan
-from .exchange import ExchangeContext, UpdateFn
+from .exchange import ExchangeContext, UpdateFn, cross_pod_reduce
 
 PIPELINED_STRATEGIES = ("sharded_ps", "hierarchical")
 
@@ -323,7 +323,8 @@ def pipelined_wire_exchange(strategy: str, ctx: ExchangeContext,
                             residual: jax.Array, aux: tuple = (),
                             fused_dequant=None,
                             n_live: Optional[float] = None,
-                            g_wins: Optional[tuple] = None):
+                            g_wins: Optional[tuple] = None,
+                            wire_dcn=None):
     """The windowed schedule over *encoded* payloads (DESIGN.md §11).
 
     Same double-buffered structure as ``pipelined_exchange``, but every
@@ -363,6 +364,10 @@ def pipelined_wire_exchange(strategy: str, ctx: ExchangeContext,
     window's ring depends only on its own buffer, so the rings can start
     mid-backward (DESIGN.md §14).  The hop/window loops being already
     unrolled here, the g_wins variant changes nothing but the row reads.
+    ``wire_dcn``: optional DCN-tier WireFormat (DESIGN.md §16) — when
+    given, the hierarchical cross-pod reduction travels encoded
+    (scales-only, residual-free: the ``wire_ef`` slot here belongs to the
+    ICI wire's pull delta) instead of the f32 psum.
     Returns (p', slots', residual')."""
     axes = ctx.data_axes
     N = ctx.n_workers if n_live is None else n_live
@@ -435,7 +440,10 @@ def pipelined_wire_exchange(strategy: str, ctx: ExchangeContext,
         gsum = (own if parts is None
                 else wire.decode(wire.unpack_words(parts), ce) + own)
         if cross_pod:
-            gsum = jax.lax.psum(gsum, "pod")    # cross-rack on owner only
+            # cross-rack on the owner only; encoded when the DCN tier has
+            # its own wire (scales-only: the ICI wire owns the EF slot)
+            gsum, _ = cross_pod_reduce(gsum, wire_dcn, ce,
+                                       ctx.axis_sizes.get("pod", 1))
         auxw = tuple(jax.lax.dynamic_slice(a, (rank * L + w * Lw,), (Lw,))
                      for a in aux)
         return update_fn(pw, gsum / N, sw, *auxw)
@@ -477,7 +485,8 @@ def run_wire_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
                       p: jax.Array, slots: tuple, update_fn: UpdateFn,
                       rank: jax.Array, group: GroupPlan, windows: int,
                       wire, residual: jax.Array, aux: tuple = (),
-                      fused_dequant=None, n_live: Optional[float] = None):
+                      fused_dequant=None, n_live: Optional[float] = None,
+                      wire_dcn=None):
     """Dispatch one dtype group over a non-identity wire.  Monolithic is
     just W=1 of the windowed schedule here — encoded partials need the
     per-hop decode/re-encode ring, which psum_scatter cannot express, and
@@ -494,7 +503,8 @@ def run_wire_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
     w = effective_windows(group, windows)
     return pipelined_wire_exchange(strategy, ctx, g, p, slots, update_fn,
                                    rank, w, wire, group.chunk_elems,
-                                   residual, aux, fused_dequant, n_live)
+                                   residual, aux, fused_dequant, n_live,
+                                   wire_dcn=wire_dcn)
 
 
 def run_chunk_ready_wire_exchange(strategy: str, ctx: ExchangeContext,
@@ -503,7 +513,8 @@ def run_chunk_ready_wire_exchange(strategy: str, ctx: ExchangeContext,
                                   rank: jax.Array, group: GroupPlan,
                                   wire, residual: jax.Array,
                                   aux: tuple = (), fused_dequant=None,
-                                  n_live: Optional[float] = None):
+                                  n_live: Optional[float] = None,
+                                  wire_dcn=None):
     """Encoded-wire chunk-ready dispatch: ``pipelined_wire_exchange`` fed
     per-window buffers.  ``g_wins`` already has the effective window
     count; W == 1 reads the single (padded,) buffer through the same row
@@ -520,4 +531,141 @@ def run_chunk_ready_wire_exchange(strategy: str, ctx: ExchangeContext,
     return pipelined_wire_exchange(strategy, ctx, None, p, slots, update_fn,
                                    rank, len(g_wins), wire,
                                    group.chunk_elems, residual, aux,
-                                   fused_dequant, n_live, g_wins=g_wins)
+                                   fused_dequant, n_live, g_wins=g_wins,
+                                   wire_dcn=wire_dcn)
+
+
+# --------------------------------- per-tier wire: identity ICI + DCN wire
+
+def pipelined_dcn_exchange(ctx: ExchangeContext, g: Optional[jax.Array],
+                           p: jax.Array, slots: tuple, update_fn: UpdateFn,
+                           rank: jax.Array, windows: int, wire_dcn,
+                           ce: int, residual: jax.Array, aux: tuple = (),
+                           n_live: Optional[float] = None,
+                           g_wins: Optional[tuple] = None):
+    """The hierarchical schedule with identity in-pod (ICI) rings and an
+    *encoded* cross-pod (DCN) reduction — the per-tier wire datapath
+    (DESIGN.md §16) for ``wire_format="identity"`` +
+    ``wire_format_dcn=<narrow>``.
+
+    Structure per window: an identity ``_ring_window_rs`` over "data"
+    (chunks cross the in-rack wire at full state width, where bandwidth
+    is cheap), then ``cross_pod_reduce`` encodes the pod's partial —
+    *plus this pod's carried error-feedback residual* — and all-gathers
+    the narrow payload over "pod" (where bandwidth is the paper's §3.4
+    bottleneck).  What the DCN encoding rounds away becomes the new
+    residual, stored in the exchange's ``wire_ef`` slot: push-side error
+    feedback, per-pod values under the slot's pod-replicated layout
+    (bounded divergence, standard for per-worker EF; checkpoint reads the
+    pod-0 view).  The decoded cross-pod sum is bitwise identical on every
+    pod (fixed-order row addition), so the updated parameters stay
+    replication-consistent — the pull all-gather is the identity path's.
+
+    Window boundaries are whole chunks and the codec is chunk-granular,
+    so results are independent of the window count, exactly like the
+    encoded-ICI schedule.  The window loop is unrolled (W static, small);
+    single-pod meshes skip the DCN leg entirely and pass the residual
+    through untouched.  ``g_wins``: optional chunk-ready per-window
+    buffers, as in ``pipelined_wire_exchange``.
+    Returns (p', slots', residual')."""
+    axes = ctx.data_axes
+    N = ctx.n_workers if n_live is None else n_live
+    ring_axes: tuple[str, ...] = ("data",)
+    S = ctx.axis_sizes["data"]
+    cross_pod = "pod" in axes
+    P = ctx.axis_sizes.get("pod", 1)
+
+    W = windows
+    if g_wins is not None:
+        if len(g_wins) != W:
+            raise ValueError(f"g_wins has {len(g_wins)} buffers for "
+                             f"{W} windows")
+        Lw = g_wins[0].size // S
+        L = Lw * W
+    else:
+        L = g.size // S
+        Lw = L // W
+    res = residual.astype(jnp.float32)
+
+    def rs_window(w):
+        """Returns (gsum/N, residual') for window w."""
+        if g_wins is None:
+            r = _ring_window_rs(g, L, w * Lw, Lw, ring_axes, rank, S)
+        else:
+            r = _ring_window_rs(g_wins[w], Lw, 0, Lw, ring_axes, rank, S)
+        rw = jax.lax.dynamic_slice(res, (w * Lw,), (Lw,))
+        if not cross_pod:
+            return r.astype(jnp.float32) / N, rw
+        gsum, r2 = cross_pod_reduce(r, wire_dcn, ce, P, residual=rw)
+        return gsum / N, r2
+
+    def opt_window(w, gw):
+        pw = jax.lax.dynamic_slice(p, (rank * L + w * Lw,), (Lw,))
+        sw = tuple(jax.lax.dynamic_slice(s, (w * Lw,), (Lw,))
+                   for s in slots)
+        auxw = tuple(jax.lax.dynamic_slice(a, (rank * L + w * Lw,), (Lw,))
+                     for a in aux)
+        return update_fn(pw, gw, sw, *auxw)
+
+    carry = rs_window(0)
+    p_wins: list = []
+    s_wins: list = []
+    r_wins: list = []
+    for w in range(W - 1):
+        nxt = rs_window(w + 1)              # window w+1 on the wire ...
+        p2, s2 = opt_window(w, carry[0])    # ... while window w optimizes
+        p_wins.append(p2)
+        s_wins.append(s2)
+        r_wins.append(carry[1])
+        carry = nxt
+    p_l, s_l = opt_window(W - 1, carry[0])
+    shard = jnp.concatenate(p_wins + [p_l]) if p_wins else p_l
+    s_out = tuple(
+        (jnp.concatenate([sw[i] for sw in s_wins] + [s_l[i]])
+         if s_wins else s_l[i])
+        for i in range(len(slots)))
+    r_out = jnp.concatenate(r_wins + [carry[1]]) if r_wins else carry[1]
+    p_out = jax.lax.all_gather(shard, ring_axes, tiled=True)
+    return p_out, s_out, r_out
+
+
+def _check_dcn_dispatch(strategy: str, wire_dcn) -> None:
+    if wire_dcn is None:
+        raise ValueError("run_dcn_exchange needs an engaged DCN wire; "
+                         "identity DCN travels run_exchange (the bitwise "
+                         "pre-tier path)")
+    if strategy != "hierarchical":
+        raise ValueError(
+            f"per-tier DCN wire {wire_dcn.name!r} needs the two-tier "
+            f"'hierarchical' strategy; {strategy!r} has no DCN leg")
+
+
+def run_dcn_exchange(strategy: str, ctx: ExchangeContext, g: jax.Array,
+                     p: jax.Array, slots: tuple, update_fn: UpdateFn,
+                     rank: jax.Array, group: GroupPlan, windows: int,
+                     wire_dcn, residual: jax.Array, aux: tuple = (),
+                     n_live: Optional[float] = None):
+    """Dispatch one dtype group over identity ICI + encoded DCN.  The ring
+    flavor is used even at W == 1 (the encoded cross-pod leg composes with
+    the per-window ring, not with psum_scatter), which keeps windowed and
+    monolithic per-tier exchanges on one code path and therefore
+    deterministic across window counts."""
+    _check_dcn_dispatch(strategy, wire_dcn)
+    w = effective_windows(group, windows)
+    return pipelined_dcn_exchange(ctx, g, p, slots, update_fn, rank, w,
+                                  wire_dcn, group.chunk_elems, residual,
+                                  aux, n_live)
+
+
+def run_chunk_ready_dcn_exchange(strategy: str, ctx: ExchangeContext,
+                                 g_wins: tuple, p: jax.Array, slots: tuple,
+                                 update_fn: UpdateFn, rank: jax.Array,
+                                 group: GroupPlan, wire_dcn,
+                                 residual: jax.Array, aux: tuple = (),
+                                 n_live: Optional[float] = None):
+    """Chunk-ready variant of ``run_dcn_exchange``: per-window buffers,
+    window count already effective (the caller split them)."""
+    _check_dcn_dispatch(strategy, wire_dcn)
+    return pipelined_dcn_exchange(ctx, None, p, slots, update_fn, rank,
+                                  len(g_wins), wire_dcn, group.chunk_elems,
+                                  residual, aux, n_live, g_wins=g_wins)

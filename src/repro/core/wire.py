@@ -175,3 +175,31 @@ class WireFormat:
 def make_wire_format(tc) -> WireFormat:
     """TrainConfig -> WireFormat (fails fast on unknown names)."""
     return WireFormat(name=tc.wire_format, use_pallas=bool(tc.use_pallas))
+
+
+def make_dcn_wire_format(tc):
+    """TrainConfig -> the cross-pod (DCN) tier's WireFormat, or None.
+
+    ``None`` means the DCN tier is *not* separately encoded: the cross-pod
+    reduction stays on the legacy ``psum("pod")`` datapath, byte-for-byte.
+    Both ``wire_format_dcn=None`` and ``"identity"`` normalize to None so
+    every pre-existing config compiles the identical program.
+    """
+    name = getattr(tc, "wire_format_dcn", None)
+    if name in (None, "identity"):
+        return None
+    return WireFormat(name=name, use_pallas=bool(tc.use_pallas))
+
+
+def exchange_extra_slots(wire: WireFormat, wire_dcn) -> tuple[SlotSpec, ...]:
+    """The exchange-level slots a (ICI wire, DCN wire) pair adds.
+
+    At most ONE ``wire_ef`` slot ever exists, appended last.  Ownership:
+    an encoded ICI wire owns it for the pull-direction delta residual
+    (the DCN leg then runs scales-only, residual-free); an identity ICI
+    wire with an encoded DCN leg hands the slot to the DCN tier, where it
+    carries each pod's push-side quantization residual.
+    """
+    if wire.error_feedback or wire_dcn is not None:
+        return (SlotSpec(WIRE_EF_SLOT, "float32"),)
+    return ()

@@ -67,14 +67,16 @@ def _mem_dict(mem) -> dict:
 def _lower_step(cfg: ModelConfig, shape: InputShape, mesh, strategy: str,
                 scan_unroll: int = 1, infer_layout: str = "tp",
                 dp_over_model: bool = False, seq_sharding: bool = True,
-                microbatch: int = 1, wire_format: str = "identity"):
+                microbatch: int = 1, wire_format: str = "identity",
+                wire_format_dcn: str = None):
     """Build + lower the production step for one (arch, shape).
     Returns (lowered, engine) — the engine is reused for wire-byte
     accounting without a second construction."""
     tc = TrainConfig(strategy=strategy, scan_unroll=scan_unroll,
                      infer_param_layout=infer_layout,
                      dp_over_model=dp_over_model, seq_sharding=seq_sharding,
-                     microbatch=microbatch, wire_format=wire_format)
+                     microbatch=microbatch, wire_format=wire_format,
+                     wire_format_dcn=wire_format_dcn)
     eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
     if shape.kind == "train":
         specs = make_batch_specs(cfg, shape)
@@ -175,7 +177,7 @@ def _lint_record(eng: "PHubEngine", compiled, shape: InputShape,
     art = StepArtifact(
         tag=tag, hlo_text=compiled.as_text(),
         groups=tuple(eng.chunk_plan.groups) if eng.chunk_plan else (),
-        strategy=eng.tc.strategy, wire=eng.wire,
+        strategy=eng.tc.strategy, wire=eng.wire, wire_dcn=eng.wire_dcn,
         windows=eng.tc.pipeline_windows, n_workers=eng.ctx.n_workers,
         pod_size=eng.pod_size, pod_stride=eng.pod_stride,
         flat=eng.tc.flat_residency, overlap=eng.tc.overlap_backward,
@@ -193,11 +195,35 @@ def _lint_record(eng: "PHubEngine", compiled, shape: InputShape,
     }
 
 
+def _tuned_record(eng: "PHubEngine") -> dict:
+    """Config provenance (DESIGN.md §16): the autotuner request key this
+    engine's config corresponds to, and — when the results/tuning cache
+    holds a lint-green winner for it — the winner plus the
+    predicted-vs-measured gap, so the roofline tables can tell tuned
+    configs from hand-picked ones."""
+    from ..tuning import cache_key, load_cached
+    try:
+        key = cache_key(eng.tc, int(eng.mesh.devices.size),
+                        eng.params_shapes)
+    except Exception:  # noqa: BLE001 — provenance must never fail a run
+        return {"cache_hit": False}
+    entry = load_cached(key)
+    rec = {"cache_key": key, "cache_hit": entry is not None}
+    if entry is not None:
+        pred_us = entry["predicted"]["seconds"] * 1e6
+        rec.update(candidate=entry["candidate"],
+                   measured_us=entry["measured_us"],
+                   predicted_us=pred_us,
+                   gap=entry["measured_us"] / max(pred_us, 1e-9))
+    return rec
+
+
 def dryrun_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
                strategy: str, save: bool = True, verbose: bool = True,
                probe: bool = True, infer_layout: str = "tp",
                dp_over_model: bool = False, seq_sharding: bool = True,
                microbatch: int = 1, wire_format: str = "identity",
+               wire_format_dcn: str = None,
                tag_suffix: str = "") -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "x".join(str(s) for s in mesh.devices.shape)
@@ -215,7 +241,8 @@ def dryrun_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
                                dp_over_model=dp_over_model,
                                seq_sharding=seq_sharding,
                                microbatch=microbatch,
-                               wire_format=wire_format)
+                               wire_format=wire_format,
+                               wire_format_dcn=wire_format_dcn)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -247,6 +274,9 @@ def dryrun_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
         rec["wire"] = _wire_record(eng)
     # static-conformance verdict over the compiled program (DESIGN.md §15)
     rec["rack_lint"] = _lint_record(eng, compiled, shape, tag)
+    # autotuner provenance: was this config tuned, and how good was the
+    # prediction (DESIGN.md §16)
+    rec["tuned"] = _tuned_record(eng)
     if probe:
         # trip-count-corrected metrics (scan bodies are counted once by
         # XLA's cost analysis — see _probe_costs)
@@ -301,6 +331,10 @@ def main():
     ap.add_argument("--wire-format", default="identity",
                     choices=["identity", "bf16", "f16", "int8"],
                     help="wire dtype for the chunk exchange (DESIGN.md §11)")
+    ap.add_argument("--wire-format-dcn", default=None,
+                    choices=["identity", "bf16", "f16", "int8"],
+                    help="cross-pod wire dtype for the hierarchical "
+                         "strategy's DCN leg (DESIGN.md §16)")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true",
@@ -325,7 +359,8 @@ def main():
                 try:
                     dryrun_one(ARCHS[a], SHAPES[sname], multi_pod=mp,
                                strategy=args.strategy,
-                               wire_format=args.wire_format)
+                               wire_format=args.wire_format,
+                               wire_format_dcn=args.wire_format_dcn)
                 except Exception as e:  # noqa: BLE001
                     traceback.print_exc()
                     failures.append((tag, str(e)))

@@ -88,6 +88,16 @@ def matrix_cells() -> list:
          "pod", {}),
         ("zero/hier-int8-w1", "zero",
          dict(strategy="hierarchical", wire_format="int8"), "pod", {}),
+        # per-tier wires (DESIGN.md §16): identity in-rack, int8 across
+        # the pod boundary — and the fully encoded two-tier combination
+        ("zero/hier-dcn-w1", "zero",
+         dict(strategy="hierarchical", wire_format_dcn="int8"), "pod", {}),
+        ("zero/hier-dcn-w2", "zero",
+         dict(strategy="hierarchical", wire_format_dcn="int8",
+              pipeline_windows=2, chunk_size_bytes=_W2_CHUNK), "pod", {}),
+        ("zero/hier-int8-dcn-w1", "zero",
+         dict(strategy="hierarchical", wire_format="int8",
+              wire_format_dcn="int8"), "pod", {}),
         ("zero/allreduce", "zero", dict(strategy="allreduce"), "data", {}),
         # full train programs
         ("train/sps-id-w1", "train", {}, "data", {}),
@@ -276,6 +286,65 @@ def run_fixtures(report: LintReport) -> int:
     return misses
 
 
+# -------------------------------------------------- tuned-config gating
+
+def lint_tuned_config(cand: dict, *, tag: str = "tuned/candidate"):
+    """Lint-gate one autotuner candidate (launch/tune.py, DESIGN.md §16):
+    build the candidate's engine on its mesh shape, compile the
+    zero-compute step, and run R1 (traffic), R3 (donation) and R5
+    (hygiene) — the gating contract a cached winner must pass before it
+    is trusted.  ``cand``: {strategy, pipeline_windows, wire_format,
+    wire_format_dcn, chunk_size_bytes, pods, data[, arch, d_model]}.
+    Returns (verdict dict, diagnostics)."""
+    n = jax.device_count()
+    pods = int(cand.get("pods", 1))
+    data = int(cand.get("data", n // max(pods, 1)))
+    if pods * data != n:
+        raise ValueError(f"candidate mesh {pods}x{data} != "
+                         f"{n} available devices")
+    mesh = (jax.make_mesh((pods, data, 1), ("pod", "data", "model"))
+            if pods > 1 else jax.make_mesh((data, 1), ("data", "model")))
+    cfg = (reduced(ARCHS[cand["arch"]],
+                   d_model=int(cand.get("d_model", 256)))
+           if cand.get("arch") else CFG)
+    tc = TrainConfig(
+        strategy=cand["strategy"],
+        pipeline_windows=int(cand.get("pipeline_windows", 1)),
+        wire_format=cand.get("wire_format") or "identity",
+        wire_format_dcn=cand.get("wire_format_dcn"),
+        chunk_size_bytes=int(cand.get("chunk_size_bytes", 32 * 1024)))
+    eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
+    art = artifact_from_engine(eng, tag, kind="zero")
+    diags = lint_artifact(art, traffic=True, donation=True, hygiene=True,
+                          schedule=False)
+    errors = [d.to_dict() for d in diags if d.severity == "error"]
+    verdict = {"tag": tag, "candidate": dict(cand), "ok": not errors,
+               "rules": ["R1", "R3", "R5"], "errors": errors,
+               "warnings": [d.to_dict() for d in diags
+                            if d.severity == "warning"],
+               "config": art.config}
+    return verdict, diags
+
+
+def run_tuned(path: str, out: str = None) -> int:
+    """CLI entry for ``--tuned``: read the candidate (or cache entry)
+    JSON, gate it, write the verdict, exit nonzero unless lint-green."""
+    with open(path) as f:
+        blob = json.load(f)
+    cand = blob.get("candidate", blob)      # cache entries nest it
+    verdict, _ = lint_tuned_config(cand)
+    if out:
+        os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(verdict, f, indent=2, sort_keys=True)
+    print(f"[lint] tuned candidate "
+          f"{'OK' if verdict['ok'] else 'REJECTED'}: "
+          f"{len(verdict['errors'])} errors")
+    for d in verdict["errors"]:
+        print("  ", d.get("message", d))
+    return 0 if verdict["ok"] else 1
+
+
 # ------------------------------------------------------------------ main
 
 def main(argv=None) -> int:
@@ -285,9 +354,17 @@ def main(argv=None) -> int:
     ap.add_argument("--skip-matrix", action="store_true")
     ap.add_argument("--skip-retrace", action="store_true")
     ap.add_argument("--skip-fixtures", action="store_true")
+    ap.add_argument("--tuned", default=None, metavar="PATH",
+                    help="gate one tuned-candidate JSON (R1/R3/R5) "
+                         "instead of the matrix sweep")
+    ap.add_argument("--tuned-out", default=None, metavar="PATH",
+                    help="write the --tuned verdict JSON here")
     ap.add_argument("--out", default=os.path.join(RESULTS_DIR,
                                                   "report.json"))
     args = ap.parse_args(argv)
+
+    if args.tuned:
+        return run_tuned(args.tuned, args.tuned_out)
 
     report = LintReport(meta={
         "arch": CFG.arch_id, "n_params": CFG.n_params(),

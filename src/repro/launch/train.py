@@ -96,6 +96,16 @@ def main(argv=None):
                          "(DESIGN.md §13)")
     ap.add_argument("--keep-k", type=int, default=3,
                     help="good snapshots retained by the supervisor")
+    ap.add_argument("--auto-tune", action="store_true",
+                    help="pick strategy/windows/wire/chunk/mesh with the "
+                         "exchange autotuner (DESIGN.md §16): consult the "
+                         "results/tuning cache, tune on a miss, and fail "
+                         "fast unless the winner is lint-green.  "
+                         "Overrides --strategy/--windows/--chunk-kb/--mesh")
+    ap.add_argument("--tune-top-k", type=int, default=3,
+                    help="candidates the autotuner times on a cache miss")
+    ap.add_argument("--tune-steps", type=int, default=5,
+                    help="timed reps per autotuner candidate")
     ap.add_argument("--chaos-faults", action="store_true",
                     help="inject a seeded FaultSchedule (NaN pushes, "
                          "gradient blow-ups, checkpoint corruption, step "
@@ -129,6 +139,8 @@ def main(argv=None):
                      pipeline_windows=args.windows,
                      overlap_backward=args.overlap,
                      loss_chunk=min(1024, args.seq))
+    if args.auto_tune:
+        tc, mesh = _auto_tuned(cfg, tc, args)
 
     cm = PHubConnectionManager()
     if args.tenants > 1:
@@ -160,7 +172,8 @@ def main(argv=None):
                                          event_every=args.chaos_every)
 
     print(f"[train] arch={cfg.arch_id} params={cfg.n_params()/1e6:.1f}M "
-          f"mesh={dict(zip(axes, shp))} strategy={tc.strategy}")
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"strategy={tc.strategy}")
     losses = []
     t0 = time.time()
     for step in range(args.steps):
@@ -194,6 +207,45 @@ def main(argv=None):
     print(f"[train] done: first-5 mean {sum(losses[:5])/5:.4f} -> "
           f"last-5 mean {sum(losses[-5:])/5:.4f}")
     return losses
+
+
+def _auto_tuned(cfg, tc, args):
+    """Consult the exchange-autotuner cache for (tc, devices, model) —
+    tuning on a miss — and apply the lint-green winner's config and mesh
+    shape.  Refuses to train on anything that did not pass the rack-lint
+    gate (launch/lint.py --tuned)."""
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from ..models import init as model_init
+    from ..tuning import Candidate, autotune
+
+    grads_like = jax.eval_shape(lambda k: model_init(cfg, k),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+    report = autotune(grads_like, tc, jax.device_count(),
+                      top_k=args.tune_top_k, steps=args.tune_steps,
+                      arch=args.arch,
+                      d_model=cfg.d_model if args.reduced else 0)
+    if not report["lint"].get("ok"):
+        raise SystemExit(
+            "[train] --auto-tune: the tuned winner is not lint-green; "
+            "refusing to train on an unvetted config "
+            f"(errors: {report['lint'].get('errors')})")
+    cand = Candidate.from_dict(report["candidate"])
+    tc = dataclasses.replace(tc, **cand.tc_kwargs())
+    src = ("cache hit" if report["cache_hit"] else
+           f"tuned, {report['timed_candidates']} candidates timed")
+    print(f"[train] auto-tune ({src}): {cand.strategy} "
+          f"W={cand.pipeline_windows} wire={cand.wire_format}/"
+          f"{cand.wire_format_dcn or '-'} "
+          f"chunk={cand.chunk_size_bytes // 1024}KB "
+          f"mesh={cand.pods}x{cand.data} key={report['key']}")
+    if cand.pods > 1:
+        mesh = jax.make_mesh((cand.pods, cand.data, 1),
+                             ("pod", "data", "model"))
+    else:
+        mesh = jax.make_mesh((cand.data, 1), ("data", "model"))
+    return tc, mesh
 
 
 def _train_supervised(engine, params, opt, data, args):

@@ -1,0 +1,98 @@
+"""Exchange autotuner entry point (DESIGN.md §16).
+
+Searches (strategy x pipeline_windows x wire_format x wire_format_dcn x
+chunk_size_bytes x mesh shape) for the model's gradient pytree on the
+requested device count: analytic cost-model ranking over the whole
+space, real timed steps for the top-k (each candidate's actual
+PHubClient push_pull program, in its own subprocess), and a rack-lint
+gate (R1/R3/R5) on the measured winner before it is cached in
+``results/tuning/``.  A second invocation with the same request hits the
+cache and spends zero timed steps; ``launch/train.py --auto-tune``
+consults the same cache.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.tune --devices 8 \
+      --arch llama3.2-1b --d-model 256 [--top-k 3] [--steps 5] \
+      [--time-all] [--force] [--out report.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def model_grads_like(arch: str, d_model: int = 0):
+    """The arch's gradient pytree shapes (reduced variant when d_model
+    is set) — no mesh, no allocation."""
+    import jax
+    import jax.numpy as jnp
+    from ..configs import ARCHS, reduced
+    from ..models import init as model_init
+    cfg = ARCHS[arch]
+    if d_model:
+        cfg = reduced(cfg, d_model=d_model)
+    return cfg, jax.eval_shape(lambda k: model_init(cfg, k),
+                               jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=8,
+                    help="device count to tune for (forced host devices "
+                         "in the timing/lint subprocesses)")
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--d-model", type=int, default=256,
+                    help="reduced d_model (0 = the full architecture)")
+    ap.add_argument("--strategy", default="sharded_ps",
+                    help="baseline strategy for the request cache key")
+    ap.add_argument("--top-k", type=int, default=3,
+                    help="analytically-ranked candidates that get real "
+                         "timed steps")
+    ap.add_argument("--steps", type=int, default=5,
+                    help="timed reps per candidate")
+    ap.add_argument("--time-all", action="store_true",
+                    help="time every candidate (exhaustive sweep)")
+    ap.add_argument("--force", action="store_true",
+                    help="ignore the cache and re-tune")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the rack-lint gate (NOT cached as trusted)")
+    ap.add_argument("--cache-dir", default="",
+                    help="override results/tuning")
+    ap.add_argument("--out", default="", help="write the report JSON here")
+    args = ap.parse_args(argv)
+
+    from ..configs import TrainConfig
+    from ..tuning import autotune
+
+    cfg, grads_like = model_grads_like(args.arch, args.d_model)
+    tc = TrainConfig(strategy=args.strategy)
+    report = autotune(
+        grads_like, tc, args.devices, top_k=args.top_k, steps=args.steps,
+        cache_dir=args.cache_dir or None, force=args.force,
+        time_all=args.time_all, lint=not args.no_lint,
+        arch=args.arch, d_model=args.d_model)
+
+    cand = report["candidate"]
+    src = "cache" if report["cache_hit"] else \
+        f"{report['timed_candidates']} timed candidates"
+    print(f"[tune] winner ({src}): {cand['strategy']} "
+          f"W={cand['pipeline_windows']} wire={cand['wire_format']}/"
+          f"{cand['wire_format_dcn'] or '-'} "
+          f"chunk={cand['chunk_size_bytes'] // 1024}KB "
+          f"mesh={cand['pods']}x{cand['data']} "
+          f"measured {report['measured_us']:.0f}us "
+          f"(predicted {report['predicted']['seconds'] * 1e6:.0f}us)")
+    print(f"[tune] key={report['key']} cache={report['cache_path']} "
+          f"lint={'OK' if report['lint'].get('ok') else 'SKIPPED/REJECTED'}")
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)),
+                    exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"[tune] report -> {args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

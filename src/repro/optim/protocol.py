@@ -198,8 +198,10 @@ class AdamOptimizer(ShardedOptimizer):
         # and sqrt(bc2) as fenced reciprocals, and spend exactly one
         # division — the epsilon-hat form step = lr*(sqrt(bc2)/bc1)*m /
         # (sqrt(v) + eps*sqrt(bc2)), algebraically classical adam with
-        # eps scaled by sqrt(bc2).  Verified bitwise-stable across
-        # windows 1/2/4/8 and against the tree-level reference.
+        # eps scaled by sqrt(bc2).  The EMAs are kept single-product (see
+        # below) so backend FMA contraction — which barriers do not
+        # survive to — has no ambiguity either.  Verified bitwise-stable
+        # across windows 1/2/4/8 and against the tree-level reference.
         m, v, k1, k2 = slots
         (lr,) = coefs
         g = self._decayed(p, g.astype(m.dtype))
@@ -215,12 +217,24 @@ class AdamOptimizer(ShardedOptimizer):
         alive = (g != 0) | (k1 != 0)
         k1n = jnp.where(alive, self.b1 * k1 + (1 - self.b1), k1)
         k2n = jnp.where(alive, self.b2 * k2 + (1 - self.b2), k2)
-        m2 = self.b1 * m + (1 - self.b1) * g
-        v2 = self.b2 * v + (1 - self.b2) * g * g
+        # The EMAs are in *residual* form, m += (1-b1)*(g-m), not the
+        # textbook b1*m + (1-b1)*g: the textbook sum has a float product
+        # on BOTH operands of the add, and XLA:CPU's backend FMA-contracts
+        # exactly one of them — *which* one differs between compilation
+        # contexts (the shard_map exchange program fuses the gradient-side
+        # product, a plain-jit reference the slot-side one: a
+        # data-dependent 1-ulp divergence the bitwise oracle catches).
+        # With at most one product per add the contraction has no choice
+        # to make, and the result is program-independent.  Zero fixed
+        # point is preserved exactly: m=g=0 -> m + c*(0-0) = 0.
+        m2 = m + (1 - self.b1) * (g - m)
+        v2 = v + (1 - self.b2) * (g * g - v)
         m2, v2, k1n, k2n = jax.lax.optimization_barrier((m2, v2, k1n, k2n))
         q1, rk2 = jax.lax.optimization_barrier(
             (1.0 / k1n.astype(m.dtype), jnp.sqrt(k2n).astype(m.dtype)))
-        step = (lr * q1 * rk2 * m2) / (jnp.sqrt(v2) + self.eps * rk2)
+        num = (lr * q1) * rk2 * m2
+        den = jnp.sqrt(v2) + self.eps * rk2
+        step = num / den
         # Dead positions have k1n == 0, so q1 is inf and step is NaN —
         # mask to an exact no-op (p - 0 is p, bitwise).
         step = jnp.where(k1n > 0, step, jnp.zeros_like(step))

@@ -1,0 +1,14 @@
+"""Cost-model-driven exchange autotuner (DESIGN.md §16)."""
+from .cache import (DEFAULT_CACHE_DIR, cache_key, cache_path, load_cached,
+                    model_fingerprint, store_winner)
+from .cost import DEFAULT_TOPOLOGY, context_for, predict, rank_candidates
+from .space import Candidate, enumerate_space, mesh_shapes, valid
+from .tuner import autotune, lint_candidate, time_candidate
+
+__all__ = [
+    "DEFAULT_CACHE_DIR", "DEFAULT_TOPOLOGY", "Candidate", "autotune",
+    "cache_key", "cache_path", "context_for", "enumerate_space",
+    "lint_candidate", "load_cached", "mesh_shapes", "model_fingerprint",
+    "predict", "rank_candidates", "store_winner", "time_candidate",
+    "valid",
+]

@@ -1,0 +1,71 @@
+"""Winner cache for the exchange autotuner (DESIGN.md §16).
+
+Entries live in ``results/tuning/<key>.json``; the key is a hash of the
+*request* — the baseline ``TrainConfig.exchange_signature`` the caller
+started from, the device topology the search ran on, and a fingerprint
+of the gradient pytree (leaf shapes/dtypes — the chunk plan, and with it
+every prediction and timing, depends on nothing else about the model).
+A second invocation with the same request hits the cache and spends zero
+timed steps; an entry is only trusted if its stored lint verdict is
+green (launch/lint.py --tuned), which launch/train.py --auto-tune
+re-checks before adopting it.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+
+import numpy as np
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..")
+DEFAULT_CACHE_DIR = os.path.abspath(os.path.join(_ROOT, "results",
+                                                 "tuning"))
+
+
+def model_fingerprint(grads_like) -> list:
+    """Sorted (path-index, shape, dtype) rows — everything the chunk
+    plan can see of the model."""
+    import jax
+    leaves = jax.tree.leaves(grads_like)
+    rows = sorted((list(leaf.shape), str(np.dtype(leaf.dtype)))
+                  for leaf in leaves)
+    return [[i, s, d] for i, (s, d) in enumerate(rows)]
+
+
+def cache_key(tc, n_devices: int, grads_like) -> str:
+    blob = {"signature": list(tc.exchange_signature()),
+            "devices": int(n_devices),
+            "model": model_fingerprint(grads_like)}
+    canon = json.dumps(blob, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha1(canon.encode()).hexdigest()[:16]
+
+
+def cache_path(key: str, cache_dir: str = None) -> str:
+    return os.path.join(cache_dir or DEFAULT_CACHE_DIR, f"{key}.json")
+
+
+def load_cached(key: str, cache_dir: str = None):
+    """The stored entry, or None; entries whose lint verdict is not
+    green are ignored (never trusted, forcing a re-tune)."""
+    path = cache_path(key, cache_dir)
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            entry = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if not entry.get("lint", {}).get("ok"):
+        return None
+    return entry
+
+
+def store_winner(key: str, entry: dict, cache_dir: str = None) -> str:
+    path = cache_path(key, cache_dir)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(entry, f, indent=2, sort_keys=True)
+    os.replace(tmp, path)
+    return path

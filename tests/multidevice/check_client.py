@@ -34,8 +34,14 @@ slot — survives the attach/detach migration lifecycle bitwise on live
 regions; (4) a multi-worker int8+error-feedback MLP run tracks the fp32
 loss curve.
 
+Also: the per-tier DCN wire oracles (DESIGN.md §16) — the hierarchical
+cross-pod leg on its own int8 wire: ``wire_format_dcn="identity"`` is
+bitwise the legacy psum datapath, the encoded DCN schedules are
+window-invariant to one quantization grid step, and the DCN residual
+rides the same ``wire_ef`` protocol slot.
+
 Usage: python tests/multidevice/check_client.py [case ...]
-Cases: sharded_ps hierarchical mixed_co wire
+Cases: sharded_ps hierarchical mixed_co wire dcn
 Prints "OK <case>" lines; exits nonzero on failure.
 """
 import dataclasses
@@ -55,7 +61,8 @@ from repro.core import PHubClient, PHubConnectionManager  # noqa: E402
 from repro.data import SyntheticTokens  # noqa: E402
 from repro.optim import make_optimizer  # noqa: E402
 
-CASES = sys.argv[1:] or ["sharded_ps", "hierarchical", "mixed_co", "wire"]
+CASES = sys.argv[1:] or ["sharded_ps", "hierarchical", "mixed_co", "wire",
+                         "dcn"]
 failures = 0
 W = 8                                    # workers = pod(2) x data(4)
 STEPS = 3
@@ -496,6 +503,94 @@ def check_wire_convergence():
            f"fp32 {ref[0]:.4f}->{ref[-1]:.4f} int8 {q[0]:.4f}->{q[-1]:.4f}")
 
 
+def check_dcn_wire():
+    """Per-tier wire oracles (DESIGN.md §16): the hierarchical strategy
+    with its cross-pod leg on an int8 DCN wire.
+
+    (1) ``wire_format_dcn="identity"`` is byte-for-byte the legacy
+    ``psum("pod")`` datapath — it normalizes to the same compiled program
+    (core/wire.make_dcn_wire_format), so every pre-existing hierarchical
+    config is untouched by the per-tier machinery: asserted BITWISE on
+    integer gradients.  (2) With an engaged int8 DCN wire, windowed (W=2)
+    vs monolithic (W=1) schedules agree within one quantization grid step
+    per element (the codec is chunk-granular and windows are whole
+    chunks; across two compiled programs XLA:CPU contracts the decode +
+    update chain up to 1 ulp differently — the same caveat as the ICI
+    wire case above), for identity and int8 ICI tiers.  (3) The DCN
+    error-feedback residual (``wire_ef`` — the same protocol slot the ICI
+    int8 wire uses) is live after the run."""
+    like = external_pytree()
+    isl = lambda t: isinstance(t, jax.ShapeDtypeStruct)
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+
+    # (1) identity DCN tier == legacy psum, bitwise, integer grads
+    rng = np.random.default_rng(23)
+    params0 = int_tree(like, rng, -4, 5)
+    grads = [int_tree(like, rng, -8, 9, lead=W) for _ in range(STEPS)]
+    outs = []
+    for dcn in (None, "identity"):
+        tc = TrainConfig(optimizer="nesterov", strategy="hierarchical",
+                         lr=3e-2, momentum=0.9, chunk_size_bytes=1024,
+                         pipeline_windows=2, wire_format="identity",
+                         wire_format_dcn=dcn)
+        client = PHubClient(tc, mesh).register(like)
+        p = jax.tree.map(lambda x: x + 0, params0)
+        o = client.init_state()
+        for s in range(STEPS):
+            p, o = client.push_pull(grads[s], p, o)
+        outs.append((p, o))
+    bad = mismatches(outs[0][0], outs[1][0])
+    for key in outs[0][1]:
+        for slot in outs[0][1][key]:
+            bad += int((np.asarray(outs[0][1][key][slot])
+                        != np.asarray(outs[1][1][key][slot])).sum())
+    report(bad == 0, "dcn identity tier == legacy psum (bitwise)",
+           f"mismatched_elems={bad}")
+
+    # (2) int8 DCN tier: windowed == monolithic within one grid step
+    rng = np.random.default_rng(29)
+
+    def ftree(lead=None):
+        return jax.tree.map(
+            lambda s: jnp.asarray(rng.normal(
+                size=((lead,) + s.shape) if lead else s.shape)
+            ).astype(s.dtype), like, is_leaf=isl)
+
+    GRID = 0.06          # one int8 grid step at cross-pod-sum magnitudes
+
+    def group_mismatch(a, b):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        return int((np.abs(a - b) > GRID).sum())
+
+    params0 = ftree()
+    grads = [ftree(lead=W) for _ in range(STEPS)]
+    for wf in ("identity", "int8"):
+        outs = []
+        for windows in (1, 2):
+            tc = TrainConfig(optimizer="nesterov", strategy="hierarchical",
+                             lr=3e-2, momentum=0.9, chunk_size_bytes=1024,
+                             pipeline_windows=windows, wire_format=wf,
+                             wire_format_dcn="int8")
+            client = PHubClient(tc, mesh).register(like)
+            assert client.exchange_slots[-1].name == "wire_ef"
+            p = jax.tree.map(lambda x: x + 0, params0)
+            o = client.init_state()
+            for s in range(STEPS):
+                p, o = client.push_pull(grads[s], p, o)
+            outs.append((jax.tree.map(np.asarray, p),
+                         jax.tree.map(np.asarray, o)))
+        (p1, o1), (p2, o2) = outs
+        bad = sum(jax.tree.leaves(jax.tree.map(group_mismatch, p1, p2)))
+        for key in o1:
+            for slot in o1[key]:
+                bad += group_mismatch(o1[key][slot], o2[key][slot])
+        res = float(max(np.abs(v["wire_ef"]).max() for v in o1.values()))
+        report(bad == 0 and res > 0,
+               f"dcn int8 windowed==monolithic ici={wf}",
+               f"mismatched_elems={bad} max_residual={res:.2e}")
+
+
 def main():
     for case in CASES:
         if case in ("sharded_ps", "hierarchical"):
@@ -507,6 +602,8 @@ def main():
             check_wire_migration()
             check_wire_engine_meshes()
             check_wire_convergence()
+        elif case == "dcn":
+            check_dcn_wire()
         else:
             raise SystemExit(f"unknown case {case!r}")
     sys.exit(1 if failures else 0)

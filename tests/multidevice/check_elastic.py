@@ -75,7 +75,7 @@ from repro.elastic import ChaosSchedule, Membership  # noqa: E402
 from repro.optim import make_optimizer  # noqa: E402
 
 CASES = sys.argv[1:] or ["parity", "straggler", "resize", "checkpoint",
-                         "chaos", "padtail"]
+                         "chaos", "padtail", "dcn"]
 failures = 0
 W = 8                                   # rack size for the exchange cases
 STEPS = 3
@@ -539,6 +539,61 @@ def check_chaos():
            f"losses_equal={l1 == l2}")
 
 
+def check_dcn():
+    """Per-tier DCN wire under elasticity (DESIGN.md §16) — the
+    hierarchical strategy with its cross-pod leg on an int8 wire:
+
+    all-live   ``Membership.full`` takes the static fast path, so the
+               elastic client is BITWISE the membership-free client
+               (identical compiled program), encoded DCN leg included.
+    masked     With dead workers (the k4 membership), the dead ranks'
+               pushes are invisible to the encoded exchange: huge-but-
+               finite garbage pushed from dead ranks gives BITWISE the
+               same params, slots, and wire_ef residual as zero pushes —
+               the live-region isolation claim for the DCN tier (a mask
+               applied *after* quantization would move every chunk's
+               scale and fail this by whole grid steps)."""
+    mesh = mesh_of(8, (2, 4), ("pod", "data"))
+    like = external_pytree()
+    tc = TrainConfig(optimizer="nesterov", strategy="hierarchical",
+                     lr=3e-2, momentum=0.9, chunk_size_bytes=1024,
+                     pipeline_windows=2, wire_format="identity",
+                     wire_format_dcn="int8")
+    rng = np.random.default_rng(17)
+    params0 = float_tree(like, rng)
+    grads = [float_tree(like, rng, lead=W) for _ in range(STEPS)]
+
+    p_ref, o_ref = run_client(tc, mesh, like, params0, grads)
+    p_el, o_el = run_client(tc, mesh, like, params0, grads,
+                            membership=Membership.full(W))
+    bad = mismatches(p_ref, p_el) + mismatches(o_ref, o_el)
+    res = float(max(np.abs(np.asarray(v["wire_ef"])).max()
+                    for v in o_el.values()))
+    report(bad == 0 and res > 0, "dcn all-live bitwise == static client",
+           f"mismatched_elems={bad} max_residual={res:.2e}")
+
+    membership, live = straggler_membership("k4")
+    dead = [i for i in range(W) if i not in live]
+
+    def with_dead_rows(g, fill):
+        def one(v):
+            arr = np.asarray(v).copy()
+            arr[dead] = fill(arr[dead])
+            return jnp.asarray(arr)
+        return jax.tree.map(one, g)
+
+    garbage = [with_dead_rows(g, lambda x: 1e30 * (1.0 + np.abs(x)))
+               for g in grads]
+    zeroed = [with_dead_rows(g, np.zeros_like) for g in grads]
+    p_g, o_g = run_client(tc, mesh, like, params0, garbage,
+                          membership=membership)
+    p_z, o_z = run_client(tc, mesh, like, params0, zeroed,
+                          membership=membership)
+    bad = mismatches(p_g, p_z) + mismatches(o_g, o_z)
+    report(bad == 0, "dcn masked dead pushes invisible (bitwise)",
+           f"mismatched_elems={bad}")
+
+
 def main():
     for case in CASES:
         if case == "parity":
@@ -553,6 +608,8 @@ def main():
             check_chaos()
         elif case == "padtail":
             check_padtail()
+        elif case == "dcn":
+            check_dcn()
         else:
             raise SystemExit(f"unknown case {case!r}")
     sys.exit(1 if failures else 0)

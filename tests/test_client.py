@@ -201,14 +201,17 @@ def test_checkpoint_legacy_single_momentum_restores(tmp_path):
 
 @pytest.mark.slow
 @pytest.mark.parametrize("case", ["sharded_ps", "hierarchical", "mixed_co",
-                                  "wire"])
+                                  "wire", "dcn"])
 def test_multidevice_client_oracle(case):
     """PHubClient push_pull on an external pytree is bitwise-equal to the
     single-process reference (all optimizers × windows, identity wire
-    asserted explicitly), mixed-opt co-scheduling tracks solo, and the
-    wire case proves encoded-wire determinism (windowed == monolithic,
+    asserted explicitly), mixed-opt co-scheduling tracks solo, the wire
+    case proves encoded-wire determinism (windowed == monolithic,
     bitwise), the int8 residual migration lifecycle, and int8+EF
-    convergence — 8 forced host devices."""
+    convergence, and the dcn case proves the per-tier DCN wire oracles
+    (identity tier bitwise == legacy psum; int8 tier window-invariant to
+    one grid step; the DCN residual rides wire_ef) — 8 forced host
+    devices."""
     proc = subprocess.run(
         [sys.executable, os.path.join(ROOT, "tests", "multidevice",
                                       "check_client.py"), case],

@@ -1,0 +1,184 @@
+"""Property tests for the two-tier exchange cost model (DESIGN.md §16).
+
+Four contracts the autotuner's analytic ranking rests on:
+
+  * predicted link bytes are monotone in model size — a bigger model
+    never predicts cheaper, so the ranking cannot invert on scale alone;
+  * the ICI/DCN tier split is conservative: moving the sharded_ps ring
+    across a pod boundary reassigns bytes to the DCN tier but their sum
+    equals the untiered total bit-for-bit;
+  * ``hierarchical`` at pod_size == 1 *is* ``sharded_ps`` — the DCN leg
+    vanishes and every predicted figure collapses to the flat strategy;
+  * the DCN-tier wire prediction is exactly the wire's payload accounting
+    (per-window encoded all-gather), so predictions across wires scale by
+    the wire dtype ratio (plus the quantized formats' scale sidecar).
+
+Hypothesis drives randomized instances where installed; the same
+checkers run over a deterministic grid everywhere (pure arithmetic, no
+devices), so the contracts are enforced even without hypothesis.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.chunking import build_plan
+from repro.core.cost_model import RackTopology, predicted_step_seconds
+from repro.core.wire import WireFormat
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+# an even-tiered topology: the tier-split property compares seconds too,
+# which only sum cleanly when both tiers price a byte identically
+EVEN = RackTopology(n_workers_per_rack=8, n_racks=1, bw_worker=10e9,
+                    bw_pbox=10e9, bw_core=1e9, bw_ici=1e9, bw_dcn=1e9,
+                    lat_ici=1e-6, lat_dcn=1e-6)
+
+
+def groups_for(n_elems, chunk_bytes, n_shards=8):
+    like = {"w": jax.ShapeDtypeStruct((n_elems,), jnp.float32)}
+    return build_plan(like, chunk_bytes=chunk_bytes,
+                      n_shards=n_shards).groups
+
+
+def total_bytes(pred):
+    return pred["bytes"]["ici"] + pred["bytes"]["dcn"]
+
+
+# ------------------------------------------------------------- checkers
+
+def check_bytes_monotone(n_elems, extra, chunk_bytes, windows, wire_name):
+    """bytes(model + extra) >= bytes(model) for every strategy/wire."""
+    wire = (None if wire_name == "identity"
+            else WireFormat(name=wire_name, use_pallas=False))
+    for strategy, pod, wdcn in (("sharded_ps", 1, None),
+                                ("hierarchical", 2, None),
+                                ("hierarchical", 2, wire),
+                                ("allreduce", 1, None)):
+        if strategy == "allreduce" and wire is not None:
+            continue
+        kw = dict(strategy=strategy, topo=EVEN, windows=windows,
+                  n_workers=8, pod_size=pod,
+                  wire=None if strategy == "allreduce" else wire,
+                  wire_dcn=wdcn)
+        small = predicted_step_seconds(groups_for(n_elems, chunk_bytes),
+                                       **kw)
+        big = predicted_step_seconds(
+            groups_for(n_elems + extra, chunk_bytes), **kw)
+        assert total_bytes(big) >= total_bytes(small), \
+            (strategy, wire_name, n_elems, extra)
+
+
+def check_tier_split_sums(n_elems, chunk_bytes, windows):
+    """sharded_ps across a pod boundary: every ring byte moves to the DCN
+    tier, the tier totals sum to the untiered (flat) total exactly."""
+    groups = groups_for(n_elems, chunk_bytes)
+    kw = dict(strategy="sharded_ps", topo=EVEN, windows=windows,
+              n_workers=8)
+    flat = predicted_step_seconds(groups, pod_size=1, **kw)
+    split = predicted_step_seconds(groups, pod_size=2, **kw)
+    assert flat["bytes"]["dcn"] == 0.0
+    assert split["bytes"]["ici"] == 0.0
+    assert total_bytes(split) == total_bytes(flat)
+    # with both tiers priced identically the time is tier-invariant too
+    assert split["seconds"] == pytest.approx(flat["seconds"], rel=1e-12)
+
+
+def check_hierarchical_collapses(n_elems, chunk_bytes, windows, wire_name):
+    """pod_size == 1 hierarchical == sharded_ps on every returned figure."""
+    wire = (None if wire_name == "identity"
+            else WireFormat(name=wire_name, use_pallas=False))
+    groups = groups_for(n_elems, chunk_bytes)
+    kw = dict(topo=EVEN, windows=windows, n_workers=8, pod_size=1,
+              wire=wire)
+    hier = predicted_step_seconds(groups, strategy="hierarchical", **kw)
+    flat = predicted_step_seconds(groups, strategy="sharded_ps", **kw)
+    assert hier == flat
+
+
+def check_dcn_wire_scales(n_elems, chunk_bytes, windows):
+    """The DCN tier carries exactly the wire's payload accounting for the
+    per-window encoded all-gather, so two wires' DCN bytes stand in their
+    payload ratio — the dtype ratio plus the quantized scale sidecar."""
+    groups = groups_for(n_elems, chunk_bytes)
+    preds = {}
+    for name in ("bf16", "int8"):
+        w = WireFormat(name=name, use_pallas=False)
+        pred = predicted_step_seconds(
+            groups, strategy="hierarchical", topo=EVEN, windows=windows,
+            n_workers=8, pod_size=2, wire_dcn=w)
+        expected = 0.0
+        for g in groups:
+            from repro.core.pipeline import effective_windows
+            W = effective_windows(g, windows)
+            lw = g.shard_len // W
+            expected += W * w.payload_bytes(lw, "float32",
+                                            g.chunk_elems) * (2 - 1)
+        assert pred["bytes"]["dcn"] == expected, name
+        preds[name] = pred["bytes"]["dcn"]
+    # bf16 is 2 B/elem with no sidecar; int8 is 1 B/elem + f32 scales.
+    # Their ratio sits between the pure dtype ratio (2x) and the
+    # sidecar-inflated worst case (chunk_elems >= 8 keeps it below 2).
+    ratio = preds["bf16"] / preds["int8"]
+    assert 1.0 < ratio <= 2.0
+
+
+# ------------------------------------------------------ deterministic grid
+
+GRID = [(1000, 8 * 1024, 1), (4096, 4 * 1024, 2), (100_000, 32 * 1024, 4),
+        (7, 8 * 1024, 1), (215_040, 8 * 1024, 2)]
+
+
+@pytest.mark.parametrize("n,cb,w", GRID)
+@pytest.mark.parametrize("wire", ["identity", "bf16", "int8"])
+def test_bytes_monotone(n, cb, w, wire):
+    check_bytes_monotone(n, 1 + n // 3, cb, w, wire)
+
+
+@pytest.mark.parametrize("n,cb,w", GRID)
+def test_tier_split_sums_to_untiered(n, cb, w):
+    check_tier_split_sums(n, cb, w)
+
+
+@pytest.mark.parametrize("n,cb,w", GRID)
+@pytest.mark.parametrize("wire", ["identity", "int8"])
+def test_hierarchical_collapses_to_sharded_ps(n, cb, w, wire):
+    check_hierarchical_collapses(n, cb, w, wire)
+
+
+@pytest.mark.parametrize("n,cb,w", GRID)
+def test_dcn_wire_scales_by_dtype_ratio(n, cb, w):
+    check_dcn_wire_scales(n, cb, w)
+
+
+# ------------------------------------------------------------- hypothesis
+
+if HAVE_HYPOTHESIS:
+    sizes = st.integers(1, 1 << 18)
+    chunks = st.sampled_from([4 * 1024, 8 * 1024, 32 * 1024])
+    windows = st.sampled_from([1, 2, 4])
+
+    @settings(max_examples=30, deadline=None)
+    @given(sizes, st.integers(1, 1 << 16), chunks, windows,
+           st.sampled_from(["identity", "bf16", "int8"]))
+    def test_bytes_monotone_hyp(n, extra, cb, w, wire):
+        check_bytes_monotone(n, extra, cb, w, wire)
+
+    @settings(max_examples=30, deadline=None)
+    @given(sizes, chunks, windows)
+    def test_tier_split_sums_hyp(n, cb, w):
+        check_tier_split_sums(n, cb, w)
+
+    @settings(max_examples=30, deadline=None)
+    @given(sizes, chunks, windows,
+           st.sampled_from(["identity", "bf16", "int8"]))
+    def test_hierarchical_collapses_hyp(n, cb, w, wire):
+        check_hierarchical_collapses(n, cb, w, wire)
+
+    @settings(max_examples=30, deadline=None)
+    @given(sizes, chunks, windows)
+    def test_dcn_wire_scales_hyp(n, cb, w):
+        check_dcn_wire_scales(n, cb, w)

@@ -222,14 +222,16 @@ def test_quota_movement_lower_bound():
 
 @pytest.mark.slow
 @pytest.mark.parametrize("case", ["parity", "straggler", "resize",
-                                  "checkpoint", "chaos", "padtail"])
+                                  "checkpoint", "chaos", "padtail", "dcn"])
 def test_multidevice_elastic_oracle(case):
     """The elastic datapath is bitwise the PR-4 exchange when all workers
     are live; masked stragglers equal the live-only reference; 8→6→8
     resizes migrate every slot bitwise on live regions; checkpoints
     restore across rack sizes; a seeded chaos schedule runs end to end;
-    adam's k slots hold 0 on dead pad tails through a resize round trip —
-    12 forced host devices."""
+    adam's k slots hold 0 on dead pad tails through a resize round trip;
+    the per-tier int8 DCN wire is bitwise the static client when all-live
+    and bitwise ignores dead ranks' pushes when masked — 12 forced host
+    devices."""
     proc = subprocess.run(
         [sys.executable, os.path.join(ROOT, "tests", "multidevice",
                                       "check_elastic.py"), case],

@@ -1,0 +1,213 @@
+"""Autotuner unit tests (DESIGN.md §16): search-space validity, the
+winner cache, and the rank -> time -> lint-gate -> cache flow with
+injected timer/linter fakes — no subprocesses, no devices.  The real
+subprocess seams (tuner_candidate timing, launch/lint.py --tuned) are
+exercised by launch/tune.py in CI and benchmarks/autotune.py.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import TrainConfig
+from repro.core.pipeline import PIPELINED_STRATEGIES
+from repro.tuning import (autotune, cache_key, cache_path, enumerate_space,
+                          load_cached, mesh_shapes, rank_candidates,
+                          store_winner, valid)
+from repro.tuning.space import Candidate
+from repro.tuning.tuner import _incumbent
+
+LIKE = {"w": jax.ShapeDtypeStruct((4096, 16), jnp.float32),
+        "b": jax.ShapeDtypeStruct((300,), jnp.float32)}
+
+QUIET = dict(log=lambda *a, **k: None)
+
+
+def ok_linter(c):
+    return {"ok": True, "errors": []}
+
+
+def entry_for(c, us=100.0, ok=True):
+    return {"candidate": c.to_dict(), "predicted": {"seconds": 1e-4},
+            "measured_us": us, "lint": {"ok": ok, "errors": []},
+            "devices": 8, "steps": 5, "leaderboard": [], "rejected": []}
+
+
+# ------------------------------------------------------------------ space
+
+def test_enumerated_space_is_valid_and_deduplicated():
+    space = enumerate_space(8)
+    assert space and len(space) == len(set(space))
+    for c in space:
+        assert valid(c, 8)
+        assert c.pods * c.data == 8 and c.data >= 2
+        if c.strategy == "hierarchical":
+            assert c.pods > 1
+        if c.strategy == "allreduce":
+            assert c.pods == 1
+        if c.strategy not in PIPELINED_STRATEGIES:
+            assert c.pipeline_windows == 1
+            assert c.wire_format == "identity"
+        if c.wire_format_dcn not in (None, "identity"):
+            assert c.strategy == "hierarchical" and c.pods > 1
+
+
+def test_mesh_shapes_factor_device_count():
+    assert mesh_shapes(8) == [(1, 8), (2, 4), (4, 2)]
+    assert mesh_shapes(2) == [(1, 2)]
+
+
+def test_rank_candidates_sorted_and_complete():
+    ranked = rank_candidates(LIKE, enumerate_space(8))
+    secs = [p["seconds"] for _, p in ranked]
+    assert secs == sorted(secs)
+    # every strategy the space admits survives the cost model
+    assert {c.strategy for c, _ in ranked} == {"allreduce", "sharded_ps",
+                                               "hierarchical"}
+
+
+# ------------------------------------------------------------------ cache
+
+def test_cache_roundtrip_and_lint_distrust(tmp_path):
+    c = Candidate("sharded_ps", 1, "identity", None, 32 * 1024, 1, 8)
+    key = cache_key(TrainConfig(), 8, LIKE)
+    store_winner(key, entry_for(c), str(tmp_path))
+    got = load_cached(key, str(tmp_path))
+    assert got["candidate"] == c.to_dict()
+    # a red lint verdict is never trusted — forces a re-tune
+    store_winner(key, entry_for(c, ok=False), str(tmp_path))
+    assert load_cached(key, str(tmp_path)) is None
+    # corruption degrades to a miss, not a crash
+    with open(cache_path(key, str(tmp_path)), "w") as f:
+        f.write("{not json")
+    assert load_cached(key, str(tmp_path)) is None
+
+
+def test_cache_key_tracks_request_not_winner():
+    base = cache_key(TrainConfig(), 8, LIKE)
+    assert base == cache_key(TrainConfig(), 8, LIKE)
+    assert base != cache_key(TrainConfig(), 4, LIKE)
+    assert base != cache_key(TrainConfig(wire_format_dcn="int8"), 8, LIKE)
+    other = {"w": jax.ShapeDtypeStruct((4096, 17), jnp.float32),
+             "b": LIKE["b"]}
+    assert base != cache_key(TrainConfig(), 8, other)
+
+
+# -------------------------------------------------------------- autotune
+
+# a controlled space: the analytic rank order over these is irrelevant to
+# the tests below — the fakes decide the measured order
+CANDS = [Candidate("sharded_ps", 1, "identity", None, 32 * 1024, 1, 8),
+         Candidate("sharded_ps", 2, "bf16", None, 8 * 1024, 1, 8),
+         Candidate("sharded_ps", 2, "int8", None, 8 * 1024, 1, 8),
+         Candidate("hierarchical", 2, "identity", "int8", 8 * 1024, 2, 4)]
+
+
+def test_autotune_flow_and_cache_hit(tmp_path):
+    timed = []
+
+    def timer(c):
+        timed.append(c)
+        return 50.0 if c.wire_format == "bf16" else 100.0
+
+    report = autotune(LIKE, TrainConfig(), 8, cache_dir=str(tmp_path),
+                      candidates=CANDS, top_k=4, timer=timer,
+                      linter=ok_linter, **QUIET)
+    assert not report["cache_hit"]
+    assert report["timed_candidates"] == len(timed)
+    assert report["candidate"]["wire_format"] == "bf16"
+    us = [r["us"] for r in report["leaderboard"]]
+    assert us == sorted(us)
+    # second invocation: zero timed steps, same winner
+    n_before = len(timed)
+    again = autotune(LIKE, TrainConfig(), 8, cache_dir=str(tmp_path),
+                     candidates=CANDS, top_k=4, timer=timer,
+                     linter=ok_linter, **QUIET)
+    assert again["cache_hit"] and again["timed_candidates"] == 0
+    assert len(timed) == n_before
+    assert again["candidate"] == report["candidate"]
+    # force re-tunes
+    forced = autotune(LIKE, TrainConfig(), 8, cache_dir=str(tmp_path),
+                      candidates=CANDS, top_k=4, force=True, timer=timer,
+                      linter=ok_linter, **QUIET)
+    assert not forced["cache_hit"] and len(timed) > n_before
+
+
+def test_autotune_lint_gate_falls_through(tmp_path):
+    def linter(c):
+        if c.wire_format == "bf16":
+            return {"ok": False, "errors": [{"message": "R1"}]}
+        return {"ok": True, "errors": []}
+
+    report = autotune(LIKE, TrainConfig(), 8, cache_dir=str(tmp_path),
+                      candidates=CANDS, top_k=4,
+                      timer=lambda c: 50.0 if c.wire_format == "bf16"
+                      else 100.0,
+                      linter=linter, **QUIET)
+    assert report["candidate"]["wire_format"] != "bf16"
+    assert any(r["candidate"]["wire_format"] == "bf16"
+               for r in report["rejected"])
+    # the cached entry is the gated winner, loadable
+    assert load_cached(report["key"],
+                       str(tmp_path))["candidate"] == report["candidate"]
+
+
+def test_autotune_all_rejected_fails_closed(tmp_path):
+    with pytest.raises(RuntimeError, match="lint-rejected"):
+        autotune(LIKE, TrainConfig(), 8, cache_dir=str(tmp_path),
+                 top_k=2, timer=lambda c: 1.0,
+                 linter=lambda c: {"ok": False, "errors": []}, **QUIET)
+    # a failed tune must not poison the cache
+    assert load_cached(cache_key(TrainConfig(), 8, LIKE),
+                       str(tmp_path)) is None
+
+
+def test_autotune_timing_failures_are_skipped(tmp_path):
+    def timer(c):
+        if c.strategy == "allreduce":
+            raise RuntimeError("worker died")
+        return 10.0
+
+    report = autotune(
+        LIKE, TrainConfig(), 8, cache_dir=str(tmp_path),
+        candidates=[Candidate("allreduce", 1, "identity", None,
+                              32 * 1024, 1, 8),
+                    Candidate("sharded_ps", 1, "identity", None,
+                              32 * 1024, 1, 8)],
+        timer=timer, linter=ok_linter, **QUIET)
+    assert report["candidate"]["strategy"] == "sharded_ps"
+
+
+def test_autotune_always_times_the_incumbent(tmp_path):
+    """Even when the cost model ranks the caller's baseline config out of
+    the top-k (or clean out of a restricted space), it gets timed — a
+    mispriced model cannot crown a winner slower than the default."""
+    timed = []
+
+    def timer(c):
+        timed.append(c)
+        return 10.0 if c == _incumbent(TrainConfig(), 8) else 99.0
+
+    restricted = [Candidate("sharded_ps", 2, "int8", None, 8 * 1024, 1, 8)]
+    report = autotune(LIKE, TrainConfig(), 8, cache_dir=str(tmp_path),
+                      candidates=restricted, timer=timer,
+                      linter=ok_linter, **QUIET)
+    inc = _incumbent(TrainConfig(), 8)
+    assert inc in timed
+    assert Candidate.from_dict(report["candidate"]) == inc
+
+
+def test_incumbent_mirrors_the_train_config():
+    inc = _incumbent(TrainConfig(), 8)
+    assert inc == Candidate("sharded_ps", 1, "identity", None, 32 * 1024,
+                            1, 8)
+    # a hierarchical baseline has no flat-mesh expression
+    assert _incumbent(TrainConfig(strategy="hierarchical"), 8) is None
+
+
+def test_autotune_report_is_json_serializable(tmp_path):
+    report = autotune(LIKE, TrainConfig(), 8, cache_dir=str(tmp_path),
+                      top_k=2, timer=lambda c: 1.0, linter=ok_linter,
+                      **QUIET)
+    json.dumps(report)
