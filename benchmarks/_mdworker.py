@@ -925,7 +925,76 @@ def bench_tuner_candidate(p):
     return {"us": us, "bytes": client.registered_bytes()}
 
 
+def bench_calibration_probe(p):
+    """tuning/calibrate.run_probe_programs under this worker's forced
+    device count — the subprocess seam ``probe_subprocess`` rides."""
+    from repro.tuning.calibrate import run_probe_programs
+    return run_probe_programs(int(p["devices"]),
+                              elems=int(p.get("elems", 1 << 21)),
+                              chunk_kb=int(p.get("chunk_kb", 32)),
+                              reps=int(p.get("reps", 5)))
+
+
+def bench_telemetry_overhead(p):
+    """Telemetry-on vs -off zero-compute step time (§17's <=2% overhead
+    budget) plus the program-identity check: the step lowered with
+    tracing enabled must be byte-identical to the untraced lowering
+    (spans are host-side only — the retrace detector stays clean)."""
+    import jax
+    from repro import telemetry
+    from repro.configs import ARCHS, TrainConfig, reduced
+    from repro.core import PHubEngine
+
+    n = int(p.get("devices", 8))
+    mesh = jax.make_mesh((n, 1), ("data", "model"))
+    cfg = reduced(ARCHS[p.get("arch", "llama3.2-1b")])
+    tc = TrainConfig(strategy=p.get("strategy", "sharded_ps"),
+                     chunk_size_bytes=int(p.get("chunk_kb", 32)) * 1024)
+    eng = PHubEngine(cfg=cfg, tc=tc, mesh=mesh)
+
+    telemetry.disable()
+    hlo_off = eng.lower_zero_compute_step().as_text()
+    telemetry.enable(seed=0)
+    hlo_on = eng.lower_zero_compute_step().as_text()
+    telemetry.disable()
+
+    # ONE compiled step reused by both modes, off/on reps interleaved
+    # pairwise — shared-CPU hosts drift rep to rep far more than a span
+    # costs, and pairing cancels the drift out of the comparison
+    zstep = eng.make_zero_compute_step()
+    state = eng.init_state(jax.random.PRNGKey(0))
+    reps = int(p.get("reps", 15))
+    for _ in range(2):
+        state = zstep(*state)
+        jax.block_until_ready(jax.tree.leaves(state)[0])
+    ts_off, ts_on = [], []
+    n_spans = 0
+    for i in range(reps):
+        for on in (False, True):
+            if on:
+                telemetry.enable(seed=0)
+            tracer = telemetry.get_tracer()
+            t0 = time.perf_counter()
+            with tracer.step(i):
+                state = zstep(*state)
+                jax.block_until_ready(jax.tree.leaves(state)[0])
+            (ts_on if on else ts_off).append(time.perf_counter() - t0)
+            if on:
+                n_spans += len(telemetry.get_tracer().records)
+                telemetry.disable()
+    ts_off.sort()
+    ts_on.sort()
+    us_off = ts_off[len(ts_off) // 2] * 1e6
+    us_on = ts_on[len(ts_on) // 2] * 1e6
+    return {"us_off": us_off, "us_on": us_on,
+            "overhead": us_on / us_off - 1.0,
+            "spans_recorded": n_spans,
+            "hlo_identical": hlo_off == hlo_on}
+
+
 BENCHES = {"exchange_only": bench_exchange_only,
+           "calibration_probe": bench_calibration_probe,
+           "telemetry_overhead": bench_telemetry_overhead,
            "tuner_candidate": bench_tuner_candidate,
            "backward_overlap": bench_backward_overlap,
            "train_step": bench_train_step,

@@ -87,13 +87,57 @@ def median(xs: list) -> float:
     return (xs[n // 2] if n % 2 else (xs[n // 2 - 1] + xs[n // 2]) / 2.0)
 
 
+def _trajectory_attribution(cells: dict) -> dict:
+    """Cost-model phase fractions for the exchange-only trajectory cells
+    (DESIGN.md §17): each measured time is attributed over the model's
+    ici/dcn/codec split for that cell's exact payload, so a regression in
+    a snapshot comes labelled with *which* wire phase moved.  The
+    backward_overlap cells carry compute and are left unattributed."""
+    import jax
+    import jax.numpy as jnp
+    from repro.telemetry import attribute_step, phase_fractions
+    from repro.tuning.cost import DEFAULT_TOPOLOGY, predict
+    from repro.tuning.space import Candidate
+
+    specs = {
+        "pipeline_overlap/8w/gn_bf16_group_19mb/win1":
+            (4 * (1 << 20) + 3 * (1 << 18), 1, "identity", 8),
+        "pipeline_overlap/8w/gn_bf16_group_19mb/win2":
+            (4 * (1 << 20) + 3 * (1 << 18), 2, "identity", 8),
+        "wire_sweep/4w/gn_dense_38mb/win1/identity":
+            (9 * (1 << 20) + (1 << 19), 1, "identity", 4),
+        "wire_sweep/4w/gn_dense_38mb/win1/int8":
+            (9 * (1 << 20) + (1 << 19), 1, "int8", 4),
+    }
+    out = {}
+    for cell, (elems, windows, wire, data) in specs.items():
+        if cell not in cells:
+            continue
+        cand = Candidate(strategy="sharded_ps", pipeline_windows=windows,
+                         wire_format=wire, wire_format_dcn=None,
+                         chunk_size_bytes=32 * 1024, pods=1, data=data)
+        like = {"w": jax.ShapeDtypeStruct((elems,), jnp.float32)}
+        pred = predict(like, cand, DEFAULT_TOPOLOGY)
+        meas_s = cells[cell] / 1e6
+        # exchange-only cell: the whole measured step IS the exchange
+        rows = attribute_step(meas_s, meas_s, pred)
+        out[cell] = {
+            "measured_s": round(meas_s, 6),
+            "predicted_s": round(pred["seconds"], 6),
+            "fractions": {k: round(v, 4)
+                          for k, v in phase_fractions(rows).items()}}
+    return out
+
+
 def run_trajectory(out_path: str = None) -> dict:
     """Median step times for the canonical exchange cells, snapshotted to
     a top-level ``BENCH_<date>.json``: one windowed-pipeline cell, one
     wire-format cell, one chunk-ready-overlap cell — the three numbers a
     perf regression in the exchange machinery cannot hide from.  Each
     payload mirrors the corresponding module's first configuration
-    (reduced reps — this is a snapshot, not the full sweep)."""
+    (reduced reps — this is a snapshot, not the full sweep).  The
+    snapshot also carries cost-model phase fractions per exchange cell
+    (``_trajectory_attribution``) so a moved number names its phase."""
     from .common import ROOT, run_multidevice
     cells = {}
     r = run_multidevice(
@@ -122,7 +166,8 @@ def run_trajectory(out_path: str = None) -> dict:
 
     date = datetime.date.today().isoformat()
     snap = {"date": date, "cells": {k: round(v, 1)
-                                    for k, v in cells.items()}}
+                                    for k, v in cells.items()},
+            "attribution": _trajectory_attribution(cells)}
     out_path = out_path or os.path.join(ROOT, f"BENCH_{date}.json")
     with open(out_path, "w") as f:
         json.dump(snap, f, indent=1, sort_keys=True)

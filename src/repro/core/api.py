@@ -32,6 +32,7 @@ import numpy as np
 from ..configs.base import ModelConfig, TrainConfig
 from ..elastic import Membership, plan_rebalance
 from ..elastic.rebalance import migrate_engine_state
+from ..telemetry import get_registry, get_tracer
 from . import cost_model
 from .chunking import TenantPackedDomain, pack_domains
 from .engine import (PHubEngine, co_opt_state_shapes, co_opt_state_shardings,
@@ -91,6 +92,8 @@ class PHubConnectionManager:
         # resilience (DESIGN.md §13): an optional ExchangeWatchdog wraps
         # every compiled-step dispatch (push_pull and co_step)
         self._watchdog = None
+        # telemetry (§17): per-namespace per-step traffic, computed once
+        self._traffic_cache: dict[str, dict] = {}
         # step-build events across every cache (solo + co), audited by
         # rack-lint R2 (DESIGN.md §15): recompiles without a program-key
         # change are a silent retrace and fail the lint
@@ -124,25 +127,37 @@ class PHubConnectionManager:
                              "count) or set_membership explicitly")
         return self._membership
 
+    def _note_membership(self, kind: str, rank: int = None):
+        """Structured membership-transition emission (DESIGN.md §17) —
+        the queryable record of every live-set change."""
+        m = self._membership
+        reg = get_registry()
+        reg.event("membership", kind=kind, rank=rank, epoch=m.epoch)
+        reg.gauge("membership.epoch").set(float(m.epoch))
+
     def join(self, rank: int) -> Membership:
         """Worker ``rank`` (re)joined the rack."""
         self._membership = self._require_membership().join(rank)
+        self._note_membership("join", rank)
         return self._membership
 
     def leave(self, rank: int) -> Membership:
         """Worker ``rank`` left (failure or scale-down): its pushes are
         excluded from every subsequent step until it joins back."""
         self._membership = self._require_membership().leave(rank)
+        self._note_membership("leave", rank)
         return self._membership
 
     def mark_slow(self, rank: int, factor: float) -> Membership:
         """Worker ``rank`` straggles at ``factor``×: stop waiting for it
         (k-of-n partial aggregation)."""
         self._membership = self._require_membership().mark_slow(rank, factor)
+        self._note_membership("mark_slow", rank)
         return self._membership
 
     def mark_recovered(self, rank: int) -> Membership:
         self._membership = self._require_membership().mark_recovered(rank)
+        self._note_membership("mark_recovered", rank)
         return self._membership
 
     def demote(self, rank: int) -> Membership:
@@ -150,6 +165,8 @@ class PHubConnectionManager:
         supervisor's containment transition for repeat offenders and
         stalled exchanges."""
         self._membership = self._require_membership().demote(rank)
+        get_registry().counter("membership.demotions").inc(rank=rank)
+        self._note_membership("demote", rank)
         return self._membership
 
     # ------------------------------------------------------- resilience
@@ -240,13 +257,47 @@ class PHubConnectionManager:
             svc.steps[key] = svc.engine.make_train_step(
                 shapes, membership=self._step_membership())
             self.compile_count += 1
-        return self._dispatch(svc.steps[key], params, opt, batch)
+        with get_tracer().span("exchange/push_pull", ns=handle.namespace):
+            out = self._dispatch(svc.steps[key], params, opt, batch)
+        reg = get_registry()
+        if reg.enabled:
+            t = self._solo_step_traffic(svc, handle.namespace)
+            if t:
+                reg.counter("exchange.bytes").inc(
+                    t["push_bytes"] + t["pull_bytes"],
+                    tenant=handle.namespace, basis="raw")
+                reg.counter("exchange.bytes").inc(
+                    t["wire_push_bytes"] + t["wire_pull_bytes"],
+                    tenant=handle.namespace, basis="wire")
+        return out
+
+    def _solo_step_traffic(self, svc, ns: str) -> dict:
+        """Per-step raw/wire bytes for a solo tenant — the same
+        cost_model figures the co-scheduled accounting carries, cached
+        per namespace (the plan is static between re-registers)."""
+        t = self._traffic_cache.get(ns)
+        if t is None:
+            eng = svc.engine
+            plan = eng.chunk_plan
+            if plan is None:                 # fsdp_stream: no chunk domain
+                t = {}
+            else:
+                padded = sum(g.padded * np.dtype(g.dtype).itemsize
+                             for g in plan.groups)
+                wire_b = cost_model.wire_bytes_for_groups(
+                    [(g.padded, g.dtype, g.chunk_elems)
+                     for g in plan.groups], eng.wire)
+                t = cost_model.tenant_step_traffic(
+                    eng.tc.strategy, padded, eng.ctx.n_workers, wire_b)
+            self._traffic_cache[ns] = t
+        return t
 
     def destroy_service(self, handle: ServiceHandle):
         self._auth(handle)
         if handle.namespace in self._attached:
             self.detach_service(handle)     # reclaims its chunk ranges
         del self._services[handle.namespace]
+        self._traffic_cache.pop(handle.namespace, None)
         if not self._services:
             # an empty rack has no worker set; the next created service
             # sizes a fresh membership from its own mesh
@@ -344,33 +395,43 @@ class PHubConnectionManager:
                 {ns: self._services[ns].engine for ns in self._attached},
                 co.domain, shapes, membership=self._step_membership())
             self.compile_count += 1
-        new_p, co.opt, metrics = self._dispatch(co.steps[key], params_by,
-                                                co.opt, batches)
+        with get_tracer().span("exchange/co_step",
+                               tenants=len(self._attached)):
+            new_p, co.opt, metrics = self._dispatch(co.steps[key], params_by,
+                                                    co.opt, batches)
+        reg = get_registry()
         for ns in self._attached:
             t = co.traffic.setdefault(
                 ns, {"steps": 0, "push_bytes": 0.0, "pull_bytes": 0.0,
                      "wire_push_bytes": 0.0, "wire_pull_bytes": 0.0})
+            per = co.acct[ns]["per_step"]
             t["steps"] += 1
-            t["push_bytes"] += co.acct[ns]["push_bytes"]
-            t["pull_bytes"] += co.acct[ns]["pull_bytes"]
-            t["wire_push_bytes"] += co.acct[ns]["wire_push_bytes"]
-            t["wire_pull_bytes"] += co.acct[ns]["wire_pull_bytes"]
+            for k in ("push_bytes", "pull_bytes",
+                      "wire_push_bytes", "wire_pull_bytes"):
+                t[k] += per[k]
+            reg.counter("exchange.bytes").inc(
+                per["push_bytes"] + per["pull_bytes"],
+                tenant=ns, basis="raw")
+            reg.counter("exchange.bytes").inc(
+                per["wire_push_bytes"] + per["wire_pull_bytes"],
+                tenant=ns, basis="wire")
         return new_p, metrics
 
     def accounting(self) -> dict:
         """Per-tenant byte/step accounting for the co-scheduled domain:
-        cumulative wire traffic plus the tenant's packed-domain residency
-        (cost_model.tenant_accounting)."""
+        the tenant's packed-domain residency and per-step traffic
+        (cost_model.tenant_accounting — flat statics + ``"per_step"``)
+        plus a ``"cumulative"`` block with the stepped totals.  The two
+        traffic blocks share key names by design; they live in separate
+        namespaces so neither can shadow the other."""
         if self._co is None:
             return {}
         out = {}
         for ns in self._attached:
-            out[ns] = {**self._co.acct[ns],
-                       **self._co.traffic.get(
-                           ns, {"steps": 0, "push_bytes": 0.0,
-                                "pull_bytes": 0.0,
-                                "wire_push_bytes": 0.0,
-                                "wire_pull_bytes": 0.0})}
+            cum = {"steps": 0, "push_bytes": 0.0, "pull_bytes": 0.0,
+                   "wire_push_bytes": 0.0, "wire_pull_bytes": 0.0}
+            cum.update(self._co.traffic.get(ns, {}))
+            out[ns] = {**self._co.acct[ns], "cumulative": cum}
         return out
 
     # ------------------------------------------------------- rack resizing
@@ -421,6 +482,7 @@ class PHubConnectionManager:
             svc = self._services[ns]
             svc.engine = new_eng
             svc.steps.clear()
+        self._traffic_cache.clear()       # per-step bytes re-derive (§17)
         world = next(iter(rebuilt.values()))[1].ctx.n_workers
         self._membership = (self._membership.resized(world)
                             if self._membership
@@ -439,6 +501,13 @@ class PHubConnectionManager:
         self.last_rebalance = {"co": co_traffic, "solo": solo_traffic,
                                "world": world,
                                "epoch": self._membership.epoch}
+        moved = ((co_traffic or {}).get("moved_bytes", 0.0)
+                 + sum(t["moved_bytes"] for t in solo_traffic.values()))
+        reg = get_registry()
+        reg.counter("rebalance.moved_bytes").inc(moved)
+        reg.event("rebalance", world=world,
+                  epoch=self._membership.epoch, moved_bytes=moved)
+        self._note_membership("resize")
         return out
 
     # ------------------------------------------------------------ internals

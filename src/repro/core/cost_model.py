@@ -147,7 +147,21 @@ def tenant_accounting(domain, strategy: str, n_workers: int,
     traffic — raw and as-encoded (``wire``: the rack's shared
     core/wire.WireFormat), so multi-tenant accounting reflects what the
     rack actually carries.  ``domain`` is duck-typed
-    (chunking.TenantPackedDomain)."""
+    (chunking.TenantPackedDomain).
+
+    One schema for the whole stack (DESIGN.md §17): the static figures
+    are flat, the *per-step* traffic lives under ``"per_step"`` —
+    ``PHubConnectionManager.accounting()`` adds a ``"cumulative"`` block
+    next to it with the same key names.  (Historically both were
+    flattened into one namespace and the cumulative run overwrote the
+    per-step figures — the drift this schema exists to prevent.)
+
+    Wire bytes are computed over each slot's *padded* extent: the wire
+    encodes whole chunk-aligned slots (core/wire payload layout), so the
+    rack carries the pad tail too — ``s.total`` undercounted int8
+    payloads by one byte per pad element plus the per-chunk scale rows of
+    the pad chunks.
+    """
     import numpy as np
     padded_total = sum(g.padded * np.dtype(g.dtype).itemsize
                        for g in domain.groups.values())
@@ -158,7 +172,7 @@ def tenant_accounting(domain, strategy: str, n_workers: int,
                      for g in domain.groups.values()
                      for s in g.slots if s.tenant == tenant)
         wire_bytes = wire_bytes_for_groups(
-            ((s.total, g.dtype, g.chunk_elems)
+            ((s.padded, g.dtype, g.chunk_elems)
              for g in domain.groups.values()
              for s in g.slots if s.tenant == tenant), wire)
         out[tenant] = {
@@ -167,8 +181,9 @@ def tenant_accounting(domain, strategy: str, n_workers: int,
             "wire_bytes": wire_bytes,
             "compression": model_bytes / max(wire_bytes, 1e-9),
             "domain_share": padded / max(padded_total, 1),
-            **tenant_step_traffic(strategy, model_bytes, n_workers,
-                                  wire_bytes=wire_bytes),
+            "per_step": tenant_step_traffic(strategy, model_bytes,
+                                            n_workers,
+                                            wire_bytes=wire_bytes),
         }
     return out
 

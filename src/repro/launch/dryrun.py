@@ -277,6 +277,15 @@ def dryrun_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
     # autotuner provenance: was this config tuned, and how good was the
     # prediction (DESIGN.md §16)
     rec["tuned"] = _tuned_record(eng)
+    # predicted per-phase decomposition of the exchange (DESIGN.md §17):
+    # the same cost-model split launch/train.py --telemetry attributes
+    # measured time against, embedded so a dry-run record is joinable
+    # with a live trace without reconstructing the engine
+    try:
+        from ..telemetry import predicted_phases
+        rec["telemetry"] = predicted_phases(eng)
+    except Exception:  # noqa: BLE001 — provenance must never fail a run
+        rec["telemetry"] = None
     if probe:
         # trip-count-corrected metrics (scan bodies are counted once by
         # XLA's cost analysis — see _probe_costs)

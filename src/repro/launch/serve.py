@@ -28,6 +28,11 @@ def main(argv=None):
                          "temperature-scaled logits")
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="trace prefill/decode spans + serve-latency "
+                         "histogram; artifacts under --telemetry-out "
+                         "(DESIGN.md §17)")
+    ap.add_argument("--telemetry-out", default="results/telemetry")
     args = ap.parse_args(argv)
 
     if args.devices:
@@ -35,9 +40,16 @@ def main(argv=None):
             f"--xla_force_host_platform_device_count={args.devices}")
     import jax
     import jax.numpy as jnp
+    from .. import telemetry
     from ..configs import ARCHS, TrainConfig, reduced
     from ..core import PHubEngine
     from ..data import SyntheticTokens
+
+    if args.telemetry:
+        telemetry.enable(seed=args.seed, meta={
+            "argv": list(argv) if argv is not None else [],
+            "jax": jax.__version__, "arch": args.arch, "mode": "serve"})
+    tracer, registry = telemetry.get_tracer(), telemetry.get_registry()
 
     cfg = ARCHS[args.arch]
     if args.reduced:
@@ -72,19 +84,30 @@ def main(argv=None):
         return tok[:, None].astype(jnp.int32), key
 
     t0 = time.time()
-    logits, cache = prefill_step(params, prompts)
-    logits.block_until_ready()
+    with tracer.span("prefill", batch=args.batch,
+                     prompt_len=args.prompt_len):
+        logits, cache = prefill_step(params, prompts)
+        logits.block_until_ready()
     t_prefill = time.time() - t0
+    registry.histogram("serve.latency").observe(t_prefill, phase="prefill")
     tok, key = pick(logits, key)
 
     out_tokens = [tok]
     t0 = time.time()
-    for _ in range(args.decode_steps - 1):
-        logits, cache = serve_step(params, cache, tok)
-        tok, key = pick(logits, key)
+    for i in range(args.decode_steps - 1):
+        td = time.perf_counter()
+        # span = host dispatch only; the decode chain syncs once at the
+        # end (block_until_ready below), keeping serving fully pipelined
+        with tracer.span("decode/step", i=i):
+            logits, cache = serve_step(params, cache, tok)
+            tok, key = pick(logits, key)
+        registry.histogram("serve.latency").observe(
+            time.perf_counter() - td, phase="decode_dispatch")
         out_tokens.append(tok)
     tok.block_until_ready()
     t_decode = time.time() - t0
+    registry.histogram("serve.latency").observe(t_decode,
+                                                phase="decode_total")
 
     gen = jnp.concatenate(out_tokens, axis=1)
     print(f"[serve] arch={cfg.arch_id} batch={args.batch} "
@@ -96,6 +119,20 @@ def main(argv=None):
           f"({args.batch*(args.decode_steps-1)/max(t_decode,1e-9):,.0f} tok/s)")
     print(f"[serve] sample generations (first 10 tokens): "
           f"{gen[:, :10].tolist()}")
+    if telemetry.enabled():
+        os.makedirs(args.telemetry_out, exist_ok=True)
+        tracer.write(os.path.join(args.telemetry_out, "serve_trace.json"))
+        registry.dump_jsonl(
+            os.path.join(args.telemetry_out, "serve_metrics.jsonl"))
+        s = registry.histogram("serve.latency").summary(
+            phase="decode_dispatch")
+        if s["count"]:
+            print(f"[serve] decode dispatch: mean "
+                  f"{s['sum'] / s['count'] * 1e3:.2f} ms "
+                  f"(min {s['min'] * 1e3:.2f}, max {s['max'] * 1e3:.2f}) "
+                  f"over {s['count']} steps")
+        print(f"[telemetry] artifacts: {args.telemetry_out}/"
+              f"{{serve_trace.json, serve_metrics.jsonl}}")
     return gen
 
 

@@ -111,14 +111,32 @@ def main(argv=None):
                          "gradient blow-ups, checkpoint corruption, step "
                          "stalls) for the supervisor to absorb (implies "
                          "--supervise)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="per-phase step tracing + metrics registry "
+                         "(DESIGN.md §17): runs two instrumented probe "
+                         "steps, prints the cost-model attribution table, "
+                         "and writes trace.json / metrics.jsonl / "
+                         "report.txt artifacts.  All spans are host-side: "
+                         "the compiled programs are identical with the "
+                         "flag off")
+    ap.add_argument("--telemetry-out", default="results/telemetry",
+                    help="artifact directory for --telemetry")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="solve the cost model's rack constants (bw_ici, "
+                         "allreduce_factor, bw_codec) from dedicated probe "
+                         "programs before attribution, so the "
+                         "model-agreement check runs at the calibrated "
+                         "tolerance (implies --telemetry)")
     args = ap.parse_args(argv)
     args.supervise, args.elastic = resolve_mode_flags(
         args.supervise, args.elastic, args.chaos, args.chaos_faults)
+    args.telemetry = args.telemetry or args.calibrate
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
     import jax
+    from .. import telemetry
     from ..configs import ARCHS, TrainConfig, reduced
     from ..core import PHubConnectionManager
     from ..data import SyntheticTokens
@@ -142,12 +160,24 @@ def main(argv=None):
     if args.auto_tune:
         tc, mesh = _auto_tuned(cfg, tc, args)
 
+    if args.telemetry:
+        import platform
+        telemetry.enable(seed=tc.seed, meta={
+            "argv": list(argv) if argv is not None else sys.argv[1:],
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+            "devices": jax.device_count(),
+            "arch": cfg.arch_id, "strategy": tc.strategy,
+            "windows": tc.pipeline_windows, "tenants": args.tenants})
+
     cm = PHubConnectionManager()
     if args.tenants > 1:
         if args.supervise:
             sys.exit("--supervise drives a solo engine; --tenants > 1 is "
                      "not supervised (run the jobs separately)")
-        return _train_multitenant(cm, cfg, tc, mesh, args)
+        losses = _train_multitenant(cm, cfg, tc, mesh, args)
+        _finish_telemetry(args)
+        return losses
     handle = cm.create_service("train-job", cfg, tc, mesh)
     engine = cm.connect_service(handle)
     params, opt = cm.init_service(handle, jax.random.PRNGKey(tc.seed))
@@ -156,8 +186,15 @@ def main(argv=None):
     shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
               for k, v in data.batch_at(0).items()}
 
+    probe = None
+    if args.telemetry:
+        probe = _run_probes(cm, handle, engine, params, opt, data, args,
+                            shapes)
+
     if args.supervise:
-        return _train_supervised(engine, params, opt, data, args)
+        losses = _train_supervised(engine, params, opt, data, args)
+        _finish_telemetry(args, probe)
+        return losses
 
     sched = None
     if args.elastic:
@@ -176,37 +213,200 @@ def main(argv=None):
           f"strategy={tc.strategy}")
     losses = []
     t0 = time.time()
+    tracer, registry = telemetry.get_tracer(), telemetry.get_registry()
     for step in range(args.steps):
-        if sched is not None:
-            for ev in sched.events_at(step):
-                print(f"[train] chaos step {step}: {ev.kind} "
-                      f"worker {ev.worker}"
-                      + (f" x{ev.factor:g}" if ev.kind == "slow" else ""))
-            m2 = sched.apply(cm.membership, step)
-            if m2 is not cm.membership:
-                cm.set_membership(m2)
-                print(f"[train] membership epoch {m2.epoch}: "
-                      f"{m2.n_live}/{m2.world} live")
-        batch = data.device_batch(step, mesh=mesh,
-                                  data_axes=engine.data_axes or ("data",))
-        params, opt, metrics = cm.push_pull(handle, params, opt, batch,
-                                            batch_shapes=shapes)
-        loss = float(metrics["loss"])
-        losses.append(loss)
-        if step % args.log_every == 0:
-            dt = time.time() - t0
-            tput = args.batch * args.seq * (step + 1) / dt
-            print(f"[train] step {step:4d} loss {loss:.4f} "
-                  f"({tput:,.0f} tok/s)")
-        if (args.checkpoint_dir and args.checkpoint_every
-                and (step + 1) % args.checkpoint_every == 0):
-            save_checkpoint(args.checkpoint_dir, step + 1,
-                            {"params": params, "opt": opt},
-                            membership=(cm.membership if args.elastic
-                                        else None))
+        registry.current_step = step
+        with tracer.step(step):
+            if sched is not None:
+                for ev in sched.events_at(step):
+                    print(f"[train] chaos step {step}: {ev.kind} "
+                          f"worker {ev.worker}"
+                          + (f" x{ev.factor:g}" if ev.kind == "slow"
+                             else ""))
+                m2 = sched.apply(cm.membership, step)
+                if m2 is not cm.membership:
+                    cm.set_membership(m2)
+                    print(f"[train] membership epoch {m2.epoch}: "
+                          f"{m2.n_live}/{m2.world} live")
+            with tracer.span("data"):
+                batch = data.device_batch(
+                    step, mesh=mesh,
+                    data_axes=engine.data_axes or ("data",))
+            # the connection manager's push_pull emits the
+            # exchange/push_pull span as a direct child of this step
+            params, opt, metrics = cm.push_pull(handle, params, opt, batch,
+                                                batch_shapes=shapes)
+            with tracer.span("sync"):
+                loss = float(metrics["loss"])
+            losses.append(loss)
+            if step % args.log_every == 0:
+                dt = time.time() - t0
+                tput = args.batch * args.seq * (step + 1) / dt
+                print(f"[train] step {step:4d} loss {loss:.4f} "
+                      f"({tput:,.0f} tok/s)")
+            if (args.checkpoint_dir and args.checkpoint_every
+                    and (step + 1) % args.checkpoint_every == 0):
+                with tracer.span("checkpoint"):
+                    save_checkpoint(args.checkpoint_dir, step + 1,
+                                    {"params": params, "opt": opt},
+                                    membership=(cm.membership
+                                                if args.elastic else None))
     print(f"[train] done: first-5 mean {sum(losses[:5])/5:.4f} -> "
           f"last-5 mean {sum(losses[-5:])/5:.4f}")
+    _finish_telemetry(args, probe)
     return losses
+
+
+def _run_probes(cm, handle, engine, params, opt, data, args, shapes,
+                reps: int = 3):
+    """The two instrumented probe steps (DESIGN.md §17): the zero-compute
+    exchange step (paper §4.4 — the step *is* the exchange, so it
+    measures pure PS throughput) and one full train step through the real
+    cached program, both ``block_until_ready``, medians over ``reps``.
+    The measured split is joined against the cost model's (kind, tier)
+    decomposition into the paper-style bottleneck table; with
+    ``--calibrate`` the model's rack constants are first solved from
+    dedicated probe programs so the agreement check runs at the
+    calibrated tolerance rather than the conservative floor."""
+    import dataclasses
+    import statistics
+
+    import jax
+
+    from .. import telemetry
+    from ..tuning.calibrate import (MIN_TOLERANCE, run_probe_programs,
+                                    save_calibration, solve_topology)
+    from ..tuning.cost import DEFAULT_TOPOLOGY
+
+    tracer = telemetry.get_tracer()
+    topo, tol, calib = DEFAULT_TOPOLOGY, MIN_TOLERANCE, None
+    if args.calibrate:
+        probe = run_probe_programs(jax.device_count())
+        calib = solve_topology(probe)
+        topo, tol = calib["topology"], calib["tolerance"]
+        c = calib["constants"]
+        print(f"[telemetry] calibrated: bw_ici={c['bw_ici']:.3g} "
+              f"allreduce_factor={c['allreduce_factor']:.2f} "
+              f"bw_codec={c['bw_codec']:.3g} tol={tol:.2f}")
+
+    # probe steps donate their inputs; the training loop keeps the
+    # originals, so probes run on throwaway copies
+    def copies(*trees):
+        return [jax.tree.map(lambda x: x + 0, t) for t in trees]
+
+    exchange_s = None
+    try:
+        zstep = engine.make_zero_compute_step()
+    except ValueError:
+        zstep = None                 # fsdp_stream: no chunk domain
+    if zstep is not None:
+        p, o = copies(params, opt)
+        p, o = jax.block_until_ready(zstep(p, o))      # compile + warm
+        for r in range(reps):
+            with tracer.span("probe/exchange", rep=r):
+                p, o = jax.block_until_ready(zstep(p, o))
+        exchange_s = statistics.median(
+            [rec.dur for rec in tracer.records
+             if rec.name == "probe/exchange"])
+
+    if args.calibrate:
+        # anchor the absolute rack scale to the engine's own
+        # zero-compute probe (paper §4.4: the ZeroComputeEngine *is* the
+        # pure-PS-throughput measurement) — the probe programs above fix
+        # the decomposition (allreduce vs ring, codec share), this fixes
+        # the level the engine's fused program actually achieves
+        pred0 = telemetry.predicted_phases(engine, topo)
+        if exchange_s and pred0 and pred0["comm_s"] > 0:
+            s = exchange_s / pred0["comm_s"]
+            topo = dataclasses.replace(
+                topo, bw_ici=topo.ici_bandwidth / s,
+                bw_dcn=topo.dcn_bandwidth / s,
+                bw_codec=(topo.bw_codec / s if topo.bw_codec else None))
+            calib["topology"] = topo
+            calib["anchor_scale"] = s
+            calib["constants"] = {
+                "bw_ici": topo.bw_ici, "bw_codec": topo.bw_codec,
+                "allreduce_factor": topo.allreduce_factor}
+            print(f"[telemetry] anchored to zero-compute probe "
+                  f"(scale {s:.2f}x)")
+        os.makedirs(args.telemetry_out, exist_ok=True)
+        path = save_calibration(calib, os.path.join(
+            args.telemetry_out,
+            f"calibration_{jax.device_count()}d.json"))
+        print(f"[telemetry] calibration -> {path}")
+
+    # the full-step probe goes through cm.push_pull, warming the SAME
+    # cached program the training loop will dispatch — no extra compile
+    p, o = copies(params, opt)
+    batch = data.device_batch(0, mesh=engine.mesh,
+                              data_axes=engine.data_axes or ("data",))
+    p, o, _ = jax.block_until_ready(
+        cm.push_pull(handle, p, o, batch, batch_shapes=shapes))
+    for r in range(reps):
+        with tracer.span("probe/step", rep=r):
+            p, o, _ = jax.block_until_ready(
+                cm.push_pull(handle, p, o, batch, batch_shapes=shapes))
+    step_s = statistics.median(
+        [rec.dur for rec in tracer.records if rec.name == "probe/step"])
+
+    predicted = telemetry.predicted_phases(engine, topo)
+    rows = telemetry.attribute_step(step_s, exchange_s, predicted)
+    agreement = telemetry.model_agreement(exchange_s, predicted, tol)
+    table = telemetry.format_table(
+        rows, step_s, title="[telemetry] where did the step go")
+    print(table)
+    if agreement["checked"]:
+        lo, hi = agreement["band"]
+        print(f"[telemetry] exchange vs model: measured "
+              f"{agreement['measured_s'] * 1e3:.3f} ms vs predicted "
+              f"{agreement['predicted_s'] * 1e3:.3f} ms (ratio "
+              f"{agreement['ratio']:.2f}, band [{lo:.2f}, {hi:.2f}]"
+              + ("" if agreement["ok"] else " — OUTSIDE TOLERANCE") + ")")
+    # embedded in the trace metadata so launch/trace.py --check-model can
+    # re-verify the agreement from the artifact alone
+    tracer.meta["attribution"] = {
+        "step_s": step_s, "exchange_s": exchange_s, "rel_tol": tol,
+        "predicted": predicted, "agreement": agreement, "rows": rows,
+        "topology": dataclasses.asdict(topo), "calibrated": bool(calib)}
+    return {"rows": rows, "table": table, "agreement": agreement,
+            "step_s": step_s, "exchange_s": exchange_s}
+
+
+def _finish_telemetry(args, probe=None):
+    """Write the run's telemetry artifacts (trace.json, metrics.jsonl,
+    report.txt) under --telemetry-out; a no-op when telemetry is off."""
+    from .. import telemetry
+    if not telemetry.enabled():
+        return
+    tracer, registry = telemetry.get_tracer(), telemetry.get_registry()
+    out = args.telemetry_out
+    os.makedirs(out, exist_ok=True)
+    tracer.write(os.path.join(out, "trace.json"))
+    registry.dump_jsonl(os.path.join(out, "metrics.jsonl"))
+    lines = [f"telemetry report  trace_id={tracer.trace_id} "
+             f"seed={tracer.seed}"]
+    totals = telemetry.phase_totals(
+        [r for r in tracer.records if r.step >= 0])
+    n_steps = len(tracer.step_totals())
+    if n_steps:
+        lines.append(f"  {n_steps} steps; per-phase mean over the run:")
+        for ph, s in sorted(totals.items(), key=lambda kv: -kv[1]):
+            lines.append(f"    {ph:<18} {s / n_steps * 1e3:>10.3f} ms/step")
+    if probe:
+        lines.append(probe["table"])
+        ag = probe["agreement"]
+        if ag.get("checked"):
+            lines.append(f"  model agreement: ratio {ag['ratio']:.3f} "
+                         f"in [{ag['band'][0]:.2f}, {ag['band'][1]:.2f}] "
+                         f"-> {'ok' if ag['ok'] else 'OUTSIDE TOLERANCE'}")
+    ev = registry.events()
+    lines.append(f"  {len(ev)} structured events; instruments: "
+                 f"{', '.join(sorted(registry.snapshot())) or '(none)'}")
+    with open(os.path.join(out, "report.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"[telemetry] artifacts: {out}/{{trace.json, metrics.jsonl, "
+          f"report.txt}}  (read with: python -m repro.launch.trace "
+          f"{out}/trace.json)")
 
 
 def _auto_tuned(cfg, tc, args):
@@ -311,25 +511,34 @@ def _train_multitenant(cm, cfg, tc, mesh, args):
     print(f"[train] arch={cfg.arch_id} tenants={args.tenants} "
           f"strategy={tc.strategy} packed domain: "
           f"{ {k: g.padded for k, g in cm.packed_domain.groups.items()} }")
+    from .. import telemetry
+    tracer, registry = telemetry.get_tracer(), telemetry.get_registry()
     t0 = time.time()
     losses = {h.namespace: [] for h in handles}
     for step in range(args.steps):
-        batches = {ns: feeds[ns](step) for ns in feeds}   # fresh data per
-        params, metrics = cm.co_step(handles, params, batches)  # step/job
-        for ns, m in metrics.items():
-            losses[ns].append(float(m["loss"]))
-        if step % args.log_every == 0:
-            row = " ".join(f"{ns}={losses[ns][-1]:.4f}" for ns in losses)
-            print(f"[train] step {step:4d} {row}")
+        registry.current_step = step
+        with tracer.step(step, tenants=args.tenants):
+            with tracer.span("data"):
+                batches = {ns: feeds[ns](step) for ns in feeds}
+            # co_step emits the exchange/co_step span under this step
+            params, metrics = cm.co_step(handles, params, batches)
+            with tracer.span("sync"):
+                for ns, m in metrics.items():
+                    losses[ns].append(float(m["loss"]))
+            if step % args.log_every == 0:
+                row = " ".join(f"{ns}={losses[ns][-1]:.4f}"
+                               for ns in losses)
+                print(f"[train] step {step:4d} {row}")
     dt = time.time() - t0
     tput = args.tenants * args.batch * args.seq * args.steps / dt
     print(f"[train] done: {tput:,.0f} aggregate tok/s over "
           f"{args.tenants} tenants")
     for ns, acct in cm.accounting().items():
-        print(f"[train] {ns}: steps={acct['steps']} "
+        cum = acct["cumulative"]
+        print(f"[train] {ns}: steps={cum['steps']} "
               f"model_mb={acct['model_bytes']/1e6:.1f} "
               f"share={acct['domain_share']:.2f} "
-              f"pushed_mb={acct['push_bytes']/1e6:.1f}")
+              f"pushed_mb={cum['push_bytes']/1e6:.1f}")
     return losses
 
 

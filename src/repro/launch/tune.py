@@ -59,18 +59,39 @@ def main(argv=None):
                     help="skip the rack-lint gate (NOT cached as trusted)")
     ap.add_argument("--cache-dir", default="",
                     help="override results/tuning")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="run the instrumented probe steps first and rank "
+                         "with the measured per-host topology constants "
+                         "(bw_ici / bw_codec / allreduce_factor) instead "
+                         "of the hand-fit defaults; the calibration "
+                         "record lands next to the tuning cache")
     ap.add_argument("--out", default="", help="write the report JSON here")
     args = ap.parse_args(argv)
 
     from ..configs import TrainConfig
-    from ..tuning import autotune
+    from ..tuning import (DEFAULT_CACHE_DIR, autotune, probe_subprocess,
+                          save_calibration, solve_topology)
+
+    topo = None
+    if args.calibrate:
+        probe = probe_subprocess(args.devices)
+        calib = solve_topology(probe)
+        topo = calib["topology"]
+        c = calib["constants"]
+        print(f"[tune] calibrated: bw_ici {c['bw_ici'] / 1e6:.1f}MB/s "
+              f"bw_codec {c['bw_codec'] / 1e6:.1f}MB/s "
+              f"allreduce_factor {c['allreduce_factor']:.2f} "
+              f"(tolerance {calib['tolerance']:.0%})")
+        calib_path = os.path.join(args.cache_dir or DEFAULT_CACHE_DIR,
+                                  f"calibration_{args.devices}d.json")
+        print(f"[tune] calibration -> {save_calibration(calib, calib_path)}")
 
     cfg, grads_like = model_grads_like(args.arch, args.d_model)
     tc = TrainConfig(strategy=args.strategy)
     report = autotune(
-        grads_like, tc, args.devices, top_k=args.top_k, steps=args.steps,
-        cache_dir=args.cache_dir or None, force=args.force,
-        time_all=args.time_all, lint=not args.no_lint,
+        grads_like, tc, args.devices, topo=topo, top_k=args.top_k,
+        steps=args.steps, cache_dir=args.cache_dir or None,
+        force=args.force, time_all=args.time_all, lint=not args.no_lint,
         arch=args.arch, d_model=args.d_model)
 
     cand = report["candidate"]

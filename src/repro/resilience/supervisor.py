@@ -37,6 +37,7 @@ import numpy as np
 
 from ..checkpoint import restore_latest_valid, save_checkpoint
 from ..elastic import Membership
+from ..telemetry import get_registry, get_tracer
 from .sanity import HealthTracker, SanityConfig
 from .watchdog import ExchangeWatchdog, WatchdogConfig, WatchdogExhausted
 
@@ -83,6 +84,7 @@ class TrainSupervisor:
                              f"workers, rack has {world}")
         self.log_fn = log_fn
         self.events: list[tuple[int, str, str]] = []
+        self.incidents: list[dict] = []     # structured event records
         self.rollbacks = 0
         self.last_rollback_s = 0.0      # restore latency of the last one
         self._dead_streak = 0           # consecutive total-push-failures
@@ -90,13 +92,32 @@ class TrainSupervisor:
 
     # ------------------------------------------------------------- events
 
-    def _event(self, step: int, kind: str, detail: str) -> None:
+    def _event(self, step: int, kind: str, detail: str,
+               **payload) -> None:
+        """Record one incident three ways: the legacy (step, kind,
+        detail) tuple (chaos tests index it), the structured incident
+        record (``incident_history``), and a first-class metrics-registry
+        event (DESIGN.md §17) — one emission path for every demote /
+        rollback / mask / stall the supervisor sees."""
         self.events.append((step, kind, detail))
+        self.incidents.append({"step": step, "kind": kind,
+                               "detail": detail, **payload})
+        reg = get_registry()
+        reg.counter("supervisor.incidents").inc(kind=kind)
+        reg.event("supervisor." + kind, step=step, detail=detail,
+                  **payload)
         if self.log_fn is not None:
             self.log_fn(f"[supervisor] step {step}: {kind} — {detail}")
 
     def event_kinds(self) -> list[str]:
         return [k for _, k, _ in self.events]
+
+    def incident_history(self, kind: str = None) -> list[dict]:
+        """Structured incidents, optionally filtered by kind — the
+        queryable record the chaos/telemetry tests assert against."""
+        if kind is None:
+            return list(self.incidents)
+        return [e for e in self.incidents if e["kind"] == kind]
 
     # -------------------------------------------------------------- steps
 
@@ -127,16 +148,18 @@ class TrainSupervisor:
         Mutates ``state`` (params/opt/step/losses) and returns the host
         metrics; ``state.step`` moves backward on rollback."""
         i = state.step
+        tracer = get_tracer()
         self._apply_io_faults(i)
         fn = self.step_fn(batch_shapes)
         health = self.health_inputs(i)
         try:
-            new_p, new_o, metrics = self.watchdog.run(
-                fn, state.params, state.opt, batch, health)
+            with tracer.span("dispatch", supervised=True):
+                new_p, new_o, metrics = self.watchdog.run(
+                    fn, state.params, state.opt, batch, health)
         except WatchdogExhausted as e:
             # injected faults fire pre-dispatch, so state is untouched:
             # demote the implicated worker and re-enter through k-of-n
-            self._event(i, "stall_exhausted", str(e))
+            self._event(i, "stall_exhausted", str(e), worker=e.worker)
             if e.worker is not None:
                 self.demote(i, e.worker, "stalled exchange")
                 # the demoted worker left the collective: its remaining
@@ -144,19 +167,23 @@ class TrainSupervisor:
                 dropped = self.watchdog.drop_faults(e.worker)
                 if dropped:
                     self._event(i, "faults_flushed",
-                                f"worker {e.worker}: {dropped} queued")
+                                f"worker {e.worker}: {dropped} queued",
+                                worker=e.worker, dropped=dropped)
             fn = self.step_fn(batch_shapes)
-            new_p, new_o, metrics = self.watchdog.run(
-                fn, state.params, state.opt, batch, health)
+            with tracer.span("dispatch", supervised=True, reentry=True):
+                new_p, new_o, metrics = self.watchdog.run(
+                    fn, state.params, state.opt, batch, health)
         state.params, state.opt = new_p, new_o
         state.step = i + 1
-        host = {"loss": float(metrics["loss"]),
-                "total_loss": float(metrics["total_loss"]),
-                "ok_mask": np.asarray(metrics["ok_mask"]),
-                "grad_norms": np.asarray(metrics["grad_norms"]),
-                "n_live": float(metrics["n_live"])}
+        with tracer.span("sync"):
+            host = {"loss": float(metrics["loss"]),
+                    "total_loss": float(metrics["total_loss"]),
+                    "ok_mask": np.asarray(metrics["ok_mask"]),
+                    "grad_norms": np.asarray(metrics["grad_norms"]),
+                    "n_live": float(metrics["n_live"])}
         state.losses.append(host["loss"])
-        self._digest(i, state, host)
+        with tracer.span("digest"):
+            self._digest(i, state, host)
         return host
 
     def _apply_io_faults(self, step: int) -> None:
@@ -189,7 +216,8 @@ class TrainSupervisor:
             self._event(step, "push_masked",
                         f"workers {masked} excluded "
                         f"(n_live={host['n_live']:g}; norms "
-                        f"{[float(norms[r]) for r in masked]})")
+                        f"{[float(norms[r]) for r in masked]})",
+                        workers=masked, n_live=host["n_live"])
         self.tracker.observe(ok, norms, live_mask=self.membership.mask())
         dead_step = float(np.sum(ok)) == 0.0
         # a rack-wide failure is a systemic event (data poisoning, a bad
@@ -210,12 +238,14 @@ class TrainSupervisor:
             self.rollback(step, state, why)
         elif (self.cfg.checkpoint_dir and self.cfg.checkpoint_every
                 and state.step % self.cfg.checkpoint_every == 0):
-            save_checkpoint(self.cfg.checkpoint_dir, state.step,
-                            {"params": state.params, "opt": state.opt},
-                            membership=self.membership,
-                            keep_k=self.cfg.keep_k)
+            with get_tracer().span("checkpoint"):
+                save_checkpoint(self.cfg.checkpoint_dir, state.step,
+                                {"params": state.params, "opt": state.opt},
+                                membership=self.membership,
+                                keep_k=self.cfg.keep_k)
             self._event(step, "checkpoint", f"step {state.step} "
-                        f"(keep_k={self.cfg.keep_k})")
+                        f"(keep_k={self.cfg.keep_k})",
+                        saved_step=state.step)
 
     # ---------------------------------------------------------- containment
 
@@ -229,12 +259,17 @@ class TrainSupervisor:
             self._event(step, "demote_blocked", f"worker {rank}: {e}")
             return
         self.tracker.reset_rank(rank)
+        get_registry().counter("supervisor.demotions").inc(rank=rank)
         self._event(step, "demote",
                     f"worker {rank} → "
                     f"{self.membership.workers[rank].status} ({reason}); "
                     f"epoch {self.membership.epoch}, "
                     f"{self.membership.n_live}/{self.membership.world} "
-                    f"live")
+                    f"live",
+                    worker=rank, reason=reason,
+                    status=self.membership.workers[rank].status,
+                    epoch=self.membership.epoch,
+                    n_live=self.membership.n_live)
 
     # ------------------------------------------------------------- recovery
 
@@ -255,15 +290,20 @@ class TrainSupervisor:
                 f"{self.rollbacks} rollbacks — giving up")
         self.rollbacks += 1
         t0 = time.time()
-        s, params, opt, skipped = restore_latest_valid(
-            self.cfg.checkpoint_dir, self.engine, membership=None)
-        state.params, state.opt, state.step = params, opt, s
+        with get_tracer().span("rollback"):
+            s, params, opt, skipped = restore_latest_valid(
+                self.cfg.checkpoint_dir, self.engine, membership=None)
+            state.params, state.opt, state.step = params, opt, s
         self.last_rollback_s = time.time() - t0
         del state.losses[s:]
         self.tracker.reset_history()
         self.tracker.reset_offenses()
         self._dead_streak = 0
+        get_registry().counter("supervisor.rollbacks").inc()
         self._event(step, "rollback",
                     f"{reason} → restored step {s} in "
                     f"{time.time() - t0:.2f}s"
-                    + (f", skipped corrupt {skipped}" if skipped else ""))
+                    + (f", skipped corrupt {skipped}" if skipped else ""),
+                    reason=reason, restored_step=s,
+                    seconds=self.last_rollback_s,
+                    skipped=list(skipped) if skipped else [])

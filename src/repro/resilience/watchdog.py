@@ -28,6 +28,8 @@ from typing import Optional
 
 import jax
 
+from ..telemetry import get_registry
+
 
 class ExchangeTimeout(RuntimeError):
     """An exchange missed its deadline (or a chaos stall emulating one).
@@ -110,6 +112,7 @@ class ExchangeWatchdog:
 
     def run(self, fn, *args, **kwargs):
         cfg = self.cfg
+        reg = get_registry()
         delays = []
         delay = cfg.backoff_base_s
         for attempt in range(cfg.retries + 1):
@@ -125,18 +128,27 @@ class ExchangeWatchdog:
                         # committed-but-slow: record, don't re-dispatch
                         # (donated buffers; see module docstring)
                         self.overruns.append((elapsed, cfg.deadline_s))
+                        reg.counter("watchdog.overruns").inc()
+                        reg.event("watchdog.overrun", elapsed_s=elapsed,
+                                  deadline_s=cfg.deadline_s)
                 self.last_delays = tuple(delays)
                 return out
             except (ExchangeTimeout, TransientExchangeError) as e:
+                worker = getattr(e, "worker", None)
                 if attempt == cfg.retries:
                     self.last_delays = tuple(delays)
+                    reg.counter("watchdog.exhausted").inc()
+                    reg.event("watchdog.exhausted", worker=worker,
+                              attempts=cfg.retries + 1, error=str(e))
                     raise WatchdogExhausted(
                         f"exchange failed {cfg.retries + 1} attempts "
-                        f"(last: {e})",
-                        worker=getattr(e, "worker", None)) from e
+                        f"(last: {e})", worker=worker) from e
                 self.total_retries += 1
                 d = delay * (1.0 + cfg.jitter * self._rng.random())
                 delays.append(d)
+                reg.counter("watchdog.retries").inc()
+                reg.event("watchdog.retry", worker=worker,
+                          attempt=attempt + 1, backoff_s=d, error=str(e))
                 if d > 0:
                     time.sleep(d)
                 delay = min(delay * 2.0, cfg.backoff_cap_s)

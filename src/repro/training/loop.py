@@ -8,6 +8,7 @@ from typing import Callable, Optional
 import jax
 
 from ..checkpoint import save_checkpoint
+from ..telemetry import get_registry, get_tracer
 
 
 @dataclass
@@ -61,38 +62,52 @@ def fit(engine, state: TrainState, data, *, steps: int,
     tokens = 0
     last = state.step + steps - 1
     membership = None
+    tracer, registry = get_tracer(), get_registry()
     for i in range(state.step, state.step + steps):
-        if membership_fn is not None:
-            # called exactly once per step (a stateful provider — e.g. a
-            # closure folding ChaosSchedule events — must not see the
-            # same step twice); the checkpoint below reuses this value
-            membership = membership_fn(i)
-            key = (None if membership is None or membership.all_live
-                   else membership.program_key())
-            if key not in step_cache:
-                step_cache[key] = engine.make_train_step(
-                    shapes, membership=membership)
-            step_fn = step_cache[key]
-        batch = data.device_batch(i, mesh=engine.mesh,
-                                  data_axes=engine.data_axes or ("data",))
-        state.params, state.opt, metrics = step_fn(state.params, state.opt,
-                                                   batch)
-        state.step = i + 1
-        tokens += batch0["tokens"].size
-        should_log = bool(log_every) and (i % log_every == 0 or i == last)
-        if hooks or should_log or i == last:
-            loss = float(metrics["loss"])        # host sync
-            state.losses.append(loss)
-            for h in hooks or ():
-                h(state, metrics)
-            if should_log:
-                log_fn(f"[fit] step {i:5d} loss {loss:.4f} "
-                       f"({tokens / (time.time() - t0):,.0f} tok/s)")
-        if (checkpoint_dir and checkpoint_every
-                and state.step % checkpoint_every == 0):
-            save_checkpoint(checkpoint_dir, state.step,
-                            {"params": state.params, "opt": state.opt},
-                            membership=membership)
+        registry.current_step = i
+        with tracer.step(i):
+            if membership_fn is not None:
+                # called exactly once per step (a stateful provider —
+                # e.g. a closure folding ChaosSchedule events — must not
+                # see the same step twice); the checkpoint below reuses
+                # this value
+                membership = membership_fn(i)
+                key = (None if membership is None or membership.all_live
+                       else membership.program_key())
+                if key not in step_cache:
+                    step_cache[key] = engine.make_train_step(
+                        shapes, membership=membership)
+                step_fn = step_cache[key]
+            with tracer.span("data"):
+                batch = data.device_batch(
+                    i, mesh=engine.mesh,
+                    data_axes=engine.data_axes or ("data",))
+            # span = async dispatch only; device completion is observed
+            # at the sync below (log boundaries) — tracing adds no
+            # per-step host sync (the overhead budget, DESIGN.md §17)
+            with tracer.span("dispatch"):
+                state.params, state.opt, metrics = step_fn(
+                    state.params, state.opt, batch)
+            state.step = i + 1
+            tokens += batch0["tokens"].size
+            should_log = bool(log_every) and (i % log_every == 0
+                                              or i == last)
+            if hooks or should_log or i == last:
+                with tracer.span("sync"):
+                    loss = float(metrics["loss"])        # host sync
+                state.losses.append(loss)
+                for h in hooks or ():
+                    h(state, metrics)
+                if should_log:
+                    log_fn(f"[fit] step {i:5d} loss {loss:.4f} "
+                           f"({tokens / (time.time() - t0):,.0f} tok/s)")
+            if (checkpoint_dir and checkpoint_every
+                    and state.step % checkpoint_every == 0):
+                with tracer.span("checkpoint"):
+                    save_checkpoint(checkpoint_dir, state.step,
+                                    {"params": state.params,
+                                     "opt": state.opt},
+                                    membership=membership)
     return state
 
 
@@ -111,6 +126,7 @@ def _fit_supervised(engine, state: TrainState, data, *, steps: int,
     tokens = 0
     budget = steps * (supervisor.cfg.max_rollbacks + 2) + 16
     iters = 0
+    tracer, registry = get_tracer(), get_registry()
     while state.step < end:
         iters += 1
         if iters > budget:
@@ -119,9 +135,13 @@ def _fit_supervised(engine, state: TrainState, data, *, steps: int,
                 f"({budget} iterations for {steps} steps) — the "
                 f"supervisor is rolling back without making progress")
         i = state.step
-        batch = data.device_batch(i, mesh=engine.mesh,
-                                  data_axes=engine.data_axes or ("data",))
-        host = supervisor.run_step(state, batch, shapes)
+        registry.current_step = i
+        with tracer.step(i, supervised=True):
+            with tracer.span("data"):
+                batch = data.device_batch(
+                    i, mesh=engine.mesh,
+                    data_axes=engine.data_axes or ("data",))
+            host = supervisor.run_step(state, batch, shapes)
         tokens += batch0["tokens"].size
         for h in hooks or ():
             h(state, host)

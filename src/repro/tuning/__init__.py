@@ -1,14 +1,20 @@
-"""Cost-model-driven exchange autotuner (DESIGN.md §16)."""
+"""Cost-model-driven exchange autotuner (DESIGN.md §16) and per-host
+topology calibration (§17)."""
 from .cache import (DEFAULT_CACHE_DIR, cache_key, cache_path, load_cached,
                     model_fingerprint, store_winner)
+from .calibrate import (calibrate, calibration_record, load_calibration,
+                        probe_subprocess, run_probe_programs,
+                        save_calibration, solve_topology)
 from .cost import DEFAULT_TOPOLOGY, context_for, predict, rank_candidates
 from .space import Candidate, enumerate_space, mesh_shapes, valid
 from .tuner import autotune, lint_candidate, time_candidate
 
 __all__ = [
     "DEFAULT_CACHE_DIR", "DEFAULT_TOPOLOGY", "Candidate", "autotune",
-    "cache_key", "cache_path", "context_for", "enumerate_space",
-    "lint_candidate", "load_cached", "mesh_shapes", "model_fingerprint",
-    "predict", "rank_candidates", "store_winner", "time_candidate",
-    "valid",
+    "cache_key", "cache_path", "calibrate", "calibration_record",
+    "context_for", "enumerate_space", "lint_candidate", "load_cached",
+    "load_calibration", "mesh_shapes", "model_fingerprint", "predict",
+    "probe_subprocess", "rank_candidates", "run_probe_programs",
+    "save_calibration", "solve_topology", "store_winner",
+    "time_candidate", "valid",
 ]

@@ -1,0 +1,296 @@
+"""Per-host RackTopology calibration from instrumented probe steps.
+
+``tuning/cost.py``'s ``DEFAULT_TOPOLOGY`` ships hand-fit constants —
+the 8-device acceptance sweep of PR 9 proved ``bw_codec`` and
+``allreduce_factor`` matter, but their values were eyeballed from one
+host.  This module replaces them with measurement (the ROADMAP item):
+two instrumented probe steps over one synthetic chunk domain —
+
+  probe 1  the identity windowed ring (strategy ``sharded_ps``), timed
+           in both of its lowerings: the ring reduce-scatter schedule
+           and the fused-psum ``allreduce`` flavor of the same payload.
+           The ring solves ``bw_ici`` (its time is pure link bytes +
+           launch latency); the psum/ring ratio solves
+           ``allreduce_factor`` (how many passes over the buffer the
+           host's fused all-reduce really materializes).
+  probe 2  the int8-encoded ring over the same payload: its time minus
+           the (now-known) link term is codec compute, which solves
+           ``bw_codec`` (raw bytes/s through quantize+dequantize).
+
+The solver is pure arithmetic over ``cost_model.predicted_step_seconds``
+coefficients (bytes, launches, codec_bytes are linear in the unknowns),
+so it is unit-testable without devices; the measurement side rides the
+same in-process timing the benchmarks use and is exposed through the
+``benchmarks/_mdworker.py`` ``calibration_probe`` bench for subprocess
+use (the tuner's seam).
+
+The result carries a **stated tolerance**: the relative band within
+which the calibrated model's exchange-time predictions are trusted,
+floored at ``MIN_TOLERANCE`` and widened by the observed rep-to-rep
+spread of the probes themselves — ``launch/trace.py --check-model``
+enforces exactly this band.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import time
+from types import SimpleNamespace
+
+from ..core import cost_model
+from ..core.cost_model import RackTopology
+from .cost import DEFAULT_TOPOLOGY
+
+# trust band floor: predictions within [1/(1+tol), 1+tol] of measurement.
+# PR 9's acceptance sweep saw measured/predicted ~ 0.91 on a freshly
+# hand-fit model; 0.35 gives headroom without accepting a broken model.
+MIN_TOLERANCE = 0.35
+
+PROBE_FLAVORS = ("ring", "allreduce", "int8")
+
+
+def _probe_tc(flavor: str, chunk_kb: int):
+    from ..configs import TrainConfig
+    if flavor == "ring":
+        return TrainConfig(strategy="sharded_ps",
+                           chunk_size_bytes=chunk_kb * 1024)
+    if flavor == "allreduce":
+        return TrainConfig(strategy="allreduce",
+                           chunk_size_bytes=chunk_kb * 1024)
+    if flavor == "int8":
+        return TrainConfig(strategy="sharded_ps", wire_format="int8",
+                           chunk_size_bytes=chunk_kb * 1024)
+    raise ValueError(f"unknown probe flavor {flavor!r}")
+
+
+def run_probe_programs(n_devices: int, *, elems: int = 1 << 21,
+                       chunk_kb: int = 32, reps: int = 5,
+                       warmup: int = 2) -> dict:
+    """Time the probe programs on the *current* jax devices (the caller
+    owns device-count forcing).  Returns the measurement record
+    ``solve_topology`` consumes::
+
+      {"devices": N, "elems": E,
+       "flavors": {flavor: {"us": median, "us_reps": [...],
+                            "groups": [{padded, shard_len, chunk_elems,
+                                        n_shards, dtype}, ...]}}}
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from ..core import PHubClient
+
+    if jax.device_count() < n_devices:
+        raise ValueError(f"calibration probe wants {n_devices} devices, "
+                         f"process has {jax.device_count()}")
+    mesh = jax.make_mesh((n_devices,), ("data",))
+    like = {"w": jax.ShapeDtypeStruct((int(elems),), jnp.float32)}
+    rng = np.random.default_rng(0)
+    grads_np = rng.normal(size=(n_devices, int(elems))).astype(np.float32)
+    params_np = rng.normal(size=(int(elems),)).astype(np.float32)
+
+    out = {"devices": int(n_devices), "elems": int(elems),
+           "chunk_kb": int(chunk_kb), "flavors": {}}
+    for flavor in PROBE_FLAVORS:
+        client = PHubClient(_probe_tc(flavor, chunk_kb), mesh)
+        client.register(like)
+        grads = {"w": jnp.asarray(grads_np)}
+        state = ({"w": jnp.asarray(params_np)}, client.init_state())
+
+        def step(pv, opt, client=client, grads=grads):
+            return client.push_pull(grads, pv, opt)
+
+        for _ in range(warmup):
+            state = step(*state)
+            jax.block_until_ready(jax.tree.leaves(state)[0])
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            state = step(*state)
+            jax.block_until_ready(jax.tree.leaves(state)[0])
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        out["flavors"][flavor] = {
+            "us": ts[len(ts) // 2] * 1e6,
+            "us_reps": [t * 1e6 for t in ts],
+            "groups": [{"padded": g.padded, "shard_len": g.shard_len,
+                        "chunk_elems": g.chunk_elems,
+                        "n_shards": g.n_shards, "dtype": str(g.dtype)}
+                       for g in client.plan.groups]}
+    return out
+
+
+def _groups(meas: dict) -> list:
+    """Duck-typed chunk groups from a probe record's geometry dicts
+    (cost_model reads padded/shard_len/chunk_elems/n_shards/dtype plus
+    the derived chunks_per_shard)."""
+    out = []
+    for g in meas["groups"]:
+        ns = SimpleNamespace(**g)
+        ns.chunks_per_shard = ns.shard_len // ns.chunk_elems
+        out.append(ns)
+    return out
+
+
+def _flavor_wire(flavor: str):
+    if flavor == "int8":
+        from ..core.wire import WireFormat
+        return WireFormat("int8")
+    return None
+
+
+def _predict(flavor: str, meas: dict, n_devices: int,
+             topo: RackTopology) -> dict:
+    tc = _probe_tc(flavor, 32)
+    return cost_model.predicted_step_seconds(
+        _groups(meas), strategy=tc.strategy, topo=topo,
+        wire=_flavor_wire(flavor), windows=1, n_workers=n_devices,
+        pod_size=1)
+
+
+def _coeffs(flavor: str, meas: dict, n_devices: int,
+            base: RackTopology) -> dict:
+    """Linear coefficients of the flavor's predicted time in the
+    unknowns: ICI runtime bytes, sequential launches, raw codec bytes.
+    (``predicted_step_seconds`` reports bytes *unscaled* by
+    ``allreduce_factor`` — the factor is solved for, not assumed.)"""
+    pred = _predict(flavor, meas, n_devices, base)
+    return {"bytes": pred["bytes"]["ici"],
+            "launches": pred["launches"]["ici"],
+            "codec_bytes": pred["codec_bytes"]}
+
+
+def solve_topology(probe: dict, base: RackTopology = None) -> dict:
+    """Pure solver: probe measurements -> calibrated ``RackTopology``.
+
+    Sequential elimination (each step uses one flavor's timing):
+    ``bw_ici`` from the identity ring, ``allreduce_factor`` from the
+    psum flavor of the same payload, ``bw_codec`` from the int8 ring's
+    residual after the link term.  Latency terms stay at the base
+    topology's values (the probes are bandwidth-sized; a latency fit
+    would need a size sweep).
+
+    Returns ``{"topology", "constants", "tolerance", "residuals",
+    "probe"}``; ``tolerance`` is the stated relative trust band (see
+    module docstring).
+    """
+    base = base or DEFAULT_TOPOLOGY
+    n = probe["devices"]
+    eps = 1e-9
+    f = probe["flavors"]
+
+    c_ring = _coeffs("ring", f["ring"], n, base)
+    t_ring = f["ring"]["us"] / 1e6
+    link_s = max(t_ring - c_ring["launches"] * base.lat_ici, eps)
+    # clamp: a latency-dominated probe (tiny payload) pins link_s at the
+    # floor and would report absurd bandwidth — the residuals/tolerance
+    # then make the misfit visible rather than the constants hiding it
+    bw_ici = min(max(c_ring["bytes"] / link_s, 1e5), 1e13)
+
+    c_ar = _coeffs("allreduce", f["allreduce"], n, base)
+    t_ar = f["allreduce"]["us"] / 1e6
+    ar_link_s = max(t_ar - c_ar["launches"] * base.lat_ici, eps)
+    factor = ar_link_s * bw_ici / max(c_ar["bytes"], eps)
+    factor = min(max(factor, 1.0), 4.0)
+
+    c_i8 = _coeffs("int8", f["int8"], n, base)
+    t_i8 = f["int8"]["us"] / 1e6
+    codec_s = (t_i8 - c_i8["bytes"] / bw_ici
+               - c_i8["launches"] * base.lat_ici)
+    # a non-positive residual means the codec is free at this probe size
+    # (offloaded / vectorized into the link time) — keep it priced but
+    # effectively free rather than None, so ranking still sees a term
+    bw_codec = (c_i8["codec_bytes"] / codec_s if codec_s > eps
+                else 1e15)
+    bw_codec = min(max(bw_codec, 1e5), 1e15)
+
+    topo = dataclasses.replace(base, bw_ici=bw_ici, bw_codec=bw_codec,
+                               allreduce_factor=factor)
+
+    # residual check: re-predict each probe with the calibrated topology
+    residuals = {}
+    spread = 0.0
+    for flavor in PROBE_FLAVORS:
+        pred = _predict(flavor, f[flavor], n, topo)
+        meas_s = f[flavor]["us"] / 1e6
+        residuals[flavor] = {
+            "measured_s": meas_s, "predicted_s": pred["seconds"],
+            "rel_err": abs(meas_s - pred["seconds"]) / max(meas_s, eps)}
+        reps = f[flavor].get("us_reps") or [f[flavor]["us"]]
+        med = sorted(reps)[len(reps) // 2]
+        if med > 0:
+            spread = max(spread, (max(reps) - min(reps)) / med)
+    tolerance = max(MIN_TOLERANCE,
+                    2.0 * spread,
+                    3.0 * max(r["rel_err"] for r in residuals.values()))
+
+    return {"topology": topo,
+            "constants": {"bw_ici": bw_ici, "bw_codec": bw_codec,
+                          "allreduce_factor": factor},
+            "tolerance": round(tolerance, 4),
+            "residuals": residuals,
+            "probe": probe}
+
+
+def probe_subprocess(n_devices: int, *, elems: int = 1 << 21,
+                     chunk_kb: int = 32, reps: int = 5,
+                     timeout: int = 1200) -> dict:
+    """``run_probe_programs`` in its own subprocess with its own forced
+    device count — the same mdworker seam the tuner's timed candidates
+    ride (benchmarks/_mdworker.py ``calibration_probe``)."""
+    from .tuner import _ROOT, _subprocess_env
+    payload = {"bench": "calibration_probe", "devices": n_devices,
+               "elems": elems, "chunk_kb": chunk_kb, "reps": reps}
+    proc = subprocess.run(
+        [sys.executable, os.path.join(_ROOT, "benchmarks", "_mdworker.py"),
+         json.dumps(payload)],
+        capture_output=True, text=True, timeout=timeout,
+        env=_subprocess_env(n_devices))
+    if proc.returncode != 0:
+        raise RuntimeError("calibration probe failed: "
+                           + proc.stderr[-2000:])
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def calibrate(n_devices: int, *, elems: int = 1 << 21, chunk_kb: int = 32,
+              reps: int = 5, base: RackTopology = None,
+              runner=None) -> dict:
+    """Measure + solve.  ``runner`` (injectable, like the tuner's
+    ``timer``) maps a probe request to a measurement record; the default
+    times in-process on the current devices."""
+    runner = runner or (lambda: run_probe_programs(
+        n_devices, elems=elems, chunk_kb=chunk_kb, reps=reps))
+    return solve_topology(runner(), base)
+
+
+def calibration_record(result: dict) -> dict:
+    """JSON-able provenance record (topology as a plain dict)."""
+    return {"constants": result["constants"],
+            "tolerance": result["tolerance"],
+            "residuals": result["residuals"],
+            "topology": dataclasses.asdict(result["topology"]),
+            "anchor_scale": result.get("anchor_scale"),
+            "devices": result["probe"]["devices"],
+            "elems": result["probe"]["elems"]}
+
+
+def save_calibration(result: dict, path: str) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(calibration_record(result), fh, indent=1, sort_keys=True)
+    return path
+
+
+def load_calibration(path: str):
+    """Restore ``(RackTopology, tolerance)`` from a saved record, or
+    ``(None, None)`` when absent/unreadable (provenance never fails a
+    run)."""
+    try:
+        with open(path) as fh:
+            rec = json.load(fh)
+        return RackTopology(**rec["topology"]), float(rec["tolerance"])
+    except (OSError, ValueError, KeyError, TypeError):
+        return None, None

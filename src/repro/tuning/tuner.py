@@ -136,14 +136,17 @@ def autotune(grads_like, tc, n_devices: int, *, topo=None, top_k: int = 3,
     the analytic top-k; ``candidates`` overrides the enumerated space
     (restricted sweeps).
     """
+    from ..telemetry import get_registry
     cache_dir = cache_dir or DEFAULT_CACHE_DIR
     key = cache_key(tc, n_devices, grads_like)
     if not force:
         entry = load_cached(key, cache_dir)
         if entry is not None:
+            get_registry().counter("tuner.cache_hit").inc(key=key)
             return {**entry, "key": key, "cache_hit": True,
                     "timed_candidates": 0,
                     "cache_path": cache_path(key, cache_dir)}
+    get_registry().counter("tuner.cache_miss").inc(key=key)
 
     timer = timer or (lambda c: time_candidate(
         _specs(grads_like), c, n_devices, steps=steps))

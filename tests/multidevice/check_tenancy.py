@@ -99,10 +99,11 @@ def check_coscheduled(strategy):
                    f"{strategy} windows={windows} tenant={name}",
                    f"mismatched_elems={bad}")
         acct = cm.accounting()
-        ok = all(acct[n]["steps"] == 3 and acct[n]["push_bytes"] > 0
+        ok = all(acct[n]["cumulative"]["steps"] == 3
+                 and acct[n]["cumulative"]["push_bytes"] > 0
                  for n, _, _, _ in pool)
         report(ok, f"{strategy} windows={windows} accounting",
-               f"steps={[acct[n]['steps'] for n, _, _, _ in pool]}")
+               f"steps={[acct[n]['cumulative']['steps'] for n, _, _, _ in pool]}")
 
 
 def check_lifecycle():

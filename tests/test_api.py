@@ -165,7 +165,10 @@ def test_co_step_matches_solo_and_accounts(mesh):
     assert float(mA["loss"]) == float(metrics["A"]["loss"])
 
     acct = cm.accounting()
-    assert acct["A"]["steps"] == 2 and acct["B"]["steps"] == 2
+    assert acct["A"]["cumulative"]["steps"] == 2
+    assert acct["B"]["cumulative"]["steps"] == 2
+    assert (acct["A"]["cumulative"]["push_bytes"]
+            == 2 * acct["A"]["per_step"]["push_bytes"] > 0)
     assert acct["B"]["model_bytes"] > acct["A"]["model_bytes"]
     assert abs(acct["A"]["domain_share"] + acct["B"]["domain_share"]
                - 1.0) < 1e-9

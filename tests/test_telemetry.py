@@ -1,0 +1,217 @@
+"""Telemetry: tracer, metrics registry, attribution, trace round-trip,
+and the §17 overhead/program-identity budget (slow)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro import telemetry
+from repro.launch.trace import check_model, load_trace, validate
+from repro.telemetry import (MetricsRegistry, Tracer, attribute_step,
+                             model_agreement, phase_fractions, step_phases)
+from repro.telemetry.tracer import SpanRecord
+
+
+@pytest.fixture(autouse=True)
+def _restore_null_pair():
+    yield
+    telemetry.disable()
+
+
+# ------------------------------------------------------------------ tracer
+
+def test_disabled_is_shared_null_noop():
+    tr, reg = telemetry.get_tracer(), telemetry.get_registry()
+    assert not tr.enabled and not reg.enabled
+    with tr.step(0):
+        with tr.span("data"):
+            pass
+    assert tr.records == ()
+    assert reg.counter("x").inc(5.0) == 0.0
+    assert reg.events() == []
+
+
+def test_trace_id_is_seeded():
+    assert Tracer(seed=5).trace_id == Tracer(seed=5).trace_id
+    assert Tracer(seed=5).trace_id != Tracer(seed=6).trace_id
+
+
+def test_nested_spans_and_step_phases():
+    tr, _ = telemetry.enable(seed=0)
+    with tr.step(3):
+        with tr.span("data"):
+            pass
+        with tr.span("exchange/push_pull"):
+            with tr.span("engine/dispatch"):
+                pass
+    with tr.span("probe/exchange", rep=0):
+        pass
+    phases = tr.step_phases()
+    # direct children only: the nested engine/dispatch is detail, not a
+    # phase (counting it would double-book the step)
+    assert set(phases[3]) == {"data", "exchange"}
+    assert set(phases[-1]) == {"probe"}
+    steps = {r.step for r in tr.records if r.name == "engine/dispatch"}
+    assert steps == {3}
+
+
+def test_chrome_trace_round_trip(tmp_path):
+    tr, _ = telemetry.enable(seed=7, meta={"devices": 2})
+    for i in range(2):
+        with tr.step(i):
+            with tr.span("data"):
+                pass
+            with tr.span("exchange/push_pull", ns="job"):
+                pass
+    path = tr.write(str(tmp_path / "trace.json"))
+    records, meta = load_trace(path)
+    assert meta["trace_id"] == tr.trace_id
+    assert meta["seed"] == 7 and meta["devices"] == 2
+    assert validate(records) == []
+    orig, back = tr.step_phases(), step_phases(records)
+    assert set(back) == set(orig)
+    for i in orig:
+        assert set(back[i]) == set(orig[i])
+        for ph in orig[i]:
+            assert back[i][ph] == pytest.approx(orig[i][ph], abs=5e-6)
+    ns = [r.args.get("ns") for r in records
+          if r.name == "exchange/push_pull"]
+    assert ns == ["job", "job"]
+
+
+def test_validate_flags_malformed_records():
+    bad = [SpanRecord(name="step", t0=0.0, dur=1.0, depth=0, step=0,
+                      parent="", args={"step": 0}),
+           # claims step 0 but lies outside the step span's interval
+           SpanRecord(name="data", t0=5.0, dur=0.1, depth=1, step=0,
+                      parent="step"),
+           # depth says nested, parent says top-level
+           SpanRecord(name="sync", t0=0.2, dur=0.1, depth=2, step=0,
+                      parent="")]
+    issues = validate(bad)
+    assert len(issues) == 2
+    assert any("outside" in m for m in issues)
+    assert any("inconsistent" in m for m in issues)
+
+
+# ---------------------------------------------------------------- registry
+
+def test_registry_instruments_and_log(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("exchange.bytes").inc(100.0, tenant="a", basis="raw")
+    reg.counter("exchange.bytes").inc(50.0, tenant="a", basis="raw")
+    assert reg.counter("exchange.bytes").value(tenant="a",
+                                               basis="raw") == 150.0
+    reg.gauge("membership.epoch").set(3)
+    assert reg.gauge("membership.epoch").value() == 3
+    reg.histogram("serve.latency").observe(0.005, phase="decode")
+    assert reg.histogram("serve.latency").summary(
+        phase="decode")["count"] == 1
+    reg.current_step = 4
+    reg.event("supervisor.demote", rank=2, detail="repeat offender")
+    (ev,) = reg.events("supervisor.demote")
+    assert ev["step"] == 4 and ev["payload"]["rank"] == 2
+
+    path = str(tmp_path / "metrics.jsonl")
+    reg.dump_jsonl(path)
+    lines = [json.loads(ln) for ln in open(path)]
+    assert len(lines) == 5
+    assert {ln["kind"] for ln in lines} == {"counter", "gauge",
+                                            "histogram", "event"}
+    for ln in lines:
+        assert {"kind", "name", "step", "t"} <= set(ln)
+
+
+def test_registry_kind_conflict():
+    reg = MetricsRegistry()
+    reg.counter("m")
+    with pytest.raises(TypeError):
+        reg.gauge("m")
+
+
+def test_watchdog_emits_metrics():
+    from repro.resilience import (ExchangeWatchdog, TransientExchangeError,
+                                  WatchdogConfig)
+    _, reg = telemetry.enable(seed=0)
+    wd = ExchangeWatchdog(WatchdogConfig(retries=2, backoff_base_s=0.0))
+    wd.inject_fault(TransientExchangeError(worker=1), attempts=2)
+    assert wd.run(lambda: "ok") == "ok"
+    assert reg.counter("watchdog.retries").value() == 2
+    (r1, r2) = reg.events("watchdog.retry")
+    assert r1["payload"]["worker"] == 1 and r2["payload"]["attempt"] == 2
+
+
+# ------------------------------------------------------------- attribution
+
+PRED = {"comm_s": 0.10, "ici_s": 0.08, "dcn_s": 0.0, "codec_s": 0.02}
+
+
+def test_attribute_step_scales_model_ratios():
+    rows = attribute_step(0.3, 0.2, PRED)
+    by = {r["phase"]: r for r in rows}
+    # measured exchange 0.2 apportioned over the model's 80/20 split
+    assert by["exchange/ici"]["seconds"] == pytest.approx(0.16)
+    assert by["exchange/codec"]["seconds"] == pytest.approx(0.04)
+    assert by["compute"]["seconds"] == pytest.approx(0.1)
+    assert sum(r["fraction"] for r in rows) == pytest.approx(1.0)
+    fr = phase_fractions(rows)
+    assert fr["exchange/ici"] == pytest.approx(0.16 / 0.3, abs=1e-3)
+
+
+def test_attribute_step_without_model_keeps_measured_exchange():
+    rows = attribute_step(0.3, 0.2, None, host_phases={"data": 0.01})
+    by = {r["phase"]: r for r in rows}
+    assert by["exchange"]["seconds"] == pytest.approx(0.2)
+    assert by["exchange"]["measured"] is True
+    assert by["compute"]["seconds"] == pytest.approx(0.09)
+    assert by["data"]["seconds"] == pytest.approx(0.01)
+
+
+def test_model_agreement_band():
+    ok = model_agreement(0.11, PRED, rel_tol=0.2)
+    assert ok["checked"] and ok["ok"] and ok["ratio"] == pytest.approx(1.1)
+    bad = model_agreement(0.2, PRED, rel_tol=0.2)
+    assert bad["checked"] and not bad["ok"]
+    assert model_agreement(None, PRED, 0.2) == {"checked": False,
+                                                "ok": True}
+
+
+def test_check_model_reads_embedded_metadata(tmp_path):
+    tr, _ = telemetry.enable(seed=0)
+    for r in range(3):
+        with tr.span("probe/exchange", rep=r):
+            pass
+    measured = sorted(x.dur for x in tr.records)[1]
+    tr.meta["attribution"] = {"predicted": {"comm_s": measured},
+                              "rel_tol": 0.5}
+    path = tr.write(str(tmp_path / "t.json"))
+    records, meta = load_trace(path)
+    ag = check_model(records, meta)
+    assert ag["checked"] and ag["ok"]
+    assert ag["ratio"] == pytest.approx(1.0, abs=1e-3)
+    # no attribution metadata -> impossible, not silently ok
+    assert not check_model(records, {})["ok"]
+
+
+# -------------------------------------------------- overhead budget (§17)
+
+@pytest.mark.slow
+def test_overhead_budget_and_program_identity():
+    """Telemetry on must stay within 2% of off on the 8-device
+    zero-compute step and lower a byte-identical program."""
+    from repro.tuning.tuner import _ROOT, _subprocess_env
+    payload = {"bench": "telemetry_overhead", "devices": 8, "reps": 15}
+    proc = subprocess.run(
+        [sys.executable, os.path.join(_ROOT, "benchmarks", "_mdworker.py"),
+         json.dumps(payload)],
+        capture_output=True, text=True, timeout=900,
+        env=_subprocess_env(8))
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["hlo_identical"], "tracing changed the lowered program"
+    assert out["spans_recorded"] > 0
+    assert out["overhead"] <= 0.02, (
+        f"telemetry overhead {out['overhead']:.1%} exceeds the 2% budget "
+        f"(off {out['us_off']:.0f}us on {out['us_on']:.0f}us)")

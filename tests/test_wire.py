@@ -308,11 +308,13 @@ def test_tenant_accounting_reports_wire_bytes():
     for ns, a in acct.items():
         assert a["wire_bytes"] < a["model_bytes"]
         assert 3.5 < a["compression"] < 4.1
-        assert a["wire_push_bytes"] < a["push_bytes"]
-    # no wire: raw figures
+        assert a["per_step"]["wire_push_bytes"] < a["per_step"]["push_bytes"]
+    # no wire: the rack still carries whole chunk-aligned slots, so the
+    # raw figure is the padded residency, not the unpadded model bytes
     acct0 = cost_model.tenant_accounting(dom, "sharded_ps", 2)
     for ns, a in acct0.items():
-        assert a["wire_bytes"] == a["model_bytes"]
+        assert a["wire_bytes"] == a["padded_bytes"]
+        assert a["wire_bytes"] >= a["model_bytes"]
 
 
 # ------------------------------------------------------------ benchmarks
